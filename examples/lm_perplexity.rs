@@ -1,0 +1,85 @@
+//! Language-model example (the paper's §6): train the 2-layer LSTM LM
+//! on the synthetic corpus through the compiled train_step artifact,
+//! then sweep weight quantization {6,5} bits × OCS ratios and print the
+//! perplexity grid — a miniature of Table 6.
+//!
+//! Run:  cargo run --release --example lm_perplexity
+//! Env:  LM_STEPS=N to override the training length (default 600).
+
+use anyhow::Result;
+
+use ocs::clip::ClipMethod;
+use ocs::eval;
+use ocs::model::store::WeightStore;
+use ocs::model::ModelSpec;
+use ocs::pipeline::{self, QuantConfig};
+use ocs::runtime::Engine;
+use ocs::train::{self, data};
+
+fn main() -> Result<()> {
+    let steps = std::env::var("LM_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(600usize);
+    let spec = ModelSpec::load_named("artifacts", "lstmlm")?;
+    let engine = Engine::cpu()?;
+
+    // train (or reuse) — training the LSTM takes a few minutes on CPU
+    let (ws, have_trained) = WeightStore::load_best(&spec)?;
+    let ws = if have_trained {
+        println!("using existing trained weights ({} params)", ws.param_count());
+        ws
+    } else {
+        println!("training lstmlm for {steps} steps ...");
+        let corpus = data::synth_corpus(200_000, spec.vocab, 91);
+        let init = WeightStore::load_init(&spec)?;
+        let (trained, report) = train::train_lm(&engine, &spec, &init, &corpus, steps, 0.5, 17)?;
+        println!(
+            "final training loss {:.3} (ppl {:.1})",
+            report.final_loss,
+            report.final_loss.exp()
+        );
+        trained.save(WeightStore::trained_path(&spec))?;
+        trained
+    };
+
+    // held-out corpus (different seed from training)
+    let eval_corpus = data::synth_corpus(40_000, spec.vocab, 92);
+    let windows = data::token_windows(&eval_corpus, spec.seq_len, 32);
+    println!(
+        "evaluating on {} windows of {} tokens",
+        windows.shape()[0],
+        spec.seq_len
+    );
+
+    let float_ppl = {
+        let prep = pipeline::prepare(&spec, &ws, None, &QuantConfig::float())?;
+        eval::perplexity(&engine, &spec, &prep, &windows)?
+    };
+    println!("\nfloat perplexity: {float_ppl:.2}\n");
+    println!(
+        "{:>4} {:>6} | {:>8} {:>8} {:>8} {:>8}",
+        "bits", "r", "none", "mse", "aciq", "kl"
+    );
+    for bits in [6u32, 5] {
+        for r in [0.0, 0.02, 0.05] {
+            let mut row = Vec::new();
+            for clip in [
+                ClipMethod::None,
+                ClipMethod::Mse,
+                ClipMethod::Aciq,
+                ClipMethod::Kl,
+            ] {
+                let cfg = QuantConfig::weights_only(bits, clip, r);
+                let prep = pipeline::prepare(&spec, &ws, None, &cfg)?;
+                row.push(eval::perplexity(&engine, &spec, &prep, &windows)?);
+            }
+            println!(
+                "{bits:>4} {r:>6} | {:>8.2} {:>8.2} {:>8.2} {:>8.2}",
+                row[0], row[1], row[2], row[3]
+            );
+        }
+    }
+    println!("\nexpected shape (paper Table 6): clipping does not help; OCS improves with r");
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Figure-1 companion: dump weight histograms (float vs quantized) for
+//! the linear / clip / OCS treatments of one layer, as CSV for plotting,
+//! plus the MSE ladder the figure annotates.
+//!
+//! Run:  cargo run --release --example ocs_visualize [-- <layer>]
+
+use anyhow::{Context, Result};
+
+use ocs::clip::ClipMethod;
+use ocs::model::store::WeightStore;
+use ocs::model::ModelSpec;
+use ocs::ocs::{plan, weight_ocs, SplitMode};
+use ocs::quant::{fake_quant_tensor, QuantSpec};
+use ocs::stats::Histogram;
+use ocs::tensor::TensorF;
+
+fn dump(path: &str, data: &[f32]) -> Result<()> {
+    let max = data.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-9);
+    let bins = 101;
+    let mut counts = vec![0u64; bins];
+    for &v in data {
+        let t = ((v + max) / (2.0 * max) * bins as f32) as usize;
+        counts[t.min(bins - 1)] += 1;
+    }
+    let mut s = String::from("center,count\n");
+    for (i, c) in counts.iter().enumerate() {
+        let center = -max + (i as f32 + 0.5) * 2.0 * max / bins as f32;
+        s.push_str(&format!("{center},{c}\n"));
+    }
+    std::fs::write(path, s)?;
+    println!("  wrote {path}");
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let spec = ModelSpec::load_named("artifacts", "miniresnet")?;
+    let (ws, _) = WeightStore::load_best(&spec)?;
+    let layer_name = std::env::args().nth(1);
+    let layer = match layer_name {
+        Some(n) => spec.layer(&n)?.clone(),
+        None => spec
+            .quantized_layers()
+            .max_by_key(|l| l.cin)
+            .context("no quantized layers")?
+            .clone(),
+    };
+    println!(
+        "layer '{}': {}x{} channels",
+        layer.name, layer.cin, layer.cout
+    );
+    let w = ws.weight(&layer.name)?;
+    let qspec = QuantSpec::new(4);
+    let hist = Histogram::from_slice(w.data(), 2048);
+    std::fs::create_dir_all("results")?;
+
+    // linear
+    let t = hist.max_abs();
+    let q = fake_quant_tensor(w, t, qspec);
+    println!("linear:  threshold {t:.5}  MSE {:.3e}", w.mse(&q));
+    dump("results/viz_float.csv", w.data())?;
+    dump("results/viz_linear_quant.csv", q.data())?;
+
+    // clip
+    let tc = ClipMethod::Mse.threshold(&hist, qspec);
+    let qc = fake_quant_tensor(w, tc, qspec);
+    println!("clip:    threshold {tc:.5}  MSE {:.3e}", w.mse(&qc));
+    dump("results/viz_clip_quant.csv", qc.data())?;
+
+    // OCS
+    let n = plan::splits_for(layer.cin, 0.05, layer.cin_pad);
+    let hooks = weight_ocs(
+        w,
+        layer.w_cin_axis,
+        layer.cin_pad,
+        n,
+        SplitMode::QuantAware,
+        qspec.delta(t),
+    )?;
+    let active: Vec<f32> = (0..hooks.active)
+        .flat_map(|s| hooks.w_expanded.axis_slice(layer.w_cin_axis, s).unwrap())
+        .collect();
+    let to = active.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let wo = TensorF::from_vec(&[active.len()], active)?;
+    let qo = fake_quant_tensor(&wo, to, qspec);
+    println!(
+        "ocs:     threshold {to:.5}  MSE {:.3e}  ({} splits, range -{:.1}%)",
+        wo.mse(&qo),
+        hooks.splits.len(),
+        100.0 * (1.0 - to / t)
+    );
+    dump("results/viz_ocs_float.csv", wo.data())?;
+    dump("results/viz_ocs_quant.csv", qo.data())?;
+    Ok(())
+}

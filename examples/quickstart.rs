@@ -1,0 +1,94 @@
+//! End-to-end quickstart — the full three-layer stack on one workload.
+//!
+//! 1. Train the ResNet-20 stand-in from scratch for a few hundred SGD
+//!    steps *through the AOT-compiled `train_step` artifact* (L2 JAX
+//!    graph + L1 Pallas kernels, driven from Rust over PJRT), logging
+//!    the loss curve.
+//! 2. Post-training-quantize the result to 5-bit weights four ways:
+//!    plain linear, best clipping, OCS, OCS + clip (the paper's Table 2
+//!    recipe), and print the accuracy ladder.
+//!
+//! Run:  cargo run --release --example quickstart
+//! (requires `make artifacts` first)
+
+use anyhow::Result;
+
+use ocs::calib;
+use ocs::clip::ClipMethod;
+use ocs::eval;
+use ocs::model::store::WeightStore;
+use ocs::model::ModelSpec;
+use ocs::pipeline::{self, QuantConfig};
+use ocs::runtime::Engine;
+use ocs::train::{self, data};
+
+fn main() -> Result<()> {
+    let model = "miniresnet";
+    let steps = std::env::var("QUICKSTART_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(400usize);
+
+    println!("== quickstart: {model}, {steps} training steps ==\n");
+    let spec = ModelSpec::load_named("artifacts", model)?;
+    let engine = Engine::cpu()?;
+
+    // ---- 1. train through the compiled train_step artifact -------------
+    let init = WeightStore::load_init(&spec)?;
+    let dataset = data::synth_images(8_000, 23);
+    let t0 = std::time::Instant::now();
+    let (trained, report) = train::train_cnn(&engine, &spec, &init, &dataset, steps, 0.04, 17)?;
+    println!(
+        "\ntrained {} params in {:.1}s ({:.0} ms/step); loss curve:",
+        trained.param_count(),
+        t0.elapsed().as_secs_f64(),
+        t0.elapsed().as_millis() as f64 / steps as f64
+    );
+    for (s, l) in &report.losses {
+        println!("  step {s:4}  loss {l:.4}");
+    }
+
+    // ---- 2. post-training quantization ladder ---------------------------
+    let test = data::synth_images(2_000, 31);
+    let calib_set = data::synth_images(256, 29);
+    let calibration = calib::calibrate(&engine, &spec, &trained, &calib_set.x, 32)?;
+
+    let bits = 5;
+    let ladder = [
+        ("float", QuantConfig::float()),
+        (
+            "linear (no clip)",
+            QuantConfig::weights_with_a8(bits, ClipMethod::None, 0.0),
+        ),
+        (
+            "MSE clip",
+            QuantConfig::weights_with_a8(bits, ClipMethod::Mse, 0.0),
+        ),
+        (
+            "OCS r=0.02",
+            QuantConfig::weights_with_a8(bits, ClipMethod::None, 0.02),
+        ),
+        (
+            "OCS r=0.02 + MSE clip",
+            QuantConfig::weights_with_a8(bits, ClipMethod::Mse, 0.02),
+        ),
+    ];
+    println!("\n{bits}-bit weight quantization ladder (acts 8-bit):");
+    for (name, cfg) in ladder {
+        let needs_calib = cfg.a_bits.is_some();
+        let prep = pipeline::prepare(
+            &spec,
+            &trained,
+            if needs_calib { Some(&calibration) } else { None },
+            &cfg,
+        )?;
+        let acc = eval::accuracy(&engine, &spec, &prep, &test.x, &test.y, 128)?;
+        println!(
+            "  {name:<24} top-1 {:>6.2}%   (weight overhead {:.3}x)",
+            acc * 100.0,
+            prep.weight_overhead()
+        );
+    }
+    println!("\nexpected shape: clip > linear; OCS ~ clip or better; OCS+clip best (paper §5.2)");
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! Serving example: a dynamic-batching inference server over an
+//! OCS-quantized model (paper §3.5 — OCS-transformed models are plain
+//! models, servable with no custom runtime support).
+//!
+//! Starts the server (executor thread owns the PJRT engine), fires
+//! concurrent clients at it under two load patterns, and reports
+//! latency/throughput and the batching behaviour.
+//!
+//! Run:  cargo run --release --example serve_quantized
+//! (requires `make artifacts`; trained weights recommended: `ocs train`)
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use ocs::clip::ClipMethod;
+use ocs::pipeline::QuantConfig;
+use ocs::serve::{ServeConfig, Server};
+use ocs::tensor::TensorF;
+use ocs::train::data;
+
+fn drive(server: &Server, clients: usize, per_client: usize, think: Duration) -> Result<f64> {
+    let dataset = data::synth_images(256, 411);
+    let row = dataset.x.len() / dataset.len();
+    let xdata = std::sync::Arc::new(dataset.x.data().to_vec());
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let client = server.client();
+        let xdata = xdata.clone();
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            for i in 0..per_client {
+                let idx = (c * per_client + i) % 256;
+                let x =
+                    TensorF::from_vec(&[1, 16, 16, 3], xdata[idx * row..(idx + 1) * row].to_vec())?;
+                let logits = client.infer(x)?;
+                assert_eq!(logits.len(), 10);
+                if !think.is_zero() {
+                    std::thread::sleep(think);
+                }
+            }
+            Ok(())
+        }));
+    }
+    for h in handles {
+        h.join().expect("client thread")?;
+    }
+    Ok((clients * per_client) as f64 / t0.elapsed().as_secs_f64())
+}
+
+fn main() -> Result<()> {
+    let model = "minivgg";
+    // 5-bit weights with MSE clip + OCS r=0.02 — a Table-2 sweet spot
+    let quant = QuantConfig::weights_with_a8(5, ClipMethod::Mse, 0.02);
+    println!("== serving {model} [{}] ==", quant.label());
+
+    let server = Server::start(
+        "artifacts",
+        model,
+        quant,
+        ServeConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 1024,
+        },
+    )?;
+
+    println!("\n-- closed-loop burst (8 clients, no think time) --");
+    let rps = drive(&server, 8, 128, Duration::ZERO)?;
+    println!("{}", server.metrics().report());
+    println!("throughput {rps:.0} req/s");
+
+    println!("\n-- trickle (4 clients, 5 ms think time: batches stay small) --");
+    let rps = drive(&server, 4, 64, Duration::from_millis(5))?;
+    println!("{}", server.metrics().report());
+    println!("throughput {rps:.0} req/s");
+
+    server.shutdown()?;
+    println!("\nserver drained cleanly");
+    Ok(())
+}

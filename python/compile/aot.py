@@ -1,0 +1,308 @@
+"""AOT compile path: lower every model artifact to HLO text.
+
+Run once by ``make artifacts``; python never runs on the request path.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: the
+xla crate's xla_extension 0.5.1 rejects jax>=0.5 protos (64-bit
+instruction ids, `proto.id() <= INT_MAX`); the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, per model, under artifacts/<model>/:
+    fwd_b{B}.hlo.txt     quantized inference at batch B
+    probe_b{B}.hlo.txt   float inference + per-layer input activations
+    train_b{B}.hlo.txt   fwd+bwd+SGD(momentum) step
+    init.ocst            seeded initial float parameters
+    meta.json            layer table + exact input/output signatures
+
+The Rust coordinator discovers everything through meta.json; signatures
+are recorded here (name/dtype/shape per input, in positional order) so
+the two sides can never drift.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .ocst import write_ocst
+
+CNN_FWD_BATCHES = [1, 2, 4, 8, 32, 128]
+# probe artifacts: calibration uses b=32; Table 4 (Oracle OCS) sweeps all
+# batch sizes on miniresnet + miniincept.
+PROBE_BATCHES = {
+    "minivgg": [32],
+    "miniresnet": CNN_FWD_BATCHES,
+    "miniincept": CNN_FWD_BATCHES,
+}
+CNN_TRAIN_BATCH = 64
+LSTM_BATCH = 32
+SEED = 20190613  # ICML 2019 week; fixed for reproducibility
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flat signatures: (name, dtype, shape) triples in positional order
+# ---------------------------------------------------------------------------
+
+
+def data_inputs(model, batch):
+    if model.name == "lstmlm":
+        return [("tokens", "i32", (batch, M.SEQ_LEN + 1))]
+    return [("x", "f32", (batch, M.IMG_HW, M.IMG_HW, M.IMG_C))]
+
+
+def fwd_signature(model, batch):
+    sig = data_inputs(model, batch)
+    for spec in model.specs:
+        sig.append((f"{spec.name}.W", "f32", spec.w_shape(padded=True)))
+        if spec.kind != "embed":
+            sig.append((f"{spec.name}.b", "f32", (spec.cout,)))
+        if spec.quantized:
+            cp = spec.cin_pad
+            sig += [
+                (f"{spec.name}.idx", "i32", (cp,)),
+                (f"{spec.name}.dscale", "f32", (cp,)),
+                (f"{spec.name}.dbias", "f32", (cp,)),
+                (f"{spec.name}.adelta", "f32", ()),
+                (f"{spec.name}.aqmax", "f32", ()),
+            ]
+    return sig
+
+
+def float_param_signature(model):
+    sig = []
+    for spec in model.specs:
+        sig.append((f"{spec.name}.W", "f32", spec.w_shape(padded=False)))
+        if spec.kind != "embed":
+            sig.append((f"{spec.name}.b", "f32", (spec.cout,)))
+    return sig
+
+
+def probe_signature(model, batch):
+    return float_param_signature(model) + data_inputs(model, batch)
+
+
+def train_signature(model, batch):
+    p = float_param_signature(model)
+    mom = [("m." + n, d, s) for (n, d, s) in p]
+    sig = p + mom + data_inputs(model, batch)
+    if model.name != "lstmlm":
+        sig.append(("y", "i32", (batch,)))
+    sig.append(("lr", "f32", ()))
+    return sig
+
+
+def _unflatten_named(model, names, args, padded):
+    """Rebuild params/hooks dicts from flat positional args."""
+    byname = dict(zip(names, args))
+    params, hooks = {}, {}
+    for spec in model.specs:
+        entry = {"W": byname[f"{spec.name}.W"]}
+        if spec.kind != "embed":
+            entry["b"] = byname[f"{spec.name}.b"]
+        params[spec.name] = entry
+        if padded and spec.quantized:
+            hooks[spec.name] = {
+                "idx": byname[f"{spec.name}.idx"],
+                "dscale": byname[f"{spec.name}.dscale"],
+                "dbias": byname[f"{spec.name}.dbias"],
+                "adelta": byname[f"{spec.name}.adelta"],
+                "aqmax": byname[f"{spec.name}.aqmax"],
+            }
+    return params, hooks
+
+
+# ---------------------------------------------------------------------------
+# Artifact builders
+# ---------------------------------------------------------------------------
+
+
+def build_fwd(model, batch):
+    sig = fwd_signature(model, batch)
+    names = [n for n, _, _ in sig]
+
+    def fn(*args):
+        byname = dict(zip(names, args))
+        params, hooks = _unflatten_named(model, names, args, padded=True)
+        data = byname["tokens"] if model.name == "lstmlm" else byname["x"]
+        out = model.forward(params, data, hooks=hooks)
+        if model.name == "lstmlm":
+            return out  # (nll_sum, ntok)
+        return (out,)
+
+    if model.name == "lstmlm":
+        outs = [("nll_sum", ()), ("ntok", ())]
+    else:
+        outs = [("logits", (batch, M.NUM_CLASSES))]
+    return fn, sig, outs
+
+
+def build_probe(model, batch):
+    sig = probe_signature(model, batch)
+    names = [n for n, _, _ in sig]
+    qspecs = [s for s in model.specs if s.quantized]
+
+    def fn(*args):
+        byname = dict(zip(names, args))
+        params, _ = _unflatten_named(model, names, args, padded=False)
+        data = byname["tokens"] if model.name == "lstmlm" else byname["x"]
+        probe = {}
+        logits = model.forward(params, data, hooks=None, probe=probe)
+        return (logits,) + tuple(probe[s.name] for s in qspecs)
+
+    # output shapes via eval_shape
+    example = [sds(s, jnp.int32 if d == "i32" else jnp.float32) for _, d, s in sig]
+    shapes = jax.eval_shape(fn, *example)
+    outs = [("logits", tuple(shapes[0].shape))]
+    for s, sh in zip(qspecs, shapes[1:]):
+        outs.append((f"act.{s.name}", tuple(sh.shape)))
+    return fn, sig, outs
+
+
+def build_train(model, batch):
+    sig = train_signature(model, batch)
+    names = [n for n, _, _ in sig]
+    train_step = M.make_train_step(model)
+    nparams = len(float_param_signature(model))
+
+    def fn(*args):
+        byname = dict(zip(names, args))
+        pleaves = list(args[:nparams])
+        mleaves = list(args[nparams : 2 * nparams])
+        if model.name == "lstmlm":
+            batch_data = byname["tokens"]
+        else:
+            batch_data = (byname["x"], byname["y"])
+        new_p, new_m, loss = train_step(pleaves, mleaves, batch_data, byname["lr"])
+        return tuple(new_p) + tuple(new_m) + (loss,)
+
+    pnames = [n for n, _, _ in float_param_signature(model)]
+    outs = [(n, s) for (n, _, s) in sig[:nparams]]
+    outs += [("m." + n, s) for (n, s) in zip(pnames, [s for _, _, s in sig[:nparams]])]
+    outs.append(("loss", ()))
+    return fn, sig, outs
+
+
+def lower_to_file(fn, sig, path):
+    example = [sds(s, jnp.int32 if d == "i32" else jnp.float32) for _, d, s in sig]
+    lowered = jax.jit(fn).lower(*example)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def sig_json(sig):
+    return [{"name": n, "dtype": d, "shape": list(s)} for n, d, s in sig]
+
+
+def outs_json(outs):
+    return [{"name": n, "shape": list(s)} for n, s in outs]
+
+
+def compile_model(name, out_dir, quick=False):
+    model = M.get_model(name)
+    mdir = os.path.join(out_dir, name)
+    os.makedirs(mdir, exist_ok=True)
+
+    if name == "lstmlm":
+        fwd_batches = [LSTM_BATCH]
+        probe_batches = []
+        train_batch = LSTM_BATCH
+    else:
+        fwd_batches = CNN_FWD_BATCHES if not quick else [8]
+        probe_batches = PROBE_BATCHES[name] if not quick else [8]
+        train_batch = CNN_TRAIN_BATCH if not quick else 8
+
+    artifacts = {}
+    for b in fwd_batches:
+        fn, sig, outs = build_fwd(model, b)
+        fname = f"fwd_b{b}.hlo.txt"
+        n = lower_to_file(fn, sig, os.path.join(mdir, fname))
+        artifacts[f"fwd_b{b}"] = {
+            "file": fname,
+            "batch": b,
+            "inputs": sig_json(sig),
+            "outputs": outs_json(outs),
+        }
+        print(f"  {name}/{fname}: {n} chars")
+    for b in probe_batches:
+        fn, sig, outs = build_probe(model, b)
+        fname = f"probe_b{b}.hlo.txt"
+        n = lower_to_file(fn, sig, os.path.join(mdir, fname))
+        artifacts[f"probe_b{b}"] = {
+            "file": fname,
+            "batch": b,
+            "inputs": sig_json(sig),
+            "outputs": outs_json(outs),
+        }
+        print(f"  {name}/{fname}: {n} chars")
+    fn, sig, outs = build_train(model, train_batch)
+    fname = f"train_b{train_batch}.hlo.txt"
+    n = lower_to_file(fn, sig, os.path.join(mdir, fname))
+    artifacts["train"] = {
+        "file": fname,
+        "batch": train_batch,
+        "inputs": sig_json(sig),
+        "outputs": outs_json(outs),
+    }
+    print(f"  {name}/{fname}: {n} chars")
+
+    # initial parameters
+    params = model.init_params(SEED)
+    leaves = [(n, np.asarray(a)) for n, a in M.flatten_params(model, params)]
+    write_ocst(os.path.join(mdir, "init.ocst"), leaves)
+
+    meta = {
+        "model": name,
+        "pad_factor": M.PAD_FACTOR,
+        "seed": SEED,
+        "num_classes": M.NUM_CLASSES,
+        "img_hw": M.IMG_HW,
+        "img_c": M.IMG_C,
+        "vocab": M.VOCAB,
+        "seq_len": M.SEQ_LEN,
+        "momentum": M.MOMENTUM,
+        "layers": [s.meta() for s in model.specs],
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(mdir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="minivgg,miniresnet,miniincept,lstmlm")
+    ap.add_argument(
+        "--quick", action="store_true", help="single small batch per model (CI smoke)"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = [m for m in args.models.split(",") if m]
+    for name in names:
+        print(f"[aot] lowering {name} ...")
+        compile_model(name, args.out_dir, quick=args.quick)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump({"models": names}, f)
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Layer-1 Pallas kernels for the OCS quantization stack.
+
+Three kernels cover the paper's runtime compute:
+
+* :func:`fake_quant.fake_quant` — Eq. 1 linear quantize-dequantize with a
+  runtime clip threshold (the simulated-quantization hot-spot).
+* :func:`channel_dup.channel_dup` — the OCS "custom layer" of paper §3.5:
+  duplicate + scale (+ bias, for quantization-aware activation splits)
+  selected channels.
+* :func:`qmatmul.qmatmul` — fused fake-quant + GEMM for FC layers.
+
+All kernels run with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); block shapes are still chosen MXU/VREG-shaped so the same
+code is TPU-credible. Pure-jnp oracles live in :mod:`ref`.
+"""
+
+from .fake_quant import fake_quant
+from .channel_dup import channel_dup
+from .qmatmul import qmatmul
+
+__all__ = ["fake_quant", "channel_dup", "qmatmul"]

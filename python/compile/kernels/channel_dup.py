@@ -1,0 +1,73 @@
+"""Pallas kernel: the OCS channel duplicate/scale layer (paper §3.5).
+
+OCS cannot target single values — it duplicates whole channels. At run
+time this is a gather along the channel axis plus an affine correction:
+
+    y[..., j] = x[..., idx[j]] * scale[j] + bias[j]
+
+* Weight OCS (Eq. 3): the duplicated activation channel is passed through
+  unscaled (``scale = 1``) — the halving lives in the weights.
+* Activation OCS (Eq. 4): both halves carry ``scale = 0.5``; with
+  quantization-aware splitting (Eq. 6 applied to activations) the two
+  halves additionally receive ``bias = ∓ delta/4``.
+* Padded slots (the artifact reserves ``cin_pad = ceil(1.25 * cin)``
+  channels): ``idx = 0, scale = 0, bias = 0`` — functionally inert.
+
+On TPU this is a lane permute inside VMEM; here the gather runs under
+``interpret=True``.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid step; the full channel axes (C in, P out) stay resident.
+ROW_BLOCK = 256
+
+
+def _channel_dup_kernel(x_ref, idx_ref, s_ref, b_ref, o_ref):
+    x = x_ref[...]  # (ROW_BLOCK, C)
+    idx = idx_ref[...]  # (P,)
+    y = jnp.take(x, idx, axis=1)
+    o_ref[...] = y * s_ref[...][None, :] + b_ref[...][None, :]
+
+
+def channel_dup(x, idx, scale, bias):
+    """Expand the trailing channel axis of ``x`` from C to P = len(idx).
+
+    Args:
+      x: (..., C) float32.
+      idx: (P,) int32 in [0, C) — source channel of each output slot.
+      scale: (P,) float32.
+      bias: (P,) float32.
+
+    Returns:
+      (..., P) float32.
+    """
+    lead = x.shape[:-1]
+    c = x.shape[-1]
+    p = idx.shape[0]
+    rows = 1
+    for d in lead:
+        rows *= d
+    flat = x.reshape(rows, c)
+    pad = (-rows) % ROW_BLOCK
+    if pad:
+        flat = jnp.pad(flat, ((0, pad), (0, 0)))
+    grid = (flat.shape[0] // ROW_BLOCK,)
+    out = pl.pallas_call(
+        _channel_dup_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROW_BLOCK, c), lambda i: (i, 0)),
+            pl.BlockSpec((p,), lambda i: (0,)),
+            pl.BlockSpec((p,), lambda i: (0,)),
+            pl.BlockSpec((p,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((ROW_BLOCK, p), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((flat.shape[0], p), jnp.float32),
+        interpret=True,
+    )(flat, idx, scale, bias)
+    if pad:
+        out = out[:rows]
+    return out.reshape(lead + (p,))

@@ -1,0 +1,69 @@
+"""Pallas kernel: linear quantize-dequantize (paper Eq. 1).
+
+``y = clamp(Q(x / delta), -qmax, qmax) * delta`` with the paper's
+deterministic rounding ``Q(v) = floor(v + 0.5)`` (round-half-up — the
+rounding rule the quantization-aware splitting proof of §3.3 relies on;
+*not* banker's rounding).
+
+``delta`` and ``qmax`` are runtime scalars so one AOT-compiled artifact
+serves every bitwidth and clip threshold; ``qmax <= 0`` bypasses
+quantization entirely (float passthrough), which is how the float
+baseline and "weights-only" configurations run.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# One grid step processes BLOCK contiguous elements. 8 * 128 * 8 = a whole
+# number of (8, 128) f32 VREGs per step on TPU; on CPU (interpret) it is
+# simply a cache-friendly tile.
+BLOCK = 8 * 128 * 8
+
+
+def _fake_quant_kernel(x_ref, d_ref, q_ref, o_ref):
+    x = x_ref[...]
+    delta = d_ref[0]
+    qmax = q_ref[0]
+    # Paper rounding: floor(v + 0.5), halves toward +inf.
+    q = jnp.floor(x / delta + 0.5)
+    y = jnp.clip(q, -qmax, qmax) * delta
+    o_ref[...] = jnp.where(qmax > 0, y, x)
+
+
+def fake_quant(x, delta, qmax):
+    """Quantize-dequantize ``x`` on a symmetric linear grid.
+
+    Args:
+      x: any-shape float32 array.
+      delta: scalar float32 — grid step (clip_threshold / qmax).
+      qmax: scalar float32 — largest grid index, ``2^{k-1} - 1`` for k-bit
+        sign-magnitude quantization. ``qmax <= 0`` disables quantization.
+
+    Returns:
+      Array of the same shape/dtype as ``x``.
+    """
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    grid = (flat.shape[0] // BLOCK,)
+    delta = jnp.asarray(delta, jnp.float32).reshape(1)
+    qmax = jnp.asarray(qmax, jnp.float32).reshape(1)
+    out = pl.pallas_call(
+        _fake_quant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(flat.shape, jnp.float32),
+        interpret=True,
+    )(flat, delta, qmax)
+    if pad:
+        out = out[:n]
+    return out.reshape(shape)

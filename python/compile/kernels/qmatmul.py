@@ -1,0 +1,69 @@
+"""Pallas kernel: fused fake-quant + GEMM for fully-connected layers.
+
+The activation tile is quantize-dequantized *inside* the matmul kernel so
+the quantization pass adds no extra HBM round-trip — the TPU analogue of
+the paper's GPU fake-quantized GEMM. Weights arrive already
+fake-quantized (done offline by the Rust coordinator), so only the
+activation side is quantized here.
+
+Blocks are MXU-shaped (128 x 128 output tile, full-K panels); the K axis
+is kept resident per block because every FC layer in the benchmark
+models has K <= 2048 (VMEM budget ~= (BM + BN) * K * 4B + BM * BN * 4B).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM = 128
+BN = 128
+
+
+def _qmatmul_kernel(x_ref, w_ref, d_ref, q_ref, o_ref):
+    x = x_ref[...]  # (BM, K)
+    w = w_ref[...]  # (K, BN)
+    delta = d_ref[0]
+    qmax = q_ref[0]
+    xq = jnp.clip(jnp.floor(x / delta + 0.5), -qmax, qmax) * delta
+    xq = jnp.where(qmax > 0, xq, x)
+    o_ref[...] = jnp.dot(xq, w, preferred_element_type=jnp.float32)
+
+
+def qmatmul(x, w, delta, qmax):
+    """Compute ``fake_quant(x, delta, qmax) @ w``.
+
+    Args:
+      x: (M, K) float32 activations.
+      w: (K, N) float32 weights (already fake-quantized offline).
+      delta, qmax: runtime scalars, as in :func:`fake_quant.fake_quant`.
+
+    Returns:
+      (M, N) float32.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    pad_m = (-m) % BM
+    pad_n = (-n) % BN
+    if pad_m:
+        x = jnp.pad(x, ((0, pad_m), (0, 0)))
+    if pad_n:
+        w = jnp.pad(w, ((0, 0), (0, pad_n)))
+    mp, np_ = x.shape[0], w.shape[1]
+    delta = jnp.asarray(delta, jnp.float32).reshape(1)
+    qmax = jnp.asarray(qmax, jnp.float32).reshape(1)
+    grid = (mp // BM, np_ // BN)
+    out = pl.pallas_call(
+        _qmatmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BM, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, BN), lambda i, j: (0, j)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(x, w, delta, qmax)
+    return out[:m, :n]

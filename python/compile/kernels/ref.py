@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: pytest (plus hypothesis shape /
+value sweeps) asserts the Pallas kernels match these to float32
+tolerance. They also document the exact semantics the Rust quantizer
+mirrors (same round-half-up rule, same sign-magnitude clip range).
+"""
+
+import jax.numpy as jnp
+
+
+def round_half_up(v):
+    """The paper's Q(x) = floor(x + 0.5) — halves round toward +inf."""
+    return jnp.floor(v + 0.5)
+
+
+def fake_quant_ref(x, delta, qmax):
+    """Reference for kernels.fake_quant (Eq. 1 with clip)."""
+    delta = jnp.asarray(delta, jnp.float32)
+    qmax = jnp.asarray(qmax, jnp.float32)
+    y = jnp.clip(round_half_up(x / delta), -qmax, qmax) * delta
+    return jnp.where(qmax > 0, y, x)
+
+
+def channel_dup_ref(x, idx, scale, bias):
+    """Reference for kernels.channel_dup."""
+    return jnp.take(x, idx, axis=-1) * scale + bias
+
+
+def qmatmul_ref(x, w, delta, qmax):
+    """Reference for kernels.qmatmul."""
+    return fake_quant_ref(x, delta, qmax) @ w

@@ -1,0 +1,446 @@
+"""Layer-2 JAX benchmark models with OCS quantization hooks.
+
+Every model is built in three flavours, each AOT-lowered by ``aot.py``:
+
+* ``fwd``   — quantized inference. Each quantizable layer consumes runtime
+  inputs ``(W, b, idx, dscale, dbias, adelta, aqmax)``. The input-channel
+  axis of quantized weights is padded to ``cin_pad = ceil(PAD_FACTOR*cin)``
+  so a single artifact serves every OCS expand ratio r <= PAD_FACTOR-1:
+  the Rust coordinator materializes duplicated channels into the padded
+  slots and steers them with ``idx``/``dscale``/``dbias``
+  (kernels.channel_dup). Activations are quantized by kernels.fake_quant
+  (or fused inside kernels.qmatmul for FC layers) with runtime
+  ``adelta``/``aqmax`` scalars — ``aqmax <= 0`` bypasses quantization.
+* ``probe`` — float inference (unpadded weights, no hooks) that also
+  returns every quantizable layer's *input* activation, used by the Rust
+  calibrator to build per-layer histograms and by Oracle OCS (§5.3).
+* ``train`` — float fwd+bwd+SGD(momentum) step, params/momentum in and
+  out. The Rust trainer drives the whole training loop through this
+  artifact; python never runs at training time.
+
+Benchmark models (substitutes for the paper's ImageNet zoo — see
+DESIGN.md §1): ``minivgg`` (plain stack), ``miniresnet`` (ResNet-20-like,
+also Table 1's model), ``miniincept`` (parallel branches), ``lstmlm``
+(2-layer LSTM LM, Table 6). First conv layers are left unquantized, as in
+the paper (§5: 3 input channels would make OCS overhead huge).
+"""
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import channel_dup, fake_quant, qmatmul
+
+# One artifact serves every expand ratio up to PAD_FACTOR - 1 (the paper's
+# largest evaluated ratio is r = 0.2; Table 1 needs up to 0.2).
+PAD_FACTOR = 1.25
+
+# Image task geometry (synthetic 10-class dataset, generated in Rust).
+IMG_HW = 16
+IMG_C = 3
+NUM_CLASSES = 10
+
+# LSTM LM geometry.
+VOCAB = 2000
+EMBED = 192
+HIDDEN = 192
+SEQ_LEN = 32
+
+MOMENTUM = 0.9
+
+
+def pad_channels(c: int) -> int:
+    """Padded channel capacity reserved for OCS duplicates."""
+    return int(math.ceil(PAD_FACTOR * c))
+
+
+@dataclasses.dataclass
+class LayerSpec:
+    """One (potentially quantizable) parametric layer."""
+
+    name: str
+    kind: str  # 'conv' | 'fc' | 'embed'
+    cin: int
+    cout: int
+    ksize: int = 3
+    stride: int = 1
+    quantized: bool = True
+
+    @property
+    def cin_pad(self) -> int:
+        return pad_channels(self.cin) if self.quantized else self.cin
+
+    def w_shape(self, padded: bool):
+        cin = self.cin_pad if (padded and self.quantized) else self.cin
+        if self.kind == "conv":
+            return (self.ksize, self.ksize, cin, self.cout)
+        return (cin, self.cout)  # fc / embed
+
+    def meta(self) -> dict:
+        return {
+            "name": self.name,
+            "kind": self.kind,
+            "cin": self.cin,
+            "cin_pad": self.cin_pad,
+            "cout": self.cout,
+            "ksize": self.ksize,
+            "stride": self.stride,
+            "quantized": self.quantized,
+            # axis of the input-channel dim in the weight tensor
+            "w_cin_axis": 2 if self.kind == "conv" else 0,
+            "w_shape": list(self.w_shape(padded=False)),
+            "w_shape_pad": list(self.w_shape(padded=True)),
+        }
+
+
+class ModelDef:
+    """A benchmark model: layer table + forward topology."""
+
+    def __init__(self, name: str, specs: List[LayerSpec]):
+        self.name = name
+        self.specs = specs
+        self.by_name = {s.name: s for s in specs}
+
+    # ---- parameter init (He normal, fixed seed per model) ----------------
+    def init_params(self, seed: int) -> Dict[str, Dict[str, jnp.ndarray]]:
+        key = jax.random.PRNGKey(seed)
+        params = {}
+        for spec in self.specs:
+            key, k = jax.random.split(key)
+            shape = spec.w_shape(padded=False)
+            if spec.kind == "conv":
+                fan_in = spec.ksize * spec.ksize * spec.cin
+            else:
+                fan_in = spec.cin
+            if spec.kind == "embed":
+                w = jax.random.normal(k, shape, jnp.float32) * 0.05
+                params[spec.name] = {"W": w}
+            else:
+                std = math.sqrt(2.0 / fan_in)
+                # Damp the final conv of each residual branch (BN-free
+                # ResNet trick) so deep stacks start well-conditioned.
+                if spec.name.endswith("c2"):
+                    std *= 0.1
+                w = jax.random.normal(k, shape, jnp.float32) * std
+                params[spec.name] = {
+                    "W": w,
+                    "b": jnp.zeros((spec.cout,), jnp.float32),
+                }
+        return params
+
+    # ---- forward topology — overridden per model --------------------------
+    def forward(self, params, x, hooks=None, probe=None):
+        raise NotImplementedError
+
+    def loss(self, params, batch):
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Layer application helpers
+# ---------------------------------------------------------------------------
+
+
+def _conv(x, w, b, stride):
+    y = lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + b
+
+
+def _maxpool(x, k=2, s=2):
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, k, k, 1), (1, s, s, 1), "SAME"
+    )
+
+
+def _maxpool_same(x, k=3):
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, k, k, 1), (1, 1, 1, 1), "SAME"
+    )
+
+
+def apply_layer(spec, params, x, hooks, probe):
+    """Apply one parametric layer in either float or quantized mode.
+
+    hooks is None  -> float mode: unpadded weight, no dup/quant ops.
+    hooks present  -> quantized mode: channel_dup + fake_quant in front.
+    probe, if a dict, records the float input activation of quantized
+    layers (the distribution the calibrator profiles).
+    """
+    p = params[spec.name]
+    if probe is not None and spec.quantized:
+        probe[spec.name] = x
+    if hooks is None or not spec.quantized:
+        if spec.kind == "conv":
+            return _conv(x, p["W"], p["b"], spec.stride)
+        return x @ p["W"] + p["b"]
+    h = hooks[spec.name]
+    xe = channel_dup(x, h["idx"], h["dscale"], h["dbias"])
+    if spec.kind == "conv":
+        xq = fake_quant(xe, h["adelta"], h["aqmax"])
+        return _conv(xq, p["W"], p["b"], spec.stride)
+    return qmatmul(xe, p["W"], h["adelta"], h["aqmax"]) + p["b"]
+
+
+def _xent(logits, y):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+# ---------------------------------------------------------------------------
+# MiniVGG — plain conv stack (stands in for VGG-16 BN)
+# ---------------------------------------------------------------------------
+
+
+class MiniVGG(ModelDef):
+    def __init__(self):
+        specs = [
+            LayerSpec("c1", "conv", IMG_C, 24, quantized=False),
+            LayerSpec("c2", "conv", 24, 32),
+            LayerSpec("c3", "conv", 32, 48),
+            LayerSpec("c4", "conv", 48, 64),
+            LayerSpec("c5", "conv", 64, 96),
+            LayerSpec("f1", "fc", 96 * 2 * 2, 128, ksize=0),
+            LayerSpec("f2", "fc", 128, NUM_CLASSES, ksize=0),
+        ]
+        super().__init__("minivgg", specs)
+
+    def forward(self, params, x, hooks=None, probe=None):
+        s = self.by_name
+        a = lambda n, v: apply_layer(s[n], params, v, hooks, probe)
+        x = jax.nn.relu(a("c1", x))
+        x = jax.nn.relu(a("c2", x))
+        x = _maxpool(x)  # 8x8
+        x = jax.nn.relu(a("c3", x))
+        x = jax.nn.relu(a("c4", x))
+        x = _maxpool(x)  # 4x4
+        x = jax.nn.relu(a("c5", x))
+        x = _maxpool(x)  # 2x2
+        x = x.reshape(x.shape[0], -1)  # 384
+        x = jax.nn.relu(a("f1", x))
+        return a("f2", x)
+
+    def loss(self, params, batch):
+        x, y = batch
+        return _xent(self.forward(params, x), y)
+
+
+# ---------------------------------------------------------------------------
+# MiniResNet — ResNet-20-like (stands in for ResNet-50; Table 1's model)
+# ---------------------------------------------------------------------------
+
+
+class MiniResNet(ModelDef):
+    WIDTHS = (16, 32, 64)
+    BLOCKS = 2
+
+    def __init__(self):
+        specs = [LayerSpec("stem", "conv", IMG_C, 16, quantized=False)]
+        cin = 16
+        for si, w in enumerate(self.WIDTHS):
+            for bi in range(self.BLOCKS):
+                stride = 2 if (si > 0 and bi == 0) else 1
+                bname = f"s{si}b{bi}"
+                specs.append(LayerSpec(f"{bname}c1", "conv", cin, w, stride=stride))
+                specs.append(LayerSpec(f"{bname}c2", "conv", w, w))
+                if cin != w:
+                    specs.append(
+                        LayerSpec(f"{bname}sc", "conv", cin, w, ksize=1, stride=stride)
+                    )
+                cin = w
+        specs.append(LayerSpec("fc", "fc", 64, NUM_CLASSES, ksize=0))
+        super().__init__("miniresnet", specs)
+
+    def forward(self, params, x, hooks=None, probe=None):
+        s = self.by_name
+        a = lambda n, v: apply_layer(s[n], params, v, hooks, probe)
+        x = jax.nn.relu(a("stem", x))
+        cin = 16
+        for si, w in enumerate(self.WIDTHS):
+            for bi in range(self.BLOCKS):
+                bname = f"s{si}b{bi}"
+                h = jax.nn.relu(a(f"{bname}c1", x))
+                h = a(f"{bname}c2", h)
+                sc = a(f"{bname}sc", x) if cin != w else x
+                x = jax.nn.relu(h + sc)
+                cin = w
+        x = jnp.mean(x, axis=(1, 2))  # GAP -> (B, 64)
+        return a("fc", x)
+
+    def loss(self, params, batch):
+        x, y = batch
+        return _xent(self.forward(params, x), y)
+
+
+# ---------------------------------------------------------------------------
+# MiniIncept — parallel-branch blocks (stands in for Inception-V3)
+# ---------------------------------------------------------------------------
+
+
+class MiniIncept(ModelDef):
+    def __init__(self):
+        specs = [
+            LayerSpec("stem", "conv", IMG_C, 16, quantized=False),
+            # block A over 16 channels @ 8x8
+            LayerSpec("a_b1", "conv", 16, 12, ksize=1),
+            LayerSpec("a_b2a", "conv", 16, 8, ksize=1),
+            LayerSpec("a_b2b", "conv", 8, 16),
+            LayerSpec("a_b3", "conv", 16, 8, ksize=1),
+            # reduce to 4x4
+            LayerSpec("red", "conv", 36, 48, stride=2),
+            # block B over 48 channels @ 4x4
+            LayerSpec("b_b1", "conv", 48, 16, ksize=1),
+            LayerSpec("b_b2a", "conv", 48, 12, ksize=1),
+            LayerSpec("b_b2b", "conv", 12, 24),
+            LayerSpec("b_b3", "conv", 48, 12, ksize=1),
+            LayerSpec("fc", "fc", 52, NUM_CLASSES, ksize=0),
+        ]
+        super().__init__("miniincept", specs)
+
+    def forward(self, params, x, hooks=None, probe=None):
+        s = self.by_name
+        a = lambda n, v: apply_layer(s[n], params, v, hooks, probe)
+        x = jax.nn.relu(a("stem", x))
+        x = _maxpool(x)  # 8x8
+        b1 = jax.nn.relu(a("a_b1", x))
+        b2 = jax.nn.relu(a("a_b2b", jax.nn.relu(a("a_b2a", x))))
+        b3 = jax.nn.relu(a("a_b3", _maxpool_same(x)))
+        x = jnp.concatenate([b1, b2, b3], axis=-1)  # 36
+        x = jax.nn.relu(a("red", x))  # 4x4 x 48
+        b1 = jax.nn.relu(a("b_b1", x))
+        b2 = jax.nn.relu(a("b_b2b", jax.nn.relu(a("b_b2a", x))))
+        b3 = jax.nn.relu(a("b_b3", _maxpool_same(x)))
+        x = jnp.concatenate([b1, b2, b3], axis=-1)  # 52
+        x = jnp.mean(x, axis=(1, 2))
+        return a("fc", x)
+
+    def loss(self, params, batch):
+        x, y = batch
+        return _xent(self.forward(params, x), y)
+
+
+# ---------------------------------------------------------------------------
+# LstmLM — 2-layer LSTM language model (stands in for the WikiText-2 model)
+# ---------------------------------------------------------------------------
+
+
+class LstmLM(ModelDef):
+    def __init__(self):
+        specs = [
+            LayerSpec("embed", "embed", VOCAB, EMBED, ksize=0, quantized=False),
+            LayerSpec("l0", "fc", EMBED + HIDDEN, 4 * HIDDEN, ksize=0),
+            LayerSpec("l1", "fc", 2 * HIDDEN, 4 * HIDDEN, ksize=0),
+            LayerSpec("proj", "fc", HIDDEN, VOCAB, ksize=0),
+        ]
+        super().__init__("lstmlm", specs)
+
+    def _gate(self, params, hooks, name, xh):
+        spec = self.by_name[name]
+        return apply_layer(spec, params, xh, hooks, None)
+
+    def forward(self, params, tokens, hooks=None, probe=None):
+        """tokens: (B, T+1) int32. Returns (nll_sum, ntok)."""
+        inp = tokens[:, :-1]
+        tgt = tokens[:, 1:]
+        emb = jnp.take(params["embed"]["W"], inp, axis=0)  # (B,T,E)
+        b = inp.shape[0]
+        h0 = jnp.zeros((b, HIDDEN), jnp.float32)
+        init = (h0, h0, h0, h0)
+
+        def cell(gates, c):
+            i, f, g, o = jnp.split(gates, 4, axis=-1)
+            cn = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+            hn = jax.nn.sigmoid(o) * jnp.tanh(cn)
+            return hn, cn
+
+        def step(carry, xt):
+            h0, c0, h1, c1 = carry
+            g0 = self._gate(params, hooks, "l0", jnp.concatenate([xt, h0], -1))
+            h0n, c0n = cell(g0, c0)
+            g1 = self._gate(params, hooks, "l1", jnp.concatenate([h0n, h1], -1))
+            h1n, c1n = cell(g1, c1)
+            logits = self._gate(params, hooks, "proj", h1n)
+            return (h0n, c0n, h1n, c1n), logits
+
+        _, logits = lax.scan(step, init, emb.transpose(1, 0, 2))
+        # logits: (T, B, V); targets transposed to (T, B)
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.take_along_axis(logp, tgt.T[..., None], axis=-1)[..., 0]
+        return nll.sum(), jnp.float32(nll.size)
+
+    def loss(self, params, batch):
+        tokens = batch
+        nll_sum, ntok = self.forward(params, tokens)
+        return nll_sum / ntok
+
+
+# ---------------------------------------------------------------------------
+# Training step (shared)
+# ---------------------------------------------------------------------------
+
+
+def flatten_params(model: ModelDef, params):
+    """Deterministic (name, leaf) flattening: spec order, W then b."""
+    out = []
+    for spec in model.specs:
+        p = params[spec.name]
+        out.append((f"{spec.name}.W", p["W"]))
+        if "b" in p:
+            out.append((f"{spec.name}.b", p["b"]))
+    return out
+
+
+def unflatten_params(model: ModelDef, leaves):
+    params = {}
+    i = 0
+    for spec in model.specs:
+        entry = {"W": leaves[i]}
+        i += 1
+        if spec.kind != "embed":
+            entry["b"] = leaves[i]
+            i += 1
+        params[spec.name] = entry
+    return params
+
+
+def make_train_step(model: ModelDef):
+    """Returns f(param_leaves, mom_leaves, batch..., lr) -> (new_p, new_m, loss).
+
+    Plain SGD with momentum MOMENTUM; lr is a runtime scalar so the Rust
+    trainer owns the schedule.
+    """
+
+    def train_step(param_leaves, mom_leaves, batch, lr):
+        params = unflatten_params(model, param_leaves)
+
+        def loss_fn(p):
+            return model.loss(p, batch)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        gleaves = [g for _, g in flatten_params(model, grads)]
+        new_m = [MOMENTUM * m + g for m, g in zip(mom_leaves, gleaves)]
+        new_p = [p - lr * m for p, m in zip(param_leaves, new_m)]
+        return new_p, new_m, loss
+
+    return train_step
+
+
+MODELS = {
+    "minivgg": MiniVGG,
+    "miniresnet": MiniResNet,
+    "miniincept": MiniIncept,
+    "lstmlm": LstmLM,
+}
+
+
+def get_model(name: str) -> ModelDef:
+    return MODELS[name]()

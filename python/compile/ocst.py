@@ -1,0 +1,62 @@
+"""Writer for the `.ocst` tensor-bundle format.
+
+A deliberately trivial binary container (little-endian) shared between
+the python compile path and the Rust coordinator — no zip/npz machinery
+so the Rust reader (rust/src/tensor/io.rs) stays dependency-free:
+
+    magic   : 8 bytes  b"OCST0001"
+    count   : u32      number of tensors
+    entry   : u16 name_len | name utf-8
+              u8  dtype (0 = f32, 1 = i32)
+              u8  ndim
+              u32 * ndim dims
+              raw little-endian data (4 bytes/elem)
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = b"OCST0001"
+DTYPE_F32 = 0
+DTYPE_I32 = 1
+
+
+def write_ocst(path, tensors):
+    """tensors: list of (name, np.ndarray) with dtype float32 or int32."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors:
+            arr = np.asarray(arr)
+            if arr.dtype == np.float32:
+                dt = DTYPE_F32
+            elif arr.dtype == np.int32:
+                dt = DTYPE_I32
+            else:
+                raise ValueError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", dt, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(np.ascontiguousarray(arr).tobytes())
+
+
+def read_ocst(path):
+    """Inverse of write_ocst — used by the python-side round-trip tests."""
+    out = []
+    with open(path, "rb") as f:
+        assert f.read(8) == MAGIC, "bad magic"
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode("utf-8")
+            dt, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack("<" + "I" * ndim, f.read(4 * ndim))
+            n = int(np.prod(dims)) if ndim else 1
+            dtype = np.float32 if dt == DTYPE_F32 else np.int32
+            data = np.frombuffer(f.read(4 * n), dtype=dtype).reshape(dims)
+            out.append((name, data))
+    return out

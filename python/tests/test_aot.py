@@ -1,0 +1,85 @@
+"""AOT path: signatures, HLO text emission, .ocst round-trip."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+from compile.ocst import read_ocst, write_ocst
+
+
+def test_ocst_roundtrip(tmp_path):
+    r = np.random.default_rng(0)
+    tensors = [
+        ("a.W", r.normal(size=(3, 3, 4, 8)).astype(np.float32)),
+        ("a.idx", r.integers(0, 4, size=(5,)).astype(np.int32)),
+        ("scalar", np.float32(3.25).reshape(())),
+    ]
+    p = tmp_path / "t.ocst"
+    write_ocst(p, tensors)
+    back = read_ocst(p)
+    assert [n for n, _ in back] == [n for n, _ in tensors]
+    for (_, a), (_, b) in zip(tensors, back):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_ocst_rejects_f64():
+    with pytest.raises(ValueError):
+        write_ocst("/tmp/bad.ocst", [("x", np.zeros(3, np.float64))])
+
+
+def test_fwd_signature_covers_all_hooks():
+    model = M.get_model("miniresnet")
+    sig = aot.fwd_signature(model, 8)
+    names = [n for n, _, _ in sig]
+    assert names[0] == "x"
+    for spec in model.specs:
+        assert f"{spec.name}.W" in names
+        if spec.quantized:
+            for suffix in ["idx", "dscale", "dbias", "adelta", "aqmax"]:
+                assert f"{spec.name}.{suffix}" in names
+        else:
+            assert f"{spec.name}.idx" not in names
+
+
+def test_fwd_signature_padded_weight_shapes():
+    model = M.get_model("minivgg")
+    sig = {n: s for n, _, s in aot.fwd_signature(model, 4)}
+    for spec in model.specs:
+        if spec.quantized:
+            assert sig[f"{spec.name}.W"] == spec.w_shape(padded=True)
+            assert sig[f"{spec.name}.W"] != spec.w_shape(padded=False)
+
+
+def test_train_signature_has_momentum_and_lr():
+    model = M.get_model("minivgg")
+    sig = [n for n, _, _ in aot.train_signature(model, 8)]
+    assert "m.c1.W" in sig and sig[-1] == "lr" and "y" in sig
+
+
+def test_lstm_train_signature_no_labels():
+    model = M.get_model("lstmlm")
+    sig = [n for n, _, _ in aot.train_signature(model, 4)]
+    assert "tokens" in sig and "y" not in sig
+
+
+@pytest.mark.slow
+def test_quick_lowering_emits_parseable_hlo(tmp_path):
+    aot.compile_model("minivgg", str(tmp_path), quick=True)
+    mdir = tmp_path / "minivgg"
+    meta = json.loads((mdir / "meta.json").read_text())
+    assert meta["model"] == "minivgg"
+    assert meta["pad_factor"] == M.PAD_FACTOR
+    for key, art in meta["artifacts"].items():
+        text = (mdir / art["file"]).read_text()
+        assert "ENTRY" in text and "HloModule" in text
+        # positional arity must match the recorded signature (count only
+        # the ENTRY computation; nested computations also have parameters)
+        entry = text[text.index("ENTRY") :]
+        assert len(art["inputs"]) == entry.count("parameter(")
+    leaves = read_ocst(mdir / "init.ocst")
+    model = M.get_model("minivgg")
+    want = [n for n, _, _ in aot.float_param_signature(model)]
+    assert [n for n, _ in leaves] == want

@@ -1,0 +1,185 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and values; targeted cases pin the quantization
+semantics the whole stack depends on (round-half-up, sign-magnitude clip
+range, qmax<=0 bypass).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import channel_dup, fake_quant, qmatmul
+from compile.kernels.ref import (
+    channel_dup_ref,
+    fake_quant_ref,
+    qmatmul_ref,
+    round_half_up,
+)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# fake_quant
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    shape=st.lists(st.integers(1, 9), min_size=1, max_size=4),
+    bits=st.integers(2, 8),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(0.01, 10.0),
+)
+def test_fake_quant_matches_ref(shape, bits, seed, scale):
+    x = (rng(seed).normal(size=shape) * scale).astype(np.float32)
+    qmax = float(2 ** (bits - 1) - 1)
+    delta = float(np.abs(x).max() / qmax + 1e-8)
+    got = np.asarray(fake_quant(x, delta, qmax))
+    want = np.asarray(fake_quant_ref(x, delta, qmax))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+
+def test_fake_quant_bypass_identity():
+    x = rng(1).normal(size=(33, 7)).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(fake_quant(x, 0.123, -1.0)), x)
+    np.testing.assert_array_equal(np.asarray(fake_quant(x, 0.123, 0.0)), x)
+
+
+def test_fake_quant_grid_points_are_fixed():
+    # values already on the grid must be unchanged
+    delta = 0.25
+    x = (np.arange(-7, 8) * delta).astype(np.float32)
+    got = np.asarray(fake_quant(x, delta, 7.0))
+    np.testing.assert_allclose(got, x, atol=1e-7)
+
+
+def test_fake_quant_clips_outliers():
+    got = np.asarray(fake_quant(np.float32([100.0, -100.0]), 1.0, 7.0))
+    np.testing.assert_allclose(got, [7.0, -7.0])
+
+
+def test_round_half_up_convention():
+    # paper Q(x) = floor(x + 0.5): halves toward +inf, NOT banker's
+    v = np.float32([0.5, 1.5, 2.5, -0.5, -1.5])
+    np.testing.assert_array_equal(np.asarray(round_half_up(v)), [1, 2, 3, 0, -1])
+    got = np.asarray(fake_quant(np.float32([0.5, 1.5, 2.5]), 1.0, 7.0))
+    np.testing.assert_allclose(got, [1.0, 2.0, 3.0])
+
+
+def test_fake_quant_large_unaligned_sizes():
+    # crosses the BLOCK boundary (padding path)
+    x = rng(2).normal(size=(8 * 128 * 8 + 37,)).astype(np.float32)
+    got = np.asarray(fake_quant(x, 0.01, 127.0))
+    want = np.asarray(fake_quant_ref(x, 0.01, 127.0))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# channel_dup
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    lead=st.lists(st.integers(1, 6), min_size=0, max_size=3),
+    c=st.integers(1, 24),
+    p=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_channel_dup_matches_ref(lead, c, p, seed):
+    r = rng(seed)
+    x = r.normal(size=tuple(lead) + (c,)).astype(np.float32)
+    idx = r.integers(0, c, size=p).astype(np.int32)
+    scale = r.normal(size=p).astype(np.float32)
+    bias = r.normal(size=p).astype(np.float32)
+    got = np.asarray(channel_dup(x, idx, scale, bias))
+    want = np.asarray(channel_dup_ref(x, idx, scale, bias))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_channel_dup_weight_ocs_semantics():
+    # weight OCS: duplicated slot carries scale 1 (halving lives in W)
+    x = np.float32([[1.0, 2.0, 3.0]])
+    idx = np.int32([0, 1, 2, 2])  # split channel 2
+    scale = np.float32([1, 1, 1, 1])
+    bias = np.zeros(4, np.float32)
+    got = np.asarray(channel_dup(x, idx, scale, bias))
+    np.testing.assert_allclose(got, [[1.0, 2.0, 3.0, 3.0]])
+
+
+def test_channel_dup_activation_ocs_semantics():
+    # activation OCS (Eq. 4): both halves scaled 0.5; QA bias ∓delta/4
+    delta = 0.4
+    x = np.float32([[1.0, 2.0, 6.0]])
+    idx = np.int32([0, 1, 2, 2])
+    scale = np.float32([1, 1, 0.5, 0.5])
+    bias = np.float32([0, 0, -delta / 4, +delta / 4])
+    got = np.asarray(channel_dup(x, idx, scale, bias))
+    np.testing.assert_allclose(got, [[1.0, 2.0, 2.9, 3.1]])
+
+
+def test_channel_dup_inert_padding_slot():
+    x = np.float32([[5.0, -3.0]])
+    idx = np.int32([0, 1, 0])
+    scale = np.float32([1, 1, 0])  # padded slot: scale 0
+    bias = np.zeros(3, np.float32)
+    got = np.asarray(channel_dup(x, idx, scale, bias))
+    np.testing.assert_allclose(got, [[5.0, -3.0, 0.0]])
+
+
+def test_channel_dup_row_block_boundary():
+    # rows not a multiple of ROW_BLOCK exercises the pad/slice path
+    x = rng(3).normal(size=(257, 5)).astype(np.float32)
+    idx = np.int32([4, 3, 2, 1, 0, 0])
+    scale = np.ones(6, np.float32)
+    bias = np.zeros(6, np.float32)
+    got = np.asarray(channel_dup(x, idx, scale, bias))
+    np.testing.assert_allclose(got, x[:, [4, 3, 2, 1, 0, 0]], atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# qmatmul
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 48),
+    n=st.integers(1, 40),
+    bits=st.integers(2, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qmatmul_matches_ref(m, k, n, bits, seed):
+    r = rng(seed)
+    x = r.normal(size=(m, k)).astype(np.float32)
+    w = r.normal(size=(k, n)).astype(np.float32)
+    qmax = float(2 ** (bits - 1) - 1)
+    delta = float(np.abs(x).max() / qmax + 1e-8)
+    got = np.asarray(qmatmul(x, w, delta, qmax))
+    want = np.asarray(qmatmul_ref(x, w, delta, qmax))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_qmatmul_bypass_is_plain_matmul():
+    r = rng(4)
+    x = r.normal(size=(17, 9)).astype(np.float32)
+    w = r.normal(size=(9, 13)).astype(np.float32)
+    got = np.asarray(qmatmul(x, w, 1.0, -1.0))
+    np.testing.assert_allclose(got, x @ w, rtol=1e-4, atol=1e-5)
+
+
+def test_qmatmul_tile_boundary():
+    # m, n > 128 exercises the multi-tile grid
+    r = rng(5)
+    x = r.normal(size=(130, 32)).astype(np.float32)
+    w = r.normal(size=(32, 129)).astype(np.float32)
+    got = np.asarray(qmatmul(x, w, 0.05, 7.0))
+    want = np.asarray(qmatmul_ref(x, w, 0.05, 7.0))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

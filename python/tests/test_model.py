@@ -1,0 +1,156 @@
+"""L2 correctness: model topology, OCS functional equivalence, training.
+
+The central invariant (paper §3.2): a model with identity OCS hooks and
+quantization bypassed is *functionally identical* to the float model —
+channel padding, gather steering, and hook plumbing must be inert.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+
+
+def identity_hooks(model):
+    hooks = {}
+    for spec in model.specs:
+        if not spec.quantized:
+            continue
+        cp, c = spec.cin_pad, spec.cin
+        idx = np.zeros(cp, np.int32)
+        idx[:c] = np.arange(c)
+        sc = np.zeros(cp, np.float32)
+        sc[:c] = 1.0
+        hooks[spec.name] = {
+            "idx": jnp.asarray(idx),
+            "dscale": jnp.asarray(sc),
+            "dbias": jnp.zeros(cp, jnp.float32),
+            "adelta": jnp.float32(1.0),
+            "aqmax": jnp.float32(-1.0),
+        }
+    return hooks
+
+
+def pad_params(model, params):
+    out = {}
+    for spec in model.specs:
+        p = dict(params[spec.name])
+        if spec.quantized:
+            w = np.asarray(p["W"])
+            ax = 2 if spec.kind == "conv" else 0
+            padw = [(0, 0)] * w.ndim
+            padw[ax] = (0, spec.cin_pad - spec.cin)
+            p["W"] = jnp.asarray(np.pad(w, padw))
+        out[spec.name] = p
+    return out
+
+
+def cnn_data(b=4, seed=0):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(r.normal(size=(b, M.IMG_HW, M.IMG_HW, M.IMG_C)), jnp.float32)
+
+
+def lm_data(b=4, seed=0):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(r.integers(0, M.VOCAB, size=(b, M.SEQ_LEN + 1)), jnp.int32)
+
+
+CNNS = ["minivgg", "miniresnet", "miniincept"]
+
+
+@pytest.mark.parametrize("name", CNNS)
+def test_cnn_output_shape(name):
+    model = M.get_model(name)
+    params = model.init_params(0)
+    out = model.forward(params, cnn_data(3))
+    assert out.shape == (3, M.NUM_CLASSES)
+
+
+def test_lstm_output_is_nll_and_count():
+    model = M.get_model("lstmlm")
+    params = model.init_params(0)
+    nll, ntok = model.forward(params, lm_data(2))
+    assert nll.shape == () and ntok.shape == ()
+    assert float(ntok) == 2 * M.SEQ_LEN
+    assert float(nll) > 0
+
+
+@pytest.mark.parametrize("name", CNNS)
+def test_identity_hooks_equivalence_cnn(name):
+    """Padded/hooked graph == float graph when hooks are identity."""
+    model = M.get_model(name)
+    params = model.init_params(2)
+    data = cnn_data(4, seed=1)
+    ref = np.asarray(model.forward(params, data))
+    got = np.asarray(
+        model.forward(pad_params(model, params), data, hooks=identity_hooks(model))
+    )
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-5)
+
+
+def test_identity_hooks_equivalence_lstm():
+    model = M.get_model("lstmlm")
+    params = model.init_params(2)
+    data = lm_data(2, seed=1)
+    ref, _ = model.forward(params, data)
+    got, _ = model.forward(
+        pad_params(model, params), data, hooks=identity_hooks(model)
+    )
+    np.testing.assert_allclose(float(got), float(ref), rtol=1e-4)
+
+
+def test_probe_records_every_quantized_layer_input():
+    model = M.get_model("miniresnet")
+    params = model.init_params(0)
+    probe = {}
+    model.forward(params, cnn_data(2), probe=probe)
+    qnames = [s.name for s in model.specs if s.quantized]
+    assert sorted(probe.keys()) == sorted(qnames)
+    for spec in model.specs:
+        if spec.quantized:
+            assert probe[spec.name].shape[-1] == spec.cin
+
+
+@pytest.mark.parametrize("name", ["minivgg", "lstmlm"])
+def test_train_step_reduces_loss(name):
+    model = M.get_model(name)
+    params = model.init_params(3)
+    step = M.make_train_step(model)
+    leaves = [a for _, a in M.flatten_params(model, params)]
+    moms = [jnp.zeros_like(a) for a in leaves]
+    if name == "lstmlm":
+        batch = lm_data(4, seed=2)
+    else:
+        x = cnn_data(8, seed=2)
+        y = jnp.asarray(np.arange(8) % M.NUM_CLASSES, jnp.int32)
+        batch = (x, y)
+    losses = []
+    for _ in range(12):
+        leaves, moms, loss = step(leaves, moms, batch, jnp.float32(0.02))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], f"no learning: {losses[0]} -> {losses[-1]}"
+
+
+def test_flatten_unflatten_roundtrip():
+    model = M.get_model("miniincept")
+    params = model.init_params(5)
+    flat = M.flatten_params(model, params)
+    back = M.unflatten_params(model, [a for _, a in flat])
+    for spec in model.specs:
+        np.testing.assert_array_equal(
+            np.asarray(back[spec.name]["W"]), np.asarray(params[spec.name]["W"])
+        )
+
+
+def test_pad_channels_matches_expand_budget():
+    # the padded capacity must fit the largest paper ratio r = 0.2
+    for c in [3, 8, 16, 33, 64, 384, 650]:
+        assert M.pad_channels(c) >= c + int(np.ceil(0.2 * c))
+
+
+def test_first_layers_not_quantized():
+    # paper §5: first conv stays unquantized
+    for name in CNNS:
+        model = M.get_model(name)
+        assert not model.specs[0].quantized

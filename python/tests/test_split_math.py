@@ -1,0 +1,52 @@
+"""Paper §3.3 math: quantization-aware splitting preserves Q(w).
+
+Validates Eq. 7 (via Hermite's identity) for the rounding function
+Q(x) = floor(x + 0.5). The Rust ocs::split module implements the same
+formulas; these tests pin the python/jax side of the contract.
+"""
+
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import round_half_up
+
+
+def Q(x):
+    return math.floor(x + 0.5)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.floats(-1e5, 1e5))
+def test_qa_split_preserves_quantized_value(w):
+    # Q(w) == Q((w-0.5)/2) + Q((w+0.5)/2)   (Eq. 7)
+    assert Q(w) == Q((w - 0.5) / 2) + Q((w + 0.5) / 2)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.floats(-1e5, 1e5), st.integers(2, 7))
+def test_hermite_identity(x, n):
+    # sum_{k=0}^{n-1} floor(x + k/n) == floor(n x)   (Eq. 8)
+    lhs = sum(math.floor(x + k / n) for k in range(n))
+    assert lhs == math.floor(n * x)
+
+
+def test_naive_split_can_double_error():
+    # the paper's w=3 example with a grid step of 2 (odd halves):
+    # naive halves 1.5 + 1.5 round to 2 + 2 = 4 != Q(3) on that grid.
+    w = 3.0
+    naive = Q(w / 2) + Q(w / 2)
+    assert naive == 4  # both halves rounded up -> error doubled
+    qa = Q((w - 0.5) / 2) + Q((w + 0.5) / 2)
+    assert qa == Q(w) == 3
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.integers(-40000, 40000).map(lambda i: i / 4), min_size=1, max_size=64))
+def test_vectorized_round_half_up_matches_scalar(vals):
+    # quarter-integers are exact in f32, so f32 and f64 rounding agree
+    arr = np.asarray(vals, np.float32)
+    got = np.asarray(round_half_up(arr))
+    want = np.asarray([math.floor(float(v) + 0.5) for v in arr], np.float32)
+    np.testing.assert_array_equal(got, want)

@@ -1,0 +1,168 @@
+//! Ablation benches for the design choices DESIGN.md §5 calls out:
+//!
+//! * **knapsack vs uniform split allocation** (paper §3.4 claims the
+//!   knapsack planner is "experimentally not better" — we verify on our
+//!   substrate by comparing end-of-pipeline quantization error at equal
+//!   budget);
+//! * **QA vs naive splitting** MSE at the tensor level (Table 1's
+//!   mechanism, isolated from model accuracy);
+//! * **KL sweep stride** (threshold drift vs speed);
+//! * **histogram bin count** (threshold stability vs build cost).
+//!
+//! Run:  cargo bench --bench ablations
+
+use ocs::bench_support::Runner;
+use ocs::clip::{kl, ClipMethod};
+use ocs::ocs::plan::{plan_knapsack, plan_uniform, KnapsackLayer};
+use ocs::ocs::{weight_ocs, SplitMode};
+use ocs::quant::{fake_quant_tensor, QuantSpec};
+use ocs::stats::Histogram;
+use ocs::tensor::TensorF;
+use ocs::util::rng::Rng;
+
+/// Post-OCS quantization MSE of a layer set under a split plan.
+fn plan_mse(layers: &[TensorF], plan: &[usize], spec: QuantSpec) -> f64 {
+    let mut total = 0.0;
+    for (w, &n) in layers.iter().zip(plan) {
+        let cin = w.shape()[0];
+        let hooks = weight_ocs(w, 0, cin + n.max(1), n, SplitMode::QuantAware, 0.0).unwrap();
+        let mut active: Vec<f32> = Vec::new();
+        for s in 0..hooks.active {
+            active.extend(hooks.w_expanded.axis_slice(0, s).unwrap());
+        }
+        let t = active.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let at = TensorF::from_vec(&[active.len()], active).unwrap();
+        let q = fake_quant_tensor(&at, t, spec);
+        total += at.mse(&q) * at.len() as f64;
+    }
+    total
+}
+
+fn main() {
+    let mut r = Runner::from_env();
+    let mut rng = Rng::new(3);
+    let spec = QuantSpec::new(4);
+
+    // synthetic layer set with heterogeneous outlier structure
+    let layers: Vec<TensorF> = (0..6)
+        .map(|i| {
+            let c = 32 + i * 16;
+            let mut data = rng.normal_vec(c * 64);
+            // plant outliers in a few channels, heavier in later layers
+            for k in 0..(1 + i) {
+                data[k * 64] = 6.0 + i as f32 * 2.0;
+            }
+            TensorF::from_vec(&[c, 64], data).unwrap()
+        })
+        .collect();
+    let geom: Vec<(usize, usize)> = layers
+        .iter()
+        .map(|w| (w.shape()[0], w.shape()[0] * 2))
+        .collect();
+
+    r.section("knapsack vs uniform allocation (paper §3.4 ablation)");
+    let ratio = 0.05;
+    let uplan = plan_uniform(&geom, ratio);
+    let budget: usize = uplan
+        .iter()
+        .zip(&layers)
+        .map(|(&n, w)| n * w.shape()[1] * 4)
+        .sum();
+    let klayers: Vec<KnapsackLayer> = layers
+        .iter()
+        .map(|w| KnapsackLayer {
+            channels: w.shape()[0],
+            capacity: w.shape()[0] * 2,
+            maxes: w.max_abs_per_axis(0).unwrap(),
+            bytes_per_channel: w.shape()[1] * 4,
+        })
+        .collect();
+    let kplan = plan_knapsack(&klayers, budget);
+    let u_mse = plan_mse(&layers, &uplan, spec);
+    let k_mse = plan_mse(&layers, &kplan, spec);
+    r.report_value("ablate/uniform_plan_mse", u_mse, "sum-sq");
+    r.report_value("ablate/knapsack_plan_mse", k_mse, "sum-sq");
+    r.report_value(
+        "ablate/knapsack_gain_pct",
+        100.0 * (u_mse - k_mse) / u_mse,
+        "% (paper: ~0, not better)",
+    );
+    r.bench("ablate/plan_knapsack_6layers", || {
+        std::hint::black_box(plan_knapsack(&klayers, budget).len());
+    });
+
+    r.section("QA vs naive split quantization error (Table 1 mechanism)");
+    let w = {
+        let mut d = rng.normal_vec(256 * 64);
+        for k in 0..8 {
+            d[k * 64] = 8.0;
+        }
+        TensorF::from_vec(&[256, 64], d).unwrap()
+    };
+    for mode in [SplitMode::Naive, SplitMode::QuantAware] {
+        let hooks = weight_ocs(&w, 0, 320, 16, mode, spec.delta(8.0)).unwrap();
+        let eff = hooks.effective_weight(0);
+        // quantize the expanded weights, fold back, compare to original
+        let t = hooks.w_expanded.max_abs();
+        let mut qh = hooks.clone();
+        qh.w_expanded = fake_quant_tensor(&hooks.w_expanded, t, spec);
+        let qeff = qh.effective_weight(0);
+        let mse = w.mse(&qeff);
+        r.report_value(
+            &format!("ablate/split_{}_folded_mse", mode.name()),
+            mse,
+            "mse",
+        );
+        let _ = eff;
+    }
+
+    r.section("KL stride sensitivity");
+    let data: Vec<f32> = (0..100_000).map(|_| rng.laplace(1.0)).collect();
+    let hist = Histogram::from_slice(&data, 2048);
+    let t1 = kl::threshold_with(&hist, spec, 1);
+    for stride in [1usize, 4, 16] {
+        let t = kl::threshold_with(&hist, spec, stride);
+        r.report_value(
+            &format!("ablate/kl_stride{stride}_drift_pct"),
+            100.0 * ((t - t1) / t1).abs() as f64,
+            "%",
+        );
+        r.bench(&format!("ablate/kl_stride{stride}"), || {
+            std::hint::black_box(kl::threshold_with(&hist, spec, stride));
+        });
+    }
+
+    r.section("per-channel grids vs OCS (extension: how much of OCS's win do per-channel grids capture?)");
+    {
+        use ocs::quant::channelwise::per_channel_mse_gain;
+        let mut d = rng.normal_vec(64 * 32);
+        for k in 0..4 {
+            d[k * 32] = 7.0; // input-channel outliers
+        }
+        let w = TensorF::from_vec(&[64, 32], d).unwrap();
+        let (pt, pc) = per_channel_mse_gain(&w, 1, spec, ClipMethod::None);
+        r.report_value("ablate/per_tensor_mse", pt, "mse");
+        r.report_value("ablate/per_channel_mse", pc, "mse");
+        let hooks = weight_ocs(&w, 0, 80, 4, SplitMode::QuantAware, 0.0).unwrap();
+        let t = hooks.w_expanded.max_abs();
+        let q = fake_quant_tensor(&hooks.w_expanded, t, spec);
+        let mut qh = hooks.clone();
+        qh.w_expanded = q;
+        r.report_value("ablate/ocs_folded_mse", w.mse(&qh.effective_weight(0)), "mse");
+        r.bench("ablate/per_channel_quant_64x32", || {
+            std::hint::black_box(per_channel_mse_gain(&w, 1, spec, ClipMethod::None).1);
+        });
+    }
+
+    r.section("histogram bins: threshold stability (MSE method)");
+    let t_ref = ClipMethod::Mse.threshold(&Histogram::from_slice(&data, 8192), spec);
+    for bins in [256usize, 1024, 2048, 8192] {
+        let h = Histogram::from_slice(&data, bins);
+        let t = ClipMethod::Mse.threshold(&h, spec);
+        r.report_value(
+            &format!("ablate/mse_bins{bins}_drift_pct"),
+            100.0 * ((t - t_ref) / t_ref).abs() as f64,
+            "%",
+        );
+    }
+}

@@ -1,0 +1,54 @@
+//! One bench per paper table/figure: runs the exact regeneration code in
+//! reduced (`--quick`) form and reports wall time per table. This is the
+//! "can a user actually reproduce the evaluation" check, exercised
+//! end-to-end (artifacts + trained-or-init weights + PJRT).
+//!
+//! Run:  cargo bench --bench paper_tables [-- <filter>]
+//! Requires `make artifacts` (and ideally `ocs train --model all`).
+
+use std::time::Instant;
+
+use ocs::tables::TableCtx;
+
+fn main() {
+    let filter: Option<String> = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with("--") && a != "bench");
+    // OCS_BENCH_QUICK bounds the run to the fast tables (the full sweep
+    // is minutes per table; use `ocs table --id all` for the real thing)
+    let quick_env = std::env::var("OCS_BENCH_QUICK").is_ok();
+    let ids: &[&str] = if quick_env {
+        &["fig1", "4", "5"]
+    } else {
+        &["fig1", "1", "2", "3", "4", "5", "6"]
+    };
+    let ids = ids.iter().copied();
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping paper_tables bench: run `make artifacts` first");
+        return;
+    }
+    let results = "results/bench";
+    let ctx = match TableCtx::new("artifacts", results, true) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("cannot init table context: {e:#}");
+            return;
+        }
+    };
+    println!("paper-table regeneration (quick mode, output under {results}/)");
+    for id in ids {
+        if let Some(f) = &filter {
+            if !id.contains(f.as_str()) {
+                continue;
+            }
+        }
+        let t0 = Instant::now();
+        match ctx.run(id) {
+            Ok(()) => println!(
+                ">>> table {id:<5} regenerated in {:.2}s",
+                t0.elapsed().as_secs_f64()
+            ),
+            Err(e) => println!(">>> table {id:<5} FAILED: {e:#}"),
+        }
+    }
+}

@@ -1,0 +1,76 @@
+//! Hot-path microbenchmarks for the quantization toolchain (the L3
+//! compute that runs per layer on every `prepare()` call): histogram
+//! build, the four clip-threshold optimizers, fake-quant, and the OCS
+//! transforms. These are the §Perf targets for the pure-Rust side.
+//!
+//! Run:  cargo bench --bench quant_hot_paths [-- <filter>]
+//! Env:  OCS_BENCH_QUICK=1 for short runs.
+
+use ocs::bench_support::Runner;
+use ocs::clip::ClipMethod;
+use ocs::ocs::{weight_ocs, SplitMode};
+use ocs::quant::{fake_quant_tensor, QuantSpec};
+use ocs::stats::Histogram;
+use ocs::tensor::TensorF;
+use ocs::util::rng::Rng;
+
+fn main() {
+    let mut r = Runner::from_env();
+    let mut rng = Rng::new(0);
+
+    // a realistic big layer: 512-channel FC weight (640 padded), ~330k params
+    let big: Vec<f32> = (0..512 * 640).map(|_| rng.normal()).collect();
+    let big_t = TensorF::from_vec(&[512, 640], big.clone()).unwrap();
+    let spec4 = QuantSpec::new(4);
+
+    r.section("histogram");
+    r.bench("hist/build_330k_2048bins", || {
+        let h = Histogram::from_slice(&big, 2048);
+        std::hint::black_box(h.count());
+    });
+    let hist = Histogram::from_slice(&big, 2048);
+    r.bench("hist/percentile", || {
+        std::hint::black_box(hist.percentile_abs(0.99));
+    });
+
+    r.section("clip threshold optimizers (2048-bin hist, 4-bit)");
+    r.bench("clip/none", || {
+        std::hint::black_box(ClipMethod::None.threshold(&hist, spec4));
+    });
+    r.bench("clip/mse_sweep128", || {
+        std::hint::black_box(ClipMethod::Mse.threshold(&hist, spec4));
+    });
+    r.bench("clip/aciq_analytic", || {
+        std::hint::black_box(ClipMethod::Aciq.threshold(&hist, spec4));
+    });
+    r.bench("clip/kl_stride4", || {
+        std::hint::black_box(ClipMethod::Kl.threshold(&hist, spec4));
+    });
+    r.bench("clip/percentile", || {
+        std::hint::black_box(ClipMethod::Percentile(0.999).threshold(&hist, spec4));
+    });
+
+    r.section("fake quant");
+    r.bench("quant/fake_quant_330k", || {
+        std::hint::black_box(fake_quant_tensor(&big_t, 3.0, spec4).len());
+    });
+
+    r.section("OCS transforms (512ch -> 640 pad)");
+    for n in [1usize, 8, 32] {
+        r.bench(&format!("ocs/weight_split_n{n}"), || {
+            let h = weight_ocs(&big_t, 0, 640, n, SplitMode::QuantAware, 0.01).unwrap();
+            std::hint::black_box(h.active);
+        });
+    }
+    r.bench("ocs/identity_hooks", || {
+        let h = ocs::ocs::identity_hooks(&big_t, 0, 640).unwrap();
+        std::hint::black_box(h.active);
+    });
+
+    r.section("end-to-end layer prepare proxy (hist + clip + quant)");
+    r.bench("prepare/layer_proxy_mse", || {
+        let h = Histogram::from_slice(&big, 2048);
+        let t = ClipMethod::Mse.threshold(&h, spec4);
+        std::hint::black_box(fake_quant_tensor(&big_t, t, spec4).len());
+    });
+}

@@ -1,0 +1,128 @@
+//! Runtime + serving benchmarks (L3 hot path): PJRT execute latency per
+//! batch size, input-packing overhead, and dynamic-batcher throughput
+//! under open-loop load. The paper's deployment claim is "negligible
+//! overhead" (§5.4 + §3.5) — these benches quantify the serving cost of
+//! the OCS hooks (channel_dup + padded weights) vs the identity path.
+//!
+//! Run:  cargo bench --bench runtime_serving [-- <filter>]
+
+use std::time::Duration;
+
+use ocs::bench_support::Runner;
+use ocs::clip::ClipMethod;
+use ocs::model::store::WeightStore;
+use ocs::model::ModelSpec;
+use ocs::pipeline::{self, QuantConfig};
+use ocs::runtime::{Engine, Input, Inputs};
+use ocs::serve::{ServeConfig, Server};
+use ocs::tensor::TensorF;
+use ocs::train::data;
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping runtime_serving bench: run `make artifacts` first");
+        return Ok(());
+    }
+    let mut r = Runner::from_env();
+    let model = "minivgg";
+    let spec = ModelSpec::load_named("artifacts", model)?;
+    let (ws, _) = WeightStore::load_best(&spec)?;
+    let engine = Engine::cpu()?;
+
+    // identity (float) and OCS-quantized preparations
+    let prep_float = pipeline::prepare(&spec, &ws, None, &QuantConfig::float())?;
+    let prep_ocs = pipeline::prepare(
+        &spec,
+        &ws,
+        None,
+        &QuantConfig::weights_only(5, ClipMethod::Mse, 0.05),
+    )?;
+
+    r.section("PJRT execute latency by batch (float hooks)");
+    for b in [1usize, 8, 32, 128] {
+        let art = spec.fwd_for_batch(b)?;
+        if art.batch != b {
+            continue;
+        }
+        let exe = engine.load(art)?;
+        let imgs = data::synth_images(b, 5);
+        let mut inputs: Inputs = Default::default();
+        prep_float.insert_inputs(&mut inputs);
+        inputs.insert("x".into(), Input::F32(imgs.x.clone()));
+        r.bench(&format!("execute/fwd_b{b}"), || {
+            let out = exe.execute(&inputs).unwrap();
+            std::hint::black_box(out.get("logits").unwrap().len());
+        });
+    }
+
+    r.section("OCS-hook overhead at fixed batch 32 (paper: negligible)");
+    let art = spec.fwd_for_batch(32)?;
+    let exe = engine.load(art)?;
+    let imgs = data::synth_images(32, 5);
+    for (tag, prep) in [("identity", &prep_float), ("ocs_r0.05", &prep_ocs)] {
+        let mut inputs: Inputs = Default::default();
+        prep.insert_inputs(&mut inputs);
+        inputs.insert("x".into(), Input::F32(imgs.x.clone()));
+        r.bench(&format!("execute/b32_{tag}"), || {
+            let out = exe.execute(&inputs).unwrap();
+            std::hint::black_box(out.get("logits").unwrap().len());
+        });
+    }
+
+    r.section("input packing (tensor -> literal)");
+    let mut inputs: Inputs = Default::default();
+    prep_ocs.insert_inputs(&mut inputs);
+    r.bench("pack/insert_inputs_clone", || {
+        let mut m: Inputs = Default::default();
+        prep_ocs.insert_inputs(&mut m);
+        std::hint::black_box(m.len());
+    });
+
+    r.section("dynamic-batching server throughput");
+    for (tag, clients) in [("c1", 1usize), ("c8", 8), ("c32", 32)] {
+        let server = Server::start(
+            "artifacts",
+            model,
+            QuantConfig::weights_only(5, ClipMethod::Mse, 0.02),
+            ServeConfig {
+                max_batch: 32,
+                max_wait: Duration::from_millis(2),
+                queue_cap: 2048,
+            },
+        )?;
+        let imgs = data::synth_images(64, 6);
+        let row = imgs.x.len() / imgs.len();
+        let xdata = std::sync::Arc::new(imgs.x.data().to_vec());
+        let t0 = std::time::Instant::now();
+        let per = 256usize / clients.min(256);
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let client = server.client();
+            let xdata = xdata.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per {
+                    let idx = (c * per + i) % 64;
+                    let x = TensorF::from_vec(
+                        &[1, 16, 16, 3],
+                        xdata[idx * row..(idx + 1) * row].to_vec(),
+                    )
+                    .unwrap();
+                    client.infer(x).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let n = clients * per;
+        let rps = n as f64 / t0.elapsed().as_secs_f64();
+        r.report_value(&format!("serve/throughput_{tag}"), rps, "req/s");
+        r.report_value(
+            &format!("serve/mean_batch_{tag}"),
+            server.metrics().mean_batch(),
+            "imgs/batch",
+        );
+        server.shutdown()?;
+    }
+    Ok(())
+}

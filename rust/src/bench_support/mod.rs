@@ -1,0 +1,198 @@
+//! Criterion-lite benchmark harness (criterion is unavailable offline).
+//!
+//! Auto-calibrates iteration counts to a target measurement time, reports
+//! mean / p50 / p95 / min / throughput, and honours the substring filter
+//! cargo-bench passes through (`cargo bench -- <filter>`).
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchStats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ns / 1e9)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Runner with cargo-bench-style substring filtering.
+pub struct Runner {
+    filter: Option<String>,
+    pub target_time: Duration,
+    pub warmup: Duration,
+    results: Vec<BenchStats>,
+}
+
+impl Default for Runner {
+    fn default() -> Self {
+        Self::from_env()
+    }
+}
+
+impl Runner {
+    pub fn from_env() -> Self {
+        // argv: bench binary receives [exe, <filter>?, --bench]
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with("--") && a != "bench");
+        let quick = std::env::var("OCS_BENCH_QUICK").is_ok();
+        Runner {
+            filter,
+            target_time: if quick {
+                Duration::from_millis(200)
+            } else {
+                Duration::from_secs(1)
+            },
+            warmup: if quick {
+                Duration::from_millis(50)
+            } else {
+                Duration::from_millis(300)
+            },
+            results: Vec::new(),
+        }
+    }
+
+    pub fn enabled(&self, name: &str) -> bool {
+        match &self.filter {
+            Some(f) => name.contains(f.as_str()),
+            None => true,
+        }
+    }
+
+    /// Time `f`, auto-calibrating the iteration count.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> Option<BenchStats> {
+        if !self.enabled(name) {
+            return None;
+        }
+        // warmup + calibration
+        let cal_start = Instant::now();
+        let mut one = || {
+            let t = Instant::now();
+            f();
+            t.elapsed()
+        };
+        let mut probe = one();
+        while cal_start.elapsed() < self.warmup {
+            probe = one();
+        }
+        let per_iter = probe.as_nanos().max(1) as f64;
+        let iters = ((self.target_time.as_nanos() as f64 / per_iter) as usize).clamp(5, 10_000);
+
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            samples.push(one().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters,
+            mean_ns: mean,
+            p50_ns: samples[samples.len() / 2],
+            p95_ns: samples[(samples.len() as f64 * 0.95) as usize % samples.len()],
+            min_ns: samples[0],
+            max_ns: *samples.last().unwrap(),
+        };
+        println!(
+            "{:<44} {:>12} (p50 {:>12}, p95 {:>12}, min {:>12}, {} iters)",
+            stats.name,
+            fmt_ns(stats.mean_ns),
+            fmt_ns(stats.p50_ns),
+            fmt_ns(stats.p95_ns),
+            fmt_ns(stats.min_ns),
+            stats.iters
+        );
+        self.results.push(stats.clone());
+        Some(stats)
+    }
+
+    /// For benches that measure something other than wall-time per call
+    /// (e.g. a whole table evaluation): run once, report the value.
+    pub fn report_value(&mut self, name: &str, value: f64, unit: &str) {
+        if !self.enabled(name) {
+            return;
+        }
+        println!("{name:<44} {value:>12.4} {unit}");
+    }
+
+    pub fn section(&self, title: &str) {
+        if self.filter.is_none() {
+            println!("\n== {title} ==");
+        }
+    }
+
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_ordered_stats() {
+        let mut r = Runner {
+            filter: None,
+            target_time: Duration::from_millis(20),
+            warmup: Duration::from_millis(5),
+            results: Vec::new(),
+        };
+        let mut acc = 0u64;
+        let stats = r
+            .bench("spin", || {
+                for i in 0..1000 {
+                    acc = acc.wrapping_add(i);
+                }
+            })
+            .unwrap();
+        assert!(stats.min_ns <= stats.p50_ns);
+        assert!(stats.p50_ns <= stats.max_ns);
+        assert!(stats.iters >= 5);
+        assert!(acc > 0 || acc == 0); // keep the accumulator alive
+    }
+
+    #[test]
+    fn filter_skips() {
+        let mut r = Runner {
+            filter: Some("xyz".into()),
+            target_time: Duration::from_millis(5),
+            warmup: Duration::from_millis(1),
+            results: Vec::new(),
+        };
+        assert!(r.bench("other", || {}).is_none());
+        assert!(r.bench("has_xyz_inside", || {}).is_some());
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

@@ -1,0 +1,209 @@
+//! Activation calibration (paper §3.4/§5: "we use a small number of
+//! training images to sample the activations in each layer", the
+//! TensorRT-style profiling pass).
+//!
+//! Runs the float `probe` artifact over a calibration set and collects,
+//! per quantizable layer: a magnitude [`Histogram`] (for the clip
+//! optimizers), per-channel max values, and per-channel *outlier counts*
+//! — the number of values above the layer's 99th percentile, the paper's
+//! §5.3 criterion for choosing which activation channels OCS splits.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::store::WeightStore;
+use crate::model::ModelSpec;
+use crate::runtime::{Engine, Input, Inputs, Outputs};
+use crate::stats::{Histogram, DEFAULT_BINS};
+use crate::tensor::TensorF;
+
+/// The percentile above which a value counts as an outlier (§5.3: "we
+/// used values greater than the 99'th percentile").
+pub const OUTLIER_PERCENTILE: f64 = 0.99;
+
+/// Per-layer calibration statistics.
+#[derive(Debug, Clone)]
+pub struct LayerCalib {
+    pub hist: Histogram,
+    /// max |x| per input channel.
+    pub channel_max: Vec<f32>,
+    /// values above the layer's 99th percentile, per channel (§5.3).
+    pub outlier_counts: Vec<u64>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Calibration {
+    pub layers: BTreeMap<String, LayerCalib>,
+}
+
+impl Calibration {
+    pub fn layer(&self, name: &str) -> Result<&LayerCalib> {
+        self.layers
+            .get(name)
+            .with_context(|| format!("no calibration for layer '{name}'"))
+    }
+
+    /// Top-k channels by outlier count (the activation-OCS selection).
+    pub fn split_channels(&self, layer: &str, k: usize) -> Result<Vec<usize>> {
+        Ok(top_k_channels(&self.layer(layer)?.outlier_counts, k))
+    }
+}
+
+/// Indices of the k largest values (stable order by count desc).
+pub fn top_k_channels(counts: &[u64], k: usize) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..counts.len()).collect();
+    order.sort_by(|&a, &b| counts[b].cmp(&counts[a]).then(a.cmp(&b)));
+    order.truncate(k);
+    order
+}
+
+/// Per-trailing-channel max |x|.
+pub fn channel_max(act: &TensorF) -> Vec<f32> {
+    let axis = act.rank() - 1;
+    act.max_abs_per_axis(axis).expect("rank >= 1")
+}
+
+/// Per-trailing-channel count of |x| > thr.
+pub fn channel_outlier_counts(act: &TensorF, thr: f32) -> Vec<u64> {
+    let c = *act.shape().last().expect("rank >= 1");
+    let mut counts = vec![0u64; c];
+    for (i, &v) in act.data().iter().enumerate() {
+        if v.abs() > thr {
+            counts[i % c] += 1;
+        }
+    }
+    counts
+}
+
+/// Run the float probe on one batch; returns `layer name -> activation`.
+pub fn probe_batch(
+    engine: &Engine,
+    spec: &ModelSpec,
+    ws: &WeightStore,
+    x: &TensorF,
+) -> Result<BTreeMap<String, TensorF>> {
+    let batch = x.shape()[0];
+    let art = spec.probe_for_batch(batch)?;
+    let exe = engine.load(art)?;
+    let mut inputs: Inputs = Default::default();
+    for io in &art.inputs {
+        if io.name == "x" {
+            inputs.insert("x".into(), Input::F32(x.clone()));
+        } else {
+            inputs.insert(io.name.clone(), Input::F32(ws.bundle.f32(&io.name)?.clone()));
+        }
+    }
+    let out = exe.execute(&inputs)?;
+    Ok(acts_of(out))
+}
+
+fn acts_of(out: Outputs) -> BTreeMap<String, TensorF> {
+    out.into_map()
+        .into_iter()
+        .filter_map(|(k, v)| k.strip_prefix("act.").map(|n| (n.to_string(), v)))
+        .collect()
+}
+
+/// Full calibration pass: probe `images` in batches, build per-layer
+/// statistics. `images` count must cover at least one probe batch.
+pub fn calibrate(
+    engine: &Engine,
+    spec: &ModelSpec,
+    ws: &WeightStore,
+    images: &TensorF,
+    batch: usize,
+) -> Result<Calibration> {
+    if spec.is_lm() {
+        bail!("activation calibration targets CNN models (the paper keeps LSTM activations float)");
+    }
+    let n = images.shape()[0];
+    if n < batch {
+        bail!("calibration set ({n}) smaller than probe batch ({batch})");
+    }
+    // pass 1: gather activations per layer (calibration sets are small —
+    // a few hundred images — so holding them is cheap and lets us do the
+    // exact two-phase percentile/count computation)
+    let mut acts: BTreeMap<String, Vec<TensorF>> = BTreeMap::new();
+    let mut i = 0;
+    while i + batch <= n {
+        let xb = slice_rows(images, i, batch)?;
+        for (layer, a) in probe_batch(engine, spec, ws, &xb)? {
+            acts.entry(layer).or_default().push(a);
+        }
+        i += batch;
+    }
+    // pass 2: statistics
+    let mut layers = BTreeMap::new();
+    for (layer, batches) in acts {
+        let mut hist = Histogram::new(DEFAULT_BINS, 1.0);
+        for b in &batches {
+            hist.observe_all(b.data());
+        }
+        let thr = hist.percentile_abs(OUTLIER_PERCENTILE);
+        let c = *batches[0].shape().last().unwrap();
+        let mut channel_max_acc = vec![0.0f32; c];
+        let mut outlier_counts = vec![0u64; c];
+        for b in &batches {
+            for (m, cm) in channel_max_acc.iter_mut().zip(channel_max(b)) {
+                *m = m.max(cm);
+            }
+            for (o, co) in outlier_counts.iter_mut().zip(channel_outlier_counts(b, thr)) {
+                *o += co;
+            }
+        }
+        layers.insert(
+            layer,
+            LayerCalib {
+                hist,
+                channel_max: channel_max_acc,
+                outlier_counts,
+            },
+        );
+    }
+    Ok(Calibration { layers })
+}
+
+/// Copy rows [start, start+count) of a batch-major tensor.
+pub fn slice_rows(t: &TensorF, start: usize, count: usize) -> Result<TensorF> {
+    let shape = t.shape();
+    let row: usize = shape[1..].iter().product();
+    if start + count > shape[0] {
+        bail!("slice_rows: {start}+{count} > {}", shape[0]);
+    }
+    let mut new_shape = shape.to_vec();
+    new_shape[0] = count;
+    Ok(TensorF::from_vec(
+        &new_shape,
+        t.data()[start * row..(start + count) * row].to_vec(),
+    )?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_k_orders_by_count() {
+        assert_eq!(top_k_channels(&[5, 1, 9, 9, 0], 3), vec![2, 3, 0]);
+        assert_eq!(top_k_channels(&[1, 2], 5), vec![1, 0]);
+        assert!(top_k_channels(&[], 3).is_empty());
+    }
+
+    #[test]
+    fn channel_stats() {
+        // (2, 3): channels are the trailing axis
+        let a = TensorF::from_vec(&[2, 3], vec![1.0, -5.0, 0.1, 2.0, 0.5, -0.2]).unwrap();
+        assert_eq!(channel_max(&a), vec![2.0, 5.0, 0.2]);
+        assert_eq!(channel_outlier_counts(&a, 0.9), vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn slice_rows_bounds() {
+        let t = TensorF::from_vec(&[4, 2], (0..8).map(|v| v as f32).collect()).unwrap();
+        let s = slice_rows(&t, 1, 2).unwrap();
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.data(), &[2.0, 3.0, 4.0, 5.0]);
+        assert!(slice_rows(&t, 3, 2).is_err());
+    }
+}

@@ -1,0 +1,142 @@
+//! Tiny argv parser (clap is unavailable offline).
+//!
+//! Grammar: `ocs <command> [--key value | --key=value | --flag] [pos...]`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub cmd: Option<String>,
+    flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = items.into_iter().peekable();
+        while let Some(item) = iter.next() {
+            if let Some(rest) = item.strip_prefix("--") {
+                if let Some(eq) = rest.find('=') {
+                    out.flags
+                        .insert(rest[..eq].to_string(), rest[eq + 1..].to_string());
+                } else {
+                    // value = next token unless it is another flag
+                    match iter.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = iter.next().unwrap();
+                            out.flags.insert(rest.to_string(), v);
+                        }
+                        _ => {
+                            out.flags.insert(rest.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else if out.cmd.is_none() {
+                out.cmd = Some(item);
+            } else {
+                out.positional.push(item);
+            }
+        }
+        out
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn str(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.str(key).unwrap_or(default)
+    }
+
+    pub fn req(&self, key: &str) -> Result<&str> {
+        self.str(key)
+            .with_context(|| format!("missing required flag --{key}"))
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.str(key) {
+            None => Ok(default),
+            Some(v) => match v.parse() {
+                Ok(x) => Ok(x),
+                Err(_) => bail!("flag --{key}: cannot parse '{v}'"),
+            },
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.str(key) {
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(_) => default,
+            None => default,
+        }
+    }
+
+    /// Comma-separated list flag.
+    pub fn list(&self, key: &str) -> Vec<String> {
+        self.str(key)
+            .map(|v| {
+                v.split(',')
+                    .filter(|s| !s.is_empty())
+                    .map(|s| s.to_string())
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn command_flags_positional() {
+        let a = parse("table extra --id 2 --models miniresnet,minivgg --quick");
+        assert_eq!(a.cmd.as_deref(), Some("table"));
+        assert_eq!(a.str("id"), Some("2"));
+        assert_eq!(a.list("models"), vec!["miniresnet", "minivgg"]);
+        // a bare trailing flag is boolean; `--quick extra` would instead
+        // bind "extra" as its value (use --quick=true in that position)
+        assert!(a.bool_or("quick", false));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn equals_form_and_numbers() {
+        let a = parse("bench --ratio=0.05 --steps 200");
+        assert_eq!(a.parse_or("ratio", 0.0f64).unwrap(), 0.05);
+        assert_eq!(a.parse_or("steps", 0usize).unwrap(), 200);
+        assert_eq!(a.parse_or("missing", 7i32).unwrap(), 7);
+        assert!(a.parse_or("ratio", 0usize).is_err());
+    }
+
+    #[test]
+    fn required() {
+        let a = parse("x");
+        assert!(a.req("model").is_err());
+        let b = parse("x --model lstm");
+        assert_eq!(b.req("model").unwrap(), "lstm");
+    }
+
+    #[test]
+    fn boolean_flag_before_flag() {
+        let a = parse("serve --verbose --port 8");
+        assert!(a.bool_or("verbose", false));
+        assert_eq!(a.str("port"), Some("8"));
+    }
+}

@@ -1,0 +1,186 @@
+//! KL-divergence calibration (paper §4.3; TensorRT via the MXNet
+//! open-source implementation the paper adapted).
+//!
+//! For each candidate bin count `i` (threshold `T = i * bin_width`):
+//!   1. reference P = hist[0..i] with the clipped tail mass folded into
+//!      the last bin;
+//!   2. quantized Q = the *unfolded* hist[0..i] downsampled to `levels`
+//!      groups, each group's mass spread uniformly over its *nonzero*
+//!      source bins (MXNet's smoothing). Folding the tail into P but not
+//!      Q is what penalizes aggressive clipping — with the tail folded
+//!      into both, `i = levels` would always give KL = 0;
+//!   3. zero bins of P/Q get epsilon mass;
+//!   4. pick the `i` minimizing KL(P || Q).
+//!
+//! `levels` is the positive-side grid count `qmax + 1` (our grids are
+//! sign-magnitude over |x|; MXNet's 255-bin int8 variant corresponds to
+//! the same choice for k = 8).
+
+use crate::quant::QuantSpec;
+use crate::stats::Histogram;
+
+const EPS: f64 = 1e-10;
+
+/// Sweep stride: checking every bin like MXNet is O(bins^2); stride 4
+/// over 2048 bins keeps threshold resolution at 0.2% of range while
+/// cutting the sweep 4x (validated against stride-1 in tests).
+pub const STRIDE: usize = 4;
+
+fn kl_divergence(p: &[f64], q: &[f64]) -> f64 {
+    let ps: f64 = p.iter().sum();
+    let qs: f64 = q.iter().sum();
+    if ps <= 0.0 || qs <= 0.0 {
+        return f64::INFINITY;
+    }
+    let mut kl = 0.0;
+    for (&pi, &qi) in p.iter().zip(q) {
+        let pn = pi / ps;
+        if pn > 0.0 {
+            kl += pn * (pn / (qi / qs).max(EPS)).ln();
+        }
+    }
+    kl
+}
+
+/// Build the quantized (downsampled + smoothed) distribution for the
+/// first `i` bins collapsed onto `levels` groups.
+fn quantize_hist(p: &[f64], levels: usize) -> Vec<f64> {
+    let n = p.len();
+    let mut q = vec![0.0f64; n];
+    if levels == 0 || n == 0 {
+        return q;
+    }
+    let group = (n as f64 / levels as f64).max(1.0);
+    for g in 0..levels {
+        let start = (g as f64 * group) as usize;
+        let stop = (((g + 1) as f64 * group) as usize).min(n);
+        if start >= stop {
+            continue;
+        }
+        let mass: f64 = p[start..stop].iter().sum();
+        let nonzero = p[start..stop].iter().filter(|&&v| v > 0.0).count();
+        if nonzero == 0 {
+            continue;
+        }
+        let share = mass / nonzero as f64;
+        for j in start..stop {
+            if p[j] > 0.0 {
+                q[j] = share;
+            }
+        }
+    }
+    q
+}
+
+pub fn threshold(hist: &Histogram, spec: QuantSpec) -> f32 {
+    threshold_with(hist, spec, STRIDE)
+}
+
+pub fn threshold_with(hist: &Histogram, spec: QuantSpec, stride: usize) -> f32 {
+    let counts = hist.counts();
+    let bins = counts.len();
+    let levels = spec.qmax() as usize + 1;
+    if hist.count() == 0 {
+        return 0.0;
+    }
+    // useful range: bins up to the max observed magnitude
+    let used_bins = ((hist.max_abs() / hist.bin_width()).ceil() as usize).clamp(1, bins);
+    if used_bins <= levels {
+        return hist.max_abs();
+    }
+    let total: Vec<f64> = counts.iter().map(|&c| c as f64).collect();
+    let mut best = (f64::INFINITY, used_bins);
+    let mut i = levels;
+    while i <= used_bins {
+        // reference: first i bins, tail folded into bin i-1
+        let mut p: Vec<f64> = total[..i].to_vec();
+        let tail: f64 = total[i..].iter().sum();
+        p[i - 1] += tail;
+        // smooth zero bins of the reference like MXNet does
+        let zeros = p.iter().filter(|&&v| v == 0.0).count();
+        if zeros > 0 && zeros < p.len() {
+            let eps_total = EPS * zeros as f64;
+            let nz = p.len() - zeros;
+            for v in p.iter_mut() {
+                if *v == 0.0 {
+                    *v = EPS;
+                } else {
+                    *v -= eps_total / nz as f64;
+                }
+            }
+        }
+        // candidate: quantize the *unfolded* in-range histogram
+        let q = quantize_hist(&total[..i], levels);
+        let kl = kl_divergence(&p, &q);
+        if kl < best.0 {
+            best = (kl, i);
+        }
+        i += stride.max(1);
+    }
+    best.1 as f32 * hist.bin_width()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn kl_zero_for_identical() {
+        let p = vec![0.25, 0.25, 0.5];
+        assert!(kl_divergence(&p, &p).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kl_positive_for_different() {
+        assert!(kl_divergence(&[1.0, 0.0], &[0.5, 0.5]) > 0.1);
+    }
+
+    #[test]
+    fn quantize_hist_preserves_mass() {
+        let p = vec![1.0, 2.0, 0.0, 3.0, 4.0, 0.0, 0.0, 6.0];
+        let q = quantize_hist(&p, 2);
+        let ps: f64 = p.iter().sum();
+        let qs: f64 = q.iter().sum();
+        assert!((ps - qs).abs() < 1e-9);
+        // zero source bins stay zero (mass spread over nonzero only)
+        assert_eq!(q[2], 0.0);
+        assert_eq!(q[5], 0.0);
+    }
+
+    #[test]
+    fn clips_heavy_tail_at_low_bits() {
+        let mut rng = Rng::new(8);
+        let mut data: Vec<f32> = (0..60_000).map(|_| rng.laplace(1.0)).collect();
+        for _ in 0..20 {
+            data.push(rng.range_f32(15.0, 20.0));
+        }
+        let hist = Histogram::from_slice(&data, 2048);
+        let t = threshold(&hist, QuantSpec::new(4));
+        assert!(t < 12.0, "t {t} should clip below the outlier band");
+        assert!(t > 2.0, "t {t} should keep the body");
+    }
+
+    #[test]
+    fn stride_4_close_to_stride_1() {
+        let mut rng = Rng::new(9);
+        let data: Vec<f32> = (0..40_000).map(|_| rng.normal()).collect();
+        let hist = Histogram::from_slice(&data, 2048);
+        let spec = QuantSpec::new(5);
+        let t1 = threshold_with(&hist, spec, 1);
+        let t4 = threshold_with(&hist, spec, 4);
+        assert!(
+            (t1 - t4).abs() / t1 < 0.05,
+            "stride drift too large: {t1} vs {t4}"
+        );
+    }
+
+    #[test]
+    fn narrow_hist_returns_max() {
+        // fewer used bins than quantization levels: nothing to optimize
+        let data = vec![0.1f32, 0.2, 0.3];
+        let hist = Histogram::from_slice(&data, 64);
+        let t = threshold(&hist, QuantSpec::new(8));
+        assert_eq!(t, hist.max_abs());
+    }
+}

@@ -1,0 +1,153 @@
+//! Clip-threshold optimizers — the paper's §4 survey, reimplemented.
+//!
+//! Every method consumes a magnitude [`Histogram`] and a bitwidth and
+//! returns the clip threshold `T`; linear quantization then uses the grid
+//! `delta = T / qmax`. Methods:
+//!
+//! | Method       | Source                              | Module        |
+//! |--------------|-------------------------------------|---------------|
+//! | `None`       | plain max-abs (Eq. 1)               | here          |
+//! | `Mse`        | Sung/Shin L2 sweep (§4.1)           | [`mse`]       |
+//! | `Aciq`       | Banner et al. analytic (§4.2)       | [`aciq`]      |
+//! | `Kl`         | TensorRT/MXNet KL calibration (§4.3)| [`kl`]        |
+//! | `Percentile` | McKinstry et al. (§2.1, extension)  | [`percentile`]|
+
+pub mod aciq;
+pub mod kl;
+pub mod mse;
+pub mod percentile;
+
+use crate::quant::QuantSpec;
+use crate::stats::Histogram;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ClipMethod {
+    /// No clipping: threshold = max |x| (the paper's "Clip - None").
+    None,
+    /// Minimize expected MSE by sweeping candidate thresholds.
+    Mse,
+    /// ACIQ: fit Gaussian/Laplace, analytically optimal threshold.
+    Aciq,
+    /// Minimize KL divergence between float and quantized histograms.
+    Kl,
+    /// Fixed percentile of the magnitude distribution.
+    Percentile(f64),
+}
+
+pub const ALL_PAPER_METHODS: [ClipMethod; 4] =
+    [ClipMethod::None, ClipMethod::Mse, ClipMethod::Aciq, ClipMethod::Kl];
+
+impl ClipMethod {
+    pub fn parse(s: &str) -> Option<ClipMethod> {
+        match s {
+            "none" => Some(ClipMethod::None),
+            "mse" => Some(ClipMethod::Mse),
+            "aciq" => Some(ClipMethod::Aciq),
+            "kl" => Some(ClipMethod::Kl),
+            "percentile" => Some(ClipMethod::Percentile(0.999)),
+            s if s.starts_with("percentile:") => s["percentile:".len()..]
+                .parse()
+                .ok()
+                .map(ClipMethod::Percentile),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            ClipMethod::None => "none".into(),
+            ClipMethod::Mse => "mse".into(),
+            ClipMethod::Aciq => "aciq".into(),
+            ClipMethod::Kl => "kl".into(),
+            ClipMethod::Percentile(p) => format!("percentile:{p}"),
+        }
+    }
+
+    /// Compute the clip threshold for `spec`-bit quantization of the
+    /// distribution summarized by `hist`.
+    pub fn threshold(&self, hist: &Histogram, spec: QuantSpec) -> f32 {
+        if hist.count() == 0 {
+            return 0.0;
+        }
+        let t = match self {
+            ClipMethod::None => hist.max_abs(),
+            ClipMethod::Mse => mse::threshold(hist, spec),
+            ClipMethod::Aciq => aciq::threshold(hist, spec),
+            ClipMethod::Kl => kl::threshold(hist, spec),
+            ClipMethod::Percentile(p) => percentile::threshold(hist, spec, *p),
+        };
+        // never exceed the observed range; never collapse to zero
+        t.min(hist.max_abs()).max(hist.max_abs() * 1e-6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn outlier_hist(seed: u64) -> Histogram {
+        let mut rng = Rng::new(seed);
+        let mut data: Vec<f32> = (0..30_000).map(|_| rng.normal()).collect();
+        for _ in 0..30 {
+            data.push(rng.range_f32(8.0, 12.0) * if rng.next_f32() < 0.5 { -1.0 } else { 1.0 });
+        }
+        Histogram::from_slice(&data, 2048)
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in [
+            ClipMethod::None,
+            ClipMethod::Mse,
+            ClipMethod::Aciq,
+            ClipMethod::Kl,
+            ClipMethod::Percentile(0.995),
+        ] {
+            assert_eq!(ClipMethod::parse(&m.name()), Some(m));
+        }
+        assert_eq!(ClipMethod::parse("bogus"), None);
+    }
+
+    #[test]
+    fn all_methods_clip_below_max_on_outlier_distribution() {
+        let hist = outlier_hist(1);
+        let spec = QuantSpec::new(4);
+        let max = hist.max_abs();
+        for m in [ClipMethod::Mse, ClipMethod::Aciq, ClipMethod::Kl] {
+            let t = m.threshold(&hist, spec);
+            assert!(
+                t < max * 0.9,
+                "{}: threshold {t} did not clip below max {max}",
+                m.name()
+            );
+            assert!(t > 0.0);
+        }
+        assert_eq!(ClipMethod::None.threshold(&hist, spec), max);
+    }
+
+    #[test]
+    fn clipping_reduces_expected_mse_at_low_bits() {
+        // the paper's core premise: at 4 bits clipping beats max-abs
+        let hist = outlier_hist(2);
+        let spec = QuantSpec::new(4);
+        let full = crate::quant::error::hist_quant_mse(&hist, hist.max_abs(), spec);
+        for m in [ClipMethod::Mse, ClipMethod::Aciq, ClipMethod::Kl] {
+            let t = m.threshold(&hist, spec);
+            let clipped = crate::quant::error::hist_quant_mse(&hist, t, spec);
+            assert!(
+                clipped < full,
+                "{}: {clipped} !< {full}",
+                m.name()
+            );
+        }
+    }
+
+    #[test]
+    fn empty_histogram_is_safe() {
+        let hist = Histogram::new(64, 1.0);
+        for m in ALL_PAPER_METHODS {
+            assert_eq!(m.threshold(&hist, QuantSpec::new(8)), 0.0);
+        }
+    }
+}

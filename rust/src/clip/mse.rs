@@ -1,0 +1,74 @@
+//! MSE-optimal clipping (paper §4.1; Sung et al. 2015, Shin et al. 2016).
+//!
+//! Sweeps candidate thresholds evenly spaced in (0, max|x|] and keeps the
+//! one minimizing expected quantization MSE over the histogram
+//! (Eq. 9). `CANDIDATES` matches the granularity the reference
+//! implementations use; the sweep is O(bins * candidates).
+
+use crate::quant::error::hist_quant_mse;
+use crate::quant::QuantSpec;
+use crate::stats::Histogram;
+
+pub const CANDIDATES: usize = 128;
+
+pub fn threshold(hist: &Histogram, spec: QuantSpec) -> f32 {
+    threshold_with(hist, spec, CANDIDATES)
+}
+
+pub fn threshold_with(hist: &Histogram, spec: QuantSpec, candidates: usize) -> f32 {
+    let max = hist.max_abs();
+    if max <= 0.0 {
+        return 0.0;
+    }
+    let mut best_t = max;
+    let mut best_err = f64::INFINITY;
+    for k in 1..=candidates {
+        let t = max * k as f32 / candidates as f32;
+        let err = hist_quant_mse(hist, t, spec);
+        if err < best_err {
+            best_err = err;
+            best_t = t;
+        }
+    }
+    best_t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn no_outliers_high_bits_keeps_near_full_range() {
+        // uniform-ish data at 8 bits: clipping gains nothing
+        let data: Vec<f32> = (0..4096).map(|i| (i as f32 / 4096.0) * 2.0 - 1.0).collect();
+        let hist = Histogram::from_slice(&data, 2048);
+        let t = threshold(&hist, QuantSpec::new(8));
+        assert!(t > 0.9 * hist.max_abs(), "t {t}");
+    }
+
+    #[test]
+    fn outliers_at_low_bits_get_clipped() {
+        let mut rng = Rng::new(5);
+        let mut data: Vec<f32> = (0..50_000).map(|_| rng.normal()).collect();
+        data.push(50.0);
+        let hist = Histogram::from_slice(&data, 2048);
+        let t = threshold(&hist, QuantSpec::new(4));
+        assert!(t < 10.0, "t {t} should clip far below the 50.0 outlier");
+        assert!(t > 1.0, "t {t} should not clip into the body");
+    }
+
+    #[test]
+    fn chosen_threshold_is_sweep_argmin() {
+        let mut rng = Rng::new(6);
+        let data: Vec<f32> = (0..20_000).map(|_| rng.laplace(1.0)).collect();
+        let hist = Histogram::from_slice(&data, 2048);
+        let spec = QuantSpec::new(5);
+        let t = threshold(&hist, spec);
+        let err_t = hist_quant_mse(&hist, t, spec);
+        for k in [0.25f32, 0.5, 0.75, 1.0] {
+            let other = hist.max_abs() * k;
+            assert!(err_t <= hist_quant_mse(&hist, other, spec) + 1e-12);
+        }
+    }
+}

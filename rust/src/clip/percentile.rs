@@ -1,0 +1,54 @@
+//! Percentile clipping (McKinstry et al. 2018 — paper §2.1's survey;
+//! included as the extension method in our sweeps).
+//!
+//! Threshold = the p-th percentile of |x|, with a bitwidth-dependent
+//! default schedule (lower precision clips more aggressively).
+
+use crate::quant::QuantSpec;
+use crate::stats::Histogram;
+
+/// McKinstry-style default percentile per bitwidth.
+pub fn default_percentile(bits: u32) -> f64 {
+    match bits {
+        8.. => 0.9999,
+        7 => 0.9995,
+        6 => 0.999,
+        5 => 0.995,
+        4 => 0.99,
+        _ => 0.98,
+    }
+}
+
+pub fn threshold(hist: &Histogram, spec: QuantSpec, p: f64) -> f32 {
+    let p = if p <= 0.0 { default_percentile(spec.bits) } else { p };
+    hist.percentile_abs(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn default_schedule_monotone() {
+        let mut last = 1.0;
+        for bits in (2..=8).rev() {
+            let p = default_percentile(bits);
+            assert!(p <= last);
+            last = p;
+        }
+    }
+
+    #[test]
+    fn percentile_threshold_excludes_tail() {
+        let mut rng = Rng::new(10);
+        let mut data: Vec<f32> = (0..10_000).map(|_| rng.normal()).collect();
+        data.push(100.0);
+        let hist = Histogram::from_slice(&data, 2048);
+        let t = threshold(&hist, QuantSpec::new(4), 0.99);
+        assert!(t < 5.0, "t {t}");
+        // p=0 uses the bit default
+        let td = threshold(&hist, QuantSpec::new(4), 0.0);
+        assert!(td < 10.0 && td > 0.0);
+    }
+}

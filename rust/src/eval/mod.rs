@@ -1,0 +1,112 @@
+//! Evaluators: top-1 accuracy (CNN benchmarks) and perplexity (LSTM LM),
+//! running entirely through the AOT-compiled fwd artifacts.
+
+use anyhow::{bail, Result};
+
+use crate::calib::slice_rows;
+use crate::model::ModelSpec;
+use crate::pipeline::PreparedModel;
+use crate::runtime::{Engine, Input, Inputs};
+use crate::tensor::{TensorF, TensorI};
+
+/// Top-1 accuracy of a prepared model over `(images, labels)`.
+/// Uses the largest fwd artifact <= requested batch; the final partial
+/// chunk is zero-padded and its padded rows excluded from scoring.
+pub fn accuracy(
+    engine: &Engine,
+    spec: &ModelSpec,
+    prep: &PreparedModel,
+    images: &TensorF,
+    labels: &[i32],
+    batch: usize,
+) -> Result<f64> {
+    let n = images.shape()[0];
+    if n != labels.len() {
+        bail!("images ({n}) vs labels ({}) mismatch", labels.len());
+    }
+    let art = spec.fwd_for_batch(batch)?;
+    let exe = engine.load(art)?;
+    let b = art.batch;
+    let mut base: Inputs = Default::default();
+    prep.insert_inputs(&mut base);
+
+    let mut correct = 0usize;
+    let mut seen = 0usize;
+    let mut i = 0usize;
+    while i < n {
+        let take = (n - i).min(b);
+        let xb = if take == b {
+            slice_rows(images, i, b)?
+        } else {
+            pad_rows(&slice_rows(images, i, take)?, b)?
+        };
+        base.insert("x".into(), Input::F32(xb));
+        let out = exe.execute(&base)?;
+        let logits = out.get("logits")?;
+        for (row, pred) in logits.argmax_rows().into_iter().enumerate().take(take) {
+            if pred as i32 == labels[i + row] {
+                correct += 1;
+            }
+        }
+        seen += take;
+        i += take;
+    }
+    Ok(correct as f64 / seen.max(1) as f64)
+}
+
+/// Perplexity of the LSTM LM over token windows `(N, seq_len + 1)`.
+/// N must be a multiple of the fwd artifact batch (the datasets this
+/// repo generates are sized accordingly).
+pub fn perplexity(
+    engine: &Engine,
+    spec: &ModelSpec,
+    prep: &PreparedModel,
+    windows: &TensorI,
+) -> Result<f64> {
+    let n = windows.shape()[0];
+    let art = spec.fwd_for_batch(1)?;
+    let b = art.batch;
+    if n % b != 0 {
+        bail!("window count {n} must be a multiple of the artifact batch {b}");
+    }
+    let exe = engine.load(art)?;
+    let mut base: Inputs = Default::default();
+    prep.insert_inputs(&mut base);
+
+    let row: usize = windows.shape()[1..].iter().product();
+    let mut nll = 0.0f64;
+    let mut ntok = 0.0f64;
+    for chunk in 0..(n / b) {
+        let start = chunk * b * row;
+        let tb = TensorI::from_vec(
+            &[b, windows.shape()[1]],
+            windows.data()[start..start + b * row].to_vec(),
+        )?;
+        base.insert("tokens".into(), Input::I32(tb));
+        let out = exe.execute(&base)?;
+        nll += out.scalar("nll_sum")? as f64;
+        ntok += out.scalar("ntok")? as f64;
+    }
+    if ntok == 0.0 {
+        bail!("no tokens evaluated");
+    }
+    Ok((nll / ntok).exp())
+}
+
+/// Zero-pad the leading (batch) axis to `b` rows.
+pub fn pad_rows(t: &TensorF, b: usize) -> Result<TensorF> {
+    t.pad_axis(0, b).map_err(Into::into)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_rows_zero_fills() {
+        let t = TensorF::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let p = pad_rows(&t, 4).unwrap();
+        assert_eq!(p.shape(), &[4, 3]);
+        assert_eq!(&p.data()[6..], &[0.0; 6]);
+    }
+}

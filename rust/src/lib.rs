@@ -1,0 +1,46 @@
+//! # OCS — Outlier Channel Splitting, reproduced as a deployable stack
+//!
+//! Rust implementation of *"Improving Neural Network Quantization without
+//! Retraining using Outlier Channel Splitting"* (Zhao et al., ICML 2019),
+//! structured as the Layer-3 coordinator of a three-layer Rust + JAX +
+//! Pallas system:
+//!
+//! * **L1** (`python/compile/kernels/`) — Pallas kernels: `fake_quant`
+//!   (Eq. 1), `channel_dup` (the OCS runtime layer, §3.5), `qmatmul`.
+//! * **L2** (`python/compile/model.py`) — JAX benchmark models with OCS
+//!   hooks, AOT-lowered once to HLO text under `artifacts/`.
+//! * **L3** (this crate) — everything at run time: the quantization
+//!   toolchain ([`quant`], [`clip`], [`ocs`]), activation calibration
+//!   ([`calib`]), the PJRT runtime ([`runtime`]), training/eval harness
+//!   ([`train`], [`eval`]), a dynamic-batching inference server
+//!   ([`serve`]) and the paper-table regeneration harness ([`tables`]).
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! `ocs` binary is self-contained.
+//!
+//! ## Quick start
+//!
+//! ```bash
+//! make artifacts && cargo build --release
+//! target/release/ocs train --model miniresnet   # train through PJRT
+//! target/release/ocs table --id 2               # reproduce Table 2
+//! cargo run --release --example quickstart
+//! ```
+
+pub mod bench_support;
+pub mod calib;
+pub mod cli;
+pub mod clip;
+pub mod eval;
+pub mod miniprop;
+pub mod model;
+pub mod ocs;
+pub mod pipeline;
+pub mod quant;
+pub mod runtime;
+pub mod serve;
+pub mod stats;
+pub mod tables;
+pub mod tensor;
+pub mod train;
+pub mod util;

@@ -1,0 +1,219 @@
+//! `ocs` — the leader binary: training, quantization, paper-table
+//! regeneration, and a serving self-test, all over the AOT artifacts.
+//!
+//! ```text
+//! ocs info                          inventory of artifacts + layers
+//! ocs train --model all|<name>      train through the train_step artifact
+//! ocs eval  --model <name> [...]    evaluate one quantization config
+//! ocs table --id all|1|2|3|4|5|6|fig1   regenerate paper tables/figures
+//! ocs serve --model <name>          dynamic-batching serving self-test
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use ocs::cli::Args;
+use ocs::clip::ClipMethod;
+use ocs::eval;
+use ocs::info;
+use ocs::model::store::WeightStore;
+use ocs::model::ModelSpec;
+use ocs::ocs::{OcsTarget, SplitMode};
+use ocs::pipeline::{self, QuantConfig};
+use ocs::runtime::Engine;
+use ocs::tables::TableCtx;
+use ocs::train::{self, data};
+
+const USAGE: &str = "\
+ocs — Outlier Channel Splitting (ICML'19) quantization stack
+
+USAGE:
+  ocs info
+  ocs train --model all|minivgg|miniresnet|miniincept|lstmlm [--steps N] [--lr F]
+  ocs eval  --model NAME [--w-bits N] [--a-bits N] [--w-clip M] [--a-clip M]
+            [--ocs-ratio R] [--ocs-target weights|activations] [--split naive|qa]
+  ocs table --id all|1|2|3|4|5|6|fig1 [--quick]
+  ocs report --model NAME [--bits N] [--ocs-ratio R]
+  ocs serve --model NAME [--requests N] [--w-bits N]
+
+FLAGS:
+  --artifacts DIR   artifact root (default: artifacts)
+  --results DIR     table output dir (default: results)
+";
+
+fn main() {
+    let args = Args::parse_env();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    let artifacts = args.str_or("artifacts", "artifacts").to_string();
+    match args.cmd.as_deref() {
+        Some("info") => cmd_info(&artifacts),
+        Some("train") => cmd_train(args, &artifacts),
+        Some("eval") => cmd_eval(args, &artifacts),
+        Some("table") => cmd_table(args, &artifacts),
+        Some("report") => {
+            let model = args.req("model")?;
+            ocs::tables::report::run(
+                &artifacts,
+                args.str_or("results", "results"),
+                model,
+                args.parse_or("bits", 4u32)?,
+                args.parse_or("ocs-ratio", 0.05f64)?,
+            )
+        }
+        Some("serve") => cmd_serve(args, &artifacts),
+        Some(other) => bail!("unknown command '{other}'\n{USAGE}"),
+        None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn all_models(artifacts: &str) -> Result<Vec<String>> {
+    let manifest = std::path::Path::new(artifacts).join("manifest.json");
+    let text = std::fs::read_to_string(&manifest)
+        .with_context(|| format!("read {} — run `make artifacts` first", manifest.display()))?;
+    let v = ocs::util::json::Value::parse(&text)?;
+    Ok(v.get("models")?
+        .as_arr()?
+        .iter()
+        .filter_map(|m| m.as_str().ok().map(String::from))
+        .collect())
+}
+
+fn cmd_info(artifacts: &str) -> Result<()> {
+    for name in all_models(artifacts)? {
+        let spec = ModelSpec::load_named(artifacts, &name)?;
+        let (ws, trained) = WeightStore::load_best(&spec)?;
+        println!(
+            "{name}: {} layers ({} quantized), {} params, artifacts: {:?}{}",
+            spec.layers.len(),
+            spec.quantized_layers().count(),
+            ws.param_count(),
+            spec.artifacts.keys().collect::<Vec<_>>(),
+            if trained { " [trained]" } else { " [init only]" }
+        );
+    }
+    Ok(())
+}
+
+/// Per-model training defaults: (steps, base lr).
+pub fn train_defaults(model: &str) -> (usize, f32) {
+    match model {
+        "lstmlm" => (1200, 0.7),
+        "miniresnet" => (700, 0.015),
+        _ => (600, 0.04),
+    }
+}
+
+fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
+    let which = args.req("model")?;
+    let models: Vec<String> = if which == "all" {
+        all_models(artifacts)?
+    } else {
+        vec![which.to_string()]
+    };
+    let engine = Engine::cpu()?;
+    for name in models {
+        let spec = ModelSpec::load_named(artifacts, &name)?;
+        let ws = WeightStore::load_init(&spec)?;
+        let (dsteps, dlr) = train_defaults(&name);
+        let steps = args.parse_or("steps", dsteps)?;
+        let lr = args.parse_or("lr", dlr)?;
+        info!("training {name} for {steps} steps (lr {lr})");
+        let (trained, report) = if spec.is_lm() {
+            let corpus = data::synth_corpus(200_000, spec.vocab, 91);
+            train::train_lm(&engine, &spec, &ws, &corpus, steps, lr, 17)?
+        } else {
+            let dataset = data::synth_images(8_000, 23);
+            train::train_cnn(&engine, &spec, &ws, &dataset, steps, lr, 17)?
+        };
+        let path = WeightStore::trained_path(&spec);
+        trained.save(&path)?;
+        info!(
+            "{name}: final loss {:.4} -> {}",
+            report.final_loss,
+            path.display()
+        );
+    }
+    Ok(())
+}
+
+fn parse_config(args: &Args) -> Result<QuantConfig> {
+    let mut cfg = QuantConfig::float();
+    let wb: u32 = args.parse_or("w-bits", 0)?;
+    if wb > 0 {
+        cfg.w_bits = Some(wb);
+    }
+    let ab: u32 = args.parse_or("a-bits", 0)?;
+    if ab > 0 {
+        cfg.a_bits = Some(ab);
+    }
+    cfg.w_clip = ClipMethod::parse(args.str_or("w-clip", "none"))
+        .context("bad --w-clip (none|mse|aciq|kl|percentile[:p])")?;
+    cfg.a_clip = ClipMethod::parse(args.str_or("a-clip", "none"))
+        .context("bad --a-clip")?;
+    cfg.ocs_ratio = args.parse_or("ocs-ratio", 0.0)?;
+    cfg.ocs_target = match args.str_or("ocs-target", "weights") {
+        "weights" => OcsTarget::Weights,
+        "activations" => OcsTarget::Activations,
+        other => bail!("bad --ocs-target '{other}'"),
+    };
+    cfg.split_mode =
+        SplitMode::parse(args.str_or("split", "qa")).context("bad --split (naive|qa)")?;
+    Ok(cfg)
+}
+
+fn cmd_eval(args: &Args, artifacts: &str) -> Result<()> {
+    let name = args.req("model")?;
+    let spec = ModelSpec::load_named(artifacts, name)?;
+    let (ws, trained) = WeightStore::load_best(&spec)?;
+    if !trained {
+        ocs::warnln!("no trained weights for {name}; evaluating the init seed (run `ocs train` first)");
+    }
+    let cfg = parse_config(args)?;
+    let engine = Engine::cpu()?;
+    if spec.is_lm() {
+        let corpus = data::synth_corpus(40_000, spec.vocab, 92);
+        let windows = data::token_windows(&corpus, spec.seq_len, 32);
+        let prep = pipeline::prepare(&spec, &ws, None, &cfg)?;
+        let ppl = eval::perplexity(&engine, &spec, &prep, &windows)?;
+        println!("{name} [{}]: perplexity {ppl:.2}", cfg.label());
+    } else {
+        let calib_needed = cfg.a_bits.is_some();
+        let calib = if calib_needed {
+            let calib_set = data::synth_images(256, 29);
+            Some(ocs::calib::calibrate(&engine, &spec, &ws, &calib_set.x, 32)?)
+        } else {
+            None
+        };
+        let test = data::synth_images(2_000, 31);
+        let prep = pipeline::prepare(&spec, &ws, calib.as_ref(), &cfg)?;
+        let acc = eval::accuracy(&engine, &spec, &prep, &test.x, &test.y, 128)?;
+        println!("{name} [{}]: top-1 {:.2}%", cfg.label(), acc * 100.0);
+    }
+    Ok(())
+}
+
+fn cmd_table(args: &Args, artifacts: &str) -> Result<()> {
+    let id = args.str_or("id", "all");
+    let ctx = TableCtx::new(
+        artifacts,
+        args.str_or("results", "results"),
+        args.bool_or("quick", false),
+    )?;
+    ctx.run(id)
+}
+
+fn cmd_serve(args: &Args, artifacts: &str) -> Result<()> {
+    let name = args.req("model")?;
+    let requests: usize = args.parse_or("requests", 512)?;
+    let wb: u32 = args.parse_or("w-bits", 5)?;
+    let cfg = QuantConfig::weights_only(wb, ClipMethod::Mse, 0.02);
+    ocs::serve::self_test(artifacts, name, cfg, requests)
+}

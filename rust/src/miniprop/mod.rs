@@ -1,0 +1,134 @@
+//! Mini property-testing framework (proptest is unavailable offline).
+//!
+//! A property is a closure over a seeded [`Rng`]; the runner executes it
+//! for `cases` independent seeds and reports the first failing seed so a
+//! failure is reproducible with [`check_one`]. No shrinking — generators
+//! here are small enough that the failing seed is directly debuggable.
+
+use crate::util::rng::Rng;
+
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `prop` for `cases` seeds derived from `base_seed`. Panics with the
+/// failing seed + message on the first counterexample.
+pub fn check_n<F>(name: &str, base_seed: u64, cases: usize, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} (reproduce with \
+                 miniprop::check_one(\"{name}\", {seed}, ..)): {msg}"
+            );
+        }
+    }
+}
+
+/// Default-case-count runner.
+pub fn check<F>(name: &str, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    check_n(name, 0x0C5_u64 ^ 0x5EED, DEFAULT_CASES, prop)
+}
+
+/// Re-run a single failing seed.
+pub fn check_one<F>(name: &str, seed: u64, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property '{name}' failed for seed {seed}: {msg}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Generators
+// ---------------------------------------------------------------------------
+
+/// Uniform usize in [lo, hi].
+pub fn gen_usize(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + rng.below(hi - lo + 1)
+}
+
+/// Vec of normals with random length in [min_len, max_len].
+pub fn gen_normal_vec(rng: &mut Rng, min_len: usize, max_len: usize, sigma: f32) -> Vec<f32> {
+    let n = gen_usize(rng, min_len, max_len);
+    (0..n).map(|_| rng.normal() * sigma).collect()
+}
+
+/// Heavy-tailed vector: mostly N(0, sigma) with a few big outliers —
+/// the weight-distribution shape OCS targets.
+pub fn gen_outlier_vec(rng: &mut Rng, min_len: usize, max_len: usize) -> Vec<f32> {
+    let n = gen_usize(rng, min_len, max_len);
+    (0..n)
+        .map(|_| {
+            if rng.next_f32() < 0.02 {
+                rng.normal() * 8.0
+            } else {
+                rng.normal()
+            }
+        })
+        .collect()
+}
+
+/// Small random tensor shape with bounded rank/size.
+pub fn gen_shape(rng: &mut Rng, max_rank: usize, max_dim: usize) -> Vec<usize> {
+    let rank = gen_usize(rng, 1, max_rank);
+    (0..rank).map(|_| gen_usize(rng, 1, max_dim)).collect()
+}
+
+/// Assertion helpers for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn ensure_close(a: f64, b: f64, tol: f64, ctx: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a} != {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("sum-commutes", |rng| {
+            let a = rng.normal();
+            let b = rng.normal();
+            ensure((a + b - (b + a)).abs() < 1e-9, "commutativity")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_panics_with_seed() {
+        check_n("always-fails", 1, 4, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check("gen-bounds", |rng| {
+            let n = gen_usize(rng, 3, 9);
+            ensure((3..=9).contains(&n), format!("usize {n}"))?;
+            let v = gen_normal_vec(rng, 1, 5, 1.0);
+            ensure((1..=5).contains(&v.len()), "vec len")?;
+            let s = gen_shape(rng, 4, 6);
+            ensure(s.iter().all(|&d| (1..=6).contains(&d)), "shape dims")
+        });
+    }
+}

@@ -1,0 +1,301 @@
+//! Model metadata — the Rust view of `artifacts/<model>/meta.json`.
+//!
+//! The python compile path (`python/compile/aot.py`) records the exact
+//! layer table and the positional input/output signature of every AOT
+//! artifact; this module parses them so the two sides cannot drift.
+
+pub mod store;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Value;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    Fc,
+    Embed,
+}
+
+impl LayerKind {
+    fn parse(s: &str) -> Result<LayerKind> {
+        Ok(match s {
+            "conv" => LayerKind::Conv,
+            "fc" => LayerKind::Fc,
+            "embed" => LayerKind::Embed,
+            other => bail!("unknown layer kind '{other}'"),
+        })
+    }
+}
+
+/// One parametric layer of a benchmark model.
+#[derive(Debug, Clone)]
+pub struct LayerSpec {
+    pub name: String,
+    pub kind: LayerKind,
+    pub cin: usize,
+    pub cin_pad: usize,
+    pub cout: usize,
+    pub ksize: usize,
+    pub stride: usize,
+    pub quantized: bool,
+    /// Axis of the input-channel dim in the weight tensor (2 for HWIO
+    /// conv, 0 for fc).
+    pub w_cin_axis: usize,
+    pub w_shape: Vec<usize>,
+    pub w_shape_pad: Vec<usize>,
+}
+
+impl LayerSpec {
+    fn from_json(v: &Value) -> Result<LayerSpec> {
+        Ok(LayerSpec {
+            name: v.get("name")?.as_str()?.to_string(),
+            kind: LayerKind::parse(v.get("kind")?.as_str()?)?,
+            cin: v.get("cin")?.as_usize()?,
+            cin_pad: v.get("cin_pad")?.as_usize()?,
+            cout: v.get("cout")?.as_usize()?,
+            ksize: v.get("ksize")?.as_usize()?,
+            stride: v.get("stride")?.as_usize()?,
+            quantized: v.get("quantized")?.as_bool()?,
+            w_cin_axis: v.get("w_cin_axis")?.as_usize()?,
+            w_shape: v.get("w_shape")?.as_shape()?,
+            w_shape_pad: v.get("w_shape_pad")?.as_shape()?,
+        })
+    }
+
+    /// Weight elements per input channel (the knapsack cost unit).
+    pub fn weights_per_channel(&self) -> usize {
+        self.w_shape.iter().product::<usize>() / self.cin.max(1)
+    }
+}
+
+/// dtype of an artifact input.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+/// One positional input/output of an artifact.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+/// One AOT-compiled HLO artifact (fwd / probe / train at some batch).
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub key: String,
+    pub file: PathBuf,
+    pub batch: usize,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl ArtifactSpec {
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|i| i.name == name)
+            .with_context(|| format!("artifact {}: no input '{name}'", self.key))
+    }
+}
+
+/// A benchmark model: layer table + artifact index + task constants.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub dir: PathBuf,
+    pub pad_factor: f64,
+    pub num_classes: usize,
+    pub img_hw: usize,
+    pub img_c: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub momentum: f32,
+    pub layers: Vec<LayerSpec>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl ModelSpec {
+    pub fn load(dir: impl AsRef<Path>) -> Result<ModelSpec> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("read {}", meta_path.display()))?;
+        let v = Value::parse(&text).with_context(|| format!("parse {}", meta_path.display()))?;
+
+        let mut layers = Vec::new();
+        for l in v.get("layers")?.as_arr()? {
+            layers.push(LayerSpec::from_json(l)?);
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for (key, a) in v.get("artifacts")?.as_obj()? {
+            let parse_ios = |field: &str| -> Result<Vec<IoSpec>> {
+                let mut out = Vec::new();
+                for io in a.get(field)?.as_arr()? {
+                    let dtype = match io.get_opt("dtype").map(|d| d.as_str()).transpose()? {
+                        Some("i32") => DType::I32,
+                        _ => DType::F32,
+                    };
+                    out.push(IoSpec {
+                        name: io.get("name")?.as_str()?.to_string(),
+                        dtype,
+                        shape: io.get("shape")?.as_shape()?,
+                    });
+                }
+                Ok(out)
+            };
+            artifacts.insert(
+                key.clone(),
+                ArtifactSpec {
+                    key: key.clone(),
+                    file: dir.join(a.get("file")?.as_str()?),
+                    batch: a.get("batch")?.as_usize()?,
+                    inputs: parse_ios("inputs")?,
+                    outputs: parse_ios("outputs")?,
+                },
+            );
+        }
+
+        Ok(ModelSpec {
+            name: v.get("model")?.as_str()?.to_string(),
+            dir,
+            pad_factor: v.get("pad_factor")?.as_f64()?,
+            num_classes: v.get("num_classes")?.as_usize()?,
+            img_hw: v.get("img_hw")?.as_usize()?,
+            img_c: v.get("img_c")?.as_usize()?,
+            vocab: v.get("vocab")?.as_usize()?,
+            seq_len: v.get("seq_len")?.as_usize()?,
+            momentum: v.get("momentum")?.as_f64()? as f32,
+            layers,
+            artifacts,
+        })
+    }
+
+    /// Load a model from the conventional `artifacts/<name>` location.
+    pub fn load_named(artifacts_dir: impl AsRef<Path>, name: &str) -> Result<ModelSpec> {
+        Self::load(artifacts_dir.as_ref().join(name))
+    }
+
+    pub fn is_lm(&self) -> bool {
+        self.name == "lstmlm"
+    }
+
+    pub fn layer(&self, name: &str) -> Result<&LayerSpec> {
+        self.layers
+            .iter()
+            .find(|l| l.name == name)
+            .with_context(|| format!("model {}: no layer '{name}'", self.name))
+    }
+
+    pub fn quantized_layers(&self) -> impl Iterator<Item = &LayerSpec> {
+        self.layers.iter().filter(|l| l.quantized)
+    }
+
+    pub fn artifact(&self, key: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(key)
+            .with_context(|| format!("model {}: no artifact '{key}'", self.name))
+    }
+
+    /// Smallest fwd artifact whose batch >= n (serving picks this and
+    /// pads); falls back to the largest available.
+    pub fn fwd_for_batch(&self, n: usize) -> Result<&ArtifactSpec> {
+        let mut best: Option<&ArtifactSpec> = None;
+        let mut largest: Option<&ArtifactSpec> = None;
+        for (k, a) in &self.artifacts {
+            if !k.starts_with("fwd_b") {
+                continue;
+            }
+            if largest.map_or(true, |l| a.batch > l.batch) {
+                largest = Some(a);
+            }
+            if a.batch >= n && best.map_or(true, |b| a.batch < b.batch) {
+                best = Some(a);
+            }
+        }
+        best.or(largest)
+            .with_context(|| format!("model {}: no fwd artifacts", self.name))
+    }
+
+    pub fn fwd_batches(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .keys()
+            .filter_map(|k| k.strip_prefix("fwd_b").and_then(|b| b.parse().ok()))
+            .collect();
+        v.sort();
+        v
+    }
+
+    pub fn train_artifact(&self) -> Result<&ArtifactSpec> {
+        self.artifact("train")
+    }
+
+    pub fn probe_for_batch(&self, n: usize) -> Result<&ArtifactSpec> {
+        self.artifact(&format!("probe_b{n}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// meta.json fixtures require `make artifacts`; integration tests in
+    /// rust/tests cover the real files. Here: a synthetic meta.
+    fn fake_meta(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        let meta = r#"{
+ "model": "fake", "pad_factor": 1.25, "seed": 1, "num_classes": 10,
+ "img_hw": 16, "img_c": 3, "vocab": 2000, "seq_len": 32, "momentum": 0.9,
+ "layers": [
+  {"name": "c1", "kind": "conv", "cin": 3, "cin_pad": 3, "cout": 8,
+   "ksize": 3, "stride": 1, "quantized": false, "w_cin_axis": 2,
+   "w_shape": [3,3,3,8], "w_shape_pad": [3,3,3,8]},
+  {"name": "f1", "kind": "fc", "cin": 8, "cin_pad": 10, "cout": 10,
+   "ksize": 0, "stride": 1, "quantized": true, "w_cin_axis": 0,
+   "w_shape": [8,10], "w_shape_pad": [10,10]}
+ ],
+ "artifacts": {
+  "fwd_b4": {"file": "fwd_b4.hlo.txt", "batch": 4,
+    "inputs": [{"name": "x", "dtype": "f32", "shape": [4,16,16,3]}],
+    "outputs": [{"name": "logits", "shape": [4,10]}]},
+  "fwd_b32": {"file": "fwd_b32.hlo.txt", "batch": 32,
+    "inputs": [], "outputs": []},
+  "train": {"file": "train_b8.hlo.txt", "batch": 8,
+    "inputs": [], "outputs": []}
+ }}"#;
+        std::fs::write(dir.join("meta.json"), meta).unwrap();
+    }
+
+    #[test]
+    fn load_and_query() {
+        let dir = std::env::temp_dir().join(format!("ocs_meta_{}", std::process::id()));
+        fake_meta(&dir);
+        let m = ModelSpec::load(&dir).unwrap();
+        assert_eq!(m.name, "fake");
+        assert_eq!(m.layers.len(), 2);
+        assert!(!m.layer("c1").unwrap().quantized);
+        let f1 = m.layer("f1").unwrap();
+        assert_eq!(f1.cin_pad, 10);
+        assert_eq!(f1.w_cin_axis, 0);
+        assert_eq!(f1.weights_per_channel(), 10);
+        assert_eq!(m.quantized_layers().count(), 1);
+        assert_eq!(m.fwd_batches(), vec![4, 32]);
+        assert_eq!(m.fwd_for_batch(3).unwrap().batch, 4);
+        assert_eq!(m.fwd_for_batch(5).unwrap().batch, 32);
+        assert_eq!(m.fwd_for_batch(99).unwrap().batch, 32); // fallback
+        assert!(m.artifact("nope").is_err());
+        let fwd = m.artifact("fwd_b4").unwrap();
+        assert_eq!(fwd.input_index("x").unwrap(), 0);
+        assert_eq!(fwd.inputs[0].dtype, DType::F32);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

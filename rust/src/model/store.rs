@@ -1,0 +1,109 @@
+//! Float parameter storage: the `init.ocst` seed weights from the
+//! compile path and the `artifacts/trained/<model>.ocst` weights the
+//! Rust trainer writes.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::ModelSpec;
+use crate::tensor::io::Bundle;
+use crate::tensor::TensorF;
+
+/// Named float parameter leaves (`<layer>.W`, `<layer>.b`) in the
+/// positional order of the float-param signature.
+#[derive(Debug, Clone)]
+pub struct WeightStore {
+    pub bundle: Bundle,
+}
+
+impl WeightStore {
+    pub fn load(path: impl AsRef<Path>) -> Result<WeightStore> {
+        Ok(WeightStore {
+            bundle: Bundle::load(path)?,
+        })
+    }
+
+    /// The seed parameters written by `aot.py`.
+    pub fn load_init(model: &ModelSpec) -> Result<WeightStore> {
+        Self::load(model.dir.join("init.ocst"))
+    }
+
+    /// Conventional location of trained weights.
+    pub fn trained_path(model: &ModelSpec) -> PathBuf {
+        model
+            .dir
+            .parent()
+            .unwrap_or(&model.dir)
+            .join("trained")
+            .join(format!("{}.ocst", model.name))
+    }
+
+    /// Trained weights if present, else the init seed (so every command
+    /// works out of the box; tables warn when falling back).
+    pub fn load_best(model: &ModelSpec) -> Result<(WeightStore, bool)> {
+        let trained = Self::trained_path(model);
+        if trained.exists() {
+            Ok((Self::load(trained)?, true))
+        } else {
+            Ok((Self::load_init(model)?, false))
+        }
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        self.bundle.save(path)
+    }
+
+    /// `<layer>.W`
+    pub fn weight(&self, layer: &str) -> Result<&TensorF> {
+        self.bundle
+            .f32(&format!("{layer}.W"))
+            .with_context(|| format!("weights for layer '{layer}'"))
+    }
+
+    /// `<layer>.b`
+    pub fn bias(&self, layer: &str) -> Result<&TensorF> {
+        self.bundle
+            .f32(&format!("{layer}.b"))
+            .with_context(|| format!("bias for layer '{layer}'"))
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.bundle.order
+    }
+
+    /// Build from named leaves (trainer output).
+    pub fn from_leaves(leaves: Vec<(String, TensorF)>) -> WeightStore {
+        let mut bundle = Bundle::new();
+        for (n, t) in leaves {
+            bundle.push_f32(&n, t);
+        }
+        WeightStore { bundle }
+    }
+
+    /// Total parameter count (Table 5 denominators).
+    pub fn param_count(&self) -> usize {
+        self.bundle.f32s.values().map(|t| t.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_leaves_and_access() {
+        let ws = WeightStore::from_leaves(vec![
+            ("a.W".into(), TensorF::zeros(&[2, 3])),
+            ("a.b".into(), TensorF::zeros(&[3])),
+        ]);
+        assert_eq!(ws.weight("a").unwrap().shape(), &[2, 3]);
+        assert_eq!(ws.bias("a").unwrap().shape(), &[3]);
+        assert!(ws.weight("zz").is_err());
+        assert_eq!(ws.param_count(), 9);
+        assert_eq!(ws.names(), &["a.W", "a.b"]);
+    }
+}

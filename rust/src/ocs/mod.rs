@@ -1,0 +1,56 @@
+//! Outlier Channel Splitting — the paper's §3 contribution.
+//!
+//! * [`split`] — the value-level split functions: naive halving (Eq. 5,
+//!   Net2WiderNet) and quantization-aware splitting (Eq. 6, the paper's
+//!   novel formula that preserves `Q(w)` exactly, proven via Hermite's
+//!   identity in Eq. 7/8).
+//! * [`plan`] — how many channels each layer splits: the simple
+//!   `ceil(r * C)` rule (§3.4) plus the knapsack allocator the paper
+//!   mentions trying (kept as an ablation).
+//! * [`transform`] — whole-layer transforms: duplicate the selected
+//!   channels into the artifact's padded slots and emit the
+//!   `(W_expanded, idx, dscale, dbias)` inputs the AOT-compiled graph
+//!   consumes. Covers weight OCS (Eq. 3: halve the weights) and
+//!   activation OCS (Eq. 4: halve the activations via `channel_dup`
+//!   scales).
+
+pub mod plan;
+pub mod split;
+pub mod transform;
+
+pub use split::SplitMode;
+pub use transform::{activation_ocs, identity_hooks, weight_ocs, OcsHooks};
+
+/// Which tensor class OCS splits (paper evaluates both; §5.2 vs §5.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OcsTarget {
+    Weights,
+    Activations,
+}
+
+/// Full OCS configuration for one quantization run.
+#[derive(Debug, Clone, Copy)]
+pub struct OcsConfig {
+    /// Expansion ratio r: each layer splits ceil(r * C) channels (§3.4).
+    pub ratio: f64,
+    pub mode: SplitMode,
+    pub target: OcsTarget,
+}
+
+impl OcsConfig {
+    pub fn weights(ratio: f64) -> Self {
+        OcsConfig {
+            ratio,
+            mode: SplitMode::QuantAware,
+            target: OcsTarget::Weights,
+        }
+    }
+
+    pub fn activations(ratio: f64) -> Self {
+        OcsConfig {
+            ratio,
+            mode: SplitMode::QuantAware,
+            target: OcsTarget::Activations,
+        }
+    }
+}

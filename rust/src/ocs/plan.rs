@@ -1,0 +1,205 @@
+//! Split-budget allocation across layers (paper §3.4).
+//!
+//! The paper's default is the *simple* rule — every layer splits
+//! `ceil(r * C)` channels regardless of its distribution. The paper also
+//! reports trying a knapsack formulation (reward = % reduction of the
+//! layer's dynamic range, cost = added memory) that "is experimentally
+//! not better"; we implement it anyway as an ablation
+//! (`rust/benches/ablations.rs` reproduces that finding).
+
+use crate::util::ceil_div;
+
+/// ceil(r * C); never exceeds the padded capacity headroom.
+pub fn splits_for(channels: usize, ratio: f64, capacity: usize) -> usize {
+    if ratio <= 0.0 || channels == 0 {
+        return 0;
+    }
+    let want = (ratio * channels as f64).ceil() as usize;
+    want.min(capacity.saturating_sub(channels))
+}
+
+/// Simple per-layer allocation: `ceil(r * C)` each (paper default).
+pub fn plan_uniform(layers: &[(usize, usize)], ratio: f64) -> Vec<usize> {
+    layers
+        .iter()
+        .map(|&(c, cap)| splits_for(c, ratio, cap))
+        .collect()
+}
+
+/// One layer's marginal-range-reduction profile: `maxes` are per-channel
+/// max-abs values. Simulates the paper's iterative split rule (always
+/// split the current largest channel, halving it) and returns, for each
+/// successive split k, the fractional reduction of the layer range.
+pub fn range_reduction_profile(maxes: &[f32], max_splits: usize) -> Vec<f64> {
+    if maxes.is_empty() {
+        return vec![];
+    }
+    let mut vals: Vec<f32> = maxes.to_vec();
+    let full: f32 = vals.iter().cloned().fold(0.0, f32::max);
+    if full <= 0.0 {
+        return vec![0.0; max_splits];
+    }
+    let mut out = Vec::with_capacity(max_splits);
+    for _ in 0..max_splits {
+        // split the argmax channel: its magnitude halves, duplicate appears
+        let (i, &m) = vals
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        vals[i] = m * 0.5;
+        vals.push(m * 0.5);
+        let now = vals.iter().cloned().fold(0.0, f32::max);
+        out.push(1.0 - (now / full) as f64);
+    }
+    out
+}
+
+/// Knapsack allocation: given each layer's `(channels, capacity,
+/// per-channel maxes, bytes_per_channel)`, distribute a global budget of
+/// extra bytes to maximize total range reduction. Marginal rewards are
+/// non-increasing, so the greedy reward/cost ordering is optimal for the
+/// fractional relaxation and near-optimal here.
+pub struct KnapsackLayer {
+    pub channels: usize,
+    pub capacity: usize,
+    pub maxes: Vec<f32>,
+    pub bytes_per_channel: usize,
+}
+
+pub fn plan_knapsack(layers: &[KnapsackLayer], budget_bytes: usize) -> Vec<usize> {
+    // candidate items: (layer, k-th split) with marginal reward
+    struct Item {
+        layer: usize,
+        k: usize,
+        reward_per_byte: f64,
+    }
+    let mut items: Vec<Item> = Vec::new();
+    for (li, l) in layers.iter().enumerate() {
+        let headroom = l.capacity.saturating_sub(l.channels);
+        let profile = range_reduction_profile(&l.maxes, headroom);
+        let mut prev = 0.0;
+        for (k, &cum) in profile.iter().enumerate() {
+            let marginal = (cum - prev).max(0.0);
+            prev = cum;
+            items.push(Item {
+                layer: li,
+                k,
+                reward_per_byte: marginal / l.bytes_per_channel.max(1) as f64,
+            });
+        }
+    }
+    items.sort_by(|a, b| b.reward_per_byte.partial_cmp(&a.reward_per_byte).unwrap());
+    let mut plan = vec![0usize; layers.len()];
+    let mut spent = 0usize;
+    for item in items {
+        // splits must be taken in order within a layer
+        if plan[item.layer] != item.k {
+            continue;
+        }
+        let cost = layers[item.layer].bytes_per_channel;
+        if spent + cost > budget_bytes {
+            continue;
+        }
+        spent += cost;
+        plan[item.layer] += 1;
+    }
+    plan
+}
+
+/// Memory overhead (relative) for a given plan — Table 5's statistic.
+pub fn relative_overhead(layers: &[(usize, usize)], plan: &[usize], weights_per_channel: &[usize]) -> f64 {
+    let base: usize = layers
+        .iter()
+        .zip(weights_per_channel)
+        .map(|(&(c, _), &w)| c * w)
+        .sum();
+    let extra: usize = plan
+        .iter()
+        .zip(weights_per_channel)
+        .map(|(&k, &w)| k * w)
+        .sum();
+    if base == 0 {
+        return 1.0;
+    }
+    1.0 + extra as f64 / base as f64
+}
+
+/// Convenience: ceil(a*r) without fp drift for tests.
+pub fn ceil_ratio(c: usize, num: usize, den: usize) -> usize {
+    ceil_div(c * num, den)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splits_for_matches_paper_rule() {
+        // ceil(r*C): r=0.01 on tens-to-hundreds of channels = 1 split
+        assert_eq!(splits_for(64, 0.01, 80), 1);
+        assert_eq!(splits_for(100, 0.01, 125), 1);
+        assert_eq!(splits_for(128, 0.02, 160), 3);
+        assert_eq!(splits_for(64, 0.05, 80), 4);
+        assert_eq!(splits_for(64, 0.0, 80), 0);
+        // capped by padded capacity
+        assert_eq!(splits_for(64, 0.5, 70), 6);
+    }
+
+    #[test]
+    fn profile_is_monotone_and_bounded() {
+        let maxes = vec![1.0, 2.0, 8.0, 3.0];
+        let prof = range_reduction_profile(&maxes, 6);
+        for w in prof.windows(2) {
+            assert!(w[1] >= w[0] - 1e-9, "profile must be non-decreasing");
+        }
+        // first split halves the single 8.0 outlier: range 8 -> 4
+        assert!((prof[0] - 0.5).abs() < 1e-6);
+        assert!(prof.iter().all(|&p| (0.0..1.0).contains(&p)));
+    }
+
+    #[test]
+    fn knapsack_prefers_outlier_layer() {
+        let layers = vec![
+            KnapsackLayer {
+                channels: 4,
+                capacity: 8,
+                maxes: vec![1.0, 1.0, 1.0, 1.01], // flat — splitting useless
+                bytes_per_channel: 100,
+            },
+            KnapsackLayer {
+                channels: 4,
+                capacity: 8,
+                maxes: vec![1.0, 1.0, 1.0, 10.0], // one big outlier
+                bytes_per_channel: 100,
+            },
+        ];
+        let plan = plan_knapsack(&layers, 200);
+        assert!(plan[1] >= 1, "outlier layer must get budget: {plan:?}");
+        assert!(plan[1] >= plan[0]);
+    }
+
+    #[test]
+    fn knapsack_respects_budget_and_capacity() {
+        let layers = vec![KnapsackLayer {
+            channels: 4,
+            capacity: 6,
+            maxes: vec![8.0, 4.0, 2.0, 1.0],
+            bytes_per_channel: 50,
+        }];
+        let plan = plan_knapsack(&layers, 1000);
+        assert!(plan[0] <= 2, "capacity cap: {plan:?}");
+        let plan2 = plan_knapsack(&layers, 49);
+        assert_eq!(plan2[0], 0, "budget cap");
+    }
+
+    #[test]
+    fn overhead_tracks_ratio() {
+        // Table 5: overhead ~= r
+        let layers = vec![(100, 125), (200, 250)];
+        let wpc = vec![900, 900];
+        let plan = plan_uniform(&layers, 0.05);
+        let ov = relative_overhead(&layers, &plan, &wpc);
+        assert!((ov - 1.05).abs() < 0.01, "overhead {ov}");
+    }
+}

@@ -1,0 +1,143 @@
+//! Value-level splitting math (paper §3.3).
+//!
+//! Splitting `w` into `(a, b)` with `a + b == w` moves an outlier toward
+//! the distribution center. The naive Net2WiderNet split `(w/2, w/2)`
+//! can *double* the quantization error (both halves round the same way);
+//! the paper's quantization-aware (QA) split
+//!
+//! ```text
+//! OCS_QA(w) = ((w - delta/2) / 2, (w + delta/2) / 2)
+//! ```
+//!
+//! (Eq. 6, generalized from grid units to a grid of step `delta`)
+//! guarantees `Q(a) + Q(b) == Q(w)` for the round-half-up quantizer —
+//! Eq. 7, a consequence of Hermite's identity (Eq. 8).
+
+use crate::util::round_half_up;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SplitMode {
+    /// Eq. 5 — plain halving (Net2WiderNet).
+    Naive,
+    /// Eq. 6 — quantization-aware; preserves the quantized value exactly.
+    QuantAware,
+}
+
+impl SplitMode {
+    pub fn parse(s: &str) -> Option<SplitMode> {
+        match s {
+            "naive" => Some(SplitMode::Naive),
+            "qa" | "quant-aware" => Some(SplitMode::QuantAware),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SplitMode::Naive => "naive",
+            SplitMode::QuantAware => "qa",
+        }
+    }
+}
+
+/// Split one value on a grid of step `delta` (`delta <= 0` degrades QA
+/// to naive — used by the first pass before the final grid is known).
+#[inline]
+pub fn split_value(w: f32, delta: f32, mode: SplitMode) -> (f32, f32) {
+    match mode {
+        SplitMode::Naive => (w * 0.5, w * 0.5),
+        SplitMode::QuantAware => {
+            if delta <= 0.0 {
+                (w * 0.5, w * 0.5)
+            } else {
+                ((w - 0.5 * delta) * 0.5, (w + 0.5 * delta) * 0.5)
+            }
+        }
+    }
+}
+
+/// Grid-units quantizer used in the Eq. 7 identity checks.
+#[inline]
+pub fn q_grid(x: f32, delta: f32) -> f32 {
+    round_half_up(x / delta) * delta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::miniprop::{check, ensure, ensure_close, gen_usize};
+
+    #[test]
+    fn halves_always_sum_to_original() {
+        for mode in [SplitMode::Naive, SplitMode::QuantAware] {
+            for w in [-7.3f32, -0.5, 0.0, 0.1, 3.0, 42.5] {
+                let (a, b) = split_value(w, 0.25, mode);
+                assert!((a + b - w).abs() < 1e-6, "{mode:?} w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn qa_preserves_quantized_value_paper_example() {
+        // the paper's w = 3 example on an integer grid: naive halves are
+        // 1.5 + 1.5 -> 2 + 2 = 4 (error doubled); QA gives 1 + 2 = 3.
+        let delta = 1.0;
+        let w = 3.0f32;
+        let (na, nb) = split_value(w, delta, SplitMode::Naive);
+        assert_eq!(q_grid(na, delta) + q_grid(nb, delta), 4.0);
+        let (qa, qb) = split_value(w, delta, SplitMode::QuantAware);
+        assert_eq!(q_grid(qa, delta) + q_grid(qb, delta), 3.0);
+    }
+
+    #[test]
+    fn qa_identity_property() {
+        // Eq. 7: Q(a) + Q(b) == Q(w) for all w and grid steps
+        check("qa-split-preserves-Q", |rng| {
+            let w = rng.normal() * 10.0;
+            let delta = 0.01 + rng.next_f32() * 2.0;
+            let (a, b) = split_value(w, delta, SplitMode::QuantAware);
+            ensure_close(
+                (q_grid(a, delta) + q_grid(b, delta)) as f64,
+                q_grid(w, delta) as f64,
+                1e-4,
+                &format!("w={w} delta={delta}"),
+            )
+        });
+    }
+
+    #[test]
+    fn naive_error_at_most_delta_qa_at_most_half() {
+        check("split-error-bounds", |rng| {
+            let w = rng.normal() * 8.0;
+            let delta = 0.05 + rng.next_f32();
+            let (na, nb) = split_value(w, delta, SplitMode::Naive);
+            let nerr = (q_grid(na, delta) + q_grid(nb, delta) - w).abs();
+            ensure(nerr <= delta + 1e-5, format!("naive err {nerr} > delta {delta}"))?;
+            let (qa, qb) = split_value(w, delta, SplitMode::QuantAware);
+            let qerr = (q_grid(qa, delta) + q_grid(qb, delta) - w).abs();
+            ensure(
+                qerr <= 0.5 * delta + 1e-5,
+                format!("qa err {qerr} > delta/2 {}", delta / 2.0),
+            )
+        });
+    }
+
+    #[test]
+    fn hermite_identity_integer_grid() {
+        // Eq. 8 with n in 2..=6 on random rationals
+        check("hermite", |rng| {
+            let x = rng.normal() * 100.0;
+            let n = gen_usize(rng, 2, 6) as i64;
+            let lhs: f64 = (0..n)
+                .map(|k| ((x as f64) + k as f64 / n as f64).floor())
+                .sum();
+            ensure_close(lhs, ((n as f64) * x as f64).floor(), 1e-9, "hermite")
+        });
+    }
+
+    #[test]
+    fn qa_with_zero_delta_degrades_to_naive() {
+        let (a, b) = split_value(5.0, 0.0, SplitMode::QuantAware);
+        assert_eq!((a, b), (2.5, 2.5));
+    }
+}

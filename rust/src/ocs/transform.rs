@@ -1,0 +1,382 @@
+//! Whole-layer OCS transforms (paper §3.2, §3.4, §3.5).
+//!
+//! A quantizable layer in the AOT artifact reserves `cin_pad` input
+//! channels; the runtime inputs `(W, idx, dscale, dbias)` steer them:
+//! activations are expanded by the `channel_dup` Pallas kernel as
+//! `x_exp[j] = x[idx[j]] * dscale[j] + dbias[j]`, then multiply
+//! `W_expanded`. OCS materializes splits into the padded slots:
+//!
+//! * **Weight OCS** (Eq. 3): the activation channel is *duplicated*
+//!   (`dscale` stays), and the weight channel is split in half with the
+//!   naive or quantization-aware rule. Channel choice: iteratively split
+//!   the channel holding the layer's current largest |w| (§3.4).
+//! * **Activation OCS** (Eq. 4): the weight channel is duplicated
+//!   unchanged and the activation halves via `dscale`; QA splitting adds
+//!   the ∓delta/4 offsets through `dbias`. Channel choice: the
+//!   calibration-ranked outlier channels (§5.3).
+
+use anyhow::{bail, Result};
+
+use super::split::{split_value, SplitMode};
+use crate::tensor::{TensorF, TensorI};
+
+/// Everything the runtime needs to drive one quantizable layer.
+#[derive(Debug, Clone)]
+pub struct OcsHooks {
+    /// Weight with the input-channel axis grown to `cin_pad`; split
+    /// channels already materialized (still float — quantize after).
+    pub w_expanded: TensorF,
+    /// Source channel per padded slot (into the *original* cin).
+    pub idx: TensorI,
+    /// Per-slot activation scale (1 normally, 0 for inert slots, 0.5^k
+    /// after k activation splits).
+    pub dscale: TensorF,
+    /// Per-slot activation bias (QA activation splitting's ∓delta/4).
+    pub dbias: TensorF,
+    /// Slots in use: cin + performed splits.
+    pub active: usize,
+    /// Original channel count.
+    pub cin: usize,
+    /// (src_slot, new_slot) per performed split, in order.
+    pub splits: Vec<(usize, usize)>,
+}
+
+impl OcsHooks {
+    /// The functionally-equivalent unpadded weight: folding every slot
+    /// back onto its source channel (`eff[c] = sum_{idx[s]=c} dscale[s] *
+    /// W[s]`). For naive splits this must equal the original weight
+    /// exactly; for QA weight splits too (the ± delta/4 cancel).
+    pub fn effective_weight(&self, cin_axis: usize) -> TensorF {
+        let mut shape = self.w_expanded.shape().to_vec();
+        shape[cin_axis] = self.cin;
+        let mut eff = TensorF::zeros(&shape);
+        let (outer, alen_pad, inner) = self.w_expanded.axis_geometry(cin_axis).unwrap();
+        let alen = self.cin;
+        let wdata = self.w_expanded.data();
+        let idx = self.idx.data();
+        let scale = self.dscale.data();
+        let edata = eff.data_mut();
+        for s in 0..self.active.min(alen_pad) {
+            let c = idx[s] as usize;
+            let sc = scale[s];
+            if sc == 0.0 {
+                continue;
+            }
+            for o in 0..outer {
+                let sbase = (o * alen_pad + s) * inner;
+                let dbase = (o * alen + c) * inner;
+                for k in 0..inner {
+                    edata[dbase + k] += sc * wdata[sbase + k];
+                }
+            }
+        }
+        eff
+    }
+
+    /// Relative model-size overhead of this layer's expansion (Table 5).
+    pub fn overhead(&self) -> f64 {
+        self.active as f64 / self.cin as f64
+    }
+}
+
+/// No-op hooks: original channels pass through, padded slots inert.
+pub fn identity_hooks(w: &TensorF, cin_axis: usize, cin_pad: usize) -> Result<OcsHooks> {
+    let cin = w.shape()[cin_axis];
+    if cin_pad < cin {
+        bail!("cin_pad {cin_pad} < cin {cin}");
+    }
+    let w_expanded = w.pad_axis(cin_axis, cin_pad)?;
+    let mut idx = vec![0i32; cin_pad];
+    let mut dscale = vec![0.0f32; cin_pad];
+    for c in 0..cin {
+        idx[c] = c as i32;
+        dscale[c] = 1.0;
+    }
+    Ok(OcsHooks {
+        w_expanded,
+        idx: TensorI::from_vec(&[cin_pad], idx)?,
+        dscale: TensorF::from_vec(&[cin_pad], dscale)?,
+        dbias: TensorF::zeros(&[cin_pad]),
+        active: cin,
+        cin,
+        splits: Vec::new(),
+    })
+}
+
+/// Weight OCS (§3.2 Eq. 3 + §3.4 selection): perform `n_splits` splits,
+/// each time picking the channel containing the layer's largest |w|.
+/// `delta` is the weight-grid step used by QA splitting (pass the final
+/// quantization delta; `<= 0` or `Naive` degrades to plain halving).
+pub fn weight_ocs(
+    w: &TensorF,
+    cin_axis: usize,
+    cin_pad: usize,
+    n_splits: usize,
+    mode: SplitMode,
+    delta: f32,
+) -> Result<OcsHooks> {
+    let mut hooks = identity_hooks(w, cin_axis, cin_pad)?;
+    // per-slot current max |w|
+    let mut maxes: Vec<f32> = (0..hooks.active)
+        .map(|i| hooks.w_expanded.axis_max_abs(cin_axis, i).unwrap())
+        .collect();
+    for _ in 0..n_splits {
+        if hooks.active >= cin_pad {
+            break; // out of padded capacity
+        }
+        // §3.4: always split the channel with the current largest value
+        let (src, _) = maxes
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .expect("at least one channel");
+        let dst = hooks.active;
+        // materialize halves: dst gets the (w + delta/2)/2 half first
+        // (copy reads src before src is rewritten)
+        hooks
+            .w_expanded
+            .axis_copy_with(cin_axis, src, dst, |v| split_value(v, delta, mode).1)?;
+        hooks
+            .w_expanded
+            .axis_map_mut(cin_axis, src, |v| *v = split_value(*v, delta, mode).0)?;
+        // the activation channel is duplicated as-is (Eq. 3: halving
+        // lives in the weights) — inherit the source slot's steering
+        hooks.idx.data_mut()[dst] = hooks.idx.data()[src];
+        hooks.dscale.data_mut()[dst] = hooks.dscale.data()[src];
+        hooks.dbias.data_mut()[dst] = hooks.dbias.data()[src];
+        maxes[src] = hooks.w_expanded.axis_max_abs(cin_axis, src)?;
+        maxes.push(hooks.w_expanded.axis_max_abs(cin_axis, dst)?);
+        hooks.splits.push((src, dst));
+        hooks.active += 1;
+    }
+    Ok(hooks)
+}
+
+/// Activation OCS (§3.2 Eq. 4 + §5.3 selection): split each listed
+/// original channel once. Weights duplicate unchanged; activations halve
+/// via `dscale`, with QA's ∓`act_delta`/4 offsets in `dbias`.
+pub fn activation_ocs(
+    w: &TensorF,
+    cin_axis: usize,
+    cin_pad: usize,
+    channels: &[usize],
+    mode: SplitMode,
+    act_delta: f32,
+) -> Result<OcsHooks> {
+    let mut hooks = identity_hooks(w, cin_axis, cin_pad)?;
+    for &c in channels {
+        if hooks.active >= cin_pad {
+            break;
+        }
+        if c >= hooks.cin {
+            bail!("activation split channel {c} out of range (cin {})", hooks.cin);
+        }
+        let src = c; // primary slot of original channel c
+        let dst = hooks.active;
+        // duplicate the weight channel unchanged
+        hooks.w_expanded.axis_copy_with(cin_axis, src, dst, |v| v)?;
+        hooks.idx.data_mut()[dst] = hooks.idx.data()[src];
+        // halve the activation: new scale = old/2 on both slots
+        let old_scale = hooks.dscale.data()[src];
+        let old_bias = hooks.dbias.data()[src];
+        let half = old_scale * 0.5;
+        let (qa_lo, qa_hi) = match mode {
+            SplitMode::Naive => (0.0, 0.0),
+            SplitMode::QuantAware => (-act_delta / 4.0, act_delta / 4.0),
+        };
+        hooks.dscale.data_mut()[src] = half;
+        hooks.dscale.data_mut()[dst] = half;
+        hooks.dbias.data_mut()[src] = old_bias * 0.5 + qa_lo;
+        hooks.dbias.data_mut()[dst] = old_bias * 0.5 + qa_hi;
+        hooks.splits.push((src, dst));
+        hooks.active += 1;
+    }
+    Ok(hooks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::miniprop::{check, ensure, gen_usize};
+    use crate::util::rng::Rng;
+
+    fn conv_weight(rng: &mut Rng, k: usize, cin: usize, cout: usize) -> TensorF {
+        TensorF::from_vec(&[k, k, cin, cout], rng.normal_vec(k * k * cin * cout)).unwrap()
+    }
+
+    #[test]
+    fn identity_hooks_are_inert() {
+        let mut rng = Rng::new(0);
+        let w = conv_weight(&mut rng, 3, 8, 4);
+        let h = identity_hooks(&w, 2, 10).unwrap();
+        assert_eq!(h.w_expanded.shape(), &[3, 3, 10, 4]);
+        assert_eq!(h.active, 8);
+        let eff = h.effective_weight(2);
+        assert_eq!(eff.data(), w.data());
+        // padded slots: scale 0
+        assert_eq!(h.dscale.data()[8], 0.0);
+        assert_eq!(h.dscale.data()[9], 0.0);
+    }
+
+    #[test]
+    fn weight_ocs_reduces_max_abs() {
+        let mut rng = Rng::new(1);
+        let mut w = conv_weight(&mut rng, 3, 8, 4);
+        // plant an outlier in channel 5
+        let o = w.axis_geometry(2).unwrap();
+        assert_eq!(o.1, 8);
+        w.axis_map_mut(2, 5, |v| *v *= 10.0).unwrap();
+        let before = w.max_abs();
+        let h = weight_ocs(&w, 2, 10, 1, SplitMode::Naive, 0.0).unwrap();
+        let after = h.w_expanded.max_abs();
+        assert!(
+            (after - before / 2.0).abs() < 1e-5,
+            "first split must halve the outlier: {before} -> {after}"
+        );
+        assert_eq!(h.splits.len(), 1);
+        assert_eq!(h.splits[0].0, 5, "must split the outlier channel");
+    }
+
+    #[test]
+    fn weight_ocs_naive_preserves_function_exactly() {
+        let mut rng = Rng::new(2);
+        let w = conv_weight(&mut rng, 3, 6, 5);
+        let h = weight_ocs(&w, 2, 8, 2, SplitMode::Naive, 0.0).unwrap();
+        let eff = h.effective_weight(2);
+        for (a, b) in eff.data().iter().zip(w.data()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn weight_ocs_qa_preserves_function_exactly() {
+        // QA offsets are ±delta/4 and cancel in the sum
+        let mut rng = Rng::new(3);
+        let w = conv_weight(&mut rng, 1, 6, 5);
+        let h = weight_ocs(&w, 2, 8, 2, SplitMode::QuantAware, 0.05).unwrap();
+        let eff = h.effective_weight(2);
+        for (a, b) in eff.data().iter().zip(w.data()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn weight_ocs_can_resplit_same_channel() {
+        // one dominant channel keeps winning the argmax
+        let w = TensorF::from_vec(&[4, 1], vec![100.0, 1.0, 1.0, 1.0]).unwrap();
+        let h = weight_ocs(&w, 0, 8, 3, SplitMode::Naive, 0.0).unwrap();
+        // 100 -> 50+50 -> 25+25+50/... all splits chase channel-0 mass
+        for &(src, _) in &h.splits {
+            assert_eq!(h.idx.data()[src], 0);
+        }
+        assert!(h.w_expanded.max_abs() <= 50.0);
+    }
+
+    #[test]
+    fn weight_ocs_respects_capacity() {
+        let mut rng = Rng::new(4);
+        let w = conv_weight(&mut rng, 3, 6, 2);
+        let h = weight_ocs(&w, 2, 8, 100, SplitMode::Naive, 0.0).unwrap();
+        assert_eq!(h.active, 8);
+        assert_eq!(h.splits.len(), 2);
+    }
+
+    #[test]
+    fn activation_ocs_naive_preserves_function() {
+        // eff weight counts dscale: dup slot 0.5*W + primary 0.5*W == W
+        let mut rng = Rng::new(5);
+        let w = conv_weight(&mut rng, 3, 6, 5);
+        let h = activation_ocs(&w, 2, 8, &[2, 4], SplitMode::Naive, 0.0).unwrap();
+        let eff = h.effective_weight(2);
+        for (a, b) in eff.data().iter().zip(w.data()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        // split channels have halved activation scales
+        assert_eq!(h.dscale.data()[2], 0.5);
+        assert_eq!(h.dscale.data()[6], 0.5);
+        assert_eq!(h.idx.data()[6], 2);
+    }
+
+    #[test]
+    fn activation_ocs_qa_biases() {
+        let mut rng = Rng::new(6);
+        let w = conv_weight(&mut rng, 1, 4, 3);
+        let delta = 0.2;
+        let h = activation_ocs(&w, 2, 6, &[1], SplitMode::QuantAware, delta).unwrap();
+        assert!((h.dbias.data()[1] + delta / 4.0).abs() < 1e-7);
+        assert!((h.dbias.data()[4] - delta / 4.0).abs() < 1e-7);
+        // x*0.5 - d/4 + x*0.5 + d/4 == x : biases cancel
+        let sum: f32 = h.dbias.data().iter().sum();
+        assert!(sum.abs() < 1e-6);
+    }
+
+    #[test]
+    fn activation_ocs_rejects_bad_channel() {
+        let mut rng = Rng::new(7);
+        let w = conv_weight(&mut rng, 1, 4, 3);
+        assert!(activation_ocs(&w, 2, 6, &[9], SplitMode::Naive, 0.0).is_err());
+    }
+
+    #[test]
+    fn property_effective_weight_invariant() {
+        check("weight-ocs-equivalence", |rng| {
+            let cin = gen_usize(rng, 2, 10);
+            let cout = gen_usize(rng, 1, 6);
+            let cin_pad = cin + gen_usize(rng, 1, 4);
+            let n = gen_usize(rng, 0, 5);
+            let w = TensorF::from_vec(&[cin, cout], rng.normal_vec(cin * cout)).unwrap();
+            let mode = if rng.next_f32() < 0.5 {
+                SplitMode::Naive
+            } else {
+                SplitMode::QuantAware
+            };
+            let h = weight_ocs(&w, 0, cin_pad, n, mode, 0.1).map_err(|e| e.to_string())?;
+            let eff = h.effective_weight(0);
+            for (i, (a, b)) in eff.data().iter().zip(w.data()).enumerate() {
+                ensure(
+                    (a - b).abs() < 1e-5,
+                    format!("eff[{i}] {a} != {b} (mode {mode:?}, n {n})"),
+                )?;
+            }
+            ensure(h.active <= cin_pad, "active within capacity")
+        });
+    }
+
+    #[test]
+    fn property_split_ordering_minimizes_range() {
+        // after n splits, the residual max is <= any single-channel
+        // alternative strategy's residual max for the same n (greedy
+        // argmax halving is optimal for minimizing the max)
+        check("greedy-range-optimal-vs-random", |rng| {
+            let cin = gen_usize(rng, 3, 8);
+            let cout = gen_usize(rng, 1, 4);
+            let w = TensorF::from_vec(&[cin, cout], rng.normal_vec(cin * cout)).unwrap();
+            let n = gen_usize(rng, 1, 3);
+            let greedy = weight_ocs(&w, 0, cin + n, n, SplitMode::Naive, 0.0)
+                .map_err(|e| e.to_string())?;
+            // random alternative: split arbitrary channels
+            let mut alt = identity_hooks(&w, 0, cin + n).map_err(|e| e.to_string())?;
+            for _ in 0..n {
+                let src = rng.below(alt.active);
+                let dst = alt.active;
+                alt.w_expanded
+                    .axis_copy_with(0, src, dst, |v| v * 0.5)
+                    .map_err(|e| e.to_string())?;
+                alt.w_expanded
+                    .axis_map_mut(0, src, |v| *v *= 0.5)
+                    .map_err(|e| e.to_string())?;
+                alt.idx.data_mut()[dst] = alt.idx.data()[src];
+                alt.dscale.data_mut()[dst] = alt.dscale.data()[src];
+                alt.active += 1;
+            }
+            ensure(
+                greedy.w_expanded.max_abs() <= alt.w_expanded.max_abs() + 1e-6,
+                format!(
+                    "greedy {} > random {}",
+                    greedy.w_expanded.max_abs(),
+                    alt.w_expanded.max_abs()
+                ),
+            )
+        });
+    }
+}

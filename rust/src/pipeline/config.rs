@@ -1,0 +1,199 @@
+//! Quantization run configuration — one value captures a full paper
+//! experiment cell (bits × clip method × OCS ratio/target/mode).
+
+use anyhow::{bail, Result};
+
+use crate::clip::ClipMethod;
+use crate::ocs::{OcsTarget, SplitMode};
+use crate::util::toml::Config;
+
+#[derive(Debug, Clone)]
+pub struct QuantConfig {
+    /// Weight bits (None = float weights).
+    pub w_bits: Option<u32>,
+    /// Activation bits (None = float activations).
+    pub a_bits: Option<u32>,
+    pub w_clip: ClipMethod,
+    pub a_clip: ClipMethod,
+    /// OCS expansion ratio r (0 = no OCS).
+    pub ocs_ratio: f64,
+    pub ocs_target: OcsTarget,
+    pub split_mode: SplitMode,
+}
+
+impl Default for QuantConfig {
+    fn default() -> Self {
+        QuantConfig::float()
+    }
+}
+
+impl QuantConfig {
+    /// Float baseline — quantization fully bypassed.
+    pub fn float() -> Self {
+        QuantConfig {
+            w_bits: None,
+            a_bits: None,
+            w_clip: ClipMethod::None,
+            a_clip: ClipMethod::None,
+            ocs_ratio: 0.0,
+            ocs_target: OcsTarget::Weights,
+            split_mode: SplitMode::QuantAware,
+        }
+    }
+
+    /// Table 2/6 style: quantize weights, keep activations float.
+    pub fn weights_only(bits: u32, clip: ClipMethod, ocs_ratio: f64) -> Self {
+        QuantConfig {
+            w_bits: Some(bits),
+            w_clip: clip,
+            ocs_ratio,
+            ..Self::float()
+        }
+    }
+
+    /// Table 2's full setting: weights at `bits`, activations at 8.
+    pub fn weights_with_a8(bits: u32, clip: ClipMethod, ocs_ratio: f64) -> Self {
+        QuantConfig {
+            w_bits: Some(bits),
+            a_bits: Some(8),
+            w_clip: clip,
+            a_clip: ClipMethod::None,
+            ocs_ratio,
+            ..Self::float()
+        }
+    }
+
+    /// Table 3 style: weights at 8 (no clip), activations at `bits`.
+    pub fn acts_only(bits: u32, clip: ClipMethod, ocs_ratio: f64) -> Self {
+        QuantConfig {
+            w_bits: Some(8),
+            a_bits: Some(bits),
+            w_clip: ClipMethod::None,
+            a_clip: clip,
+            ocs_ratio,
+            ocs_target: OcsTarget::Activations,
+            ..Self::float()
+        }
+    }
+
+    pub fn with_mode(mut self, mode: SplitMode) -> Self {
+        self.split_mode = mode;
+        self
+    }
+
+    /// Compact label for table rows / logs.
+    pub fn label(&self) -> String {
+        let w = self
+            .w_bits
+            .map(|b| format!("w{b}:{}", self.w_clip.name()))
+            .unwrap_or_else(|| "wf".into());
+        let a = self
+            .a_bits
+            .map(|b| format!("a{b}:{}", self.a_clip.name()))
+            .unwrap_or_else(|| "af".into());
+        let ocs = if self.ocs_ratio > 0.0 {
+            format!(
+                " ocs[{:?} r={} {}]",
+                self.ocs_target,
+                self.ocs_ratio,
+                self.split_mode.name()
+            )
+        } else {
+            String::new()
+        };
+        format!("{w} {a}{ocs}")
+    }
+
+    /// Parse from a TOML config section (experiment files).
+    pub fn from_toml(c: &Config, section: &str) -> Result<QuantConfig> {
+        let key = |k: &str| {
+            if section.is_empty() {
+                k.to_string()
+            } else {
+                format!("{section}.{k}")
+            }
+        };
+        let mut cfg = QuantConfig::float();
+        let wb = c.int_or(&key("w_bits"), 0);
+        if wb > 0 {
+            cfg.w_bits = Some(wb as u32);
+        }
+        let ab = c.int_or(&key("a_bits"), 0);
+        if ab > 0 {
+            cfg.a_bits = Some(ab as u32);
+        }
+        let wclip = c.str_or(&key("w_clip"), "none");
+        cfg.w_clip = match ClipMethod::parse(wclip) {
+            Some(m) => m,
+            None => bail!("bad w_clip '{wclip}'"),
+        };
+        let aclip = c.str_or(&key("a_clip"), "none");
+        cfg.a_clip = match ClipMethod::parse(aclip) {
+            Some(m) => m,
+            None => bail!("bad a_clip '{aclip}'"),
+        };
+        cfg.ocs_ratio = c.float_or(&key("ocs_ratio"), 0.0);
+        cfg.ocs_target = match c.str_or(&key("ocs_target"), "weights") {
+            "weights" => OcsTarget::Weights,
+            "activations" => OcsTarget::Activations,
+            other => bail!("bad ocs_target '{other}'"),
+        };
+        cfg.split_mode = match SplitMode::parse(c.str_or(&key("split_mode"), "qa")) {
+            Some(m) => m,
+            None => bail!("bad split_mode"),
+        };
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders() {
+        let f = QuantConfig::float();
+        assert!(f.w_bits.is_none() && f.a_bits.is_none());
+        let w = QuantConfig::weights_only(5, ClipMethod::Mse, 0.02);
+        assert_eq!(w.w_bits, Some(5));
+        assert!(w.a_bits.is_none());
+        let wa = QuantConfig::weights_with_a8(4, ClipMethod::Kl, 0.0);
+        assert_eq!(wa.a_bits, Some(8));
+        let a = QuantConfig::acts_only(6, ClipMethod::Mse, 0.01);
+        assert_eq!(a.w_bits, Some(8));
+        assert_eq!(a.ocs_target, OcsTarget::Activations);
+    }
+
+    #[test]
+    fn labels_are_informative() {
+        let cfg = QuantConfig::weights_only(5, ClipMethod::Mse, 0.02);
+        let l = cfg.label();
+        assert!(l.contains("w5:mse") && l.contains("r=0.02"), "{l}");
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let c = Config::parse(
+            r#"
+[q]
+w_bits = 5
+a_bits = 8
+w_clip = "kl"
+ocs_ratio = 0.05
+split_mode = "naive"
+"#,
+        )
+        .unwrap();
+        let cfg = QuantConfig::from_toml(&c, "q").unwrap();
+        assert_eq!(cfg.w_bits, Some(5));
+        assert_eq!(cfg.a_bits, Some(8));
+        assert_eq!(cfg.w_clip, ClipMethod::Kl);
+        assert_eq!(cfg.ocs_ratio, 0.05);
+        assert_eq!(cfg.split_mode, SplitMode::Naive);
+        assert!(QuantConfig::from_toml(
+            &Config::parse("q.w_clip = \"zzz\"").unwrap(),
+            "q"
+        )
+        .is_err());
+    }
+}

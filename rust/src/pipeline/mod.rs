@@ -1,0 +1,376 @@
+//! The quantization pipeline: `QuantConfig` → per-layer clip/OCS plan →
+//! the exact runtime inputs the AOT artifact consumes.
+//!
+//! This is where the paper's §5 experimental recipe lives:
+//!
+//! 1. **Weight OCS** (optional, §3.4): split `ceil(r * C)` channels,
+//!    iteratively targeting the largest |w|. Quantization-aware splitting
+//!    needs the final grid step, which itself depends on the post-split
+//!    distribution — resolved with two passes (naive split → threshold →
+//!    QA split on that grid → re-threshold).
+//! 2. **Weight clipping + quantization**: threshold from the configured
+//!    [`ClipMethod`] over the post-OCS histogram, then fake-quantize onto
+//!    the Eq. 1 grid. Weights ship to the artifact already quantized.
+//! 3. **Activation side**: clip threshold from [`calib`] histograms →
+//!    runtime `(adelta, aqmax)` scalars; activation OCS (§5.3) splits the
+//!    calibration-ranked outlier channels via `channel_dup` scales.
+//!
+//! The paper's Table-2 "OCS + Best Clip" recipe is just a `QuantConfig`
+//! with both `ocs_ratio > 0` and a non-`None` `w_clip`.
+
+pub mod config;
+
+pub use config::QuantConfig;
+
+use anyhow::{bail, Context, Result};
+
+use crate::calib::Calibration;
+use crate::model::store::WeightStore;
+use crate::model::{LayerKind, LayerSpec, ModelSpec};
+use crate::ocs::{self, plan, OcsTarget, SplitMode};
+use crate::quant::{fake_quant_tensor, QuantSpec};
+use crate::runtime::{Input, Inputs};
+use crate::stats::{Histogram, DEFAULT_BINS};
+use crate::tensor::{TensorF, TensorI};
+
+/// One quantized layer, fully prepared for execution.
+#[derive(Debug, Clone)]
+pub struct LayerPrep {
+    pub name: String,
+    /// Padded + OCS-split + fake-quantized weight.
+    pub w: TensorF,
+    pub b: TensorF,
+    pub idx: TensorI,
+    pub dscale: TensorF,
+    pub dbias: TensorF,
+    pub adelta: f32,
+    pub aqmax: f32,
+    /// Diagnostics (EXPERIMENTS.md, Table 5, Figure 1).
+    pub w_threshold: f32,
+    pub a_threshold: f32,
+    pub cin: usize,
+    pub active: usize,
+    pub splits: usize,
+}
+
+/// A model with all runtime inputs resolved.
+#[derive(Debug, Clone)]
+pub struct PreparedModel {
+    pub model: String,
+    pub config: QuantConfig,
+    pub layers: Vec<LayerPrep>,
+    /// Unquantized layers: (name, W, Some(b)).
+    pub raw: Vec<(String, TensorF, Option<TensorF>)>,
+}
+
+impl PreparedModel {
+    /// Insert every model input (weights + hooks) into `inputs`; the
+    /// caller adds the data tensor ("x"/"tokens").
+    pub fn insert_inputs(&self, inputs: &mut Inputs) {
+        for (name, w, b) in &self.raw {
+            inputs.insert(format!("{name}.W"), Input::F32(w.clone()));
+            if let Some(b) = b {
+                inputs.insert(format!("{name}.b"), Input::F32(b.clone()));
+            }
+        }
+        for l in &self.layers {
+            inputs.insert(format!("{}.W", l.name), Input::F32(l.w.clone()));
+            inputs.insert(format!("{}.b", l.name), Input::F32(l.b.clone()));
+            inputs.insert(format!("{}.idx", l.name), Input::I32(l.idx.clone()));
+            inputs.insert(format!("{}.dscale", l.name), Input::F32(l.dscale.clone()));
+            inputs.insert(format!("{}.dbias", l.name), Input::F32(l.dbias.clone()));
+            inputs.insert(format!("{}.adelta", l.name), Input::scalar_f32(l.adelta));
+            inputs.insert(format!("{}.aqmax", l.name), Input::scalar_f32(l.aqmax));
+        }
+    }
+
+    /// Relative weight-size overhead over the quantized layers (Table 5:
+    /// "Rel. Weight Size"): extra channel slots / original channels,
+    /// weighted by weight elements per channel.
+    pub fn weight_overhead(&self) -> f64 {
+        let mut base = 0usize;
+        let mut extra = 0usize;
+        for l in &self.layers {
+            let wpc = l.w.len() / l.idx.len().max(1); // elements per channel slot
+            base += wpc * l.cin;
+            extra += wpc * (l.active - l.cin);
+        }
+        1.0 + extra as f64 / base.max(1) as f64
+    }
+
+    pub fn total_splits(&self) -> usize {
+        self.layers.iter().map(|l| l.splits).sum()
+    }
+}
+
+/// Histogram over the *active* channels of an expanded weight (padded
+/// zero slots would pollute the distribution).
+pub fn active_weight_hist(hooks: &ocs::OcsHooks, cin_axis: usize) -> Histogram {
+    let mut hist = Histogram::new(DEFAULT_BINS, hooks.w_expanded.max_abs().max(1e-9));
+    for s in 0..hooks.active {
+        let slice = hooks.w_expanded.axis_slice(cin_axis, s).expect("active slot");
+        hist.observe_all(&slice);
+    }
+    hist
+}
+
+/// Prepare one quantizable layer.
+fn prepare_layer(
+    layer: &LayerSpec,
+    ws: &WeightStore,
+    calib: Option<&Calibration>,
+    cfg: &QuantConfig,
+) -> Result<LayerPrep> {
+    let w = ws.weight(&layer.name)?;
+    let b = ws.bias(&layer.name)?;
+    let axis = layer.w_cin_axis;
+    let cin_pad = layer.cin_pad;
+
+    let w_spec = cfg.w_bits.map(QuantSpec::new);
+    let a_spec = cfg.a_bits.map(QuantSpec::new);
+
+    // ---- OCS ---------------------------------------------------------------
+    let hooks = match (cfg.ocs_target, cfg.ocs_ratio > 0.0) {
+        (OcsTarget::Weights, true) if w_spec.is_some() => {
+            let n = plan::splits_for(layer.cin, cfg.ocs_ratio, cin_pad);
+            // pass 1 (naive) to discover the post-split grid
+            let h0 = ocs::weight_ocs(w, axis, cin_pad, n, SplitMode::Naive, 0.0)?;
+            match cfg.split_mode {
+                SplitMode::Naive => h0,
+                SplitMode::QuantAware => {
+                    let spec = w_spec.unwrap();
+                    let thr0 = cfg.w_clip.threshold(&active_weight_hist(&h0, axis), spec);
+                    let delta0 = spec.delta(thr0);
+                    ocs::weight_ocs(w, axis, cin_pad, n, SplitMode::QuantAware, delta0)?
+                }
+            }
+        }
+        (OcsTarget::Activations, true) if a_spec.is_some() => {
+            let calib = calib.context("activation OCS requires calibration")?;
+            let lc = calib.layer(&layer.name)?;
+            let n = plan::splits_for(layer.cin, cfg.ocs_ratio, cin_pad);
+            let channels = crate::calib::top_k_channels(&lc.outlier_counts, n);
+            // activation grid after splitting: split channels halve, so
+            // the no-clip threshold is the post-split channel max
+            let spec = a_spec.unwrap();
+            let post_max = post_split_max(&lc.channel_max, &channels);
+            let adelta = spec.delta(post_max.max(1e-12));
+            ocs::activation_ocs(w, axis, cin_pad, &channels, cfg.split_mode, adelta)?
+        }
+        _ => ocs::identity_hooks(w, axis, cin_pad)?,
+    };
+
+    // ---- weight quantization -------------------------------------------------
+    let (wq, w_threshold) = match w_spec {
+        Some(spec) => {
+            let hist = active_weight_hist(&hooks, axis);
+            let thr = cfg.w_clip.threshold(&hist, spec);
+            (fake_quant_tensor(&hooks.w_expanded, thr, spec), thr)
+        }
+        None => (hooks.w_expanded.clone(), 0.0),
+    };
+
+    // ---- activation quantization ----------------------------------------------
+    let (adelta, aqmax, a_threshold) = match a_spec {
+        Some(spec) => {
+            let calib = calib.context("activation quantization requires calibration")?;
+            let lc = calib.layer(&layer.name)?;
+            let thr = if cfg.ocs_target == OcsTarget::Activations && cfg.ocs_ratio > 0.0 {
+                // paper §5.3: activation OCS is evaluated without extra
+                // clipping; the grid covers the post-split max
+                let channels: Vec<usize> = hooks.splits.iter().map(|&(s, _)| s).collect();
+                post_split_max(&lc.channel_max, &channels)
+            } else {
+                cfg.a_clip.threshold(&lc.hist, spec)
+            };
+            (spec.delta(thr.max(1e-12)), spec.qmax(), thr)
+        }
+        None => (1.0, -1.0, 0.0),
+    };
+
+    Ok(LayerPrep {
+        name: layer.name.clone(),
+        w: wq,
+        b: b.clone(),
+        idx: hooks.idx.clone(),
+        dscale: hooks.dscale.clone(),
+        dbias: hooks.dbias.clone(),
+        adelta,
+        aqmax,
+        w_threshold,
+        a_threshold,
+        cin: layer.cin,
+        active: hooks.active,
+        splits: hooks.splits.len(),
+    })
+}
+
+/// Max |x| per layer after halving the listed channels.
+fn post_split_max(channel_max: &[f32], split: &[usize]) -> f32 {
+    let mut m = 0.0f32;
+    for (c, &v) in channel_max.iter().enumerate() {
+        let v = if split.contains(&c) { v * 0.5 } else { v };
+        m = m.max(v);
+    }
+    m
+}
+
+/// Prepare a whole model under `cfg`. `calib` is required iff
+/// activations are quantized (or activation-OCS is requested).
+pub fn prepare(
+    spec: &ModelSpec,
+    ws: &WeightStore,
+    calib: Option<&Calibration>,
+    cfg: &QuantConfig,
+) -> Result<PreparedModel> {
+    if cfg.a_bits.is_some() && calib.is_none() {
+        bail!("QuantConfig quantizes activations but no calibration given");
+    }
+    let mut layers = Vec::new();
+    let mut raw = Vec::new();
+    for layer in &spec.layers {
+        if layer.quantized {
+            layers.push(prepare_layer(layer, ws, calib, cfg)?);
+        } else {
+            let w = ws.weight(&layer.name)?.clone();
+            let b = match layer.kind {
+                LayerKind::Embed => None,
+                _ => Some(ws.bias(&layer.name)?.clone()),
+            };
+            raw.push((layer.name.clone(), w, b));
+        }
+    }
+    Ok(PreparedModel {
+        model: spec.name.clone(),
+        config: cfg.clone(),
+        layers,
+        raw,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clip::ClipMethod;
+    use crate::util::rng::Rng;
+
+    fn fake_layer() -> LayerSpec {
+        LayerSpec {
+            name: "f1".into(),
+            kind: LayerKind::Fc,
+            cin: 8,
+            cin_pad: 10,
+            cout: 4,
+            ksize: 0,
+            stride: 1,
+            quantized: true,
+            w_cin_axis: 0,
+            w_shape: vec![8, 4],
+            w_shape_pad: vec![10, 4],
+        }
+    }
+
+    fn fake_ws(seed: u64) -> WeightStore {
+        let mut rng = Rng::new(seed);
+        let mut w = rng.normal_vec(32);
+        w[5 * 4] = 12.0; // outlier in channel 5
+        WeightStore::from_leaves(vec![
+            ("f1.W".into(), TensorF::from_vec(&[8, 4], w).unwrap()),
+            ("f1.b".into(), TensorF::zeros(&[4])),
+        ])
+    }
+
+    #[test]
+    fn float_config_is_passthrough() {
+        let cfg = QuantConfig::float();
+        let prep = prepare_layer(&fake_layer(), &fake_ws(0), None, &cfg).unwrap();
+        assert_eq!(prep.aqmax, -1.0);
+        assert_eq!(prep.splits, 0);
+        assert_eq!(prep.w.shape(), &[10, 4]);
+        // padded rows are zero, original rows intact
+        let ws = fake_ws(0);
+        let orig = ws.weight("f1").unwrap();
+        assert_eq!(&prep.w.data()[..32], orig.data());
+        assert_eq!(&prep.w.data()[32..], &[0.0; 8]);
+    }
+
+    #[test]
+    fn weight_quant_snaps_to_grid() {
+        let cfg = QuantConfig::weights_only(4, ClipMethod::None, 0.0);
+        let prep = prepare_layer(&fake_layer(), &fake_ws(1), None, &cfg).unwrap();
+        let delta = prep.w_threshold / 7.0;
+        for &v in prep.w.data() {
+            let k = v / delta;
+            assert!((k - k.round()).abs() < 1e-4, "{v} not on grid {delta}");
+        }
+    }
+
+    #[test]
+    fn weight_ocs_splits_outlier_and_reduces_threshold() {
+        let no_ocs = QuantConfig::weights_only(4, ClipMethod::None, 0.0);
+        let ocs = QuantConfig::weights_only(4, ClipMethod::None, 0.13); // ceil(.13*8)=2
+        let p0 = prepare_layer(&fake_layer(), &fake_ws(2), None, &no_ocs).unwrap();
+        let p1 = prepare_layer(&fake_layer(), &fake_ws(2), None, &ocs).unwrap();
+        assert_eq!(p1.splits, 2);
+        assert_eq!(p1.active, 10);
+        assert!(
+            p1.w_threshold < p0.w_threshold * 0.6,
+            "threshold {} !< {}",
+            p1.w_threshold,
+            p0.w_threshold
+        );
+        // duplicated slots are live
+        assert_eq!(p1.dscale.data()[8], 1.0);
+        assert_eq!(p1.dscale.data()[9], 1.0);
+    }
+
+    #[test]
+    fn prepared_inputs_cover_signature() {
+        let cfg = QuantConfig::weights_only(5, ClipMethod::Mse, 0.01);
+        let prep = PreparedModel {
+            model: "fake".into(),
+            config: cfg,
+            layers: vec![prepare_layer(
+                &fake_layer(),
+                &fake_ws(3),
+                None,
+                &QuantConfig::weights_only(5, ClipMethod::Mse, 0.01),
+            )
+            .unwrap()],
+            raw: vec![("stem".into(), TensorF::zeros(&[3, 3, 3, 8]), Some(TensorF::zeros(&[8])))],
+        };
+        let mut inputs: Inputs = Default::default();
+        prep.insert_inputs(&mut inputs);
+        for key in [
+            "stem.W", "stem.b", "f1.W", "f1.b", "f1.idx", "f1.dscale", "f1.dbias",
+            "f1.adelta", "f1.aqmax",
+        ] {
+            assert!(inputs.contains_key(key), "missing {key}");
+        }
+    }
+
+    #[test]
+    fn overhead_counts_extra_channels() {
+        let prep_l = prepare_layer(
+            &fake_layer(),
+            &fake_ws(4),
+            None,
+            &QuantConfig::weights_only(4, ClipMethod::None, 0.25), // 2 splits
+        )
+        .unwrap();
+        let pm = PreparedModel {
+            model: "fake".into(),
+            config: QuantConfig::float(),
+            layers: vec![prep_l],
+            raw: vec![],
+        };
+        let ov = pm.weight_overhead();
+        assert!((ov - 1.25).abs() < 1e-6, "overhead {ov}");
+    }
+
+    #[test]
+    fn post_split_max_halves_selected() {
+        assert_eq!(post_split_max(&[1.0, 8.0, 3.0], &[1]), 4.0);
+        assert_eq!(post_split_max(&[1.0, 8.0, 3.0], &[]), 8.0);
+    }
+}

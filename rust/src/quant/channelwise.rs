@@ -1,0 +1,125 @@
+//! Per-output-channel weight quantization — a standard post-training
+//! extension beyond the paper's per-tensor grid (the paper's §7 future
+//! work points toward richer grids; TensorRT and ONNX Runtime both ship
+//! per-channel). Each output channel c gets its own threshold from the
+//! configured clip method, so one channel's outlier no longer widens
+//! every other channel's grid.
+//!
+//! Interaction with OCS: per-channel grids along the *output* axis are
+//! orthogonal to OCS splits along the *input* axis — both compose, and
+//! `rust/benches/ablations.rs` measures how much of OCS's win
+//! per-channel grids already capture (a question the paper leaves open).
+
+use crate::clip::ClipMethod;
+use crate::quant::{fake_quant_slice, QuantSpec};
+use crate::stats::Histogram;
+use crate::tensor::TensorF;
+
+/// Quantize `w` with an independent symmetric grid per slice along
+/// `cout_axis`. Returns the quantized tensor and per-channel thresholds.
+pub fn fake_quant_per_channel(
+    w: &TensorF,
+    cout_axis: usize,
+    spec: QuantSpec,
+    clip: ClipMethod,
+) -> (TensorF, Vec<f32>) {
+    let (outer, alen, inner) = w
+        .axis_geometry(cout_axis)
+        .expect("cout_axis within rank");
+    let mut out = w.clone();
+    let mut thresholds = Vec::with_capacity(alen);
+    let qmax = spec.qmax();
+    for c in 0..alen {
+        // gather the channel, pick its threshold, quantize in place
+        let slice = w.axis_slice(cout_axis, c).expect("channel");
+        let hist = Histogram::from_slice(&slice, 512);
+        let t = clip.threshold(&hist, spec);
+        thresholds.push(t);
+        let delta = spec.delta(t.max(1e-12));
+        let data = out.data_mut();
+        for o in 0..outer {
+            let base = (o * alen + c) * inner;
+            fake_quant_slice(&mut data[base..base + inner], delta, qmax);
+        }
+    }
+    (out, thresholds)
+}
+
+/// Mean per-channel SQNR gain of per-channel over per-tensor grids —
+/// the ablation statistic.
+pub fn per_channel_mse_gain(
+    w: &TensorF,
+    cout_axis: usize,
+    spec: QuantSpec,
+    clip: ClipMethod,
+) -> (f64, f64) {
+    let hist = Histogram::from_slice(w.data(), 2048);
+    let t = clip.threshold(&hist, spec);
+    let per_tensor = crate::quant::fake_quant_tensor(w, t, spec);
+    let (per_channel, _) = fake_quant_per_channel(w, cout_axis, spec, clip);
+    (w.mse(&per_tensor), w.mse(&per_channel))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn weight_with_hot_channel(seed: u64) -> TensorF {
+        let mut rng = Rng::new(seed);
+        let mut data = rng.normal_vec(16 * 8);
+        // output channel 3 is 10x hotter than the rest
+        for o in 0..16 {
+            data[o * 8 + 3] *= 10.0;
+        }
+        TensorF::from_vec(&[16, 8], data).unwrap()
+    }
+
+    #[test]
+    fn per_channel_beats_per_tensor_on_heterogeneous_scales() {
+        let w = weight_with_hot_channel(1);
+        let spec = QuantSpec::new(4);
+        let (mse_t, mse_c) = per_channel_mse_gain(&w, 1, spec, ClipMethod::None);
+        assert!(
+            mse_c < mse_t * 0.5,
+            "per-channel {mse_c} should be far below per-tensor {mse_t}"
+        );
+    }
+
+    #[test]
+    fn per_channel_thresholds_match_channel_maxes() {
+        let w = weight_with_hot_channel(2);
+        let spec = QuantSpec::new(6);
+        let (_, thresholds) = fake_quant_per_channel(&w, 1, spec, ClipMethod::None);
+        let maxes = w.max_abs_per_axis(1).unwrap();
+        for (t, m) in thresholds.iter().zip(&maxes) {
+            assert!((t - m).abs() < 1e-5, "{t} vs {m}");
+        }
+    }
+
+    #[test]
+    fn per_channel_values_on_their_grids() {
+        let w = weight_with_hot_channel(3);
+        let spec = QuantSpec::new(4);
+        let (q, thresholds) = fake_quant_per_channel(&w, 1, spec, ClipMethod::None);
+        for c in 0..8 {
+            let delta = spec.delta(thresholds[c].max(1e-12));
+            for v in q.axis_slice(1, c).unwrap() {
+                let k = v / delta;
+                assert!((k - k.round()).abs() < 1e-3, "ch {c}: {v} not on grid");
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_scales_make_both_equal() {
+        // when all channels share the same scale, per-channel == per-tensor
+        let mut rng = Rng::new(4);
+        let w = TensorF::from_vec(&[8, 4], rng.normal_vec(32)).unwrap();
+        let spec = QuantSpec::new(8);
+        let (mse_t, mse_c) = per_channel_mse_gain(&w, 1, spec, ClipMethod::None);
+        // per-channel can only be equal or better, but not dramatically so
+        assert!(mse_c <= mse_t * 1.001);
+        assert!(mse_c > mse_t * 0.1);
+    }
+}

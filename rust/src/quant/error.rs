@@ -1,0 +1,113 @@
+//! Quantization error metrics, both exact (tensor vs tensor) and
+//! expected-over-histogram (the form the clip optimizers minimize,
+//! paper Eq. 9).
+
+use crate::quant::{fake_quant_val, QuantSpec};
+use crate::stats::Histogram;
+use crate::tensor::TensorF;
+
+/// Exact MSE between a tensor and its quantized image.
+pub fn tensor_quant_mse(t: &TensorF, threshold: f32, spec: QuantSpec) -> f64 {
+    let delta = spec.delta(threshold);
+    let qmax = spec.qmax();
+    if t.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = t
+        .data()
+        .iter()
+        .map(|&v| {
+            let d = (v - fake_quant_val(v, delta, qmax)) as f64;
+            d * d
+        })
+        .sum();
+    s / t.len() as f64
+}
+
+/// Expected MSE over a magnitude histogram for a candidate clip
+/// threshold (paper Eq. 9 with h(x_i) weights). Uses bin centers as
+/// representative values — the same approximation the reference MSE
+/// clipping implementations make.
+pub fn hist_quant_mse(hist: &Histogram, threshold: f32, spec: QuantSpec) -> f64 {
+    if hist.count() == 0 || threshold <= 0.0 {
+        return f64::INFINITY;
+    }
+    let delta = spec.delta(threshold);
+    let qmax = spec.qmax();
+    let mut err = 0.0f64;
+    for (i, &c) in hist.counts().iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        let x = hist.bin_center(i);
+        let d = (x - fake_quant_val(x, delta, qmax)) as f64;
+        err += c as f64 * d * d;
+    }
+    err / hist.count() as f64
+}
+
+/// Signal-to-quantization-noise ratio in dB (10 log10 E[x^2]/MSE).
+pub fn sqnr_db(t: &TensorF, threshold: f32, spec: QuantSpec) -> f64 {
+    let mse = tensor_quant_mse(t, threshold, spec);
+    if mse <= 0.0 {
+        return f64::INFINITY;
+    }
+    let power: f64 = t.data().iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+        / t.len().max(1) as f64;
+    10.0 * (power / mse).log10()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn exact_mse_zero_on_grid() {
+        let spec = QuantSpec::new(4);
+        let t = TensorF::from_vec(&[3], vec![1.0, -3.0, 7.0]).unwrap();
+        assert_eq!(tensor_quant_mse(&t, 7.0, spec), 0.0);
+    }
+
+    #[test]
+    fn clipping_tradeoff_visible_in_hist_mse() {
+        // bell-shaped body + one outlier: some clipping must beat both
+        // no-clipping and extreme clipping (the paper's Figure 1 story).
+        let mut rng = Rng::new(0);
+        let mut data: Vec<f32> = (0..20_000).map(|_| rng.normal()).collect();
+        data.push(30.0);
+        let hist = Histogram::from_slice(&data, 2048);
+        let spec = QuantSpec::new(4);
+        let full = hist_quant_mse(&hist, hist.max_abs(), spec);
+        let clipped = hist_quant_mse(&hist, 4.0, spec);
+        let extreme = hist_quant_mse(&hist, 0.2, spec);
+        assert!(clipped < full, "clipped {clipped} !< full {full}");
+        assert!(clipped < extreme, "clipped {clipped} !< extreme {extreme}");
+    }
+
+    #[test]
+    fn hist_mse_tracks_exact_mse() {
+        let mut rng = Rng::new(7);
+        let data: Vec<f32> = (0..50_000).map(|_| rng.normal()).collect();
+        let t = TensorF::from_vec(&[data.len()], data.clone()).unwrap();
+        let hist = Histogram::from_slice(&data, 2048);
+        let spec = QuantSpec::new(6);
+        for thr in [1.0f32, 2.0, 3.0, 4.0] {
+            let exact = tensor_quant_mse(&t, thr, spec);
+            let approx = hist_quant_mse(&hist, thr, spec);
+            let rel = (exact - approx).abs() / exact.max(1e-12);
+            assert!(rel < 0.15, "thr {thr}: exact {exact} approx {approx}");
+        }
+    }
+
+    #[test]
+    fn sqnr_improves_with_bits() {
+        let mut rng = Rng::new(3);
+        let data: Vec<f32> = (0..10_000).map(|_| rng.normal()).collect();
+        let t = TensorF::from_vec(&[data.len()], data).unwrap();
+        let thr = t.max_abs();
+        let s4 = sqnr_db(&t, thr, QuantSpec::new(4));
+        let s8 = sqnr_db(&t, thr, QuantSpec::new(8));
+        assert!(s8 > s4 + 10.0, "s4 {s4} s8 {s8}");
+    }
+}

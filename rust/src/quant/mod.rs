@@ -1,0 +1,134 @@
+//! Symmetric linear quantization (paper Eq. 1, Distiller-compatible).
+//!
+//! A `k`-bit sign-magnitude grid has `2^k - 1` points: integers
+//! `-qmax ..= qmax` with `qmax = 2^(k-1) - 1`, scaled by
+//! `delta = threshold / qmax`. Rounding is the paper's
+//! `Q(x) = floor(x + 0.5)` ([`crate::util::round_half_up`]), matching the
+//! Pallas kernels bit-for-bit so weights fake-quantized here and
+//! activations fake-quantized inside the artifact live on identical
+//! grids.
+
+pub mod channelwise;
+pub mod error;
+
+use crate::tensor::TensorF;
+use crate::util::round_half_up;
+
+/// Bitwidth descriptor for symmetric sign-magnitude quantization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QuantSpec {
+    pub bits: u32,
+}
+
+impl QuantSpec {
+    pub fn new(bits: u32) -> Self {
+        assert!((2..=16).contains(&bits), "bits {bits} out of range");
+        QuantSpec { bits }
+    }
+
+    /// Largest grid index: `2^(k-1) - 1`.
+    #[inline]
+    pub fn qmax(&self) -> f32 {
+        ((1u32 << (self.bits - 1)) - 1) as f32
+    }
+
+    /// Grid points on each side plus zero: `2^k - 1` total.
+    pub fn levels(&self) -> u32 {
+        (1u32 << self.bits) - 1
+    }
+
+    /// Grid step for a clip threshold.
+    #[inline]
+    pub fn delta(&self, threshold: f32) -> f32 {
+        threshold / self.qmax()
+    }
+}
+
+/// Quantize-dequantize one value on the grid `(delta, qmax)`.
+#[inline]
+pub fn fake_quant_val(x: f32, delta: f32, qmax: f32) -> f32 {
+    if delta <= 0.0 {
+        return 0.0;
+    }
+    round_half_up(x / delta).clamp(-qmax, qmax) * delta
+}
+
+/// Quantize-dequantize a slice in place.
+pub fn fake_quant_slice(xs: &mut [f32], delta: f32, qmax: f32) {
+    for x in xs {
+        *x = fake_quant_val(*x, delta, qmax);
+    }
+}
+
+/// Quantize-dequantize a tensor onto a `spec`-bit grid clipped at
+/// `threshold`. This is the weight-side quantizer — the Rust twin of the
+/// Pallas `fake_quant` kernel (which handles the activation side at run
+/// time).
+pub fn fake_quant_tensor(t: &TensorF, threshold: f32, spec: QuantSpec) -> TensorF {
+    let delta = spec.delta(threshold);
+    let qmax = spec.qmax();
+    t.map(|v| fake_quant_val(v, delta, qmax))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_grid_counts() {
+        assert_eq!(QuantSpec::new(8).qmax(), 127.0);
+        assert_eq!(QuantSpec::new(4).qmax(), 7.0);
+        assert_eq!(QuantSpec::new(2).qmax(), 1.0);
+        assert_eq!(QuantSpec::new(8).levels(), 255);
+        assert_eq!(QuantSpec::new(4).levels(), 15);
+    }
+
+    #[test]
+    fn grid_points_are_fixed_points() {
+        let spec = QuantSpec::new(4);
+        let delta = spec.delta(7.0); // = 1.0
+        for i in -7..=7 {
+            let v = i as f32 * delta;
+            assert_eq!(fake_quant_val(v, delta, spec.qmax()), v);
+        }
+    }
+
+    #[test]
+    fn clipping_saturates() {
+        assert_eq!(fake_quant_val(100.0, 1.0, 7.0), 7.0);
+        assert_eq!(fake_quant_val(-100.0, 1.0, 7.0), -7.0);
+    }
+
+    #[test]
+    fn rounding_is_half_up() {
+        // matches python/compile/kernels/ref.py::round_half_up
+        assert_eq!(fake_quant_val(0.5, 1.0, 7.0), 1.0);
+        assert_eq!(fake_quant_val(2.5, 1.0, 7.0), 3.0);
+        assert_eq!(fake_quant_val(-0.5, 1.0, 7.0), 0.0);
+        assert_eq!(fake_quant_val(-1.5, 1.0, 7.0), -1.0);
+    }
+
+    #[test]
+    fn max_error_is_half_delta_inside_range() {
+        let spec = QuantSpec::new(5);
+        let t = 2.0f32;
+        let delta = spec.delta(t);
+        let mut x = -t;
+        while x <= t {
+            let q = fake_quant_val(x, delta, spec.qmax());
+            assert!(
+                (q - x).abs() <= delta / 2.0 + 1e-6,
+                "x={x} q={q} delta={delta}"
+            );
+            x += 0.01;
+        }
+    }
+
+    #[test]
+    fn zero_threshold_yields_zero()
+    {
+        let t = TensorF::from_vec(&[3], vec![1.0, -2.0, 3.0]).unwrap();
+        let q = fake_quant_tensor(&t, 0.0, QuantSpec::new(8));
+        assert_eq!(q.data(), &[0.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,268 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO **text** is the interchange format — jax ≥ 0.5 serialized protos
+//! use 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The engine caches compiled executables by artifact path, validates
+//! every input against the artifact's recorded positional signature
+//! (name/dtype/shape), and unpacks the returned tuple into named
+//! tensors.
+//!
+//! PJRT handles are not `Send`; the serving layer ([`crate::serve`])
+//! owns an engine on a dedicated executor thread instead of sharing one.
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::{ArtifactSpec, DType, IoSpec};
+use crate::tensor::{TensorF, TensorI};
+
+/// A named input value for an artifact call.
+#[derive(Debug, Clone)]
+pub enum Input {
+    F32(TensorF),
+    I32(TensorI),
+}
+
+impl Input {
+    pub fn scalar_f32(v: f32) -> Input {
+        Input::F32(TensorF::scalar(v))
+    }
+
+    fn shape(&self) -> &[usize] {
+        match self {
+            Input::F32(t) => t.shape(),
+            Input::I32(t) => t.shape(),
+        }
+    }
+
+    fn dtype(&self) -> DType {
+        match self {
+            Input::F32(_) => DType::F32,
+            Input::I32(_) => DType::I32,
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Input::F32(t) => {
+                if t.rank() == 0 {
+                    return Ok(xla::Literal::scalar(t.data()[0]));
+                }
+                xla::Literal::vec1(t.data()).reshape(&dims)?
+            }
+            Input::I32(t) => {
+                if t.rank() == 0 {
+                    return Ok(xla::Literal::scalar(t.data()[0]));
+                }
+                xla::Literal::vec1(t.data()).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+}
+
+/// Name → value map consumed by [`Executable::execute`].
+pub type Inputs = BTreeMap<String, Input>;
+
+/// Named outputs of one execution.
+#[derive(Debug)]
+pub struct Outputs {
+    map: BTreeMap<String, TensorF>,
+}
+
+impl Outputs {
+    pub fn get(&self, name: &str) -> Result<&TensorF> {
+        self.map
+            .get(name)
+            .with_context(|| format!("no output '{name}'"))
+    }
+
+    pub fn take(&mut self, name: &str) -> Result<TensorF> {
+        self.map
+            .remove(name)
+            .with_context(|| format!("no output '{name}'"))
+    }
+
+    pub fn scalar(&self, name: &str) -> Result<f32> {
+        let t = self.get(name)?;
+        if t.len() != 1 {
+            bail!("output '{name}' is not scalar (shape {:?})", t.shape());
+        }
+        Ok(t.data()[0])
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+
+    pub fn into_map(self) -> BTreeMap<String, TensorF> {
+        self.map
+    }
+}
+
+/// One compiled artifact, ready to execute.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with named inputs; validates the full positional
+    /// signature before touching PJRT.
+    pub fn execute(&self, inputs: &Inputs) -> Result<Outputs> {
+        let mut literals = Vec::with_capacity(self.spec.inputs.len());
+        for io in &self.spec.inputs {
+            let input = inputs.get(&io.name).with_context(|| {
+                format!("artifact {}: missing input '{}'", self.spec.key, io.name)
+            })?;
+            validate(io, input)
+                .with_context(|| format!("artifact {}", self.spec.key))?;
+            literals.push(input.to_literal()?);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("execute {}", self.spec.key))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetch result tuple")?;
+        // artifacts are lowered with return_tuple=True
+        let elems = tuple.to_tuple().context("decompose result tuple")?;
+        if elems.len() != self.spec.outputs.len() {
+            bail!(
+                "artifact {}: {} outputs returned, {} in signature",
+                self.spec.key,
+                elems.len(),
+                self.spec.outputs.len()
+            );
+        }
+        let mut map = BTreeMap::new();
+        for (io, lit) in self.spec.outputs.iter().zip(elems) {
+            let data: Vec<f32> = lit
+                .to_vec()
+                .with_context(|| format!("output '{}' to f32", io.name))?;
+            map.insert(io.name.clone(), TensorF::from_vec(&io.shape, data)?);
+        }
+        Ok(Outputs { map })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.spec.batch
+    }
+}
+
+fn validate(io: &IoSpec, input: &Input) -> Result<()> {
+    if input.dtype() != io.dtype {
+        bail!(
+            "input '{}': dtype {:?} != expected {:?}",
+            io.name,
+            input.dtype(),
+            io.dtype
+        );
+    }
+    if input.shape() != io.shape.as_slice() {
+        bail!(
+            "input '{}': shape {:?} != expected {:?}",
+            io.name,
+            input.shape(),
+            io.shape
+        );
+    }
+    Ok(())
+}
+
+/// PJRT client + executable cache. `!Send` by construction — one engine
+/// per thread.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        crate::debugln!(
+            "PJRT client: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Engine {
+            client,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Load + compile an artifact (cached by file path).
+    pub fn load(&self, spec: &ArtifactSpec) -> Result<Rc<Executable>> {
+        let key = spec.file.display().to_string();
+        if let Some(e) = self.cache.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let t0 = std::time::Instant::now();
+        let path = spec.file.to_str().context("artifact path not utf-8")?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parse HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile {}", spec.key))?;
+        crate::debugln!(
+            "compiled {} in {:.2}s",
+            spec.key,
+            t0.elapsed().as_secs_f64()
+        );
+        let executable = Rc::new(Executable {
+            spec: spec.clone(),
+            exe,
+        });
+        self.cache.borrow_mut().insert(key, executable.clone());
+        Ok(executable)
+    }
+
+    pub fn cached_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn input_shape_dtype_validation() {
+        let io = IoSpec {
+            name: "x".into(),
+            dtype: DType::F32,
+            shape: vec![2, 2],
+        };
+        assert!(validate(&io, &Input::F32(TensorF::zeros(&[2, 2]))).is_ok());
+        assert!(validate(&io, &Input::F32(TensorF::zeros(&[2, 3]))).is_err());
+        assert!(validate(&io, &Input::I32(TensorI::zeros(&[2, 2]))).is_err());
+    }
+
+    #[test]
+    fn scalar_literal_roundtrip() {
+        let lit = Input::scalar_f32(3.5).to_literal().unwrap();
+        assert_eq!(lit.element_count(), 1);
+        let v: Vec<f32> = lit.to_vec().unwrap();
+        assert_eq!(v, vec![3.5]);
+    }
+
+    #[test]
+    fn tensor_literal_roundtrip() {
+        let t = TensorF::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let lit = Input::F32(t.clone()).to_literal().unwrap();
+        assert_eq!(lit.element_count(), 6);
+        let back: Vec<f32> = lit.to_vec().unwrap();
+        assert_eq!(back, t.data());
+    }
+}

@@ -1,0 +1,129 @@
+//! Lock-free serving metrics: request/batch counters, end-to-end latency
+//! (exponential buckets), batch-size distribution.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Exponential latency buckets in µs: <64, <128, ..., <2^25 (~33 s).
+const BUCKETS: usize = 20;
+const BASE_US: u64 = 64;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub exec_us_total: AtomicU64,
+    pub latency_us_total: AtomicU64,
+    pub latency_us_max: AtomicU64,
+    pub batch_items_total: AtomicU64,
+    latency_buckets: [AtomicU64; BUCKETS],
+}
+
+impl Metrics {
+    pub fn record(&self, latency: Duration, exec_us: u64, batch: usize) {
+        let us = latency.as_micros() as u64;
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.latency_us_total.fetch_add(us, Ordering::Relaxed);
+        self.latency_us_max.fetch_max(us, Ordering::Relaxed);
+        self.exec_us_total.fetch_add(exec_us, Ordering::Relaxed);
+        self.batch_items_total
+            .fetch_add(batch as u64, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        let mut b = 0usize;
+        let mut edge = BASE_US;
+        while b + 1 < BUCKETS && us >= edge {
+            edge *= 2;
+            b += 1;
+        }
+        self.latency_buckets[b].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn request_count(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        let n = self.request_count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.latency_us_total.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Approximate percentile from the exponential buckets (upper edge).
+    pub fn latency_percentile_us(&self, p: f64) -> u64 {
+        let total: u64 = self
+            .latency_buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (p.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        let mut edge = BASE_US;
+        for b in &self.latency_buckets {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return edge;
+            }
+            edge *= 2;
+        }
+        edge
+    }
+
+    /// requests per batch on average — the batching win.
+    pub fn mean_batch(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        // batch_items_total counts each request's batch size; dividing by
+        // requests gives the request-weighted mean batch
+        let n = self.request_count();
+        self.batch_items_total.load(Ordering::Relaxed) as f64 / n.max(1) as f64
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests {} | batches {} | mean batch {:.1} | latency mean {:.2} ms p50 ~{:.2} ms p99 ~{:.2} ms max {:.2} ms",
+            self.request_count(),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch(),
+            self.mean_latency_us() / 1e3,
+            self.latency_percentile_us(0.5) as f64 / 1e3,
+            self.latency_percentile_us(0.99) as f64 / 1e3,
+            self.latency_us_max.load(Ordering::Relaxed) as f64 / 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_percentiles() {
+        let m = Metrics::default();
+        for i in 1..=100u64 {
+            m.record(Duration::from_micros(i * 100), 50, 4);
+        }
+        assert_eq!(m.request_count(), 100);
+        assert_eq!(m.mean_batch(), 4.0);
+        let p50 = m.latency_percentile_us(0.5);
+        let p99 = m.latency_percentile_us(0.99);
+        assert!(p50 >= 4_000 && p50 <= 8_192, "p50 {p50}");
+        assert!(p99 >= p50);
+        assert!(m.mean_latency_us() > 4_000.0);
+        assert_eq!(m.latency_us_max.load(Ordering::Relaxed), 10_000);
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = Metrics::default();
+        assert_eq!(m.mean_latency_us(), 0.0);
+        assert_eq!(m.latency_percentile_us(0.99), 0);
+        assert_eq!(m.mean_batch(), 0.0);
+    }
+}

@@ -1,0 +1,314 @@
+//! Dynamic-batching inference server over a quantized model.
+//!
+//! The OCS paper's deployment story (§3.5) is that an OCS-quantized
+//! model is a *plain* model — servable on commodity hardware with no
+//! custom ops beyond channel duplication, which lives inside the AOT
+//! artifact. This module is the L3 serving loop proving that: a
+//! vLLM-router-flavoured request queue + dynamic batcher + PJRT executor.
+//!
+//! PJRT handles are not `Send`, so the executor thread *owns* the engine
+//! and prepared model; clients talk over channels. Batches are formed by
+//! draining the queue up to `max_batch` or until `max_wait` expires,
+//! then padded up to the nearest compiled fwd artifact batch size.
+
+pub mod metrics;
+
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::eval::pad_rows;
+use crate::model::store::WeightStore;
+use crate::model::ModelSpec;
+use crate::pipeline::{self, QuantConfig};
+use crate::runtime::{Engine, Input, Inputs};
+use crate::tensor::TensorF;
+
+pub use metrics::Metrics;
+
+/// Server tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub queue_cap: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 1024,
+        }
+    }
+}
+
+struct Job {
+    /// (1, H, W, C) image.
+    x: TensorF,
+    enqueued: Instant,
+    resp: SyncSender<Result<Vec<f32>>>,
+}
+
+/// Client handle (cheaply cloneable).
+#[derive(Clone)]
+pub struct Client {
+    tx: SyncSender<Job>,
+    metrics: Arc<Metrics>,
+}
+
+impl Client {
+    /// Synchronous single-image inference; returns the logits row.
+    pub fn infer(&self, x: TensorF) -> Result<Vec<f32>> {
+        let (tx, rx) = sync_channel(1);
+        let job = Job {
+            x,
+            enqueued: Instant::now(),
+            resp: tx,
+        };
+        self.tx.send(job).context("server is down")?;
+        rx.recv().context("server dropped the request")?
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+}
+
+/// Running server: executor thread + client factory.
+pub struct Server {
+    tx: Option<SyncSender<Job>>,
+    handle: Option<JoinHandle<Result<()>>>,
+    metrics: Arc<Metrics>,
+    stop: Arc<std::sync::atomic::AtomicBool>,
+}
+
+impl Server {
+    /// Build the whole stack inside the executor thread (engine, spec,
+    /// weights, quantization pipeline) and start serving.
+    pub fn start(
+        artifacts_dir: &str,
+        model: &str,
+        quant: QuantConfig,
+        cfg: ServeConfig,
+    ) -> Result<Server> {
+        let (tx, rx) = sync_channel::<Job>(cfg.queue_cap);
+        let metrics = Arc::new(Metrics::default());
+        let m2 = metrics.clone();
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let s2 = stop.clone();
+        let artifacts_dir = artifacts_dir.to_string();
+        let model = model.to_string();
+        // readiness gate: surface setup errors to the caller
+        let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
+        let handle = std::thread::Builder::new()
+            .name("ocs-executor".into())
+            .spawn(move || executor(&artifacts_dir, &model, quant, cfg, rx, m2, s2, ready_tx))
+            .context("spawn executor")?;
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => return Err(e),
+            Err(_) => bail!("executor died during startup"),
+        }
+        Ok(Server {
+            tx: Some(tx),
+            handle: Some(handle),
+            metrics,
+            stop,
+        })
+    }
+
+    pub fn client(&self) -> Client {
+        Client {
+            tx: self.tx.clone().expect("server running"),
+            metrics: self.metrics.clone(),
+        }
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Graceful shutdown: stop accepting, drain, join the executor.
+    /// Safe even while `Client` handles are still alive — the executor
+    /// also watches a stop flag, not just channel disconnection.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.stop.store(true, std::sync::atomic::Ordering::SeqCst);
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            h.join().map_err(|_| anyhow::anyhow!("executor panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, std::sync::atomic::Ordering::SeqCst);
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn executor(
+    artifacts_dir: &str,
+    model: &str,
+    quant: QuantConfig,
+    cfg: ServeConfig,
+    rx: Receiver<Job>,
+    metrics: Arc<Metrics>,
+    stop: Arc<std::sync::atomic::AtomicBool>,
+    ready: SyncSender<Result<()>>,
+) -> Result<()> {
+    // full stack setup on this thread (PJRT handles are !Send)
+    let setup = (|| -> Result<_> {
+        let spec = ModelSpec::load_named(artifacts_dir, model)?;
+        if spec.is_lm() {
+            bail!("serving demo targets the CNN models");
+        }
+        let (ws, _) = WeightStore::load_best(&spec)?;
+        let engine = Engine::cpu()?;
+        let calib = if quant.a_bits.is_some() {
+            let calib_set = crate::train::data::synth_images(64, 929);
+            Some(crate::calib::calibrate(&engine, &spec, &ws, &calib_set.x, 32)?)
+        } else {
+            None
+        };
+        let prep = pipeline::prepare(&spec, &ws, calib.as_ref(), &quant)?;
+        let mut base: Inputs = Default::default();
+        prep.insert_inputs(&mut base);
+        // pre-compile every batch size we may route to
+        for b in spec.fwd_batches() {
+            if b <= cfg.max_batch.max(1) * 2 {
+                engine.load(spec.fwd_for_batch(b)?)?;
+            }
+        }
+        Ok((spec, engine, base))
+    })();
+    let (spec, engine, mut base) = match setup {
+        Ok(v) => {
+            let _ = ready.send(Ok(()));
+            v
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return Ok(());
+        }
+    };
+
+    crate::info!("serving {model} (max_batch {})", cfg.max_batch);
+    loop {
+        // wait for the first job of a batch; wake periodically to honour
+        // the stop flag even while Client handles keep the channel open
+        let first = match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(j) => j,
+            Err(RecvTimeoutError::Timeout) => {
+                if stop.load(std::sync::atomic::Ordering::SeqCst) {
+                    break;
+                }
+                continue;
+            }
+            Err(RecvTimeoutError::Disconnected) => break, // all clients gone
+        };
+        let mut jobs = vec![first];
+        let deadline = Instant::now() + cfg.max_wait;
+        while jobs.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(j) => jobs.push(j),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        let n = jobs.len();
+        let art = spec.fwd_for_batch(n)?;
+        let exe = engine.load(art)?;
+        // assemble (n, H, W, C) then pad to the artifact batch
+        let mut data = Vec::with_capacity(n * jobs[0].x.len());
+        for j in &jobs {
+            data.extend_from_slice(j.x.data());
+        }
+        let mut shape = jobs[0].x.shape().to_vec();
+        shape[0] = n;
+        let xb = TensorF::from_vec(&shape, data)?;
+        let xb = if n == art.batch {
+            xb
+        } else {
+            pad_rows(&xb, art.batch)?
+        };
+        base.insert("x".into(), Input::F32(xb));
+        let t0 = Instant::now();
+        let result = exe.execute(&base);
+        let exec_us = t0.elapsed().as_micros() as u64;
+        match result {
+            Ok(out) => {
+                let logits = out.get("logits")?;
+                let classes = logits.shape()[1];
+                for (row, job) in jobs.into_iter().enumerate() {
+                    let slice =
+                        logits.data()[row * classes..(row + 1) * classes].to_vec();
+                    metrics.record(job.enqueued.elapsed(), exec_us, n);
+                    let _ = job.resp.send(Ok(slice));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for job in jobs {
+                    let _ = job.resp.send(Err(anyhow::anyhow!(msg.clone())));
+                }
+            }
+        }
+    }
+    crate::info!("executor drained, shutting down");
+    Ok(())
+}
+
+/// End-to-end self-test used by `ocs serve`: spin the server, drive it
+/// from several client threads, print the latency/throughput report.
+pub fn self_test(artifacts_dir: &str, model: &str, quant: QuantConfig, requests: usize) -> Result<()> {
+    let server = Server::start(artifacts_dir, model, quant, ServeConfig::default())?;
+    let dataset = crate::train::data::synth_images(256, 411);
+    let row = dataset.x.len() / dataset.len();
+    let t0 = Instant::now();
+    let clients = 4;
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let client = server.client();
+        let per = requests / clients;
+        let xdata = dataset.x.data().to_vec();
+        let shape = [1usize, 16, 16, 3];
+        handles.push(std::thread::spawn(move || -> Result<usize> {
+            let mut ok = 0;
+            for i in 0..per {
+                let idx = (c * per + i) % 256;
+                let x = TensorF::from_vec(&shape, xdata[idx * row..(idx + 1) * row].to_vec())?;
+                let logits = client.infer(x)?;
+                if logits.len() == 10 {
+                    ok += 1;
+                }
+            }
+            Ok(ok)
+        }));
+    }
+    let mut ok = 0;
+    for h in handles {
+        ok += h.join().map_err(|_| anyhow::anyhow!("client panicked"))??;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    println!("{}", server.metrics().report());
+    println!(
+        "self-test: {ok}/{requests} ok in {secs:.2}s = {:.0} req/s",
+        ok as f64 / secs
+    );
+    server.shutdown()
+}

@@ -1,0 +1,261 @@
+//! Streaming statistics: magnitude histograms + running moments.
+//!
+//! Every clip-threshold optimizer ([`crate::clip`]) works on a
+//! [`Histogram`] of absolute values, exactly like the reference
+//! implementations (Distiller's MSE sweep, MXNet's KL calibration work on
+//! value histograms, ACIQ on fitted moments). The histogram is streaming
+//! (activations arrive batch by batch) with power-of-two range doubling
+//! so early small-range estimates survive later outliers.
+
+/// Histogram over |x| with linear bins in [0, max], plus running moments
+/// of the signed values.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    max: f32,
+    n: u64,
+    sum: f64,
+    sumsq: f64,
+    sum_abs: f64,
+    max_abs: f32,
+}
+
+pub const DEFAULT_BINS: usize = 2048;
+
+impl Histogram {
+    /// `range_hint` sizes the initial bucket range; it grows on demand.
+    pub fn new(bins: usize, range_hint: f32) -> Self {
+        assert!(bins >= 2);
+        Histogram {
+            counts: vec![0; bins],
+            max: range_hint.max(1e-12),
+            n: 0,
+            sum: 0.0,
+            sumsq: 0.0,
+            sum_abs: 0.0,
+            max_abs: 0.0,
+        }
+    }
+
+    pub fn from_slice(data: &[f32], bins: usize) -> Self {
+        let mut max = 0.0f32;
+        for &v in data {
+            max = max.max(v.abs());
+        }
+        let mut h = Histogram::new(bins, max);
+        for &v in data {
+            h.observe(v);
+        }
+        h
+    }
+
+    pub fn bins(&self) -> usize {
+        self.counts.len()
+    }
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn range(&self) -> f32 {
+        self.max
+    }
+    pub fn max_abs(&self) -> f32 {
+        self.max_abs
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.sumsq / self.n as f64 - m * m).max(0.0).sqrt()
+    }
+    /// E|x| — the Laplace scale estimator ACIQ uses is E|x - mu|, but the
+    /// benchmark distributions are zero-centred so E|x| suffices; the
+    /// signed mean is available for callers that need to re-centre.
+    pub fn mean_abs(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum_abs / self.n as f64
+        }
+    }
+
+    /// Bin width under the current range.
+    pub fn bin_width(&self) -> f32 {
+        self.max / self.counts.len() as f32
+    }
+
+    /// Midpoint magnitude of bin i.
+    pub fn bin_center(&self, i: usize) -> f32 {
+        (i as f32 + 0.5) * self.bin_width()
+    }
+
+    pub fn observe(&mut self, v: f32) {
+        if !v.is_finite() {
+            return;
+        }
+        let a = v.abs();
+        self.n += 1;
+        self.sum += v as f64;
+        self.sumsq += (v as f64) * (v as f64);
+        self.sum_abs += a as f64;
+        if a > self.max_abs {
+            self.max_abs = a;
+        }
+        while a > self.max {
+            self.double_range();
+        }
+        let bins = self.counts.len();
+        let mut idx = (a / self.max * bins as f32) as usize;
+        if idx >= bins {
+            idx = bins - 1; // a == max edge case
+        }
+        self.counts[idx] += 1;
+    }
+
+    pub fn observe_all(&mut self, data: &[f32]) {
+        for &v in data {
+            self.observe(v);
+        }
+    }
+
+    /// Double the range, folding pairs of bins together (halves
+    /// resolution of the existing mass but keeps it countable).
+    fn double_range(&mut self) {
+        let bins = self.counts.len();
+        let mut folded = vec![0u64; bins];
+        for i in 0..bins {
+            folded[i / 2] += self.counts[i];
+        }
+        self.counts = folded;
+        self.max *= 2.0;
+    }
+
+    /// Merge another histogram (e.g. per-batch partials). The receiver's
+    /// range grows (by doubling) until it covers the other's, then the
+    /// other's mass is re-binned by bin center — ranges that grew from
+    /// different starting points never align exactly, so proportional
+    /// re-binning (error <= the other's bin width) is the correct move.
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.bins(), other.bins(), "merge: bin count mismatch");
+        while self.max < other.max {
+            self.double_range();
+        }
+        let bins = self.counts.len();
+        for (i, &c) in other.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let center = other.bin_center(i);
+            let mut idx = (center / self.max * bins as f32) as usize;
+            if idx >= bins {
+                idx = bins - 1;
+            }
+            self.counts[idx] += c;
+        }
+        self.n += other.n;
+        self.sum += other.sum;
+        self.sumsq += other.sumsq;
+        self.sum_abs += other.sum_abs;
+        self.max_abs = self.max_abs.max(other.max_abs);
+    }
+
+    /// Magnitude below which fraction `p` (0..1) of samples fall
+    /// (linear interpolation inside the bin).
+    pub fn percentile_abs(&self, p: f64) -> f32 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let target = p.clamp(0.0, 1.0) * self.n as f64;
+        let mut acc = 0.0f64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            let next = acc + c as f64;
+            if next >= target && c > 0 {
+                let frac = ((target - acc) / c as f64).clamp(0.0, 1.0);
+                return (i as f64 + frac) as f32 * self.bin_width();
+            }
+            acc = next;
+        }
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moments() {
+        let data = vec![1.0, -1.0, 3.0, -3.0];
+        let h = Histogram::from_slice(&data, 64);
+        assert_eq!(h.count(), 4);
+        assert!((h.mean() - 0.0).abs() < 1e-9);
+        assert!((h.mean_abs() - 2.0).abs() < 1e-9);
+        assert!((h.std() - (5.0f64).sqrt()).abs() < 1e-6);
+        assert_eq!(h.max_abs(), 3.0);
+    }
+
+    #[test]
+    fn binning_and_range() {
+        let h = Histogram::from_slice(&[0.1, 0.5, 0.9, 1.0], 10);
+        assert_eq!(h.range(), 1.0);
+        assert_eq!(h.counts().iter().sum::<u64>(), 4);
+        // 0.9 and the 1.0 range-edge value both land in the last bin
+        assert_eq!(h.counts()[9], 2);
+    }
+
+    #[test]
+    fn streaming_range_doubling_preserves_mass() {
+        let mut h = Histogram::new(16, 1.0);
+        for i in 0..100 {
+            h.observe(i as f32 * 0.01); // within [0,1)
+        }
+        h.observe(7.3); // forces doubling to 8.0
+        assert_eq!(h.count(), 101);
+        assert_eq!(h.counts().iter().sum::<u64>(), 101);
+        assert!(h.range() >= 7.3);
+        assert_eq!(h.max_abs(), 7.3);
+    }
+
+    #[test]
+    fn merge_aligns_ranges() {
+        let a_data: Vec<f32> = (0..50).map(|i| i as f32 * 0.01).collect();
+        let b_data: Vec<f32> = (0..50).map(|i| i as f32 * 0.1).collect();
+        let mut a = Histogram::from_slice(&a_data, 32);
+        let b = Histogram::from_slice(&b_data, 32);
+        let an = a.count();
+        a.merge(&b);
+        assert_eq!(a.count(), an + b.count());
+        assert_eq!(a.counts().iter().sum::<u64>(), 100);
+        assert!(a.range() >= 4.9);
+    }
+
+    #[test]
+    fn percentile() {
+        let data: Vec<f32> = (1..=1000).map(|i| i as f32 / 1000.0).collect();
+        let h = Histogram::from_slice(&data, 2048);
+        let p50 = h.percentile_abs(0.5);
+        let p99 = h.percentile_abs(0.99);
+        assert!((p50 - 0.5).abs() < 0.01, "p50 {p50}");
+        assert!((p99 - 0.99).abs() < 0.01, "p99 {p99}");
+        assert!(h.percentile_abs(1.0) >= 0.999);
+    }
+
+    #[test]
+    fn ignores_non_finite() {
+        let mut h = Histogram::new(8, 1.0);
+        h.observe(f32::NAN);
+        h.observe(f32::INFINITY);
+        h.observe(0.5);
+        assert_eq!(h.count(), 1);
+    }
+}

@@ -1,0 +1,272 @@
+//! `ocs report` — a per-layer quantization diagnosis for one model,
+//! the kind of tool an ML service provider (the paper's §1 deployment
+//! story) would run before committing to a bitwidth:
+//!
+//! * per-layer weight statistics (range, std, kurtosis proxy, outlier
+//!   channel concentration),
+//! * every clip method's threshold + resulting SQNR at the target bits,
+//! * OCS headroom: how much the range shrinks after ceil(r·C) splits,
+//! * per-channel vs per-tensor grid gain,
+//! * a recommendation line per layer.
+//!
+//! Text to stdout, machine-readable JSON next to it in `results/`.
+
+use std::fmt::Write as _;
+
+use anyhow::{Context, Result};
+
+use crate::clip::ClipMethod;
+use crate::model::store::WeightStore;
+use crate::model::ModelSpec;
+use crate::ocs::{plan, weight_ocs, SplitMode};
+use crate::quant::channelwise::per_channel_mse_gain;
+use crate::quant::error::{sqnr_db, tensor_quant_mse};
+use crate::quant::QuantSpec;
+use crate::stats::Histogram;
+use crate::util::json::{arr, num, obj, s, Value};
+
+pub struct LayerReport {
+    pub name: String,
+    pub cin: usize,
+    pub cout: usize,
+    pub params: usize,
+    pub max_abs: f32,
+    pub std: f64,
+    /// max channel |w| / median channel |w| — outlier concentration.
+    pub channel_skew: f64,
+    /// (method, threshold, sqnr_db) at the target bits.
+    pub clips: Vec<(String, f32, f64)>,
+    /// range reduction from OCS at r (fraction of original max).
+    pub ocs_range_left: f64,
+    /// (per-tensor MSE, per-channel MSE) at best clip.
+    pub grid_gain: (f64, f64),
+    pub recommendation: String,
+}
+
+pub fn report(
+    spec: &ModelSpec,
+    ws: &WeightStore,
+    bits: u32,
+    ratio: f64,
+) -> Result<(String, Value)> {
+    let qspec = QuantSpec::new(bits);
+    let mut layers = Vec::new();
+    for layer in spec.quantized_layers() {
+        let w = ws.weight(&layer.name)?;
+        let hist = Histogram::from_slice(w.data(), 2048);
+        let maxes = w.max_abs_per_axis(layer.w_cin_axis)?;
+        let mut sorted = maxes.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sorted[sorted.len() / 2].max(1e-12);
+        let channel_skew = (hist.max_abs() / median) as f64;
+
+        let mut clips = Vec::new();
+        let mut best: (f64, ClipMethod, f32) = (f64::NEG_INFINITY, ClipMethod::None, 0.0);
+        for m in [
+            ClipMethod::None,
+            ClipMethod::Mse,
+            ClipMethod::Aciq,
+            ClipMethod::Kl,
+        ] {
+            let t = m.threshold(&hist, qspec);
+            let sq = sqnr_db(w, t, qspec);
+            if sq > best.0 {
+                best = (sq, m, t);
+            }
+            clips.push((m.name(), t, sq));
+        }
+
+        // OCS headroom at the requested ratio
+        let n = plan::splits_for(layer.cin, ratio, layer.cin_pad);
+        let hooks = weight_ocs(w, layer.w_cin_axis, layer.cin_pad, n, SplitMode::QuantAware, 0.0)?;
+        let ocs_range_left = (hooks.w_expanded.max_abs() / hist.max_abs().max(1e-12)) as f64;
+
+        let cout_axis = if layer.w_cin_axis == 0 { 1 } else { 3 };
+        let grid_gain = per_channel_mse_gain(w, cout_axis, qspec, ClipMethod::None);
+
+        // crude but useful advice
+        let recommendation = if channel_skew > 3.0 && ocs_range_left < 0.7 {
+            format!("OCS r={ratio} (+{} ch) — outliers concentrated, splits pay", n)
+        } else if best.1 != ClipMethod::None {
+            format!("clip {} @ {:.4}", best.1.name(), best.2)
+        } else {
+            "plain linear grid is fine at this bitwidth".to_string()
+        };
+
+        layers.push(LayerReport {
+            name: layer.name.clone(),
+            cin: layer.cin,
+            cout: layer.cout,
+            params: w.len(),
+            max_abs: hist.max_abs(),
+            std: hist.std(),
+            channel_skew,
+            clips,
+            ocs_range_left,
+            grid_gain,
+            recommendation,
+        });
+        // keep the unused exact-MSE helper wired for doc purposes
+        let _ = tensor_quant_mse;
+    }
+
+    // ---- text ----
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "Quantization report — {} at {bits}-bit weights (OCS probe r={ratio})",
+        spec.name
+    );
+    let _ = writeln!(
+        out,
+        "{:<10} {:>7} {:>9} {:>7} {:>6} | {:>22} | {:>6} {:>9} | {}",
+        "layer", "params", "max|w|", "std", "skew", "best clip (thr, SQNR)", "ocs->", "pc-gain", "recommendation"
+    );
+    for l in &layers {
+        let best = l
+            .clips
+            .iter()
+            .max_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
+            .unwrap();
+        let pc_gain = if l.grid_gain.1 > 0.0 {
+            l.grid_gain.0 / l.grid_gain.1
+        } else {
+            f64::INFINITY
+        };
+        let _ = writeln!(
+            out,
+            "{:<10} {:>7} {:>9.4} {:>7.4} {:>6.1} | {:>6} {:>7.4} {:>6.1}dB | {:>5.0}% {:>8.1}x | {}",
+            l.name,
+            l.params,
+            l.max_abs,
+            l.std,
+            l.channel_skew,
+            best.0,
+            best.1,
+            best.2,
+            l.ocs_range_left * 100.0,
+            pc_gain,
+            l.recommendation
+        );
+    }
+
+    // ---- json ----
+    let json = obj(vec![
+        ("model", s(&spec.name)),
+        ("bits", num(bits as f64)),
+        ("ocs_ratio", num(ratio)),
+        (
+            "layers",
+            arr(layers
+                .iter()
+                .map(|l| {
+                    obj(vec![
+                        ("name", s(&l.name)),
+                        ("params", num(l.params as f64)),
+                        ("max_abs", num(l.max_abs as f64)),
+                        ("std", num(l.std)),
+                        ("channel_skew", num(l.channel_skew)),
+                        (
+                            "clips",
+                            arr(l.clips
+                                .iter()
+                                .map(|(m, t, sq)| {
+                                    obj(vec![
+                                        ("method", s(m)),
+                                        ("threshold", num(*t as f64)),
+                                        ("sqnr_db", num(*sq)),
+                                    ])
+                                })
+                                .collect()),
+                        ),
+                        ("ocs_range_left", num(l.ocs_range_left)),
+                        ("per_tensor_mse", num(l.grid_gain.0)),
+                        ("per_channel_mse", num(l.grid_gain.1)),
+                        ("recommendation", s(&l.recommendation)),
+                    ])
+                })
+                .collect()),
+        ),
+    ]);
+    Ok((out, json))
+}
+
+/// CLI entry: print + write results/report_<model>.json.
+pub fn run(artifacts: &str, results: &str, model: &str, bits: u32, ratio: f64) -> Result<()> {
+    let spec = ModelSpec::load_named(artifacts, model)?;
+    let (ws, trained) = WeightStore::load_best(&spec)?;
+    if !trained {
+        crate::warnln!("{model}: reporting on init weights (run `ocs train` first)");
+    }
+    let (text, json) = report(&spec, &ws, bits, ratio)?;
+    println!("{text}");
+    std::fs::create_dir_all(results)?;
+    let path = std::path::Path::new(results).join(format!("report_{model}.json"));
+    std::fs::write(&path, json.to_string()).with_context(|| path.display().to_string())?;
+    println!("[json written to {}]", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{LayerKind, LayerSpec};
+    use crate::tensor::TensorF;
+    use crate::util::rng::Rng;
+
+    fn fake_spec_and_ws() -> (ModelSpec, WeightStore) {
+        let layer = LayerSpec {
+            name: "f1".into(),
+            kind: LayerKind::Fc,
+            cin: 8,
+            cin_pad: 10,
+            cout: 6,
+            ksize: 0,
+            stride: 1,
+            quantized: true,
+            w_cin_axis: 0,
+            w_shape: vec![8, 6],
+            w_shape_pad: vec![10, 6],
+        };
+        let spec = ModelSpec {
+            name: "fake".into(),
+            dir: std::path::PathBuf::from("/tmp"),
+            pad_factor: 1.25,
+            num_classes: 10,
+            img_hw: 16,
+            img_c: 3,
+            vocab: 0,
+            seq_len: 0,
+            momentum: 0.9,
+            layers: vec![layer],
+            artifacts: Default::default(),
+        };
+        let mut rng = Rng::new(5);
+        let mut data = rng.normal_vec(48);
+        data[0] = 9.0; // outlier in channel 0
+        let ws = WeightStore::from_leaves(vec![
+            ("f1.W".into(), TensorF::from_vec(&[8, 6], data).unwrap()),
+            ("f1.b".into(), TensorF::zeros(&[6])),
+        ]);
+        (spec, ws)
+    }
+
+    #[test]
+    fn report_covers_layers_and_emits_json() {
+        let (spec, ws) = fake_spec_and_ws();
+        let (text, json) = report(&spec, &ws, 4, 0.05).unwrap();
+        assert!(text.contains("f1"), "{text}");
+        let layers = json.get("layers").unwrap().as_arr().unwrap();
+        assert_eq!(layers.len(), 1);
+        let l = &layers[0];
+        assert_eq!(l.get("name").unwrap().as_str().unwrap(), "f1");
+        assert_eq!(l.get("clips").unwrap().as_arr().unwrap().len(), 4);
+        // skew must flag the planted outlier
+        assert!(l.get("channel_skew").unwrap().as_f64().unwrap() > 3.0);
+        // OCS probe must show range reduction
+        assert!(l.get("ocs_range_left").unwrap().as_f64().unwrap() < 0.8);
+        // json round-trips
+        let back = Value::parse(&json.to_string()).unwrap();
+        assert_eq!(back.get("model").unwrap().as_str().unwrap(), "fake");
+    }
+}

@@ -1,0 +1,216 @@
+//! `.ocst` tensor-bundle IO — the weight interchange format shared with
+//! `python/compile/ocst.py` (see that file for the byte layout).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{TensorF, TensorI};
+
+const MAGIC: &[u8; 8] = b"OCST0001";
+
+/// A named collection of tensors (f32 or i32), order-preserving.
+#[derive(Debug, Clone, Default)]
+pub struct Bundle {
+    pub order: Vec<String>,
+    pub f32s: BTreeMap<String, TensorF>,
+    pub i32s: BTreeMap<String, TensorI>,
+}
+
+impl Bundle {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push_f32(&mut self, name: &str, t: TensorF) {
+        self.order.push(name.to_string());
+        self.f32s.insert(name.to_string(), t);
+    }
+
+    pub fn push_i32(&mut self, name: &str, t: TensorI) {
+        self.order.push(name.to_string());
+        self.i32s.insert(name.to_string(), t);
+    }
+
+    pub fn f32(&self, name: &str) -> Result<&TensorF> {
+        self.f32s
+            .get(name)
+            .with_context(|| format!("bundle missing f32 tensor '{name}'"))
+    }
+
+    pub fn i32(&self, name: &str) -> Result<&TensorI> {
+        self.i32s
+            .get(name)
+            .with_context(|| format!("bundle missing i32 tensor '{name}'"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    // ---- serialization -----------------------------------------------------
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&(self.order.len() as u32).to_le_bytes());
+        for name in &self.order {
+            let nb = name.as_bytes();
+            buf.extend_from_slice(&(nb.len() as u16).to_le_bytes());
+            buf.extend_from_slice(nb);
+            if let Some(t) = self.f32s.get(name) {
+                buf.push(0u8);
+                buf.push(t.rank() as u8);
+                for &d in t.shape() {
+                    buf.extend_from_slice(&(d as u32).to_le_bytes());
+                }
+                for &v in t.data() {
+                    buf.extend_from_slice(&v.to_le_bytes());
+                }
+            } else if let Some(t) = self.i32s.get(name) {
+                buf.push(1u8);
+                buf.push(t.rank() as u8);
+                for &d in t.shape() {
+                    buf.extend_from_slice(&(d as u32).to_le_bytes());
+                }
+                for &v in t.data() {
+                    buf.extend_from_slice(&v.to_le_bytes());
+                }
+            } else {
+                bail!("bundle entry '{name}' listed in order but not stored");
+            }
+        }
+        let mut f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("create {}", path.as_ref().display()))?;
+        f.write_all(&buf)?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Bundle> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path.as_ref())
+            .with_context(|| format!("open {}", path.as_ref().display()))?
+            .read_to_end(&mut bytes)?;
+        Self::from_bytes(&bytes)
+    }
+
+    pub fn from_bytes(b: &[u8]) -> Result<Bundle> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            if *pos + n > b.len() {
+                bail!("truncated .ocst at byte {pos}");
+            }
+            let s = &b[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        if take(&mut pos, 8)? != MAGIC {
+            bail!("bad .ocst magic");
+        }
+        let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        let mut bundle = Bundle::new();
+        for _ in 0..count {
+            let nlen = u16::from_le_bytes(take(&mut pos, 2)?.try_into().unwrap()) as usize;
+            let name = String::from_utf8(take(&mut pos, nlen)?.to_vec())
+                .context("invalid utf8 tensor name")?;
+            let hdr = take(&mut pos, 2)?;
+            let (dt, ndim) = (hdr[0], hdr[1] as usize);
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize);
+            }
+            let n: usize = shape.iter().product();
+            let raw = take(&mut pos, 4 * n)?;
+            match dt {
+                0 => {
+                    let data: Vec<f32> = raw
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    bundle.push_f32(&name, TensorF::from_vec(&shape, data)?);
+                }
+                1 => {
+                    let data: Vec<i32> = raw
+                        .chunks_exact(4)
+                        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    bundle.push_i32(&name, TensorI::from_vec(&shape, data)?);
+                }
+                d => bail!("unknown dtype tag {d} for tensor '{name}'"),
+            }
+        }
+        if pos != b.len() {
+            bail!("trailing {} bytes after .ocst payload", b.len() - pos);
+        }
+        Ok(bundle)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("ocst_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.ocst");
+
+        let mut b = Bundle::new();
+        b.push_f32(
+            "w",
+            TensorF::from_vec(&[2, 3], vec![1.0, -2.5, 3.0, 0.0, 5.5, -6.0]).unwrap(),
+        );
+        b.push_i32("idx", TensorI::from_vec(&[4], vec![0, 1, 1, 3]).unwrap());
+        b.push_f32("scalar", TensorF::scalar(7.25));
+        b.save(&path).unwrap();
+
+        let r = Bundle::load(&path).unwrap();
+        assert_eq!(r.order, vec!["w", "idx", "scalar"]);
+        assert_eq!(r.f32("w").unwrap(), b.f32("w").unwrap());
+        assert_eq!(r.i32("idx").unwrap(), b.i32("idx").unwrap());
+        assert_eq!(r.f32("scalar").unwrap().data(), &[7.25]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        assert!(Bundle::from_bytes(b"NOTMAGIC").is_err());
+        let mut b = Bundle::new();
+        b.push_f32("x", TensorF::zeros(&[3]));
+        let dir = std::env::temp_dir().join(format!("ocst_corrupt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.ocst");
+        b.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.truncate(bytes.len() - 3);
+        assert!(Bundle::from_bytes(&bytes).is_err());
+        bytes.extend_from_slice(&[0u8; 20]);
+        assert!(Bundle::from_bytes(&bytes).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Byte-level compatibility with the python writer: the layout below
+    /// was produced by `python/compile/ocst.py::write_ocst` for
+    /// [("a", float32 [1.5, -2.0])].
+    #[test]
+    fn python_layout_compat() {
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend_from_slice(b"OCST0001");
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&1u16.to_le_bytes());
+        bytes.push(b'a');
+        bytes.push(0); // f32
+        bytes.push(1); // ndim
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.extend_from_slice(&1.5f32.to_le_bytes());
+        bytes.extend_from_slice(&(-2.0f32).to_le_bytes());
+        let b = Bundle::from_bytes(&bytes).unwrap();
+        assert_eq!(b.f32("a").unwrap().data(), &[1.5, -2.0]);
+    }
+}

@@ -1,0 +1,330 @@
+//! Dense row-major tensors — the coordinator's in-memory array substrate.
+//!
+//! Deliberately minimal: contiguous storage, shape + derived strides,
+//! axis-wise channel views (everything OCS needs is "iterate / mutate the
+//! slice where `index[axis] == i`"), and the `.ocst` binary IO used to
+//! exchange weights with the python compile path ([`io`]).
+
+pub mod io;
+pub mod ops;
+
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum TensorError {
+    #[error("shape {shape:?} implies {expected} elements, data has {got}")]
+    ShapeMismatch {
+        shape: Vec<usize>,
+        expected: usize,
+        got: usize,
+    },
+    #[error("axis {axis} out of range for rank {rank}")]
+    BadAxis { axis: usize, rank: usize },
+    #[error("index {index} out of range for axis of length {len}")]
+    BadIndex { index: usize, len: usize },
+}
+
+/// Contiguous row-major tensor over `f32` or `i32`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor<T> {
+    shape: Vec<usize>,
+    data: Vec<T>,
+}
+
+pub type TensorF = Tensor<f32>;
+pub type TensorI = Tensor<i32>;
+
+impl<T: Copy + Default> Tensor<T> {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![T::default(); n],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<T>) -> Result<Self, TensorError> {
+        let expected: usize = shape.iter().product();
+        if expected != data.len() {
+            return Err(TensorError::ShapeMismatch {
+                shape: shape.to_vec(),
+                expected,
+                got: data.len(),
+            });
+        }
+        Ok(Tensor {
+            shape: shape.to_vec(),
+            data,
+        })
+    }
+
+    pub fn scalar(v: T) -> Self {
+        Tensor {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn full(shape: &[usize], v: T) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![v; n],
+        }
+    }
+
+    #[inline]
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+    #[inline]
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+    #[inline]
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Self, TensorError> {
+        let expected: usize = shape.iter().product();
+        if expected != self.data.len() {
+            return Err(TensorError::ShapeMismatch {
+                shape: shape.to_vec(),
+                expected,
+                got: self.data.len(),
+            });
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// (outer, axis_len, inner) decomposition around `axis`: element
+    /// `(o, i, k)` lives at offset `(o * axis_len + i) * inner + k`.
+    pub fn axis_geometry(&self, axis: usize) -> Result<(usize, usize, usize), TensorError> {
+        if axis >= self.shape.len() {
+            return Err(TensorError::BadAxis {
+                axis,
+                rank: self.shape.len(),
+            });
+        }
+        let outer: usize = self.shape[..axis].iter().product();
+        let alen = self.shape[axis];
+        let inner: usize = self.shape[axis + 1..].iter().product();
+        Ok((outer, alen, inner))
+    }
+
+    /// Copy out the slice `index[axis] == i` (length outer*inner).
+    pub fn axis_slice(&self, axis: usize, i: usize) -> Result<Vec<T>, TensorError> {
+        let (outer, alen, inner) = self.axis_geometry(axis)?;
+        if i >= alen {
+            return Err(TensorError::BadIndex { index: i, len: alen });
+        }
+        let mut out = Vec::with_capacity(outer * inner);
+        for o in 0..outer {
+            let base = (o * alen + i) * inner;
+            out.extend_from_slice(&self.data[base..base + inner]);
+        }
+        Ok(out)
+    }
+
+    /// Apply `f` to every element of the slice `index[axis] == i`.
+    pub fn axis_map_mut<F: FnMut(&mut T)>(
+        &mut self,
+        axis: usize,
+        i: usize,
+        mut f: F,
+    ) -> Result<(), TensorError> {
+        let (outer, alen, inner) = self.axis_geometry(axis)?;
+        if i >= alen {
+            return Err(TensorError::BadIndex { index: i, len: alen });
+        }
+        for o in 0..outer {
+            let base = (o * alen + i) * inner;
+            for v in &mut self.data[base..base + inner] {
+                f(v);
+            }
+        }
+        Ok(())
+    }
+
+    /// Copy the slice at `src` (along `axis`) into the slice at `dst`,
+    /// transforming each element with `f`.
+    pub fn axis_copy_with<F: FnMut(T) -> T>(
+        &mut self,
+        axis: usize,
+        src: usize,
+        dst: usize,
+        mut f: F,
+    ) -> Result<(), TensorError> {
+        let (outer, alen, inner) = self.axis_geometry(axis)?;
+        if src >= alen {
+            return Err(TensorError::BadIndex { index: src, len: alen });
+        }
+        if dst >= alen {
+            return Err(TensorError::BadIndex { index: dst, len: alen });
+        }
+        for o in 0..outer {
+            let sbase = (o * alen + src) * inner;
+            let dbase = (o * alen + dst) * inner;
+            for k in 0..inner {
+                self.data[dbase + k] = f(self.data[sbase + k]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Grow `axis` to `new_len`, zero/default-filling new slices.
+    pub fn pad_axis(&self, axis: usize, new_len: usize) -> Result<Self, TensorError> {
+        let (outer, alen, inner) = self.axis_geometry(axis)?;
+        assert!(new_len >= alen, "pad_axis cannot shrink");
+        let mut shape = self.shape.clone();
+        shape[axis] = new_len;
+        let mut out = Tensor::zeros(&shape);
+        for o in 0..outer {
+            for i in 0..alen {
+                let sbase = (o * alen + i) * inner;
+                let dbase = (o * new_len + i) * inner;
+                out.data[dbase..dbase + inner]
+                    .copy_from_slice(&self.data[sbase..sbase + inner]);
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl TensorF {
+    /// Largest |x| over the whole tensor.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    /// Largest |x| within the slice `index[axis] == i`.
+    pub fn axis_max_abs(&self, axis: usize, i: usize) -> Result<f32, TensorError> {
+        let (outer, alen, inner) = self.axis_geometry(axis)?;
+        if i >= alen {
+            return Err(TensorError::BadIndex { index: i, len: alen });
+        }
+        let mut m = 0.0f32;
+        for o in 0..outer {
+            let base = (o * alen + i) * inner;
+            for &v in &self.data[base..base + inner] {
+                m = m.max(v.abs());
+            }
+        }
+        Ok(m)
+    }
+
+    /// Per-channel max-abs along `axis` (the OCS channel statistic).
+    pub fn max_abs_per_axis(&self, axis: usize) -> Result<Vec<f32>, TensorError> {
+        let (outer, alen, inner) = self.axis_geometry(axis)?;
+        let mut out = vec![0.0f32; alen];
+        for o in 0..outer {
+            for i in 0..alen {
+                let base = (o * alen + i) * inner;
+                for &v in &self.data[base..base + inner] {
+                    if v.abs() > out[i] {
+                        out[i] = v.abs();
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t3() -> TensorF {
+        // shape (2, 3, 2): values 0..12
+        TensorF::from_vec(&[2, 3, 2], (0..12).map(|v| v as f32).collect()).unwrap()
+    }
+
+    #[test]
+    fn from_vec_validates() {
+        assert!(TensorF::from_vec(&[2, 2], vec![1.0; 3]).is_err());
+        assert!(TensorF::from_vec(&[2, 2], vec![1.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn axis_slice_middle_axis() {
+        let t = t3();
+        // axis 1 index 1 -> elements with middle index 1: [2,3, 8,9]
+        assert_eq!(t.axis_slice(1, 1).unwrap(), vec![2.0, 3.0, 8.0, 9.0]);
+        // axis 0 index 0 -> first 6
+        assert_eq!(
+            t.axis_slice(0, 0).unwrap(),
+            vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]
+        );
+        // axis 2 index 1 -> odd offsets
+        assert_eq!(
+            t.axis_slice(2, 1).unwrap(),
+            vec![1.0, 3.0, 5.0, 7.0, 9.0, 11.0]
+        );
+    }
+
+    #[test]
+    fn axis_map_and_copy() {
+        let mut t = t3();
+        t.axis_map_mut(1, 0, |v| *v *= 10.0).unwrap();
+        assert_eq!(t.axis_slice(1, 0).unwrap(), vec![0.0, 10.0, 60.0, 70.0]);
+        t.axis_copy_with(1, 0, 2, |v| v / 2.0).unwrap();
+        assert_eq!(t.axis_slice(1, 2).unwrap(), vec![0.0, 5.0, 30.0, 35.0]);
+    }
+
+    #[test]
+    fn pad_axis_preserves_content() {
+        let t = t3();
+        let p = t.pad_axis(1, 5).unwrap();
+        assert_eq!(p.shape(), &[2, 5, 2]);
+        for i in 0..3 {
+            assert_eq!(p.axis_slice(1, i).unwrap(), t.axis_slice(1, i).unwrap());
+        }
+        assert_eq!(p.axis_slice(1, 3).unwrap(), vec![0.0; 4]);
+        assert_eq!(p.axis_slice(1, 4).unwrap(), vec![0.0; 4]);
+    }
+
+    #[test]
+    fn max_abs_per_axis() {
+        let t = TensorF::from_vec(&[2, 2], vec![1.0, -5.0, 3.0, 2.0]).unwrap();
+        assert_eq!(t.max_abs(), 5.0);
+        assert_eq!(t.max_abs_per_axis(1).unwrap(), vec![3.0, 5.0]);
+        assert_eq!(t.max_abs_per_axis(0).unwrap(), vec![5.0, 3.0]);
+        assert_eq!(t.axis_max_abs(1, 1).unwrap(), 5.0);
+    }
+
+    #[test]
+    fn errors() {
+        let t = t3();
+        assert!(t.axis_slice(5, 0).is_err());
+        assert!(t.axis_slice(1, 3).is_err());
+        assert!(t.clone().reshape(&[5]).is_err());
+        assert!(t.reshape(&[12]).is_ok());
+    }
+
+    #[test]
+    fn scalar_and_full() {
+        let s = TensorF::scalar(3.5);
+        assert_eq!(s.shape(), &[] as &[usize]);
+        assert_eq!(s.data(), &[3.5]);
+        let f = TensorI::full(&[3], 7);
+        assert_eq!(f.data(), &[7, 7, 7]);
+    }
+}

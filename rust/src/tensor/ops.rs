@@ -1,0 +1,88 @@
+//! Elementwise and reduction helpers over `TensorF` used across the
+//! quantization pipeline and evaluators.
+
+use super::TensorF;
+
+impl TensorF {
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> TensorF {
+        TensorF::from_vec(self.shape(), self.data().iter().map(|&v| f(v)).collect())
+            .expect("same shape")
+    }
+
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for v in self.data_mut() {
+            *v = f(*v);
+        }
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.data().iter().map(|&v| v as f64).sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        self.sum() / self.len() as f64
+    }
+
+    /// Mean squared difference against another tensor of the same shape.
+    pub fn mse(&self, other: &TensorF) -> f64 {
+        assert_eq!(self.shape(), other.shape(), "mse: shape mismatch");
+        if self.is_empty() {
+            return 0.0;
+        }
+        let s: f64 = self
+            .data()
+            .iter()
+            .zip(other.data())
+            .map(|(&a, &b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum();
+        s / self.len() as f64
+    }
+
+    /// argmax over the trailing axis; returns one index per leading row.
+    /// Used for top-1 accuracy over (batch, classes) logits.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        let cols = *self.shape().last().expect("argmax_rows needs rank >= 1");
+        self.data()
+            .chunks_exact(cols)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_and_mean() {
+        let t = TensorF::from_vec(&[4], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(t.map(|v| v * 2.0).data(), &[2.0, 4.0, 6.0, 8.0]);
+        assert!((t.mean() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mse() {
+        let a = TensorF::from_vec(&[3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = TensorF::from_vec(&[3], vec![1.0, 0.0, 3.0]).unwrap();
+        assert!((a.mse(&b) - 4.0 / 3.0).abs() < 1e-9);
+        assert_eq!(a.mse(&a), 0.0);
+    }
+
+    #[test]
+    fn argmax_rows() {
+        let t = TensorF::from_vec(&[2, 3], vec![0.1, 0.9, 0.5, 2.0, -1.0, 1.0]).unwrap();
+        assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+}

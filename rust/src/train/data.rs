@@ -1,0 +1,228 @@
+//! Synthetic datasets — the stand-ins for ImageNet and WikiText-2
+//! (neither is available offline; see DESIGN.md §1 for why these
+//! substitutions preserve the quantization behaviour under study).
+//!
+//! * **Images**: a 10-class 16×16×3 task where each class is an oriented
+//!   sinusoidal grating with class-specific frequency plus a
+//!   class-anchored Gaussian blob, under per-sample random phase, shift
+//!   and pixel noise. Orientation/frequency discrimination is exactly
+//!   the kind of feature a small conv net learns, so post-training
+//!   weights develop the bell-shaped, outlier-bearing distributions OCS
+//!   targets.
+//! * **Text**: a Zipf-marginal Markov chain over a 2 000-word vocabulary
+//!   with state-dependent successor sets — enough sequential structure
+//!   that a 2-layer LSTM meaningfully beats the unigram baseline, giving
+//!   perplexity headroom for quantization to damage.
+
+use crate::tensor::{TensorF, TensorI};
+use crate::util::rng::{Rng, ZipfTable};
+
+pub const IMG_HW: usize = 16;
+pub const IMG_C: usize = 3;
+pub const NUM_CLASSES: usize = 10;
+
+/// Images (N, 16, 16, 3) + labels.
+#[derive(Debug, Clone)]
+pub struct ImageDataset {
+    pub x: TensorF,
+    pub y: Vec<i32>,
+}
+
+impl ImageDataset {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Gather a batch by indices.
+    pub fn gather(&self, idx: &[usize]) -> (TensorF, Vec<i32>) {
+        let row = IMG_HW * IMG_HW * IMG_C;
+        let mut data = Vec::with_capacity(idx.len() * row);
+        let mut labels = Vec::with_capacity(idx.len());
+        for &i in idx {
+            data.extend_from_slice(&self.x.data()[i * row..(i + 1) * row]);
+            labels.push(self.y[i]);
+        }
+        (
+            TensorF::from_vec(&[idx.len(), IMG_HW, IMG_HW, IMG_C], data).unwrap(),
+            labels,
+        )
+    }
+}
+
+/// Render one sample of class `k`.
+fn render(rng: &mut Rng, k: usize, out: &mut [f32]) {
+    let theta = std::f32::consts::PI * k as f32 / NUM_CLASSES as f32;
+    let freq = 1.5 + (k % 5) as f32 * 0.7;
+    let phase = rng.range_f32(0.0, std::f32::consts::TAU);
+    let (ct, st) = (theta.cos(), theta.sin());
+    // class-anchored blob centre (jittered)
+    let quad = k % 4;
+    let bx = if quad % 2 == 0 { 4.0 } else { 12.0 } + rng.normal() * 1.0;
+    let by = if quad / 2 == 0 { 4.0 } else { 12.0 } + rng.normal() * 1.0;
+    let blob_ch = (k + 1) % IMG_C;
+    let grat_ch = k % IMG_C;
+    for yy in 0..IMG_HW {
+        for xx in 0..IMG_HW {
+            let u = xx as f32 * ct + yy as f32 * st;
+            let g = (std::f32::consts::TAU * freq * u / IMG_HW as f32 + phase).sin();
+            let d2 = (xx as f32 - bx).powi(2) + (yy as f32 - by).powi(2);
+            let blob = (-d2 / 8.0).exp();
+            for c in 0..IMG_C {
+                // heavy pixel noise keeps float accuracy in the low-90s:
+                // leaves headroom for quantization damage to show at
+                // mid bitwidths (a 100%-accurate task would flatten the
+                // top rows of Tables 1-3)
+                let mut v = 0.55 * rng.normal();
+                if c == grat_ch {
+                    v += 0.6 * g;
+                }
+                if c == blob_ch {
+                    v += 0.9 * blob;
+                }
+                v += 0.15 * g; // weak copy everywhere
+                out[(yy * IMG_HW + xx) * IMG_C + c] = v;
+            }
+        }
+    }
+}
+
+/// Generate `n` samples with balanced classes (deterministic per seed).
+pub fn synth_images(n: usize, seed: u64) -> ImageDataset {
+    let mut rng = Rng::new(seed);
+    let row = IMG_HW * IMG_HW * IMG_C;
+    let mut data = vec![0.0f32; n * row];
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let k = i % NUM_CLASSES;
+        render(&mut rng, k, &mut data[i * row..(i + 1) * row]);
+        labels.push(k as i32);
+    }
+    // shuffle samples so eval subsets stay balanced
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut sdata = vec![0.0f32; n * row];
+    let mut slabels = vec![0i32; n];
+    for (dst, &src) in order.iter().enumerate() {
+        sdata[dst * row..(dst + 1) * row].copy_from_slice(&data[src * row..(src + 1) * row]);
+        slabels[dst] = labels[src];
+    }
+    ImageDataset {
+        x: TensorF::from_vec(&[n, IMG_HW, IMG_HW, IMG_C], sdata).unwrap(),
+        y: slabels,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Text
+// ---------------------------------------------------------------------------
+
+/// Markov/Zipf corpus: each state has `FANOUT` preferred successors
+/// (hash-derived); with prob `P_MARKOV` the next token comes from them,
+/// otherwise from the global Zipf marginal.
+pub const FANOUT: usize = 4;
+pub const P_MARKOV: f64 = 0.65;
+
+pub fn synth_corpus(len: usize, vocab: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Rng::new(seed);
+    let zipf = ZipfTable::new(vocab, 1.05);
+    let mut out = Vec::with_capacity(len);
+    let mut state = zipf.sample(&mut rng);
+    for _ in 0..len {
+        out.push(state as i32);
+        state = if rng.next_f64() < P_MARKOV {
+            // deterministic successor set of the current state
+            let j = rng.below(FANOUT);
+            successor(state, j, vocab)
+        } else {
+            zipf.sample(&mut rng)
+        };
+    }
+    out
+}
+
+/// j-th preferred successor of `state` (fixed hash structure).
+pub fn successor(state: usize, j: usize, vocab: usize) -> usize {
+    let h = (state as u64)
+        .wrapping_mul(6364136223846793005)
+        .wrapping_add(1442695040888963407u64.wrapping_add((j as u64).wrapping_mul(0x9E3779B97F4A7C15)));
+    ((h >> 33) as usize) % vocab
+}
+
+/// Cut a corpus into non-overlapping (seq_len + 1)-token windows,
+/// truncated to a multiple of `batch` windows.
+pub fn token_windows(corpus: &[i32], seq_len: usize, batch: usize) -> TensorI {
+    let w = seq_len + 1;
+    let count = (corpus.len() / w) / batch * batch;
+    let mut data = Vec::with_capacity(count * w);
+    for i in 0..count {
+        data.extend_from_slice(&corpus[i * w..(i + 1) * w]);
+    }
+    TensorI::from_vec(&[count, w], data).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn images_balanced_and_deterministic() {
+        let a = synth_images(100, 7);
+        let b = synth_images(100, 7);
+        assert_eq!(a.x.data(), b.x.data());
+        assert_eq!(a.y, b.y);
+        let mut counts = [0usize; NUM_CLASSES];
+        for &y in &a.y {
+            counts[y as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 10), "{counts:?}");
+        // values are bounded, non-degenerate
+        let m = a.x.max_abs();
+        assert!(m > 0.5 && m < 6.0, "max {m}");
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = synth_images(10, 1);
+        let b = synth_images(10, 2);
+        assert_ne!(a.x.data(), b.x.data());
+    }
+
+    #[test]
+    fn gather_batches() {
+        let d = synth_images(20, 3);
+        let (x, y) = d.gather(&[0, 5, 7]);
+        assert_eq!(x.shape(), &[3, IMG_HW, IMG_HW, IMG_C]);
+        assert_eq!(y.len(), 3);
+        assert_eq!(y[1], d.y[5]);
+    }
+
+    #[test]
+    fn corpus_statistics() {
+        let corpus = synth_corpus(50_000, 200, 11);
+        assert_eq!(corpus.len(), 50_000);
+        assert!(corpus.iter().all(|&t| (0..200).contains(&t)));
+        // Markov structure: successor bigrams should be far more common
+        // than chance (1/200 per successor)
+        let mut hit = 0usize;
+        for w in corpus.windows(2) {
+            let (s, t) = (w[0] as usize, w[1] as usize);
+            if (0..FANOUT).any(|j| successor(s, j, 200) == t) {
+                hit += 1;
+            }
+        }
+        let rate = hit as f64 / (corpus.len() - 1) as f64;
+        assert!(rate > 0.5, "markov hit rate {rate}");
+    }
+
+    #[test]
+    fn windows_shape_and_multiple() {
+        let corpus: Vec<i32> = (0..1000).map(|i| i % 50).collect();
+        let w = token_windows(&corpus, 32, 4);
+        assert_eq!(w.shape()[1], 33);
+        assert_eq!(w.shape()[0] % 4, 0);
+        assert_eq!(&w.data()[..5], &[0, 1, 2, 3, 4]);
+    }
+}

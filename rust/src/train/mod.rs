@@ -1,0 +1,211 @@
+//! Training harness: drives the AOT-compiled `train_step` artifact
+//! (fwd + bwd + SGD-momentum update, lowered once by python) from a pure
+//! Rust loop. This is how the benchmark models acquire realistic
+//! post-training weight distributions without any Python at run time.
+
+pub mod data;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::store::WeightStore;
+use crate::model::ModelSpec;
+use crate::runtime::{Engine, Input, Inputs};
+use crate::tensor::{TensorF, TensorI};
+use crate::train::data::ImageDataset;
+use crate::util::rng::Rng;
+
+/// Loss curve + final stats for EXPERIMENTS.md.
+#[derive(Debug, Clone, Default)]
+pub struct TrainReport {
+    /// (step, loss) samples.
+    pub losses: Vec<(usize, f32)>,
+    pub final_loss: f32,
+    pub steps: usize,
+}
+
+/// Step-decay learning-rate schedule with linear warmup.
+pub fn lr_schedule(step: usize, total: usize, base: f32) -> f32 {
+    let warmup = (total / 20).max(1);
+    if step < warmup {
+        return base * (step + 1) as f32 / warmup as f32;
+    }
+    // cosine decay to 5% of base
+    let t = (step - warmup) as f32 / (total - warmup).max(1) as f32;
+    let cos = 0.5 * (1.0 + (std::f32::consts::PI * t).cos());
+    base * (0.05 + 0.95 * cos)
+}
+
+/// Shared trainer state: named param + momentum leaves in artifact order.
+struct Leaves {
+    names: Vec<String>,
+    params: Vec<TensorF>,
+    moms: Vec<TensorF>,
+}
+
+impl Leaves {
+    fn init(spec: &ModelSpec, ws: &WeightStore) -> Result<Leaves> {
+        let art = spec.train_artifact()?;
+        // param inputs come first, then "m."-prefixed momentum, then data
+        let mut names = Vec::new();
+        for io in &art.inputs {
+            if io.name.starts_with("m.") {
+                break;
+            }
+            if io.name == "x" || io.name == "y" || io.name == "tokens" || io.name == "lr" {
+                break;
+            }
+            names.push(io.name.clone());
+        }
+        if names.is_empty() {
+            bail!("train artifact has no parameter inputs");
+        }
+        let mut params = Vec::new();
+        for n in &names {
+            params.push(
+                ws.bundle
+                    .f32(n)
+                    .with_context(|| format!("init weight '{n}'"))?
+                    .clone(),
+            );
+        }
+        let moms = params.iter().map(|p| TensorF::zeros(p.shape())).collect();
+        Ok(Leaves {
+            names,
+            params,
+            moms,
+        })
+    }
+
+    fn insert(&self, inputs: &mut Inputs) {
+        for (n, p) in self.names.iter().zip(&self.params) {
+            inputs.insert(n.clone(), Input::F32(p.clone()));
+        }
+        for (n, m) in self.names.iter().zip(&self.moms) {
+            inputs.insert(format!("m.{n}"), Input::F32(m.clone()));
+        }
+    }
+
+    fn update_from(&mut self, out: &mut crate::runtime::Outputs) -> Result<()> {
+        for (i, n) in self.names.iter().enumerate() {
+            self.params[i] = out.take(n)?;
+            self.moms[i] = out.take(&format!("m.{n}"))?;
+        }
+        Ok(())
+    }
+
+    fn into_store(self) -> WeightStore {
+        WeightStore::from_leaves(self.names.into_iter().zip(self.params).collect())
+    }
+}
+
+/// Train a CNN benchmark model for `steps` SGD steps.
+pub fn train_cnn(
+    engine: &Engine,
+    spec: &ModelSpec,
+    ws: &WeightStore,
+    dataset: &ImageDataset,
+    steps: usize,
+    base_lr: f32,
+    seed: u64,
+) -> Result<(WeightStore, TrainReport)> {
+    let art = spec.train_artifact()?;
+    let exe = engine.load(art)?;
+    let b = art.batch;
+    let mut leaves = Leaves::init(spec, ws)?;
+    let mut rng = Rng::new(seed);
+    let mut report = TrainReport::default();
+
+    for step in 0..steps {
+        let idx: Vec<usize> = (0..b).map(|_| rng.below(dataset.len())).collect();
+        let (x, y) = dataset.gather(&idx);
+        let mut inputs: Inputs = Default::default();
+        leaves.insert(&mut inputs);
+        inputs.insert("x".into(), Input::F32(x));
+        inputs.insert("y".into(), Input::I32(TensorI::from_vec(&[b], y)?));
+        inputs.insert(
+            "lr".into(),
+            Input::scalar_f32(lr_schedule(step, steps, base_lr)),
+        );
+        let mut out = exe.execute(&inputs)?;
+        let loss = out.scalar("loss")?;
+        leaves.update_from(&mut out)?;
+        if step % 20 == 0 || step + 1 == steps {
+            report.losses.push((step, loss));
+            crate::info!("[train {}] step {step:4} loss {loss:.4}", spec.name);
+        }
+        report.final_loss = loss;
+    }
+    report.steps = steps;
+    Ok((leaves.into_store(), report))
+}
+
+/// Train the LSTM LM for `steps` BPTT steps over `corpus`.
+pub fn train_lm(
+    engine: &Engine,
+    spec: &ModelSpec,
+    ws: &WeightStore,
+    corpus: &[i32],
+    steps: usize,
+    base_lr: f32,
+    seed: u64,
+) -> Result<(WeightStore, TrainReport)> {
+    let art = spec.train_artifact()?;
+    let exe = engine.load(art)?;
+    let b = art.batch;
+    let w = spec.seq_len + 1;
+    if corpus.len() < b * w {
+        bail!("corpus too small: {} < {}", corpus.len(), b * w);
+    }
+    let mut leaves = Leaves::init(spec, ws)?;
+    let mut rng = Rng::new(seed);
+    let mut report = TrainReport::default();
+
+    for step in 0..steps {
+        let mut data = Vec::with_capacity(b * w);
+        for _ in 0..b {
+            let start = rng.below(corpus.len() - w);
+            data.extend_from_slice(&corpus[start..start + w]);
+        }
+        let mut inputs: Inputs = Default::default();
+        leaves.insert(&mut inputs);
+        inputs.insert("tokens".into(), Input::I32(TensorI::from_vec(&[b, w], data)?));
+        inputs.insert(
+            "lr".into(),
+            Input::scalar_f32(lr_schedule(step, steps, base_lr)),
+        );
+        let mut out = exe.execute(&inputs)?;
+        let loss = out.scalar("loss")?;
+        leaves.update_from(&mut out)?;
+        if step % 20 == 0 || step + 1 == steps {
+            report.losses.push((step, loss));
+            crate::info!(
+                "[train {}] step {step:4} loss {loss:.4} (ppl {:.1})",
+                spec.name,
+                loss.exp()
+            );
+        }
+        report.final_loss = loss;
+    }
+    report.steps = steps;
+    Ok((leaves.into_store(), report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let total = 400;
+        let base = 0.1;
+        // warmup ramps
+        assert!(lr_schedule(0, total, base) < lr_schedule(10, total, base));
+        // peak near base after warmup
+        let peak = lr_schedule(total / 20, total, base);
+        assert!((peak - base).abs() / base < 0.06, "peak {peak}");
+        // decays to ~5%
+        let tail = lr_schedule(total - 1, total, base);
+        assert!(tail < 0.08 * base + 1e-4, "tail {tail}");
+        assert!(tail > 0.0);
+    }
+}

@@ -1,0 +1,418 @@
+//! Minimal JSON parser + writer (serde_json is unavailable offline).
+//!
+//! Parses the `meta.json` files emitted by `python/compile/aot.py` and
+//! writes result files under `results/`. Supports the full JSON grammar
+//! except exotic number forms beyond f64.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use thiserror::Error;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(BTreeMap<String, Value>),
+}
+
+#[derive(Debug, Error)]
+pub enum JsonError {
+    #[error("unexpected end of input at byte {0}")]
+    Eof(usize),
+    #[error("unexpected character '{0}' at byte {1}")]
+    Unexpected(char, usize),
+    #[error("invalid number at byte {0}")]
+    BadNumber(usize),
+    #[error("invalid escape '\\{0}' at byte {1}")]
+    BadEscape(char, usize),
+    #[error("trailing garbage at byte {0}")]
+    Trailing(usize),
+    #[error("type error: expected {0}")]
+    Type(&'static str),
+    #[error("missing key '{0}'")]
+    Missing(String),
+}
+
+impl Value {
+    pub fn parse(s: &str) -> Result<Value, JsonError> {
+        let b = s.as_bytes();
+        let mut pos = 0;
+        let v = parse_value(b, &mut pos)?;
+        skip_ws(b, &mut pos);
+        if pos != b.len() {
+            return Err(JsonError::Trailing(pos));
+        }
+        Ok(v)
+    }
+
+    // ---- typed accessors --------------------------------------------------
+    pub fn as_f64(&self) -> Result<f64, JsonError> {
+        match self {
+            Value::Num(n) => Ok(*n),
+            _ => Err(JsonError::Type("number")),
+        }
+    }
+    pub fn as_usize(&self) -> Result<usize, JsonError> {
+        Ok(self.as_f64()? as usize)
+    }
+    pub fn as_str(&self) -> Result<&str, JsonError> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => Err(JsonError::Type("string")),
+        }
+    }
+    pub fn as_bool(&self) -> Result<bool, JsonError> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => Err(JsonError::Type("bool")),
+        }
+    }
+    pub fn as_arr(&self) -> Result<&[Value], JsonError> {
+        match self {
+            Value::Arr(a) => Ok(a),
+            _ => Err(JsonError::Type("array")),
+        }
+    }
+    pub fn as_obj(&self) -> Result<&BTreeMap<String, Value>, JsonError> {
+        match self {
+            Value::Obj(o) => Ok(o),
+            _ => Err(JsonError::Type("object")),
+        }
+    }
+    /// `obj["key"]` with a proper error.
+    pub fn get(&self, key: &str) -> Result<&Value, JsonError> {
+        self.as_obj()?
+            .get(key)
+            .ok_or_else(|| JsonError::Missing(key.to_string()))
+    }
+    pub fn get_opt(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(o) => o.get(key),
+            _ => None,
+        }
+    }
+    /// Array of usize (shape lists).
+    pub fn as_shape(&self) -> Result<Vec<usize>, JsonError> {
+        self.as_arr()?.iter().map(|v| v.as_usize()).collect()
+    }
+
+    // ---- writer -----------------------------------------------------------
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Value::Null => out.push_str("null"),
+            Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Value::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 1e15 {
+                    let _ = write!(out, "{}", *n as i64);
+                } else {
+                    let _ = write!(out, "{}", n);
+                }
+            }
+            Value::Str(s) => write_escaped(s, out),
+            Value::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Value::Obj(o) => {
+                out.push('{');
+                for (i, (k, v)) in o.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Convenience constructors for building result JSON.
+pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
+    Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+pub fn num(n: f64) -> Value {
+    Value::Num(n)
+}
+pub fn s(v: &str) -> Value {
+    Value::Str(v.to_string())
+}
+pub fn arr(v: Vec<Value>) -> Value {
+    Value::Arr(v)
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, lit: &str) -> Result<(), JsonError> {
+    if b.len() < *pos + lit.len() || &b[*pos..*pos + lit.len()] != lit.as_bytes() {
+        return Err(JsonError::Unexpected(
+            b.get(*pos).map(|&c| c as char).unwrap_or('?'),
+            *pos,
+        ));
+    }
+    *pos += lit.len();
+    Ok(())
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Value, JsonError> {
+    skip_ws(b, pos);
+    let c = *b.get(*pos).ok_or(JsonError::Eof(*pos))?;
+    match c {
+        b'n' => {
+            expect(b, pos, "null")?;
+            Ok(Value::Null)
+        }
+        b't' => {
+            expect(b, pos, "true")?;
+            Ok(Value::Bool(true))
+        }
+        b'f' => {
+            expect(b, pos, "false")?;
+            Ok(Value::Bool(false))
+        }
+        b'"' => Ok(Value::Str(parse_string(b, pos)?)),
+        b'[' => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Value::Arr(items));
+            }
+            loop {
+                items.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Value::Arr(items));
+                    }
+                    Some(&c) => return Err(JsonError::Unexpected(c as char, *pos)),
+                    None => return Err(JsonError::Eof(*pos)),
+                }
+            }
+        }
+        b'{' => {
+            *pos += 1;
+            let mut map = BTreeMap::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Value::Obj(map));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = parse_string(b, pos)?;
+                skip_ws(b, pos);
+                if b.get(*pos) != Some(&b':') {
+                    return Err(JsonError::Unexpected(
+                        b.get(*pos).map(|&c| c as char).unwrap_or('?'),
+                        *pos,
+                    ));
+                }
+                *pos += 1;
+                let v = parse_value(b, pos)?;
+                map.insert(key, v);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Value::Obj(map));
+                    }
+                    Some(&c) => return Err(JsonError::Unexpected(c as char, *pos)),
+                    None => return Err(JsonError::Eof(*pos)),
+                }
+            }
+        }
+        b'-' | b'0'..=b'9' => parse_number(b, pos),
+        c => Err(JsonError::Unexpected(c as char, *pos)),
+    }
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, JsonError> {
+    if b.get(*pos) != Some(&b'"') {
+        return Err(JsonError::Unexpected(
+            b.get(*pos).map(|&c| c as char).unwrap_or('?'),
+            *pos,
+        ));
+    }
+    *pos += 1;
+    let mut out = String::new();
+    loop {
+        let c = *b.get(*pos).ok_or(JsonError::Eof(*pos))?;
+        *pos += 1;
+        match c {
+            b'"' => return Ok(out),
+            b'\\' => {
+                let e = *b.get(*pos).ok_or(JsonError::Eof(*pos))?;
+                *pos += 1;
+                match e {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b't' => out.push('\t'),
+                    b'r' => out.push('\r'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'u' => {
+                        if *pos + 4 > b.len() {
+                            return Err(JsonError::Eof(*pos));
+                        }
+                        let hex = std::str::from_utf8(&b[*pos..*pos + 4])
+                            .map_err(|_| JsonError::BadEscape('u', *pos))?;
+                        let cp = u32::from_str_radix(hex, 16)
+                            .map_err(|_| JsonError::BadEscape('u', *pos))?;
+                        *pos += 4;
+                        out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                    }
+                    e => return Err(JsonError::BadEscape(e as char, *pos)),
+                }
+            }
+            c => {
+                // re-assemble UTF-8 multibyte sequences
+                if c < 0x80 {
+                    out.push(c as char);
+                } else {
+                    let start = *pos - 1;
+                    let len = if c >= 0xF0 {
+                        4
+                    } else if c >= 0xE0 {
+                        3
+                    } else {
+                        2
+                    };
+                    if start + len > b.len() {
+                        return Err(JsonError::Eof(*pos));
+                    }
+                    let s = std::str::from_utf8(&b[start..start + len])
+                        .map_err(|_| JsonError::Unexpected(c as char, start))?;
+                    out.push_str(s);
+                    *pos = start + len;
+                }
+            }
+        }
+    }
+}
+
+fn parse_number(b: &[u8], pos: &mut usize) -> Result<Value, JsonError> {
+    let start = *pos;
+    if b.get(*pos) == Some(&b'-') {
+        *pos += 1;
+    }
+    while *pos < b.len()
+        && matches!(b[*pos], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+    {
+        *pos += 1;
+    }
+    let s = std::str::from_utf8(&b[start..*pos]).map_err(|_| JsonError::BadNumber(start))?;
+    s.parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| JsonError::BadNumber(start))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(Value::parse("null").unwrap(), Value::Null);
+        assert_eq!(Value::parse("true").unwrap(), Value::Bool(true));
+        assert_eq!(Value::parse(" -3.5e2 ").unwrap(), Value::Num(-350.0));
+        assert_eq!(Value::parse(r#""hi""#).unwrap(), Value::Str("hi".into()));
+    }
+
+    #[test]
+    fn parse_nested() {
+        let v = Value::parse(r#"{"a": [1, 2, {"b": "x"}], "c": false}"#).unwrap();
+        assert_eq!(v.get("c").unwrap().as_bool().unwrap(), false);
+        let a = v.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(a[1].as_usize().unwrap(), 2);
+        assert_eq!(a[2].get("b").unwrap().as_str().unwrap(), "x");
+    }
+
+    #[test]
+    fn parse_escapes_and_unicode() {
+        let v = Value::parse(r#""a\nb\t\"q\" A é""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "a\nb\t\"q\" A é");
+    }
+
+    #[test]
+    fn roundtrip_writer() {
+        let src = r#"{"arr":[1,2.5,null,true],"s":"x\ny"}"#;
+        let v = Value::parse(src).unwrap();
+        let v2 = Value::parse(&v.to_string()).unwrap();
+        assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        assert!(Value::parse("{").is_err());
+        assert!(Value::parse("[1,]").is_err());
+        assert!(Value::parse("12 34").is_err());
+        assert!(Value::parse(r#"{"a" 1}"#).is_err());
+    }
+
+    #[test]
+    fn shape_accessor() {
+        let v = Value::parse("[3, 3, 30, 32]").unwrap();
+        assert_eq!(v.as_shape().unwrap(), vec![3, 3, 30, 32]);
+    }
+
+    #[test]
+    fn real_meta_json_parses() {
+        // shape of the aot.py output
+        let src = r#"{"model": "m", "layers": [{"name": "c1", "quantized": false,
+            "w_shape": [3,3,3,24], "cin": 3}], "artifacts": {"fwd_b8":
+            {"file": "fwd_b8.hlo.txt", "inputs": [{"name":"x","dtype":"f32","shape":[8,16,16,3]}]}}}"#;
+        let v = Value::parse(src).unwrap();
+        assert_eq!(
+            v.get("artifacts").unwrap().get("fwd_b8").unwrap()
+                .get("file").unwrap().as_str().unwrap(),
+            "fwd_b8.hlo.txt"
+        );
+    }
+}

@@ -1,0 +1,89 @@
+//! Leveled stderr logger with wall-clock timestamps (env_logger stand-in).
+//!
+//! Level comes from `OCS_LOG` (error|warn|info|debug|trace), default info.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+static LEVEL: AtomicU8 = AtomicU8::new(255);
+static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+
+#[derive(Clone, Copy, PartialEq, PartialOrd, Debug)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+fn level() -> u8 {
+    let v = LEVEL.load(Ordering::Relaxed);
+    if v != 255 {
+        return v;
+    }
+    let parsed = match std::env::var("OCS_LOG").as_deref() {
+        Ok("error") => 0,
+        Ok("warn") => 1,
+        Ok("debug") => 3,
+        Ok("trace") => 4,
+        _ => 2,
+    };
+    LEVEL.store(parsed, Ordering::Relaxed);
+    parsed
+}
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= level()
+}
+
+pub fn log(l: Level, args: std::fmt::Arguments) {
+    if !enabled(l) {
+        return;
+    }
+    let start = START.get_or_init(Instant::now);
+    let t = start.elapsed().as_secs_f64();
+    let tag = match l {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    eprintln!("[{t:9.3}s {tag}] {args}");
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! warnln {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! debugln {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! errorln {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Error, format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+    }
+}

@@ -1,0 +1,47 @@
+//! Dependency-free substrates: RNG, JSON, TOML-subset config, logging.
+//!
+//! The offline vendor set ships only `xla`/`anyhow`/`thiserror`, so the
+//! usual ecosystem crates (rand, serde_json, toml, env_logger, clap) are
+//! reimplemented here at the scale this project needs.
+
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod toml;
+
+/// `ceil(a / b)` for positive integers.
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// The paper's rounding function `Q(x) = floor(x + 0.5)` — round half up
+/// (toward +inf). This is the convention the quantization-aware splitting
+/// proof (§3.3 / Eq. 7) relies on and MUST match the Pallas kernels
+/// (`python/compile/kernels/ref.py::round_half_up`).
+#[inline(always)]
+pub fn round_half_up(x: f32) -> f32 {
+    (x + 0.5).floor()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_half_up_convention() {
+        assert_eq!(round_half_up(0.5), 1.0);
+        assert_eq!(round_half_up(1.5), 2.0);
+        assert_eq!(round_half_up(2.5), 3.0); // not banker's rounding
+        assert_eq!(round_half_up(-0.5), 0.0); // halves toward +inf
+        assert_eq!(round_half_up(-1.5), -1.0);
+        assert_eq!(round_half_up(2.4), 2.0);
+        assert_eq!(round_half_up(-2.6), -3.0);
+    }
+
+    #[test]
+    fn ceil_div_basic() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(1, 100), 1);
+    }
+}

@@ -1,0 +1,279 @@
+//! TOML-subset parser for experiment/serving config files.
+//!
+//! Supports the subset this project's configs use: `[section]` headers,
+//! `key = value` with string / integer / float / bool / homogeneous
+//! array values, `#` comments. No nested tables-in-arrays, no dates.
+
+use std::collections::BTreeMap;
+
+use thiserror::Error;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+#[derive(Debug, Error)]
+pub enum TomlError {
+    #[error("line {0}: {1}")]
+    Line(usize, String),
+    #[error("missing key '{0}'")]
+    Missing(String),
+    #[error("key '{0}': expected {1}")]
+    Type(String, &'static str),
+}
+
+/// A parsed config: `section.key -> value`; keys before any section
+/// header live in the "" section.
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    values: BTreeMap<String, TomlValue>,
+}
+
+impl Config {
+    pub fn parse(src: &str) -> Result<Config, TomlError> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (ln, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| TomlError::Line(ln + 1, "unterminated [section]".into()))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| TomlError::Line(ln + 1, "expected key = value".into()))?;
+            let key = line[..eq].trim();
+            let vs = line[eq + 1..].trim();
+            let value = parse_value(vs).map_err(|e| TomlError::Line(ln + 1, e))?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            values.insert(full, value);
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<Config> {
+        let src = std::fs::read_to_string(path)?;
+        Ok(Self::parse(&src)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.values.get(key)
+    }
+    pub fn str(&self, key: &str) -> Result<&str, TomlError> {
+        match self.values.get(key) {
+            Some(TomlValue::Str(s)) => Ok(s),
+            Some(_) => Err(TomlError::Type(key.into(), "string")),
+            None => Err(TomlError::Missing(key.into())),
+        }
+    }
+    pub fn int(&self, key: &str) -> Result<i64, TomlError> {
+        match self.values.get(key) {
+            Some(TomlValue::Int(i)) => Ok(*i),
+            Some(_) => Err(TomlError::Type(key.into(), "integer")),
+            None => Err(TomlError::Missing(key.into())),
+        }
+    }
+    pub fn float(&self, key: &str) -> Result<f64, TomlError> {
+        match self.values.get(key) {
+            Some(TomlValue::Float(f)) => Ok(*f),
+            Some(TomlValue::Int(i)) => Ok(*i as f64),
+            Some(_) => Err(TomlError::Type(key.into(), "float")),
+            None => Err(TomlError::Missing(key.into())),
+        }
+    }
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.values.get(key) {
+            Some(TomlValue::Bool(b)) => *b,
+            _ => default,
+        }
+    }
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.str(key).unwrap_or(default)
+    }
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        self.int(key).unwrap_or(default)
+    }
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        self.float(key).unwrap_or(default)
+    }
+    /// Array of floats (accepts ints).
+    pub fn floats(&self, key: &str) -> Result<Vec<f64>, TomlError> {
+        match self.values.get(key) {
+            Some(TomlValue::Arr(a)) => a
+                .iter()
+                .map(|v| match v {
+                    TomlValue::Float(f) => Ok(*f),
+                    TomlValue::Int(i) => Ok(*i as f64),
+                    _ => Err(TomlError::Type(key.into(), "float array")),
+                })
+                .collect(),
+            Some(_) => Err(TomlError::Type(key.into(), "array")),
+            None => Err(TomlError::Missing(key.into())),
+        }
+    }
+    pub fn strs(&self, key: &str) -> Result<Vec<String>, TomlError> {
+        match self.values.get(key) {
+            Some(TomlValue::Arr(a)) => a
+                .iter()
+                .map(|v| match v {
+                    TomlValue::Str(s) => Ok(s.clone()),
+                    _ => Err(TomlError::Type(key.into(), "string array")),
+                })
+                .collect(),
+            Some(_) => Err(TomlError::Type(key.into(), "array")),
+            None => Err(TomlError::Missing(key.into())),
+        }
+    }
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.values.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    let s = s.trim();
+    if s.starts_with('"') {
+        let inner = s
+            .strip_prefix('"')
+            .and_then(|r| r.strip_suffix('"'))
+            .ok_or_else(|| format!("unterminated string: {s}"))?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if s.starts_with('[') {
+        let inner = s
+            .strip_prefix('[')
+            .and_then(|r| r.strip_suffix(']'))
+            .ok_or_else(|| format!("unterminated array: {s}"))?;
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in split_top_level(inner) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value: {s}"))
+}
+
+/// Split on commas that are not inside quotes (arrays of strings may
+/// contain commas).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+name = "table2"
+bits = [8, 7, 6, 5, 4]
+
+[ocs]
+ratios = [0.01, 0.02, 0.05]
+qa_split = true
+
+[serve]
+max_batch = 32
+timeout_ms = 5.5
+model = "miniresnet"
+"#;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str("name").unwrap(), "table2");
+        assert_eq!(c.floats("bits").unwrap(), vec![8.0, 7.0, 6.0, 5.0, 4.0]);
+        assert_eq!(c.floats("ocs.ratios").unwrap(), vec![0.01, 0.02, 0.05]);
+        assert!(c.bool_or("ocs.qa_split", false));
+        assert_eq!(c.int("serve.max_batch").unwrap(), 32);
+        assert_eq!(c.float("serve.timeout_ms").unwrap(), 5.5);
+        assert_eq!(c.str("serve.model").unwrap(), "miniresnet");
+    }
+
+    #[test]
+    fn defaults() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.int_or("zzz", 7), 7);
+        assert_eq!(c.str_or("zzz", "d"), "d");
+        assert!(!c.bool_or("zzz", false));
+    }
+
+    #[test]
+    fn comments_and_strings_with_hash() {
+        let c = Config::parse("a = \"x # y\" # trailing\nb = 2 # c = 3").unwrap();
+        assert_eq!(c.str("a").unwrap(), "x # y");
+        assert_eq!(c.int("b").unwrap(), 2);
+        assert!(c.get("c").is_none());
+    }
+
+    #[test]
+    fn string_arrays() {
+        let c = Config::parse(r#"models = ["a", "b,c"]"#).unwrap();
+        assert_eq!(c.strs("models").unwrap(), vec!["a", "b,c"]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Config::parse("[oops").is_err());
+        assert!(Config::parse("novalue").is_err());
+        assert!(Config::parse("x = @@").is_err());
+        let c = Config::parse("x = 1").unwrap();
+        assert!(c.str("x").is_err());
+        assert!(c.int("missing").is_err());
+    }
+}

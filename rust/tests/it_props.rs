@@ -1,0 +1,209 @@
+//! Cross-module property tests (pure Rust, no artifacts needed):
+//! invariants that tie quant + clip + ocs + stats together.
+
+use ocs::clip::ClipMethod;
+use ocs::miniprop::{check, check_n, ensure, gen_outlier_vec, gen_usize};
+use ocs::ocs::{weight_ocs, SplitMode};
+use ocs::quant::error::hist_quant_mse;
+use ocs::quant::{fake_quant_tensor, fake_quant_val, QuantSpec};
+use ocs::stats::Histogram;
+use ocs::tensor::TensorF;
+
+#[test]
+fn prop_fake_quant_idempotent() {
+    // Q(Q(x)) == Q(x): quantization is a projection
+    check("fake-quant-idempotent", |rng| {
+        let bits = gen_usize(rng, 2, 8) as u32;
+        let spec = QuantSpec::new(bits);
+        let thr = 0.1 + rng.next_f32() * 10.0;
+        let delta = spec.delta(thr);
+        let x = rng.normal() * 5.0;
+        let q1 = fake_quant_val(x, delta, spec.qmax());
+        let q2 = fake_quant_val(q1, delta, spec.qmax());
+        ensure((q1 - q2).abs() < 1e-6, format!("{q1} vs {q2}"))
+    });
+}
+
+#[test]
+fn prop_fake_quant_bounded_by_threshold() {
+    check("fake-quant-bounded", |rng| {
+        let bits = gen_usize(rng, 2, 8) as u32;
+        let spec = QuantSpec::new(bits);
+        let thr = 0.1 + rng.next_f32() * 4.0;
+        let data = gen_outlier_vec(rng, 1, 200);
+        let t = TensorF::from_vec(&[data.len()], data).unwrap();
+        let q = fake_quant_tensor(&t, thr, spec);
+        ensure(
+            q.max_abs() <= thr + 1e-5,
+            format!("quantized max {} > threshold {thr}", q.max_abs()),
+        )
+    });
+}
+
+#[test]
+fn prop_clip_thresholds_within_range_and_positive() {
+    check_n("clip-threshold-range", 7, 32, |rng| {
+        let data = gen_outlier_vec(rng, 50, 2000);
+        let hist = Histogram::from_slice(&data, 512);
+        if hist.count() == 0 || hist.max_abs() == 0.0 {
+            return Ok(());
+        }
+        let bits = gen_usize(rng, 3, 8) as u32;
+        let spec = QuantSpec::new(bits);
+        for m in [
+            ClipMethod::None,
+            ClipMethod::Mse,
+            ClipMethod::Aciq,
+            ClipMethod::Kl,
+            ClipMethod::Percentile(0.995),
+        ] {
+            let t = m.threshold(&hist, spec);
+            ensure(
+                t > 0.0 && t <= hist.max_abs() * 1.0001,
+                format!("{}: t {t} out of (0, {}]", m.name(), hist.max_abs()),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mse_clip_never_worse_than_no_clip() {
+    // by construction the sweep includes the full range, so the expected
+    // histogram MSE of the MSE-optimal threshold <= MSE at max-abs
+    check_n("mse-clip-optimal", 11, 32, |rng| {
+        let data = gen_outlier_vec(rng, 100, 3000);
+        let hist = Histogram::from_slice(&data, 512);
+        if hist.count() == 0 || hist.max_abs() == 0.0 {
+            return Ok(());
+        }
+        let spec = QuantSpec::new(gen_usize(rng, 3, 8) as u32);
+        let t = ClipMethod::Mse.threshold(&hist, spec);
+        let e_opt = hist_quant_mse(&hist, t, spec);
+        let e_max = hist_quant_mse(&hist, hist.max_abs(), spec);
+        ensure(
+            e_opt <= e_max + 1e-12,
+            format!("opt {e_opt} > max-range {e_max}"),
+        )
+    });
+}
+
+#[test]
+fn prop_ocs_reduces_or_preserves_range() {
+    // every OCS split halves the current max channel: the layer range is
+    // non-increasing in the number of splits
+    check("ocs-range-monotone", |rng| {
+        let cin = gen_usize(rng, 2, 12);
+        let cout = gen_usize(rng, 1, 6);
+        let data = gen_outlier_vec(rng, cin * cout, cin * cout);
+        let w = TensorF::from_vec(&[cin, cout], data).unwrap();
+        let mut last = w.max_abs();
+        for n in 1..=4usize {
+            let h = weight_ocs(&w, 0, cin + 4, n, SplitMode::Naive, 0.0)
+                .map_err(|e| e.to_string())?;
+            let m = h.w_expanded.max_abs();
+            ensure(
+                m <= last + 1e-6,
+                format!("range grew at n={n}: {m} > {last}"),
+            )?;
+            last = m;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ocs_then_quant_beats_plain_quant_on_outlier_tensors() {
+    // the paper's core claim at tensor level: with a dominant outlier,
+    // OCS + linear quant (folded back) usually has lower error than
+    // plain linear quant at low bits. Individual draws can go either way
+    // (the split doubles the per-half rounding noise), so the property
+    // is statistical: OCS must win the large majority and on average.
+    let mut rng = ocs::util::rng::Rng::new(13);
+    let (mut wins, mut total) = (0usize, 0usize);
+    let (mut sum_plain, mut sum_ocs) = (0.0f64, 0.0f64);
+    for _ in 0..60 {
+        let cin = gen_usize(&mut rng, 4, 12);
+        let cout = gen_usize(&mut rng, 2, 8);
+        let mut data = vec![0.0f32; cin * cout];
+        for v in data.iter_mut() {
+            *v = rng.normal() * 0.5;
+        }
+        data[0] = 6.0 + rng.next_f32() * 4.0; // dominant outlier
+        let w = TensorF::from_vec(&[cin, cout], data).unwrap();
+        let spec = QuantSpec::new(4);
+
+        let q_plain = fake_quant_tensor(&w, w.max_abs(), spec);
+        let e_plain = w.mse(&q_plain);
+
+        let mut h = weight_ocs(&w, 0, cin + 2, 2, SplitMode::QuantAware, 0.0).unwrap();
+        let t = h.w_expanded.max_abs();
+        h.w_expanded = fake_quant_tensor(&h.w_expanded, t, spec);
+        let e_ocs = w.mse(&h.effective_weight(0));
+
+        total += 1;
+        if e_ocs <= e_plain {
+            wins += 1;
+        }
+        sum_plain += e_plain;
+        sum_ocs += e_ocs;
+    }
+    assert!(
+        wins * 100 >= total * 80,
+        "OCS won only {wins}/{total} outlier cases"
+    );
+    assert!(
+        sum_ocs < sum_plain * 0.7,
+        "mean OCS error {sum_ocs} not clearly below plain {sum_plain}"
+    );
+}
+
+#[test]
+fn prop_histogram_merge_equals_bulk_build() {
+    // streaming per-batch hist + merge must agree with a one-shot build
+    // on every statistic the clip methods consume
+    check_n("hist-merge-consistency", 17, 32, |rng| {
+        let a = gen_outlier_vec(rng, 10, 500);
+        let b = gen_outlier_vec(rng, 10, 500);
+        let mut ha = Histogram::from_slice(&a, 256);
+        let hb = Histogram::from_slice(&b, 256);
+        ha.merge(&hb);
+        let mut all = a.clone();
+        all.extend_from_slice(&b);
+        let bulk = Histogram::from_slice(&all, 256);
+        ensure(ha.count() == bulk.count(), "count")?;
+        ensure(
+            (ha.mean() - bulk.mean()).abs() < 1e-6,
+            format!("mean {} vs {}", ha.mean(), bulk.mean()),
+        )?;
+        ensure((ha.max_abs() - bulk.max_abs()).abs() < 1e-6, "max_abs")?;
+        // percentiles agree within re-binning error (each estimate is off
+        // by at most its own bin width; merged re-binning adds one more)
+        let tol = ((ha.bin_width() + bulk.bin_width()) * 2.0) as f64;
+        let (pa, pb) = (ha.percentile_abs(0.9), bulk.percentile_abs(0.9));
+        ensure(
+            ((pa - pb) as f64).abs() <= tol,
+            format!("p90: {pa} vs {pb} (tol {tol})"),
+        )
+    });
+}
+
+#[test]
+fn prop_quant_error_decreases_with_bits() {
+    check_n("bits-monotone", 19, 32, |rng| {
+        let data = gen_outlier_vec(rng, 100, 2000);
+        let t = TensorF::from_vec(&[data.len()], data).unwrap();
+        let thr = t.max_abs().max(1e-6);
+        let mut last = f64::INFINITY;
+        for bits in [3u32, 5, 7, 9] {
+            let q = fake_quant_tensor(&t, thr, QuantSpec::new(bits));
+            let e = t.mse(&q);
+            ensure(
+                e <= last + 1e-12,
+                format!("error grew at {bits} bits: {e} > {last}"),
+            )?;
+            last = e;
+        }
+        Ok(())
+    });
+}

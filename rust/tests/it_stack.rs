@@ -1,0 +1,275 @@
+//! Integration tests over the real AOT artifacts: the full
+//! L3 (Rust) -> L2 (JAX graph) -> L1 (Pallas kernels) stack through PJRT.
+//!
+//! These require `make artifacts`; each test skips (with a notice) when
+//! the artifacts are absent so `cargo test` stays green pre-build.
+
+use ocs::calib;
+use ocs::clip::ClipMethod;
+use ocs::eval;
+use ocs::model::store::WeightStore;
+use ocs::model::ModelSpec;
+use ocs::pipeline::{self, QuantConfig};
+use ocs::runtime::{Engine, Input, Inputs};
+use ocs::train::{self, data};
+
+fn have_artifacts() -> bool {
+    let ok = std::path::Path::new("artifacts/manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+    }
+    ok
+}
+
+/// Float probe logits must equal fwd-artifact logits under identity
+/// hooks — the paper's §3.2 functional-equivalence invariant threaded
+/// through the *real* compiled graph (padding, gather, bypassed quant).
+#[test]
+fn fwd_with_identity_hooks_matches_float_probe() {
+    if !have_artifacts() {
+        return;
+    }
+    let spec = ModelSpec::load_named("artifacts", "minivgg").unwrap();
+    let ws = WeightStore::load_init(&spec).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let imgs = data::synth_images(32, 77);
+
+    // probe = float reference
+    let probe = spec.probe_for_batch(32).unwrap();
+    let pexe = engine.load(probe).unwrap();
+    let mut pin: Inputs = Default::default();
+    for io in &probe.inputs {
+        if io.name == "x" {
+            pin.insert("x".into(), Input::F32(imgs.x.clone()));
+        } else {
+            pin.insert(io.name.clone(), Input::F32(ws.bundle.f32(&io.name).unwrap().clone()));
+        }
+    }
+    let pout = pexe.execute(&pin).unwrap();
+    let ref_logits = pout.get("logits").unwrap();
+
+    // fwd with float QuantConfig (identity hooks, quant bypassed)
+    let prep = pipeline::prepare(&spec, &ws, None, &QuantConfig::float()).unwrap();
+    let fwd = spec.fwd_for_batch(32).unwrap();
+    let fexe = engine.load(fwd).unwrap();
+    let mut fin: Inputs = Default::default();
+    prep.insert_inputs(&mut fin);
+    fin.insert("x".into(), Input::F32(imgs.x.clone()));
+    let fout = fexe.execute(&fin).unwrap();
+    let got = fout.get("logits").unwrap();
+
+    assert_eq!(got.shape(), ref_logits.shape());
+    for (a, b) in got.data().iter().zip(ref_logits.data()) {
+        assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+    }
+}
+
+/// Weight OCS at high precision must preserve the function (Eq. 3):
+/// 16-bit grids make quantization error negligible, so OCS'd logits
+/// should track float logits closely and agree on argmax.
+#[test]
+fn weight_ocs_preserves_function_through_real_graph() {
+    if !have_artifacts() {
+        return;
+    }
+    let spec = ModelSpec::load_named("artifacts", "minivgg").unwrap();
+    let ws = WeightStore::load_init(&spec).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let imgs = data::synth_images(32, 78);
+
+    let float_prep = pipeline::prepare(&spec, &ws, None, &QuantConfig::float()).unwrap();
+    let ocs_prep = pipeline::prepare(
+        &spec,
+        &ws,
+        None,
+        &QuantConfig::weights_only(16, ClipMethod::None, 0.1),
+    )
+    .unwrap();
+    assert!(ocs_prep.total_splits() > 0, "OCS must have split channels");
+
+    let fwd = spec.fwd_for_batch(32).unwrap();
+    let exe = engine.load(fwd).unwrap();
+    let run = |prep: &pipeline::PreparedModel| {
+        let mut inputs: Inputs = Default::default();
+        prep.insert_inputs(&mut inputs);
+        inputs.insert("x".into(), Input::F32(imgs.x.clone()));
+        exe.execute(&inputs).unwrap().take("logits").unwrap()
+    };
+    let a = run(&float_prep);
+    let b = run(&ocs_prep);
+    let scale = a.max_abs().max(1.0);
+    for (x, y) in a.data().iter().zip(b.data()) {
+        assert!(
+            (x - y).abs() / scale < 2e-3,
+            "logit drift too large: {x} vs {y}"
+        );
+    }
+    assert_eq!(a.argmax_rows(), b.argmax_rows());
+}
+
+/// Calibration produces per-layer stats for every quantized layer and
+/// sane percentile ordering.
+#[test]
+fn calibration_covers_all_quantized_layers() {
+    if !have_artifacts() {
+        return;
+    }
+    let spec = ModelSpec::load_named("artifacts", "miniincept").unwrap();
+    let ws = WeightStore::load_init(&spec).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let imgs = data::synth_images(64, 79);
+    let calib = calib::calibrate(&engine, &spec, &ws, &imgs.x, 32).unwrap();
+    for l in spec.quantized_layers() {
+        let lc = calib.layer(&l.name).unwrap();
+        assert_eq!(lc.channel_max.len(), l.cin, "layer {}", l.name);
+        assert_eq!(lc.outlier_counts.len(), l.cin);
+        assert!(lc.hist.count() > 0);
+        let p50 = lc.hist.percentile_abs(0.5);
+        let p99 = lc.hist.percentile_abs(0.99);
+        assert!(p99 >= p50);
+    }
+}
+
+/// Activation quantization end-to-end: 8-bit acts should barely move
+/// logits; 3-bit acts should move them a lot.
+#[test]
+fn activation_quant_bits_ordering() {
+    if !have_artifacts() {
+        return;
+    }
+    let spec = ModelSpec::load_named("artifacts", "minivgg").unwrap();
+    let ws = WeightStore::load_init(&spec).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let imgs = data::synth_images(64, 80);
+    let calib = calib::calibrate(&engine, &spec, &ws, &imgs.x, 32).unwrap();
+    let test = data::synth_images(32, 81);
+
+    let fwd = spec.fwd_for_batch(32).unwrap();
+    let exe = engine.load(fwd).unwrap();
+    let run = |cfg: &QuantConfig| {
+        let prep = pipeline::prepare(&spec, &ws, Some(&calib), cfg).unwrap();
+        let mut inputs: Inputs = Default::default();
+        prep.insert_inputs(&mut inputs);
+        inputs.insert("x".into(), Input::F32(test.x.clone()));
+        exe.execute(&inputs).unwrap().take("logits").unwrap()
+    };
+    let f = run(&QuantConfig::float());
+    let a8 = run(&QuantConfig::acts_only(8, ClipMethod::None, 0.0));
+    let a3 = run(&QuantConfig::acts_only(3, ClipMethod::None, 0.0));
+    let drift = |x: &ocs::tensor::TensorF| -> f64 { f.mse(x) };
+    assert!(drift(&a8) < drift(&a3), "8-bit must distort less than 3-bit");
+    assert!(drift(&a8) > 0.0, "8-bit quantization is not a no-op");
+}
+
+/// A few SGD steps through the train artifact must reduce the loss.
+#[test]
+fn train_step_artifact_learns() {
+    if !have_artifacts() {
+        return;
+    }
+    let spec = ModelSpec::load_named("artifacts", "minivgg").unwrap();
+    let ws = WeightStore::load_init(&spec).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let dataset = data::synth_images(512, 82);
+    let (_, report) = train::train_cnn(&engine, &spec, &ws, &dataset, 30, 0.05, 5).unwrap();
+    let first = report.losses.first().unwrap().1;
+    assert!(
+        report.final_loss < first,
+        "no learning: {first} -> {}",
+        report.final_loss
+    );
+}
+
+/// LSTM perplexity pipeline: float ppl must be far below the uniform
+/// baseline (vocab) and 4-bit unclipped quantization must hurt.
+#[test]
+fn lstm_perplexity_pipeline() {
+    if !have_artifacts() {
+        return;
+    }
+    let spec = ModelSpec::load_named("artifacts", "lstmlm").unwrap();
+    let (ws, _) = WeightStore::load_best(&spec).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let corpus = data::synth_corpus(6_000, spec.vocab, 93);
+    let windows = data::token_windows(&corpus, spec.seq_len, 32);
+    let f = pipeline::prepare(&spec, &ws, None, &QuantConfig::float()).unwrap();
+    let ppl_f = eval::perplexity(&engine, &spec, &f, &windows).unwrap();
+    assert!(ppl_f < spec.vocab as f64, "ppl {ppl_f} vs uniform {}", spec.vocab);
+    let q = pipeline::prepare(
+        &spec,
+        &ws,
+        None,
+        &QuantConfig::weights_only(4, ClipMethod::None, 0.0),
+    )
+    .unwrap();
+    let ppl_q = eval::perplexity(&engine, &spec, &q, &windows).unwrap();
+    assert!(ppl_q >= ppl_f * 0.99, "4-bit should not beat float: {ppl_q} vs {ppl_f}");
+}
+
+/// Serving: responses must match a direct artifact execution bit-for-bit
+/// (same prepared inputs, same batch artifact when it lines up).
+#[test]
+fn serving_matches_direct_execution() {
+    if !have_artifacts() {
+        return;
+    }
+    use ocs::serve::{ServeConfig, Server};
+    let server = Server::start(
+        "artifacts",
+        "minivgg",
+        QuantConfig::float(),
+        ServeConfig {
+            max_batch: 1,
+            max_wait: std::time::Duration::from_millis(1),
+            queue_cap: 16,
+        },
+    )
+    .unwrap();
+    let client = server.client();
+    let imgs = data::synth_images(4, 84);
+    let row = imgs.x.len() / imgs.len();
+
+    // direct path
+    let spec = ModelSpec::load_named("artifacts", "minivgg").unwrap();
+    let (ws, _) = WeightStore::load_best(&spec).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let prep = pipeline::prepare(&spec, &ws, None, &QuantConfig::float()).unwrap();
+    let art = spec.fwd_for_batch(1).unwrap();
+    let exe = engine.load(art).unwrap();
+
+    for i in 0..4 {
+        let x = ocs::tensor::TensorF::from_vec(
+            &[1, 16, 16, 3],
+            imgs.x.data()[i * row..(i + 1) * row].to_vec(),
+        )
+        .unwrap();
+        let served = client.infer(x.clone()).unwrap();
+        let mut inputs: Inputs = Default::default();
+        prep.insert_inputs(&mut inputs);
+        inputs.insert("x".into(), Input::F32(eval::pad_rows(&x, art.batch).unwrap()));
+        let direct = exe.execute(&inputs).unwrap().take("logits").unwrap();
+        for (a, b) in served.iter().zip(&direct.data()[..10]) {
+            assert!((a - b).abs() < 1e-5, "served {a} vs direct {b}");
+        }
+    }
+    server.shutdown().unwrap();
+}
+
+/// Accuracy evaluator handles non-multiple-of-batch test sets (padding
+/// path) identically to an exact split.
+#[test]
+fn accuracy_padding_consistency() {
+    if !have_artifacts() {
+        return;
+    }
+    let spec = ModelSpec::load_named("artifacts", "minivgg").unwrap();
+    let ws = WeightStore::load_init(&spec).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let prep = pipeline::prepare(&spec, &ws, None, &QuantConfig::float()).unwrap();
+    let d = data::synth_images(40, 85);
+    // batch 32: one full chunk + one padded chunk of 8
+    let acc_all = eval::accuracy(&engine, &spec, &prep, &d.x, &d.y, 32).unwrap();
+    // same data evaluated at batch 8 (exact splits)
+    let acc_b8 = eval::accuracy(&engine, &spec, &prep, &d.x, &d.y, 8).unwrap();
+    assert!((acc_all - acc_b8).abs() < 1e-9, "{acc_all} vs {acc_b8}");
+}

@@ -1,0 +1,47 @@
+#!/usr/bin/env python
+"""Inject the regenerated results/*.txt tables into EXPERIMENTS.md.
+
+Each `<!-- TAG -->` placeholder is replaced by the corresponding
+results file wrapped in a fenced code block. Idempotent: re-running
+replaces previous injections (delimited by the tag comments).
+"""
+
+import re
+import sys
+
+MAP = {
+    "FIG1": "results/fig1.txt",
+    "TABLE1": "results/table1.txt",
+    "TABLE2": "results/table2.txt",
+    "TABLE3": "results/table3.txt",
+    "TABLE4": "results/table4.txt",
+    "TABLE5": "results/table5.txt",
+    "TABLE6": "results/table6.txt",
+    "PERF": "results/perf.txt",
+}
+
+
+def main():
+    path = "EXPERIMENTS.md"
+    text = open(path).read()
+    for tag, src in MAP.items():
+        try:
+            body = open(src).read().rstrip()
+        except FileNotFoundError:
+            print(f"  [skip] {src} missing")
+            continue
+        block = f"<!-- {tag} -->\n```\n{body}\n```\n<!-- /{tag} -->"
+        # replace an existing injected block or the bare placeholder
+        pat = re.compile(
+            rf"<!-- {tag} -->.*?<!-- /{tag} -->|<!-- {tag} -->", re.DOTALL
+        )
+        if not pat.search(text):
+            print(f"  [warn] no placeholder for {tag}")
+            continue
+        text = pat.sub(lambda _: block, text, count=1)
+        print(f"  [ok] {tag} <- {src}")
+    open(path, "w").write(text)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
