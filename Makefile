@@ -1,0 +1,35 @@
+# Repo-level entry points. The Rust crate lives under rust/; the JAX AOT
+# lowering (which produces artifacts/) lives under python/compile/.
+
+CARGO_DIR := rust
+
+.PHONY: verify build test fmt lint artifacts serve-smoke clean
+
+# Tier-1 gate: the exact command CI runs on every push.
+verify:
+	cd $(CARGO_DIR) && cargo build --release && cargo test -q
+
+build:
+	cd $(CARGO_DIR) && cargo build --release
+
+test:
+	cd $(CARGO_DIR) && cargo test -q
+
+fmt:
+	cd $(CARGO_DIR) && cargo fmt --all -- --check
+
+lint:
+	cd $(CARGO_DIR) && cargo clippy --all-targets -- -D warnings
+
+# AOT-lower the JAX models to HLO text under artifacts/ (needs jax).
+artifacts:
+	python3 python/compile/aot.py
+
+# Serving smoke: the synthetic backend needs no artifacts, so this runs
+# on a clean checkout. Emits BENCH_serving.json (CI uploads it).
+serve-smoke:
+	cd $(CARGO_DIR) && cargo run --release -- serve --sim \
+		--workers 2 --requests 128 --sweep 1,2 --json ../BENCH_serving.json
+
+clean:
+	cd $(CARGO_DIR) && cargo clean

@@ -1,13 +1,15 @@
-//! Serving example: a dynamic-batching inference server over an
-//! OCS-quantized model (paper §3.5 — OCS-transformed models are plain
-//! models, servable with no custom runtime support).
+//! Serving example: the sharded engine pool over an OCS-quantized model
+//! (paper §3.5 — OCS-transformed models are plain models, servable with
+//! no custom runtime support, so they also *scale* like plain models).
 //!
-//! Starts the server (executor thread owns the PJRT engine), fires
-//! concurrent clients at it under two load patterns, and reports
-//! latency/throughput and the batching behaviour.
+//! Starts a multi-worker pool (each worker thread owns its own PJRT
+//! engine + prepared pipeline), fires concurrent clients at it under two
+//! load patterns, and reports per-worker and aggregate behaviour.
 //!
 //! Run:  cargo run --release --example serve_quantized
-//! (requires `make artifacts`; trained weights recommended: `ocs train`)
+//! (requires `make artifacts` + a `pjrt` build; trained weights
+//! recommended: `ocs train`. Without artifacts, try
+//! `cargo run --release -- serve --sim --sweep 1,2,4` instead.)
 
 use std::time::{Duration, Instant};
 
@@ -54,16 +56,18 @@ fn main() -> Result<()> {
     let quant = QuantConfig::weights_with_a8(5, ClipMethod::Mse, 0.02);
     println!("== serving {model} [{}] ==", quant.label());
 
-    let server = Server::start(
-        "artifacts",
-        model,
-        quant,
-        ServeConfig {
-            max_batch: 32,
-            max_wait: Duration::from_millis(2),
-            queue_cap: 1024,
-        },
-    )?;
+    let cfg = ServeConfig {
+        workers: 2,
+        max_batch: 32,
+        max_wait: Duration::from_millis(2),
+        queue_cap: 1024,
+        deadline: Some(Duration::from_secs(2)),
+    };
+    println!(
+        "pool: {} workers, queue cap {}/worker, deadline {:?}",
+        cfg.workers, cfg.queue_cap, cfg.deadline
+    );
+    let server = Server::start("artifacts", model, quant, cfg)?;
 
     println!("\n-- closed-loop burst (8 clients, no think time) --");
     let rps = drive(&server, 8, 128, Duration::ZERO)?;
@@ -76,6 +80,6 @@ fn main() -> Result<()> {
     println!("throughput {rps:.0} req/s");
 
     server.shutdown()?;
-    println!("\nserver drained cleanly");
+    println!("\npool drained cleanly");
     Ok(())
 }

@@ -1,29 +1,81 @@
 //! Runtime + serving benchmarks (L3 hot path): PJRT execute latency per
-//! batch size, input-packing overhead, and dynamic-batcher throughput
-//! under open-loop load. The paper's deployment claim is "negligible
+//! batch size, input-packing overhead, and engine-pool throughput swept
+//! over worker counts. The paper's deployment claim is "negligible
 //! overhead" (§5.4 + §3.5) — these benches quantify the serving cost of
-//! the OCS hooks (channel_dup + padded weights) vs the identity path.
+//! the OCS hooks (channel_dup + padded weights) vs the identity path,
+//! and how the pool scales once the engine is sharded per thread.
+//!
+//! The worker sweep runs twice: on the synthetic backend (no artifacts
+//! needed — this is the record CI accumulates as BENCH_serving.json) and,
+//! when artifacts exist, on the real PJRT stack.
 //!
 //! Run:  cargo bench --bench runtime_serving [-- <filter>]
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use ocs::bench_support::Runner;
 use ocs::clip::ClipMethod;
 use ocs::model::store::WeightStore;
 use ocs::model::ModelSpec;
-use ocs::pipeline::{self, QuantConfig};
+use ocs::pipeline::{self, QuantConfig, ServeConfig};
 use ocs::runtime::{Engine, Input, Inputs};
-use ocs::serve::{ServeConfig, Server};
-use ocs::tensor::TensorF;
+use ocs::serve::backend::{EngineFactory, PjrtFactory, SimFactory};
+use ocs::serve::{run_point, sweep_json, SweepPoint};
 use ocs::train::data;
 
+const SWEEP: [usize; 3] = [1, 2, 4];
+
+fn pool_sweep(
+    r: &mut Runner,
+    tag: &str,
+    factory: Arc<dyn EngineFactory>,
+    cfg: &ServeConfig,
+    requests: usize,
+) -> anyhow::Result<Vec<SweepPoint>> {
+    let mut points = Vec::new();
+    for &w in &SWEEP {
+        if !r.enabled(&format!("serve/{tag}_w{w}")) {
+            continue;
+        }
+        let p = run_point(factory.clone(), cfg, w, requests)?;
+        r.report_value(&format!("serve/{tag}_w{w}_throughput"), p.rps, "req/s");
+        r.report_value(&format!("serve/{tag}_w{w}_p99"), p.p99_ms, "ms");
+        r.report_value(&format!("serve/{tag}_w{w}_mean_batch"), p.mean_batch, "req/batch");
+        points.push(p);
+    }
+    Ok(points)
+}
+
 fn main() -> anyhow::Result<()> {
+    let mut r = Runner::from_env();
+    let quick = std::env::var("OCS_BENCH_QUICK").is_ok();
+
+    // ---- engine-pool worker sweep, synthetic backend (runs everywhere)
+    r.section("engine-pool worker sweep (synthetic backend)");
+    let sim_cfg = ServeConfig {
+        workers: 1,
+        max_batch: 8,
+        max_wait: Duration::from_micros(500),
+        queue_cap: 4096,
+        deadline: None,
+    };
+    let sim_points = pool_sweep(
+        &mut r,
+        "sim",
+        Arc::new(SimFactory::default()),
+        &sim_cfg,
+        if quick { 128 } else { 1024 },
+    )?;
+    if !sim_points.is_empty() {
+        std::fs::write("BENCH_serving.json", sweep_json("sim", &sim_points))?;
+        println!("wrote BENCH_serving.json ({} sweep points)", sim_points.len());
+    }
+
     if !std::path::Path::new("artifacts/manifest.json").exists() {
-        eprintln!("skipping runtime_serving bench: run `make artifacts` first");
+        eprintln!("skipping PJRT benches: run `make artifacts` first");
         return Ok(());
     }
-    let mut r = Runner::from_env();
     let model = "minivgg";
     let spec = ModelSpec::load_named("artifacts", model)?;
     let (ws, _) = WeightStore::load_best(&spec)?;
@@ -78,51 +130,35 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(m.len());
     });
 
-    r.section("dynamic-batching server throughput");
-    for (tag, clients) in [("c1", 1usize), ("c8", 8), ("c32", 32)] {
-        let server = Server::start(
-            "artifacts",
-            model,
-            QuantConfig::weights_only(5, ClipMethod::Mse, 0.02),
-            ServeConfig {
-                max_batch: 32,
-                max_wait: Duration::from_millis(2),
-                queue_cap: 2048,
-            },
-        )?;
-        let imgs = data::synth_images(64, 6);
-        let row = imgs.x.len() / imgs.len();
-        let xdata = std::sync::Arc::new(imgs.x.data().to_vec());
-        let t0 = std::time::Instant::now();
-        let per = 256usize / clients.min(256);
-        let mut handles = Vec::new();
-        for c in 0..clients {
-            let client = server.client();
-            let xdata = xdata.clone();
-            handles.push(std::thread::spawn(move || {
-                for i in 0..per {
-                    let idx = (c * per + i) % 64;
-                    let x = TensorF::from_vec(
-                        &[1, 16, 16, 3],
-                        xdata[idx * row..(idx + 1) * row].to_vec(),
-                    )
-                    .unwrap();
-                    client.infer(x).unwrap();
-                }
-            }));
-        }
-        for h in handles {
-            h.join().unwrap();
-        }
-        let n = clients * per;
-        let rps = n as f64 / t0.elapsed().as_secs_f64();
-        r.report_value(&format!("serve/throughput_{tag}"), rps, "req/s");
-        r.report_value(
-            &format!("serve/mean_batch_{tag}"),
-            server.metrics().mean_batch(),
-            "imgs/batch",
+    // ---- engine-pool worker sweep over the real PJRT stack
+    r.section("engine-pool worker sweep (PJRT backend)");
+    let pjrt_factory = Arc::new(PjrtFactory {
+        artifacts_dir: "artifacts".to_string(),
+        model: model.to_string(),
+        quant: QuantConfig::weights_only(5, ClipMethod::Mse, 0.02),
+        max_batch: 32,
+    });
+    let label = pjrt_factory.label();
+    let pjrt_cfg = ServeConfig {
+        workers: 1,
+        max_batch: 32,
+        max_wait: Duration::from_millis(2),
+        queue_cap: 2048,
+        deadline: None,
+    };
+    let pjrt_points = pool_sweep(
+        &mut r,
+        "pjrt",
+        pjrt_factory,
+        &pjrt_cfg,
+        if quick { 128 } else { 512 },
+    )?;
+    if !pjrt_points.is_empty() {
+        std::fs::write("BENCH_serving_pjrt.json", sweep_json(&label, &pjrt_points))?;
+        println!(
+            "wrote BENCH_serving_pjrt.json ({} sweep points)",
+            pjrt_points.len()
         );
-        server.shutdown()?;
     }
     Ok(())
 }

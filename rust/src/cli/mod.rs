@@ -74,6 +74,17 @@ impl Args {
         }
     }
 
+    /// Optional typed flag: `None` when absent, error when unparseable.
+    pub fn parse_opt<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>> {
+        match self.str(key) {
+            None => Ok(None),
+            Some(v) => match v.parse() {
+                Ok(x) => Ok(Some(x)),
+                Err(_) => bail!("flag --{key}: cannot parse '{v}'"),
+            },
+        }
+    }
+
     pub fn bool_or(&self, key: &str, default: bool) -> bool {
         match self.str(key) {
             Some("true") | Some("1") | Some("yes") => true,
@@ -131,6 +142,15 @@ mod tests {
         assert!(a.req("model").is_err());
         let b = parse("x --model lstm");
         assert_eq!(b.req("model").unwrap(), "lstm");
+    }
+
+    #[test]
+    fn optional_typed_flag() {
+        let a = parse("serve --deadline-ms 250");
+        assert_eq!(a.parse_opt::<u64>("deadline-ms").unwrap(), Some(250));
+        assert_eq!(a.parse_opt::<u64>("queue-cap").unwrap(), None);
+        let b = parse("serve --deadline-ms soon");
+        assert!(b.parse_opt::<u64>("deadline-ms").is_err());
     }
 
     #[test]

@@ -34,10 +34,21 @@ USAGE:
   ocs table --id all|1|2|3|4|5|6|fig1 [--quick]
   ocs report --model NAME [--bits N] [--ocs-ratio R]
   ocs serve --model NAME [--requests N] [--w-bits N]
+            [--workers N] [--queue-cap N] [--deadline-ms MS]
+            [--max-batch N] [--max-wait-us US]
+            [--sweep 1,2,4] [--json PATH] [--sim]
 
 FLAGS:
   --artifacts DIR   artifact root (default: artifacts)
   --results DIR     table output dir (default: results)
+
+SERVE FLAGS:
+  --workers N       engine shards, one thread+engine each (default: cores)
+  --queue-cap N     per-shard queue bound; full queues reject (default 1024)
+  --deadline-ms MS  per-request deadline; late jobs get an error response
+  --sweep LIST      run the self-test at each worker count, e.g. 1,2,4
+  --json PATH       write a BENCH_serving.json throughput/latency record
+  --sim             synthetic backend (no artifacts/PJRT needed)
 ";
 
 fn main() {
@@ -211,9 +222,29 @@ fn cmd_table(args: &Args, artifacts: &str) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args, artifacts: &str) -> Result<()> {
-    let name = args.req("model")?;
     let requests: usize = args.parse_or("requests", 512)?;
+    let serve_cfg = ocs::pipeline::ServeConfig::from_args(args)?;
+    let mut sweep = Vec::new();
+    for s in args.list("sweep") {
+        match s.parse::<usize>() {
+            Ok(w) => sweep.push(w),
+            Err(_) => bail!("--sweep: cannot parse '{s}' as a worker count"),
+        }
+    }
+    let json_out = args.str("json").map(std::path::PathBuf::from);
+    if args.bool_or("sim", false) {
+        return ocs::serve::self_test_sim(requests, &serve_cfg, &sweep, json_out.as_deref());
+    }
+    let name = args.req("model")?;
     let wb: u32 = args.parse_or("w-bits", 5)?;
-    let cfg = QuantConfig::weights_only(wb, ClipMethod::Mse, 0.02);
-    ocs::serve::self_test(artifacts, name, cfg, requests)
+    let quant = QuantConfig::weights_only(wb, ClipMethod::Mse, 0.02);
+    ocs::serve::self_test(
+        artifacts,
+        name,
+        quant,
+        requests,
+        &serve_cfg,
+        &sweep,
+        json_out.as_deref(),
+    )
 }

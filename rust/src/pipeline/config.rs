@@ -1,8 +1,14 @@
-//! Quantization run configuration — one value captures a full paper
-//! experiment cell (bits × clip method × OCS ratio/target/mode).
+//! Run configuration: [`QuantConfig`] captures a full paper experiment
+//! cell (bits × clip method × OCS ratio/target/mode); [`ServeConfig`]
+//! captures the serving-pool shape (worker shards, batching, admission
+//! control, deadlines). Both parse from CLI flags and the TOML-subset
+//! experiment files.
+
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
+use crate::cli::Args;
 use crate::clip::ClipMethod;
 use crate::ocs::{OcsTarget, SplitMode};
 use crate::util::toml::Config;
@@ -146,6 +152,129 @@ impl QuantConfig {
     }
 }
 
+/// Default worker-shard count: one per available core.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Tuning knobs for the sharded inference pool ([`crate::serve`]).
+///
+/// `workers` engine shards (each its own thread + PJRT engine, because
+/// PJRT handles are `!Send`), each fed by its own bounded queue of
+/// `queue_cap` jobs. The router rejects — never blocks — when every
+/// queue is full, and jobs older than `deadline` are answered with an
+/// error instead of being executed.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Engine shards (threads); default = available cores.
+    pub workers: usize,
+    /// Max jobs fused into one forward pass per shard.
+    pub max_batch: usize,
+    /// How long a shard waits to top up a non-full batch.
+    pub max_wait: Duration,
+    /// Per-shard queue bound (admission control).
+    pub queue_cap: usize,
+    /// Per-request deadline, measured from enqueue (`None` = unbounded).
+    pub deadline: Option<Duration>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            workers: default_workers(),
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 1024,
+            deadline: None,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            bail!("serve config: workers must be >= 1");
+        }
+        if self.max_batch == 0 {
+            bail!("serve config: max_batch must be >= 1");
+        }
+        if self.queue_cap == 0 {
+            bail!("serve config: queue_cap must be >= 1");
+        }
+        if self.deadline.is_some_and(|d| d.is_zero()) {
+            bail!("serve config: deadline must be positive");
+        }
+        Ok(())
+    }
+
+    /// With a different worker count (sweeps), revalidated by `start`.
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    /// Parse `--workers`, `--max-batch`, `--max-wait-us`, `--queue-cap`,
+    /// `--deadline-ms`; anything absent keeps its default.
+    pub fn from_args(args: &Args) -> Result<ServeConfig> {
+        let d = ServeConfig::default();
+        let cfg = ServeConfig {
+            workers: args.parse_or("workers", d.workers)?,
+            max_batch: args.parse_or("max-batch", d.max_batch)?,
+            max_wait: match args.parse_opt::<u64>("max-wait-us")? {
+                Some(us) => Duration::from_micros(us),
+                None => d.max_wait,
+            },
+            queue_cap: args.parse_or("queue-cap", d.queue_cap)?,
+            deadline: args
+                .parse_opt::<u64>("deadline-ms")?
+                .map(Duration::from_millis),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Parse from a TOML config section (`workers`, `max_batch`,
+    /// `max_wait_us`, `queue_cap`, `deadline_ms`).
+    pub fn from_toml(c: &Config, section: &str) -> Result<ServeConfig> {
+        let key = |k: &str| {
+            if section.is_empty() {
+                k.to_string()
+            } else {
+                format!("{section}.{k}")
+            }
+        };
+        let d = ServeConfig::default();
+        let nonneg = |k: &str, v: i64| -> Result<u64> {
+            if v < 0 {
+                bail!("serve config: {k} must be >= 0, got {v}");
+            }
+            Ok(v as u64)
+        };
+        let cfg = ServeConfig {
+            workers: nonneg("workers", c.int_or(&key("workers"), d.workers as i64))? as usize,
+            max_batch: nonneg("max_batch", c.int_or(&key("max_batch"), d.max_batch as i64))?
+                as usize,
+            max_wait: Duration::from_micros(nonneg(
+                "max_wait_us",
+                c.int_or(&key("max_wait_us"), d.max_wait.as_micros() as i64),
+            )?),
+            queue_cap: nonneg("queue_cap", c.int_or(&key("queue_cap"), d.queue_cap as i64))?
+                as usize,
+            deadline: match c.get(&key("deadline_ms")) {
+                Some(_) => Some(Duration::from_millis(nonneg(
+                    "deadline_ms",
+                    c.int(&key("deadline_ms"))?,
+                )?)),
+                None => None,
+            },
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -169,6 +298,68 @@ mod tests {
         let cfg = QuantConfig::weights_only(5, ClipMethod::Mse, 0.02);
         let l = cfg.label();
         assert!(l.contains("w5:mse") && l.contains("r=0.02"), "{l}");
+    }
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn serve_defaults_are_valid() {
+        let d = ServeConfig::default();
+        assert!(d.workers >= 1, "at least one shard");
+        assert!(d.deadline.is_none());
+        d.validate().unwrap();
+    }
+
+    #[test]
+    fn serve_zero_workers_rejected_at_parse() {
+        assert!(ServeConfig::from_args(&args("serve --workers 0")).is_err());
+        assert!(ServeConfig::from_args(&args("serve --queue-cap 0")).is_err());
+        assert!(ServeConfig::from_args(&args("serve --deadline-ms 0")).is_err());
+        let c = Config::parse("[serve]\nworkers = 0\n").unwrap();
+        assert!(ServeConfig::from_toml(&c, "serve").is_err());
+    }
+
+    #[test]
+    fn serve_from_args_knobs() {
+        let cfg = ServeConfig::from_args(&args(
+            "serve --workers 4 --queue-cap 8 --deadline-ms 250 --max-batch 16 --max-wait-us 500",
+        ))
+        .unwrap();
+        assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.queue_cap, 8);
+        assert_eq!(cfg.max_batch, 16);
+        assert_eq!(cfg.max_wait, Duration::from_micros(500));
+        assert_eq!(cfg.deadline, Some(Duration::from_millis(250)));
+        assert_eq!(cfg.with_workers(2).workers, 2);
+    }
+
+    #[test]
+    fn serve_from_toml_knobs() {
+        let c = Config::parse(
+            r#"
+[serve]
+workers = 3
+max_batch = 8
+queue_cap = 64
+deadline_ms = 100
+"#,
+        )
+        .unwrap();
+        let cfg = ServeConfig::from_toml(&c, "serve").unwrap();
+        assert_eq!(cfg.workers, 3);
+        assert_eq!(cfg.max_batch, 8);
+        assert_eq!(cfg.queue_cap, 64);
+        assert_eq!(cfg.deadline, Some(Duration::from_millis(100)));
+        // absent section -> defaults
+        let d = ServeConfig::from_toml(&Config::parse("").unwrap(), "serve").unwrap();
+        assert!(d.deadline.is_none());
+        assert!(ServeConfig::from_toml(
+            &Config::parse("[serve]\ndeadline_ms = -5\n").unwrap(),
+            "serve"
+        )
+        .is_err());
     }
 
     #[test]

@@ -20,7 +20,7 @@
 
 pub mod config;
 
-pub use config::QuantConfig;
+pub use config::{QuantConfig, ServeConfig};
 
 use anyhow::{bail, Context, Result};
 

@@ -1,0 +1,132 @@
+//! Process-wide, read-once cache for AOT artifact HLO text.
+//!
+//! The sharded server ([`crate::serve`]) builds one [`super::Engine`] per
+//! worker thread (PJRT handles are `!Send`), and every engine needs the
+//! same artifact files. Without sharing, N workers would each re-read and
+//! re-validate every artifact at startup. This cache makes the read and
+//! the structural validation happen exactly once per process; workers
+//! share the text via `Arc<str>`, and the stub backend parses directly
+//! from it. One caveat: the *real* PJRT text parser (`pjrt` feature)
+//! only accepts a file path, so that parser re-reads the file it
+//! compiles — the read-once guarantee covers this cache's own consumers.
+//!
+//! Compiled executables can NOT be shared at all — they wrap
+//! thread-bound PJRT handles — so per-engine compilation remains.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{bail, Context, Result};
+
+/// Shared artifact-text cache with hit/miss accounting.
+#[derive(Debug, Default)]
+pub struct HloTextCache {
+    map: Mutex<HashMap<PathBuf, Arc<str>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl HloTextCache {
+    /// The process-wide instance used by [`super::Engine::load`].
+    pub fn global() -> &'static HloTextCache {
+        static GLOBAL: OnceLock<HloTextCache> = OnceLock::new();
+        GLOBAL.get_or_init(HloTextCache::default)
+    }
+
+    /// Fetch the HLO text for `path`, reading and validating it on the
+    /// first request only.
+    pub fn get(&self, path: &Path) -> Result<Arc<str>> {
+        let mut map = self.map.lock().expect("hlo cache poisoned");
+        if let Some(text) = map.get(path) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(text.clone());
+        }
+        // The read happens under the lock: N workers racing on a cold
+        // cache must still produce exactly one disk read per artifact.
+        // Startup is the only contended window, and reads are small.
+        let raw = std::fs::read_to_string(path)
+            .with_context(|| format!("read HLO artifact {}", path.display()))?;
+        if !raw.contains("HloModule") {
+            bail!(
+                "artifact {} does not look like HLO text (no 'HloModule' header)",
+                path.display()
+            );
+        }
+        let text: Arc<str> = Arc::from(raw);
+        map.insert(path.to_path_buf(), text.clone());
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        Ok(text)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().expect("hlo cache poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_artifact(name: &str, body: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("ocs_hlo_cache_{}_{name}", std::process::id()));
+        std::fs::write(&p, body).unwrap();
+        p
+    }
+
+    #[test]
+    fn second_read_hits_and_shares() {
+        let cache = HloTextCache::default();
+        let p = temp_artifact("share.hlo", "HloModule m\nENTRY e {}\n");
+        let a = cache.get(&p).unwrap();
+        let b = cache.get(&p).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "both readers must share one copy");
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.len(), 1);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn rejects_non_hlo_and_missing_files() {
+        let cache = HloTextCache::default();
+        let p = temp_artifact("garbage.hlo", "not an artifact");
+        assert!(cache.get(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+        assert!(cache.get(Path::new("/nonexistent/ocs.hlo")).is_err());
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn concurrent_readers_one_disk_read() {
+        let cache = Arc::new(HloTextCache::default());
+        let p = temp_artifact("conc.hlo", "HloModule m\n");
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let cache = cache.clone();
+            let p = p.clone();
+            handles.push(std::thread::spawn(move || cache.get(&p).unwrap()));
+        }
+        for h in handles {
+            let text = h.join().unwrap();
+            assert!(text.contains("HloModule"));
+        }
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.misses(), 1, "exactly one disk read");
+        assert_eq!(cache.hits(), 7);
+        let _ = std::fs::remove_file(&p);
+    }
+}

@@ -12,7 +12,27 @@
 //! tensors.
 //!
 //! PJRT handles are not `Send`; the serving layer ([`crate::serve`])
-//! owns an engine on a dedicated executor thread instead of sharing one.
+//! owns one engine per worker thread instead of sharing one. Artifact
+//! *text* is shared across those engines through the process-wide
+//! [`HloTextCache`]: N workers validate and cache each artifact exactly
+//! once. (On a `pjrt` build the PJRT text parser only accepts a file
+//! path, so that parser performs its own read per engine; the stub
+//! build parses straight from the shared cache.)
+//!
+//! Built without the `pjrt` feature (the default — CI, and any machine
+//! without the vendored xla crate), the identically-shaped stub backend
+//! in [`stub`] takes the place of the `xla` crate: literal marshalling
+//! works, compilation/execution return a descriptive error, and the
+//! serving stack uses its synthetic backend instead.
+
+pub mod hlo_cache;
+#[cfg(not(feature = "pjrt"))]
+pub(crate) mod stub;
+
+pub use hlo_cache::HloTextCache;
+
+#[cfg(not(feature = "pjrt"))]
+use self::stub as xla;
 
 use std::cell::RefCell;
 use std::collections::{BTreeMap, HashMap};
@@ -200,15 +220,31 @@ impl Engine {
         })
     }
 
-    /// Load + compile an artifact (cached by file path).
+    /// Load + compile an artifact. Compiled executables are cached per
+    /// engine (PJRT handles are thread-bound); the HLO text itself comes
+    /// from the process-wide [`HloTextCache`], shared by all engines.
     pub fn load(&self, spec: &ArtifactSpec) -> Result<Rc<Executable>> {
         let key = spec.file.display().to_string();
         if let Some(e) = self.cache.borrow().get(&key) {
             return Ok(e.clone());
         }
+        let text = HloTextCache::global().get(&spec.file)?;
+        crate::debugln!(
+            "artifact {}: {} bytes of HLO text (shared cache: {} entries)",
+            spec.key,
+            text.len(),
+            HloTextCache::global().len()
+        );
         let t0 = std::time::Instant::now();
         let path = spec.file.to_str().context("artifact path not utf-8")?;
+        // The PJRT text parser only takes a file path, so with the real
+        // backend the shared text serves as read-once validation; the
+        // stub parses from the cached text directly.
+        #[cfg(feature = "pjrt")]
         let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parse HLO text {path}"))?;
+        #[cfg(not(feature = "pjrt"))]
+        let proto = xla::HloModuleProto::from_text(&text)
             .with_context(|| format!("parse HLO text {path}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self

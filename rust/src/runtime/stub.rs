@@ -1,0 +1,204 @@
+//! Pure-Rust stand-in for the vendored `xla` crate, compiled when the
+//! `pjrt` feature is off (the default, and what CI builds).
+//!
+//! It mirrors exactly the API surface [`crate::runtime`] consumes.
+//! Literal packing/unpacking is fully functional — the input-marshalling
+//! code and its tests run unchanged — while anything that would need the
+//! PJRT C++ runtime (`HloModuleProto::from_text`, `PjRtClient::compile`)
+//! returns a descriptive error. Artifact-gated tests skip before hitting
+//! those paths, and the serving stack falls back to
+//! [`crate::serve::backend::SimFactory`].
+
+use anyhow::{bail, Result};
+
+const NO_PJRT: &str =
+    "ocs was built without the `pjrt` feature; PJRT execution is unavailable \
+     (rebuild with `cargo build --features pjrt` and the vendored xla crate)";
+
+/// Element payload of a [`Literal`].
+#[derive(Debug, Clone)]
+pub enum Elems {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Elems {
+    fn len(&self) -> usize {
+        match self {
+            Elems::F32(v) => v.len(),
+            Elems::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy {
+    fn wrap(data: Vec<Self>) -> Elems;
+    fn unwrap(elems: &Elems) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<Self>) -> Elems {
+        Elems::F32(data)
+    }
+    fn unwrap(elems: &Elems) -> Option<Vec<Self>> {
+        match elems {
+            Elems::F32(v) => Some(v.clone()),
+            Elems::I32(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<Self>) -> Elems {
+        Elems::I32(data)
+    }
+    fn unwrap(elems: &Elems) -> Option<Vec<Self>> {
+        match elems {
+            Elems::I32(v) => Some(v.clone()),
+            Elems::F32(_) => None,
+        }
+    }
+}
+
+/// Host-side tensor value (the xla crate's literal type).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    elems: Elems,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal {
+            elems: T::wrap(vec![v]),
+            dims: Vec::new(),
+        }
+    }
+
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        let dims = vec![data.len() as i64];
+        Literal {
+            elems: T::wrap(data.to_vec()),
+            dims,
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.elems.len() {
+            bail!(
+                "reshape to {dims:?} ({want} elems) from {} elems",
+                self.elems.len()
+            );
+        }
+        Ok(Literal {
+            elems: self.elems.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.elems.len()
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match T::unwrap(&self.elems) {
+            Some(v) => Ok(v),
+            None => bail!("literal element type mismatch"),
+        }
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        bail!(NO_PJRT)
+    }
+}
+
+/// Parsed HLO module (never constructible without PJRT).
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    pub fn from_text(_text: &str) -> Result<HloModuleProto> {
+        bail!(NO_PJRT)
+    }
+}
+
+/// Computation wrapper accepted by [`PjRtClient::compile`].
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {}
+    }
+}
+
+/// Device buffer returned by an execution.
+pub struct PjRtBuffer {
+    lit: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.lit.clone())
+    }
+}
+
+/// Compiled executable (never constructible without PJRT).
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        bail!(NO_PJRT)
+    }
+}
+
+/// Client handle. Construction succeeds so `Engine::cpu()` keeps working
+/// everywhere; only compilation/execution require the real runtime.
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient {})
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        bail!(NO_PJRT)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_reshape_checks_count() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn literal_type_mismatch_errors() {
+        let l = Literal::vec1(&[1i32, 2]);
+        assert!(l.to_vec::<f32>().is_err());
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn pjrt_paths_error_without_feature() {
+        assert!(HloModuleProto::from_text("HloModule m").is_err());
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.device_count(), 0);
+        assert!(client.compile(&XlaComputation {}).is_err());
+    }
+}

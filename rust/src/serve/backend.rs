@@ -1,0 +1,244 @@
+//! Engine backends for the sharded server.
+//!
+//! PJRT handles are `!Send`, so an engine can never migrate between
+//! threads. The pool therefore hands every worker thread an
+//! [`EngineFactory`] (which *is* `Send + Sync` — it holds only plain
+//! config) and the worker calls [`EngineFactory::build`] on its own
+//! thread, producing a thread-local [`WorkerEngine`] that stays put.
+//!
+//! Two factories ship:
+//! * [`PjrtFactory`] — the real stack: model spec + weights + quant
+//!   pipeline + PJRT engine per worker. Artifact HLO text is shared
+//!   across workers through [`crate::runtime::HloTextCache`].
+//! * [`SimFactory`] — a synthetic CPU-burning model. Deterministic
+//!   logits, tunable per-batch/per-item cost. This is what CI and the
+//!   router tests run on: it needs no artifacts and no PJRT, but still
+//!   occupies a core the way a real engine does, so worker-scaling
+//!   measurements remain meaningful.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::eval::pad_rows;
+use crate::model::store::WeightStore;
+use crate::model::ModelSpec;
+use crate::pipeline::{self, QuantConfig};
+use crate::runtime::{Engine, Input, Inputs};
+use crate::tensor::TensorF;
+
+/// One worker's engine. Built and used on that worker's thread only; the
+/// trait object never crosses threads, so it need not be `Send`.
+pub trait WorkerEngine {
+    /// Run one forward pass over `batch` (shape `(n, ...)`). Returns
+    /// logits of shape `(m, classes)` with `m >= n`; callers ignore the
+    /// padding rows beyond `n`.
+    fn infer(&mut self, batch: &TensorF) -> Result<TensorF>;
+}
+
+/// Thread-safe recipe for building per-worker engines.
+pub trait EngineFactory: Send + Sync + 'static {
+    /// Called on the worker thread itself (never the router thread).
+    fn build(&self, worker_id: usize) -> Result<Box<dyn WorkerEngine>>;
+
+    /// Human-readable tag for logs and bench records.
+    fn label(&self) -> String;
+}
+
+/// The production backend: full quantization pipeline + PJRT engine.
+pub struct PjrtFactory {
+    pub artifacts_dir: String,
+    pub model: String,
+    pub quant: QuantConfig,
+    /// Pre-compile every fwd artifact up to twice this batch.
+    pub max_batch: usize,
+}
+
+impl EngineFactory for PjrtFactory {
+    fn build(&self, worker_id: usize) -> Result<Box<dyn WorkerEngine>> {
+        let spec = ModelSpec::load_named(&self.artifacts_dir, &self.model)?;
+        if spec.is_lm() {
+            bail!("serving targets the CNN models");
+        }
+        let (ws, _) = WeightStore::load_best(&spec)?;
+        let engine = Engine::cpu()?;
+        let calib = if self.quant.a_bits.is_some() {
+            let calib_set = crate::train::data::synth_images(64, 929);
+            Some(crate::calib::calibrate(&engine, &spec, &ws, &calib_set.x, 32)?)
+        } else {
+            None
+        };
+        let prep = pipeline::prepare(&spec, &ws, calib.as_ref(), &self.quant)?;
+        let mut base: Inputs = Default::default();
+        prep.insert_inputs(&mut base);
+        // pre-compile every batch size this worker may route to
+        for b in spec.fwd_batches() {
+            if b <= self.max_batch.max(1) * 2 {
+                engine.load(spec.fwd_for_batch(b)?)?;
+            }
+        }
+        crate::debugln!(
+            "worker {worker_id}: PJRT engine ready ({} executables cached)",
+            engine.cached_count()
+        );
+        Ok(Box::new(PjrtWorker { spec, engine, base }))
+    }
+
+    fn label(&self) -> String {
+        format!("pjrt:{} [{}]", self.model, self.quant.label())
+    }
+}
+
+struct PjrtWorker {
+    spec: ModelSpec,
+    engine: Engine,
+    base: Inputs,
+}
+
+impl WorkerEngine for PjrtWorker {
+    fn infer(&mut self, batch: &TensorF) -> Result<TensorF> {
+        let n = batch.shape()[0];
+        let art = self.spec.fwd_for_batch(n)?;
+        let exe = self.engine.load(art)?;
+        let xb = if n == art.batch {
+            batch.clone()
+        } else {
+            pad_rows(batch, art.batch)?
+        };
+        self.base.insert("x".into(), Input::F32(xb));
+        let mut out = exe.execute(&self.base)?;
+        out.take("logits")
+    }
+}
+
+/// Synthetic backend: deterministic logits plus a calibrated CPU burn.
+///
+/// The burn is a busy-spin, not a sleep — it occupies a core exactly as
+/// a compute-bound engine would, so throughput scales with workers only
+/// when real parallel hardware exists. That property is what the
+/// worker-sweep integration test asserts.
+pub struct SimFactory {
+    pub classes: usize,
+    /// Fixed cost per forward pass (kernel launch / dispatch overhead).
+    pub cost_per_batch: Duration,
+    /// Additional cost per batched row (per-image compute).
+    pub cost_per_item: Duration,
+}
+
+impl Default for SimFactory {
+    fn default() -> Self {
+        SimFactory {
+            classes: 10,
+            cost_per_batch: Duration::from_micros(200),
+            cost_per_item: Duration::from_micros(100),
+        }
+    }
+}
+
+impl EngineFactory for SimFactory {
+    fn build(&self, _worker_id: usize) -> Result<Box<dyn WorkerEngine>> {
+        if self.classes == 0 {
+            bail!("sim backend needs classes >= 1");
+        }
+        Ok(Box::new(SimWorker {
+            classes: self.classes,
+            cost_per_batch: self.cost_per_batch,
+            cost_per_item: self.cost_per_item,
+        }))
+    }
+
+    fn label(&self) -> String {
+        format!(
+            "sim:{}c {}us/batch {}us/item",
+            self.classes,
+            self.cost_per_batch.as_micros(),
+            self.cost_per_item.as_micros()
+        )
+    }
+}
+
+struct SimWorker {
+    classes: usize,
+    cost_per_batch: Duration,
+    cost_per_item: Duration,
+}
+
+/// Busy-spin for `d` (occupies the core, unlike `sleep`).
+fn burn(d: Duration) {
+    let end = Instant::now() + d;
+    while Instant::now() < end {
+        std::hint::spin_loop();
+    }
+}
+
+impl WorkerEngine for SimWorker {
+    fn infer(&mut self, batch: &TensorF) -> Result<TensorF> {
+        let n = batch.shape().first().copied().unwrap_or(0);
+        if n == 0 || batch.len() % n != 0 {
+            bail!("sim backend: bad batch shape {:?}", batch.shape());
+        }
+        let row = batch.len() / n;
+        burn(self.cost_per_batch + self.cost_per_item * n as u32);
+        let mut data = Vec::with_capacity(n * self.classes);
+        for i in 0..n {
+            let s: f32 = batch.data()[i * row..(i + 1) * row].iter().sum();
+            for c in 0..self.classes {
+                data.push(s + c as f32);
+            }
+        }
+        Ok(TensorF::from_vec(&[n, self.classes], data)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_logits_deterministic_and_shaped() {
+        let f = SimFactory {
+            classes: 4,
+            cost_per_batch: Duration::ZERO,
+            cost_per_item: Duration::ZERO,
+        };
+        let mut w = f.build(0).unwrap();
+        let x = TensorF::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let a = w.infer(&x).unwrap();
+        let b = w.infer(&x).unwrap();
+        assert_eq!(a.shape(), &[2, 4]);
+        assert_eq!(a.data(), b.data(), "sim must be deterministic");
+        // row 0 sums to 6, row 1 to 15; class c adds c
+        assert_eq!(a.data()[0], 6.0);
+        assert_eq!(a.data()[4 + 1], 16.0);
+    }
+
+    #[test]
+    fn sim_rejects_degenerate_config() {
+        let f = SimFactory {
+            classes: 0,
+            ..SimFactory::default()
+        };
+        assert!(f.build(0).is_err());
+        let mut w = SimFactory::default().build(0).unwrap();
+        assert!(w.infer(&TensorF::zeros(&[0, 3])).is_err());
+    }
+
+    #[test]
+    fn burn_occupies_at_least_requested_time() {
+        let t0 = Instant::now();
+        burn(Duration::from_millis(2));
+        assert!(t0.elapsed() >= Duration::from_millis(2));
+    }
+
+    #[test]
+    fn labels_are_informative() {
+        assert!(SimFactory::default().label().starts_with("sim:"));
+        let p = PjrtFactory {
+            artifacts_dir: "artifacts".into(),
+            model: "minivgg".into(),
+            quant: QuantConfig::float(),
+            max_batch: 8,
+        };
+        assert!(p.label().contains("minivgg"));
+    }
+}

@@ -1,13 +1,29 @@
-//! Lock-free serving metrics: request/batch counters, end-to-end latency
-//! (exponential buckets), batch-size distribution.
+//! Lock-free serving metrics, sharded per worker with an aggregate view.
+//!
+//! Each worker owns an `Arc<Metrics>` it alone writes (plain relaxed
+//! atomics — no locks on the request path); the pool-level
+//! [`PoolMetrics`] holds all of them plus router-side counters
+//! (rejections, dispatch count, per-shard queue-depth gauges) and
+//! produces a summed [`Snapshot`] on demand by reading every shard.
+//!
+//! Batch accounting is kept honest by recording at two ranks:
+//! [`Metrics::record_batch`] once per forward pass and
+//! [`Metrics::record_request`] once per answered request. That yields
+//! two distinct means — see [`Snapshot::mean_batch`] (per-batch) vs
+//! [`Snapshot::mean_batch_weighted`] (what a random *request* saw) —
+//! which the previous single-counter scheme conflated.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Exponential latency buckets in µs: <64, <128, ..., <2^25 (~33 s).
 const BUCKETS: usize = 20;
 const BASE_US: u64 = 64;
+/// Exponential batch-size buckets: <=1, <=2, <=4, ..., <=2048.
+const BATCH_BUCKETS: usize = 12;
 
+/// One worker's counters. Written by exactly one thread, read by any.
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub requests: AtomicU64,
@@ -15,48 +31,138 @@ pub struct Metrics {
     pub exec_us_total: AtomicU64,
     pub latency_us_total: AtomicU64,
     pub latency_us_max: AtomicU64,
+    /// Σ batch size over batches (== requests that went through a pass).
     pub batch_items_total: AtomicU64,
+    /// Σ batch size² over batches (request-weighted mean numerator).
+    pub batch_items_sq_total: AtomicU64,
+    pub deadline_exceeded: AtomicU64,
+    pub exec_errors: AtomicU64,
     latency_buckets: [AtomicU64; BUCKETS],
+    batch_buckets: [AtomicU64; BATCH_BUCKETS],
+}
+
+fn latency_bucket(us: u64) -> usize {
+    let mut b = 0usize;
+    let mut edge = BASE_US;
+    while b + 1 < BUCKETS && us >= edge {
+        edge *= 2;
+        b += 1;
+    }
+    b
+}
+
+fn batch_bucket(n: usize) -> usize {
+    let mut b = 0usize;
+    let mut edge = 1usize;
+    while b + 1 < BATCH_BUCKETS && n > edge {
+        edge *= 2;
+        b += 1;
+    }
+    b
 }
 
 impl Metrics {
-    pub fn record(&self, latency: Duration, exec_us: u64, batch: usize) {
+    /// One request answered successfully; `latency` is enqueue→response.
+    pub fn record_request(&self, latency: Duration) {
         let us = latency.as_micros() as u64;
         self.requests.fetch_add(1, Ordering::Relaxed);
         self.latency_us_total.fetch_add(us, Ordering::Relaxed);
         self.latency_us_max.fetch_max(us, Ordering::Relaxed);
-        self.exec_us_total.fetch_add(exec_us, Ordering::Relaxed);
-        self.batch_items_total
-            .fetch_add(batch as u64, Ordering::Relaxed);
+        self.latency_buckets[latency_bucket(us)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One forward pass over `n` fused requests.
+    pub fn record_batch(&self, n: usize, exec_us: u64) {
         self.batches.fetch_add(1, Ordering::Relaxed);
-        let mut b = 0usize;
-        let mut edge = BASE_US;
-        while b + 1 < BUCKETS && us >= edge {
-            edge *= 2;
-            b += 1;
-        }
-        self.latency_buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.exec_us_total.fetch_add(exec_us, Ordering::Relaxed);
+        self.batch_items_total.fetch_add(n as u64, Ordering::Relaxed);
+        let sq = (n as u64) * (n as u64);
+        self.batch_items_sq_total.fetch_add(sq, Ordering::Relaxed);
+        self.batch_buckets[batch_bucket(n)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_deadline_exceeded(&self) {
+        self.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_exec_error(&self) {
+        self.exec_errors.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn request_count(&self) -> u64 {
         self.requests.load(Ordering::Relaxed)
     }
 
+    /// Point-in-time copy of every counter (all relaxed loads).
+    pub fn snapshot(&self) -> Snapshot {
+        let mut s = Snapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            exec_us_total: self.exec_us_total.load(Ordering::Relaxed),
+            latency_us_total: self.latency_us_total.load(Ordering::Relaxed),
+            latency_us_max: self.latency_us_max.load(Ordering::Relaxed),
+            batch_items_total: self.batch_items_total.load(Ordering::Relaxed),
+            batch_items_sq_total: self.batch_items_sq_total.load(Ordering::Relaxed),
+            deadline_exceeded: self.deadline_exceeded.load(Ordering::Relaxed),
+            exec_errors: self.exec_errors.load(Ordering::Relaxed),
+            ..Snapshot::default()
+        };
+        for (dst, src) in s.latency_buckets.iter_mut().zip(&self.latency_buckets) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        for (dst, src) in s.batch_buckets.iter_mut().zip(&self.batch_buckets) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        s
+    }
+}
+
+/// Plain-number view of one worker — or, after [`Snapshot::merge`], of
+/// the whole pool.
+#[derive(Debug, Clone, Default)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub exec_us_total: u64,
+    pub latency_us_total: u64,
+    pub latency_us_max: u64,
+    pub batch_items_total: u64,
+    pub batch_items_sq_total: u64,
+    pub deadline_exceeded: u64,
+    pub exec_errors: u64,
+    latency_buckets: [u64; BUCKETS],
+    batch_buckets: [u64; BATCH_BUCKETS],
+}
+
+impl Snapshot {
+    pub fn merge(&mut self, other: &Snapshot) {
+        self.requests += other.requests;
+        self.batches += other.batches;
+        self.exec_us_total += other.exec_us_total;
+        self.latency_us_total += other.latency_us_total;
+        self.latency_us_max = self.latency_us_max.max(other.latency_us_max);
+        self.batch_items_total += other.batch_items_total;
+        self.batch_items_sq_total += other.batch_items_sq_total;
+        self.deadline_exceeded += other.deadline_exceeded;
+        self.exec_errors += other.exec_errors;
+        for (dst, src) in self.latency_buckets.iter_mut().zip(&other.latency_buckets) {
+            *dst += src;
+        }
+        for (dst, src) in self.batch_buckets.iter_mut().zip(&other.batch_buckets) {
+            *dst += src;
+        }
+    }
+
     pub fn mean_latency_us(&self) -> f64 {
-        let n = self.request_count();
-        if n == 0 {
+        if self.requests == 0 {
             return 0.0;
         }
-        self.latency_us_total.load(Ordering::Relaxed) as f64 / n as f64
+        self.latency_us_total as f64 / self.requests as f64
     }
 
     /// Approximate percentile from the exponential buckets (upper edge).
     pub fn latency_percentile_us(&self, p: f64) -> u64 {
-        let total: u64 = self
-            .latency_buckets
-            .iter()
-            .map(|b| b.load(Ordering::Relaxed))
-            .sum();
+        let total: u64 = self.latency_buckets.iter().sum();
         if total == 0 {
             return 0;
         }
@@ -64,7 +170,7 @@ impl Metrics {
         let mut acc = 0u64;
         let mut edge = BASE_US;
         for b in &self.latency_buckets {
-            acc += b.load(Ordering::Relaxed);
+            acc += b;
             if acc >= target {
                 return edge;
             }
@@ -73,29 +179,145 @@ impl Metrics {
         edge
     }
 
-    /// requests per batch on average — the batching win.
+    /// Mean requests fused per forward pass — the batching win. Every
+    /// batch counts once regardless of size.
     pub fn mean_batch(&self) -> f64 {
-        let b = self.batches.load(Ordering::Relaxed);
-        if b == 0 {
+        if self.batches == 0 {
             return 0.0;
         }
-        // batch_items_total counts each request's batch size; dividing by
-        // requests gives the request-weighted mean batch
-        let n = self.request_count();
-        self.batch_items_total.load(Ordering::Relaxed) as f64 / n.max(1) as f64
+        self.batch_items_total as f64 / self.batches as f64
     }
 
-    pub fn report(&self) -> String {
+    /// Mean batch size experienced by a random *request*. Weighted by
+    /// batch size (a 32-batch carries 32 requests), so it is >= the
+    /// per-batch mean; the gap measures batch-size skew.
+    pub fn mean_batch_weighted(&self) -> f64 {
+        if self.batch_items_total == 0 {
+            return 0.0;
+        }
+        self.batch_items_sq_total as f64 / self.batch_items_total as f64
+    }
+
+    /// `(upper_edge, count)` pairs for the non-empty batch-size buckets.
+    pub fn batch_histogram(&self) -> Vec<(usize, u64)> {
+        let mut out = Vec::new();
+        let mut edge = 1usize;
+        for (i, &c) in self.batch_buckets.iter().enumerate() {
+            if c > 0 {
+                out.push((edge, c));
+            }
+            if i + 1 < BATCH_BUCKETS {
+                edge *= 2;
+            }
+        }
+        out
+    }
+
+    pub fn report_line(&self) -> String {
         format!(
-            "requests {} | batches {} | mean batch {:.1} | latency mean {:.2} ms p50 ~{:.2} ms p99 ~{:.2} ms max {:.2} ms",
-            self.request_count(),
-            self.batches.load(Ordering::Relaxed),
+            "requests {} | batches {} | mean batch {:.1} (weighted {:.1}) | \
+             latency mean {:.2} ms p50 ~{:.2} ms p99 ~{:.2} ms max {:.2} ms | \
+             deadline-exceeded {} | exec errors {}",
+            self.requests,
+            self.batches,
             self.mean_batch(),
+            self.mean_batch_weighted(),
             self.mean_latency_us() / 1e3,
             self.latency_percentile_us(0.5) as f64 / 1e3,
             self.latency_percentile_us(0.99) as f64 / 1e3,
-            self.latency_us_max.load(Ordering::Relaxed) as f64 / 1e3,
+            self.latency_us_max as f64 / 1e3,
+            self.deadline_exceeded,
+            self.exec_errors,
         )
+    }
+}
+
+/// Pool-level metrics: one [`Metrics`] shard per worker, router-side
+/// admission counters, and shared queue-depth gauges.
+#[derive(Debug)]
+pub struct PoolMetrics {
+    workers: Vec<Arc<Metrics>>,
+    /// Queued + in-flight jobs per worker; the router increments on
+    /// dispatch, the worker decrements on response. Doubles as the
+    /// least-outstanding-work dispatch key.
+    outstanding: Vec<Arc<AtomicUsize>>,
+    pub dispatched: AtomicU64,
+    pub rejected: AtomicU64,
+}
+
+impl PoolMetrics {
+    pub fn new(n: usize) -> PoolMetrics {
+        PoolMetrics {
+            workers: (0..n).map(|_| Arc::new(Metrics::default())).collect(),
+            outstanding: (0..n).map(|_| Arc::new(AtomicUsize::new(0))).collect(),
+            dispatched: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+        }
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn worker(&self, id: usize) -> &Arc<Metrics> {
+        &self.workers[id]
+    }
+
+    pub fn outstanding_handle(&self, id: usize) -> Arc<AtomicUsize> {
+        self.outstanding[id].clone()
+    }
+
+    /// Queue-depth gauge: jobs admitted but not yet answered, pool-wide.
+    pub fn queue_depth(&self) -> usize {
+        self.outstanding.iter().map(|o| o.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn queue_depth_of(&self, id: usize) -> usize {
+        self.outstanding[id].load(Ordering::Relaxed)
+    }
+
+    pub fn dispatched_count(&self) -> u64 {
+        self.dispatched.load(Ordering::Relaxed)
+    }
+
+    pub fn rejected_count(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Lock-free summed view across all workers.
+    pub fn aggregate(&self) -> Snapshot {
+        let mut agg = Snapshot::default();
+        for w in &self.workers {
+            agg.merge(&w.snapshot());
+        }
+        agg
+    }
+
+    pub fn request_count(&self) -> u64 {
+        self.workers.iter().map(|w| w.request_count()).sum()
+    }
+
+    /// Aggregate per-batch mean (see [`Snapshot::mean_batch`]).
+    pub fn mean_batch(&self) -> f64 {
+        self.aggregate().mean_batch()
+    }
+
+    pub fn report(&self) -> String {
+        let agg = self.aggregate();
+        let mut out = format!(
+            "pool[{} workers]: {} | queue depth {} | dispatched {} | rejected {}",
+            self.workers.len(),
+            agg.report_line(),
+            self.queue_depth(),
+            self.dispatched_count(),
+            self.rejected_count(),
+        );
+        if self.workers.len() > 1 {
+            for (i, w) in self.workers.iter().enumerate() {
+                out.push_str(&format!("\n  worker {i}: {}", w.snapshot().report_line()));
+            }
+        }
+        out
     }
 }
 
@@ -107,23 +329,85 @@ mod tests {
     fn counters_and_percentiles() {
         let m = Metrics::default();
         for i in 1..=100u64 {
-            m.record(Duration::from_micros(i * 100), 50, 4);
+            m.record_request(Duration::from_micros(i * 100));
         }
-        assert_eq!(m.request_count(), 100);
-        assert_eq!(m.mean_batch(), 4.0);
-        let p50 = m.latency_percentile_us(0.5);
-        let p99 = m.latency_percentile_us(0.99);
+        for _ in 0..25 {
+            m.record_batch(4, 50);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.requests, 100);
+        assert_eq!(s.batches, 25);
+        assert_eq!(s.mean_batch(), 4.0);
+        assert_eq!(s.exec_us_total, 25 * 50);
+        let p50 = s.latency_percentile_us(0.5);
+        let p99 = s.latency_percentile_us(0.99);
         assert!(p50 >= 4_000 && p50 <= 8_192, "p50 {p50}");
         assert!(p99 >= p50);
-        assert!(m.mean_latency_us() > 4_000.0);
-        assert_eq!(m.latency_us_max.load(Ordering::Relaxed), 10_000);
+        assert!(s.mean_latency_us() > 4_000.0);
+        assert_eq!(s.latency_us_max, 10_000);
+    }
+
+    #[test]
+    fn mean_batch_weighted_vs_unweighted() {
+        let m = Metrics::default();
+        // one lonely request, one full batch of 9
+        m.record_batch(1, 10);
+        m.record_batch(9, 10);
+        let s = m.snapshot();
+        // per-batch mean: (1 + 9) / 2
+        assert_eq!(s.mean_batch(), 5.0);
+        // per-request mean: (1*1 + 9*9) / 10 — most requests rode the 9
+        assert!((s.mean_batch_weighted() - 8.2).abs() < 1e-9);
+        assert!(s.mean_batch_weighted() > s.mean_batch());
+        // uniform batches: the two means agree
+        let u = Metrics::default();
+        u.record_batch(4, 1);
+        u.record_batch(4, 1);
+        let us = u.snapshot();
+        assert_eq!(us.mean_batch(), 4.0);
+        assert_eq!(us.mean_batch_weighted(), 4.0);
+    }
+
+    #[test]
+    fn batch_histogram_edges() {
+        let m = Metrics::default();
+        m.record_batch(1, 0);
+        m.record_batch(2, 0);
+        m.record_batch(3, 0);
+        m.record_batch(32, 0);
+        let h = m.snapshot().batch_histogram();
+        assert_eq!(h, vec![(1, 1), (2, 1), (4, 1), (32, 1)]);
     }
 
     #[test]
     fn empty_metrics_are_zero() {
-        let m = Metrics::default();
-        assert_eq!(m.mean_latency_us(), 0.0);
-        assert_eq!(m.latency_percentile_us(0.99), 0);
-        assert_eq!(m.mean_batch(), 0.0);
+        let s = Metrics::default().snapshot();
+        assert_eq!(s.mean_latency_us(), 0.0);
+        assert_eq!(s.latency_percentile_us(0.99), 0);
+        assert_eq!(s.mean_batch(), 0.0);
+        assert_eq!(s.mean_batch_weighted(), 0.0);
+    }
+
+    #[test]
+    fn pool_aggregates_across_workers() {
+        let pool = PoolMetrics::new(2);
+        pool.worker(0).record_request(Duration::from_micros(100));
+        pool.worker(0).record_batch(1, 10);
+        pool.worker(1).record_request(Duration::from_micros(300));
+        pool.worker(1).record_request(Duration::from_micros(300));
+        pool.worker(1).record_batch(2, 20);
+        pool.worker(1).record_deadline_exceeded();
+        let agg = pool.aggregate();
+        assert_eq!(agg.requests, 3);
+        assert_eq!(agg.batches, 2);
+        assert_eq!(agg.deadline_exceeded, 1);
+        assert_eq!(agg.latency_us_max, 300);
+        assert_eq!(pool.request_count(), 3);
+        // queue-depth gauge is shared with the router via handles
+        let h = pool.outstanding_handle(1);
+        h.fetch_add(5, Ordering::Relaxed);
+        assert_eq!(pool.queue_depth(), 5);
+        assert_eq!(pool.queue_depth_of(0), 0);
+        assert!(pool.report().contains("queue depth 5"));
     }
 }

@@ -1,122 +1,272 @@
-//! Dynamic-batching inference server over a quantized model.
+//! Sharded multi-worker inference engine pool.
 //!
 //! The OCS paper's deployment story (§3.5) is that an OCS-quantized
 //! model is a *plain* model — servable on commodity hardware with no
 //! custom ops beyond channel duplication, which lives inside the AOT
-//! artifact. This module is the L3 serving loop proving that: a
-//! vLLM-router-flavoured request queue + dynamic batcher + PJRT executor.
+//! artifact. This module proves it at pool scale.
 //!
-//! PJRT handles are not `Send`, so the executor thread *owns* the engine
-//! and prepared model; clients talk over channels. Batches are formed by
-//! draining the queue up to `max_batch` or until `max_wait` expires,
-//! then padded up to the nearest compiled fwd artifact batch size.
+//! ## Shape
+//!
+//! ```text
+//!             Client::infer ──┐
+//!             Client::infer ──┤  least-outstanding-work dispatch,
+//!             Client::infer ──┤  bounded queues, reject-not-block
+//!                             ▼
+//!                   ┌──── Router ────┐
+//!              try_send          try_send
+//!                   ▼                ▼
+//!          [queue cap=Q]      [queue cap=Q]        ... × workers
+//!            worker 0           worker 1
+//!          Engine+pipeline    Engine+pipeline      (one per thread)
+//!          dynamic batcher    dynamic batcher
+//! ```
+//!
+//! PJRT handles are `!Send`, so scaling *cannot* share one engine across
+//! threads: the only correct shape is shard-per-thread, each worker
+//! owning its whole stack (engine, prepared pipeline, executable cache).
+//! Workers build those stacks concurrently at startup; artifact text is
+//! read once per process via [`crate::runtime::HloTextCache`].
+//!
+//! ## Admission control and deadlines
+//!
+//! Dispatch walks workers in ascending outstanding-work order and
+//! `try_send`s into the first bounded queue with room. When every queue
+//! is full the request is **rejected immediately** — clients get an
+//! error, never a silent hang. A configured deadline
+//! ([`ServeConfig::deadline`]) is checked when a job is pulled into a
+//! batch: expired jobs are answered with an error instead of wasting a
+//! forward pass.
+//!
+//! ## Shutdown
+//!
+//! [`Server::shutdown`] flips the stop flag: the router rejects new
+//! work, each worker drains everything already queued (every admitted
+//! job gets a response), then exits; `shutdown` joins them all.
 
+pub mod backend;
 pub mod metrics;
 
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
-use crate::eval::pad_rows;
-use crate::model::store::WeightStore;
-use crate::model::ModelSpec;
-use crate::pipeline::{self, QuantConfig};
-use crate::runtime::{Engine, Input, Inputs};
+use crate::pipeline::QuantConfig;
 use crate::tensor::TensorF;
+use crate::util::json;
 
-pub use metrics::Metrics;
+use backend::{EngineFactory, PjrtFactory, SimFactory, WorkerEngine};
 
-/// Server tuning knobs.
-#[derive(Debug, Clone)]
-pub struct ServeConfig {
-    pub max_batch: usize,
-    pub max_wait: Duration,
-    pub queue_cap: usize,
-}
+pub use crate::pipeline::ServeConfig;
+pub use metrics::{Metrics, PoolMetrics, Snapshot};
 
-impl Default for ServeConfig {
-    fn default() -> Self {
-        ServeConfig {
-            max_batch: 32,
-            max_wait: Duration::from_millis(2),
-            queue_cap: 1024,
-        }
-    }
-}
-
+/// One queued inference request.
 struct Job {
     /// (1, H, W, C) image.
     x: TensorF,
     enqueued: Instant,
+    deadline: Option<Instant>,
     resp: SyncSender<Result<Vec<f32>>>,
 }
 
-/// Client handle (cheaply cloneable).
+/// One worker's intake, as seen by the router.
+struct Shard {
+    tx: SyncSender<Job>,
+    /// Queued + in-flight gauge (shared with [`PoolMetrics`]).
+    outstanding: Arc<AtomicUsize>,
+}
+
+/// Shared dispatch state: admission control + shard selection.
+struct Router {
+    shards: Vec<Shard>,
+    queue_cap: usize,
+    deadline: Option<Duration>,
+    stop: Arc<AtomicBool>,
+    metrics: Arc<PoolMetrics>,
+}
+
+impl Router {
+    /// Admit a request: pick the least-loaded shard with queue room and
+    /// hand back the response channel. Errors instead of blocking when
+    /// the pool is stopping or every queue is full.
+    fn dispatch(&self, x: TensorF) -> Result<Receiver<Result<Vec<f32>>>> {
+        if self.stop.load(Ordering::SeqCst) {
+            bail!("server is shutting down");
+        }
+        let (tx, rx) = sync_channel(1);
+        let now = Instant::now();
+        let mut job = Job {
+            x,
+            enqueued: now,
+            deadline: self.deadline.map(|d| now + d),
+            resp: tx,
+        };
+        // least-outstanding-work dispatch, allocation-free on the hot
+        // path: start at the least-loaded shard, walk the rest as
+        // fallback when its queue is full
+        let n = self.shards.len();
+        let mut start = 0usize;
+        let mut least = usize::MAX;
+        for (i, shard) in self.shards.iter().enumerate() {
+            let o = shard.outstanding.load(Ordering::Relaxed);
+            if o < least {
+                least = o;
+                start = i;
+            }
+        }
+        for offset in 0..n {
+            let i = (start + offset) % n;
+            let shard = &self.shards[i];
+            // count before send: the worker may answer (and decrement)
+            // before try_send even returns
+            shard.outstanding.fetch_add(1, Ordering::Relaxed);
+            match shard.tx.try_send(job) {
+                Ok(()) => {
+                    self.metrics.dispatched.fetch_add(1, Ordering::Relaxed);
+                    return Ok(rx);
+                }
+                Err(TrySendError::Full(j)) | Err(TrySendError::Disconnected(j)) => {
+                    shard.outstanding.fetch_sub(1, Ordering::Relaxed);
+                    job = j;
+                }
+            }
+        }
+        self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+        bail!(
+            "server overloaded: all {} worker queues full (cap {} each)",
+            self.shards.len(),
+            self.queue_cap
+        )
+    }
+}
+
+/// Client handle (cheaply cloneable, shareable across threads).
 #[derive(Clone)]
 pub struct Client {
-    tx: SyncSender<Job>,
-    metrics: Arc<Metrics>,
+    router: Arc<Router>,
+    metrics: Arc<PoolMetrics>,
 }
 
 impl Client {
     /// Synchronous single-image inference; returns the logits row.
     pub fn infer(&self, x: TensorF) -> Result<Vec<f32>> {
-        let (tx, rx) = sync_channel(1);
-        let job = Job {
-            x,
-            enqueued: Instant::now(),
-            resp: tx,
-        };
-        self.tx.send(job).context("server is down")?;
+        let rx = self.router.dispatch(x)?;
         rx.recv().context("server dropped the request")?
     }
 
-    pub fn metrics(&self) -> &Metrics {
+    pub fn metrics(&self) -> &PoolMetrics {
         &self.metrics
     }
 }
 
-/// Running server: executor thread + client factory.
+/// Running pool: N worker threads + router + client factory.
 pub struct Server {
-    tx: Option<SyncSender<Job>>,
-    handle: Option<JoinHandle<Result<()>>>,
-    metrics: Arc<Metrics>,
-    stop: Arc<std::sync::atomic::AtomicBool>,
+    router: Arc<Router>,
+    handles: Vec<JoinHandle<()>>,
+    metrics: Arc<PoolMetrics>,
+    stop: Arc<AtomicBool>,
 }
 
 impl Server {
-    /// Build the whole stack inside the executor thread (engine, spec,
-    /// weights, quantization pipeline) and start serving.
+    /// Production entry point: PJRT engines over the AOT artifacts.
     pub fn start(
         artifacts_dir: &str,
         model: &str,
         quant: QuantConfig,
         cfg: ServeConfig,
     ) -> Result<Server> {
-        let (tx, rx) = sync_channel::<Job>(cfg.queue_cap);
-        let metrics = Arc::new(Metrics::default());
-        let m2 = metrics.clone();
-        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
-        let s2 = stop.clone();
-        let artifacts_dir = artifacts_dir.to_string();
-        let model = model.to_string();
-        // readiness gate: surface setup errors to the caller
-        let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
-        let handle = std::thread::Builder::new()
-            .name("ocs-executor".into())
-            .spawn(move || executor(&artifacts_dir, &model, quant, cfg, rx, m2, s2, ready_tx))
-            .context("spawn executor")?;
-        match ready_rx.recv() {
-            Ok(Ok(())) => {}
-            Ok(Err(e)) => return Err(e),
-            Err(_) => bail!("executor died during startup"),
+        let factory = Arc::new(PjrtFactory {
+            artifacts_dir: artifacts_dir.to_string(),
+            model: model.to_string(),
+            quant,
+            max_batch: cfg.max_batch,
+        });
+        Server::start_with(factory, cfg)
+    }
+
+    /// Start the pool over any backend (tests/CI use [`SimFactory`]).
+    ///
+    /// All workers build their engines concurrently; startup fails as a
+    /// whole (with every thread joined) if any worker fails to come up.
+    pub fn start_with(factory: Arc<dyn EngineFactory>, cfg: ServeConfig) -> Result<Server> {
+        cfg.validate()?;
+        let metrics = Arc::new(PoolMetrics::new(cfg.workers));
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut shards = Vec::with_capacity(cfg.workers);
+        let mut handles = Vec::with_capacity(cfg.workers);
+        let mut readies = Vec::with_capacity(cfg.workers);
+        for id in 0..cfg.workers {
+            let (tx, rx) = sync_channel::<Job>(cfg.queue_cap);
+            let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
+            let outstanding = metrics.outstanding_handle(id);
+            let worker_metrics = metrics.worker(id).clone();
+            let worker_outstanding = outstanding.clone();
+            let worker_factory = factory.clone();
+            let worker_stop = stop.clone();
+            let worker_cfg = cfg.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("ocs-worker-{id}"))
+                .spawn(move || {
+                    worker_loop(
+                        id,
+                        worker_factory,
+                        worker_cfg,
+                        rx,
+                        worker_metrics,
+                        worker_outstanding,
+                        worker_stop,
+                        ready_tx,
+                    )
+                })
+                .context("spawn worker thread")?;
+            shards.push(Shard { tx, outstanding });
+            handles.push(handle);
+            readies.push(ready_rx);
         }
+        // readiness gate: surface any worker's setup error to the caller
+        let mut first_err: Option<anyhow::Error> = None;
+        for (id, ready) in readies.into_iter().enumerate() {
+            let status = match ready.recv() {
+                Ok(Ok(())) => Ok(()),
+                Ok(Err(e)) => Err(e.context(format!("worker {id} setup"))),
+                Err(_) => Err(anyhow!("worker {id} died during startup")),
+            };
+            if let Err(e) = status {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            stop.store(true, Ordering::SeqCst);
+            drop(shards); // disconnect every queue
+            for h in handles {
+                let _ = h.join();
+            }
+            return Err(e);
+        }
+        crate::info!(
+            "engine pool up: {} × {} (queue cap {}/worker, max batch {}, deadline {:?})",
+            cfg.workers,
+            factory.label(),
+            cfg.queue_cap,
+            cfg.max_batch,
+            cfg.deadline
+        );
+        let router = Arc::new(Router {
+            shards,
+            queue_cap: cfg.queue_cap,
+            deadline: cfg.deadline,
+            stop: stop.clone(),
+            metrics: metrics.clone(),
+        });
         Ok(Server {
-            tx: Some(tx),
-            handle: Some(handle),
+            router,
+            handles,
             metrics,
             stop,
         })
@@ -124,23 +274,32 @@ impl Server {
 
     pub fn client(&self) -> Client {
         Client {
-            tx: self.tx.clone().expect("server running"),
+            router: self.router.clone(),
             metrics: self.metrics.clone(),
         }
     }
 
-    pub fn metrics(&self) -> &Metrics {
+    pub fn metrics(&self) -> &PoolMetrics {
         &self.metrics
     }
 
-    /// Graceful shutdown: stop accepting, drain, join the executor.
-    /// Safe even while `Client` handles are still alive — the executor
-    /// also watches a stop flag, not just channel disconnection.
+    pub fn worker_count(&self) -> usize {
+        self.metrics.worker_count()
+    }
+
+    /// Graceful shutdown: reject new work, drain every admitted job,
+    /// join all workers. Safe while `Client` handles are still alive —
+    /// workers watch the stop flag, not just channel disconnection.
     pub fn shutdown(mut self) -> Result<()> {
-        self.stop.store(true, std::sync::atomic::Ordering::SeqCst);
-        drop(self.tx.take());
-        if let Some(h) = self.handle.take() {
-            h.join().map_err(|_| anyhow::anyhow!("executor panicked"))??;
+        self.stop.store(true, Ordering::SeqCst);
+        let mut panicked = 0usize;
+        for h in self.handles.drain(..) {
+            if h.join().is_err() {
+                panicked += 1;
+            }
+        }
+        if panicked > 0 {
+            bail!("{panicked} worker(s) panicked");
         }
         Ok(())
     }
@@ -148,69 +307,45 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.stop.store(true, std::sync::atomic::Ordering::SeqCst);
-        drop(self.tx.take());
-        if let Some(h) = self.handle.take() {
+        self.stop.store(true, Ordering::SeqCst);
+        for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
 }
 
+/// One worker: build the engine on this thread, then batch-and-serve
+/// until stopped (draining the queue first) or disconnected.
 #[allow(clippy::too_many_arguments)]
-fn executor(
-    artifacts_dir: &str,
-    model: &str,
-    quant: QuantConfig,
+fn worker_loop(
+    id: usize,
+    factory: Arc<dyn EngineFactory>,
     cfg: ServeConfig,
     rx: Receiver<Job>,
     metrics: Arc<Metrics>,
-    stop: Arc<std::sync::atomic::AtomicBool>,
+    outstanding: Arc<AtomicUsize>,
+    stop: Arc<AtomicBool>,
     ready: SyncSender<Result<()>>,
-) -> Result<()> {
-    // full stack setup on this thread (PJRT handles are !Send)
-    let setup = (|| -> Result<_> {
-        let spec = ModelSpec::load_named(artifacts_dir, model)?;
-        if spec.is_lm() {
-            bail!("serving demo targets the CNN models");
-        }
-        let (ws, _) = WeightStore::load_best(&spec)?;
-        let engine = Engine::cpu()?;
-        let calib = if quant.a_bits.is_some() {
-            let calib_set = crate::train::data::synth_images(64, 929);
-            Some(crate::calib::calibrate(&engine, &spec, &ws, &calib_set.x, 32)?)
-        } else {
-            None
-        };
-        let prep = pipeline::prepare(&spec, &ws, calib.as_ref(), &quant)?;
-        let mut base: Inputs = Default::default();
-        prep.insert_inputs(&mut base);
-        // pre-compile every batch size we may route to
-        for b in spec.fwd_batches() {
-            if b <= cfg.max_batch.max(1) * 2 {
-                engine.load(spec.fwd_for_batch(b)?)?;
-            }
-        }
-        Ok((spec, engine, base))
-    })();
-    let (spec, engine, mut base) = match setup {
-        Ok(v) => {
+) {
+    let mut engine = match factory.build(id) {
+        Ok(e) => {
             let _ = ready.send(Ok(()));
-            v
+            e
         }
         Err(e) => {
             let _ = ready.send(Err(e));
-            return Ok(());
+            return;
         }
     };
-
-    crate::info!("serving {model} (max_batch {})", cfg.max_batch);
     loop {
         // wait for the first job of a batch; wake periodically to honour
-        // the stop flag even while Client handles keep the channel open
+        // the stop flag even while clients keep the channel open. Jobs
+        // still queued at stop are returned by recv_timeout before it
+        // ever times out, so the queue fully drains first.
         let first = match rx.recv_timeout(Duration::from_millis(50)) {
             Ok(j) => j,
             Err(RecvTimeoutError::Timeout) => {
-                if stop.load(std::sync::atomic::Ordering::SeqCst) {
+                if stop.load(Ordering::SeqCst) {
                     break;
                 }
                 continue;
@@ -218,97 +353,280 @@ fn executor(
             Err(RecvTimeoutError::Disconnected) => break, // all clients gone
         };
         let mut jobs = vec![first];
-        let deadline = Instant::now() + cfg.max_wait;
+        let top_up_until = Instant::now() + cfg.max_wait;
         while jobs.len() < cfg.max_batch {
             let now = Instant::now();
-            if now >= deadline {
+            if now >= top_up_until {
                 break;
             }
-            match rx.recv_timeout(deadline - now) {
+            match rx.recv_timeout(top_up_until - now) {
                 Ok(j) => jobs.push(j),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
+                Err(_) => break,
             }
         }
-        let n = jobs.len();
-        let art = spec.fwd_for_batch(n)?;
-        let exe = engine.load(art)?;
-        // assemble (n, H, W, C) then pad to the artifact batch
-        let mut data = Vec::with_capacity(n * jobs[0].x.len());
-        for j in &jobs {
-            data.extend_from_slice(j.x.data());
-        }
-        let mut shape = jobs[0].x.shape().to_vec();
-        shape[0] = n;
-        let xb = TensorF::from_vec(&shape, data)?;
-        let xb = if n == art.batch {
-            xb
-        } else {
-            pad_rows(&xb, art.batch)?
-        };
-        base.insert("x".into(), Input::F32(xb));
-        let t0 = Instant::now();
-        let result = exe.execute(&base);
-        let exec_us = t0.elapsed().as_micros() as u64;
-        match result {
-            Ok(out) => {
-                let logits = out.get("logits")?;
-                let classes = logits.shape()[1];
-                for (row, job) in jobs.into_iter().enumerate() {
-                    let slice =
-                        logits.data()[row * classes..(row + 1) * classes].to_vec();
-                    metrics.record(job.enqueued.elapsed(), exec_us, n);
-                    let _ = job.resp.send(Ok(slice));
-                }
-            }
-            Err(e) => {
-                let msg = format!("{e:#}");
-                for job in jobs {
-                    let _ = job.resp.send(Err(anyhow::anyhow!(msg.clone())));
-                }
-            }
-        }
+        run_batch(engine.as_mut(), jobs, &metrics, &outstanding);
     }
-    crate::info!("executor drained, shutting down");
-    Ok(())
+    // Final sweep: a dispatch that passed its stop check can still land
+    // a job between our last empty recv and the channel teardown below;
+    // answer it rather than dropping it with the queue.
+    while let Ok(job) = rx.try_recv() {
+        outstanding.fetch_sub(1, Ordering::Relaxed);
+        let _ = job.resp.send(Err(anyhow!("server is shutting down")));
+    }
+    crate::debugln!("worker {id}: drained, exiting");
 }
 
-/// End-to-end self-test used by `ocs serve`: spin the server, drive it
-/// from several client threads, print the latency/throughput report.
-pub fn self_test(artifacts_dir: &str, model: &str, quant: QuantConfig, requests: usize) -> Result<()> {
-    let server = Server::start(artifacts_dir, model, quant, ServeConfig::default())?;
+/// Answer expired jobs, execute the rest as one fused batch, respond to
+/// every job, and keep the outstanding gauge exact.
+fn run_batch(
+    engine: &mut dyn WorkerEngine,
+    jobs: Vec<Job>,
+    metrics: &Metrics,
+    outstanding: &AtomicUsize,
+) {
+    let now = Instant::now();
+    let mut live = Vec::with_capacity(jobs.len());
+    for job in jobs {
+        match job.deadline {
+            Some(d) if now >= d => {
+                metrics.record_deadline_exceeded();
+                let waited_ms = job.enqueued.elapsed().as_millis();
+                let err = anyhow!("deadline exceeded after {waited_ms} ms in queue");
+                // gauge drops before the send: the client unblocks on
+                // the send, and must never observe a stale depth
+                outstanding.fetch_sub(1, Ordering::Relaxed);
+                let _ = job.resp.send(Err(err));
+            }
+            _ => live.push(job),
+        }
+    }
+    if live.is_empty() {
+        return;
+    }
+    let n = live.len();
+    let result = (|| -> Result<TensorF> {
+        for j in &live[1..] {
+            if j.x.shape() != live[0].x.shape() {
+                bail!(
+                    "mixed input shapes in one batch: {:?} vs {:?}",
+                    j.x.shape(),
+                    live[0].x.shape()
+                );
+            }
+        }
+        let mut data = Vec::with_capacity(n * live[0].x.len());
+        for j in &live {
+            data.extend_from_slice(j.x.data());
+        }
+        let mut shape = live[0].x.shape().to_vec();
+        shape[0] = n;
+        let xb = TensorF::from_vec(&shape, data)?;
+        let t0 = Instant::now();
+        let out = engine.infer(&xb)?;
+        metrics.record_batch(n, t0.elapsed().as_micros() as u64);
+        Ok(out)
+    })();
+    match result {
+        Ok(logits) => {
+            let classes = logits.shape().get(1).copied().unwrap_or(0);
+            for (row, job) in live.into_iter().enumerate() {
+                let resp = if classes == 0 || (row + 1) * classes > logits.len() {
+                    Err(anyhow!("engine returned too few logit rows"))
+                } else {
+                    Ok(logits.data()[row * classes..(row + 1) * classes].to_vec())
+                };
+                if resp.is_ok() {
+                    metrics.record_request(job.enqueued.elapsed());
+                }
+                outstanding.fetch_sub(1, Ordering::Relaxed);
+                let _ = job.resp.send(resp);
+            }
+        }
+        Err(e) => {
+            metrics.record_exec_error();
+            let msg = format!("{e:#}");
+            for job in live {
+                outstanding.fetch_sub(1, Ordering::Relaxed);
+                let _ = job.resp.send(Err(anyhow!(msg.clone())));
+            }
+        }
+    }
+}
+
+/// One worker-sweep measurement (a row of `BENCH_serving.json`).
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub workers: usize,
+    pub requests: usize,
+    pub ok: usize,
+    pub errors: usize,
+    pub secs: f64,
+    pub rps: f64,
+    pub mean_latency_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub mean_batch: f64,
+    pub rejected: u64,
+    pub deadline_exceeded: u64,
+}
+
+/// Start a pool at `workers` shards, drive `requests` synthetic-image
+/// requests through closed-loop clients, and collect the measurements.
+pub fn run_point(
+    factory: Arc<dyn EngineFactory>,
+    cfg: &ServeConfig,
+    workers: usize,
+    requests: usize,
+) -> Result<SweepPoint> {
+    let server = Server::start_with(factory, cfg.clone().with_workers(workers))?;
     let dataset = crate::train::data::synth_images(256, 411);
     let row = dataset.x.len() / dataset.len();
+    let mut req_shape = dataset.x.shape().to_vec();
+    req_shape[0] = 1;
+    let xdata = Arc::new(dataset.x.data().to_vec());
+    let clients = (workers * 4).clamp(4, 32);
+    let per = (requests / clients).max(1);
     let t0 = Instant::now();
-    let clients = 4;
-    let mut handles = Vec::new();
+    let mut client_threads = Vec::new();
     for c in 0..clients {
         let client = server.client();
-        let per = requests / clients;
-        let xdata = dataset.x.data().to_vec();
-        let shape = [1usize, 16, 16, 3];
-        handles.push(std::thread::spawn(move || -> Result<usize> {
-            let mut ok = 0;
+        let xdata = xdata.clone();
+        let shape = req_shape.clone();
+        client_threads.push(std::thread::spawn(move || -> (usize, usize) {
+            let mut ok = 0usize;
+            let mut errors = 0usize;
             for i in 0..per {
                 let idx = (c * per + i) % 256;
-                let x = TensorF::from_vec(&shape, xdata[idx * row..(idx + 1) * row].to_vec())?;
-                let logits = client.infer(x)?;
-                if logits.len() == 10 {
-                    ok += 1;
+                let x = TensorF::from_vec(&shape, xdata[idx * row..(idx + 1) * row].to_vec());
+                match x.map_err(anyhow::Error::from).and_then(|x| client.infer(x)) {
+                    Ok(logits) if !logits.is_empty() => ok += 1,
+                    _ => errors += 1,
                 }
             }
-            Ok(ok)
+            (ok, errors)
         }));
     }
-    let mut ok = 0;
-    for h in handles {
-        ok += h.join().map_err(|_| anyhow::anyhow!("client panicked"))??;
+    let mut ok = 0usize;
+    let mut errors = 0usize;
+    for h in client_threads {
+        let (o, e) = h.join().map_err(|_| anyhow!("client thread panicked"))?;
+        ok += o;
+        errors += e;
     }
     let secs = t0.elapsed().as_secs_f64();
+    let agg = server.metrics().aggregate();
+    let point = SweepPoint {
+        workers,
+        requests: clients * per,
+        ok,
+        errors,
+        secs,
+        rps: ok as f64 / secs.max(1e-9),
+        mean_latency_ms: agg.mean_latency_us() / 1e3,
+        p50_ms: agg.latency_percentile_us(0.5) as f64 / 1e3,
+        p99_ms: agg.latency_percentile_us(0.99) as f64 / 1e3,
+        mean_batch: agg.mean_batch(),
+        rejected: server.metrics().rejected_count(),
+        deadline_exceeded: agg.deadline_exceeded,
+    };
     println!("{}", server.metrics().report());
-    println!(
-        "self-test: {ok}/{requests} ok in {secs:.2}s = {:.0} req/s",
-        ok as f64 / secs
-    );
-    server.shutdown()
+    server.shutdown()?;
+    Ok(point)
+}
+
+/// Serialize sweep results in the repo's BENCH json shape.
+pub fn sweep_json(backend_label: &str, points: &[SweepPoint]) -> String {
+    json::obj(vec![
+        ("bench", json::s("serving")),
+        ("backend", json::s(backend_label)),
+        (
+            "sweep",
+            json::arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        json::obj(vec![
+                            ("workers", json::num(p.workers as f64)),
+                            ("requests", json::num(p.requests as f64)),
+                            ("ok", json::num(p.ok as f64)),
+                            ("errors", json::num(p.errors as f64)),
+                            ("secs", json::num(p.secs)),
+                            ("rps", json::num(p.rps)),
+                            ("mean_latency_ms", json::num(p.mean_latency_ms)),
+                            ("p50_ms", json::num(p.p50_ms)),
+                            ("p99_ms", json::num(p.p99_ms)),
+                            ("mean_batch", json::num(p.mean_batch)),
+                            ("rejected", json::num(p.rejected as f64)),
+                            ("deadline_exceeded", json::num(p.deadline_exceeded as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+    .to_string()
+}
+
+/// Drive a worker sweep over any backend; prints one line per point and
+/// optionally writes `BENCH_serving.json`-style output.
+pub fn self_test_with(
+    factory: Arc<dyn EngineFactory>,
+    cfg: &ServeConfig,
+    requests: usize,
+    sweep: &[usize],
+    json_out: Option<&Path>,
+) -> Result<Vec<SweepPoint>> {
+    let sweep: Vec<usize> = if sweep.is_empty() {
+        vec![cfg.workers]
+    } else {
+        sweep.to_vec()
+    };
+    let label = factory.label();
+    let mut points = Vec::with_capacity(sweep.len());
+    for &workers in &sweep {
+        let p = run_point(factory.clone(), cfg, workers, requests)?;
+        println!(
+            "self-test[workers={workers}]: {}/{} ok in {:.2}s = {:.0} req/s \
+             (p50 {:.2} ms, p99 {:.2} ms, mean batch {:.1})",
+            p.ok, p.requests, p.secs, p.rps, p.p50_ms, p.p99_ms, p.mean_batch
+        );
+        points.push(p);
+    }
+    if let Some(path) = json_out {
+        std::fs::write(path, sweep_json(&label, &points))
+            .with_context(|| format!("write {}", path.display()))?;
+        println!("wrote {}", path.display());
+    }
+    Ok(points)
+}
+
+/// End-to-end self-test over the real PJRT stack (used by `ocs serve`).
+pub fn self_test(
+    artifacts_dir: &str,
+    model: &str,
+    quant: QuantConfig,
+    requests: usize,
+    cfg: &ServeConfig,
+    sweep: &[usize],
+    json_out: Option<&Path>,
+) -> Result<()> {
+    let factory = Arc::new(PjrtFactory {
+        artifacts_dir: artifacts_dir.to_string(),
+        model: model.to_string(),
+        quant,
+        max_batch: cfg.max_batch,
+    });
+    self_test_with(factory, cfg, requests, sweep, json_out).map(|_| ())
+}
+
+/// Self-test over the synthetic backend — no artifacts or PJRT needed
+/// (this is what CI's serving smoke job runs).
+pub fn self_test_sim(
+    requests: usize,
+    cfg: &ServeConfig,
+    sweep: &[usize],
+    json_out: Option<&Path>,
+) -> Result<()> {
+    let factory = Arc::new(SimFactory::default());
+    self_test_with(factory, cfg, requests, sweep, json_out).map(|_| ())
 }

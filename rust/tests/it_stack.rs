@@ -219,9 +219,11 @@ fn serving_matches_direct_execution() {
         "minivgg",
         QuantConfig::float(),
         ServeConfig {
+            workers: 1,
             max_batch: 1,
             max_wait: std::time::Duration::from_millis(1),
             queue_cap: 16,
+            deadline: None,
         },
     )
     .unwrap();
