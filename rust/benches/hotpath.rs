@@ -1,0 +1,502 @@
+//! Rebar-style hot-path benchmark harness for the quantization compute
+//! kernels, tracking the serial-vs-parallel perf trajectory PR over PR.
+//!
+//! Four tracked hot paths, each measured at fixed shapes against the
+//! pre-kernels serial implementation (kept verbatim in [`baseline`]):
+//!
+//! * `calib_stats`    — per-layer calibration statistics over a batch set
+//! * `perchan_quant`  — per-output-channel threshold search + fake-quant
+//! * `kl_sweep`       — the KL clip-threshold sweep (stride 4 vs stride 1)
+//! * `ocs_transform`  — greedy weight-OCS splitting (fused vs generic ops)
+//!
+//! Before timing, every fused/parallel variant is checked bit-identical
+//! to its serial reference; on machines with 4+ threads the harness
+//! then *asserts* the parallel per-channel quantizer beats the pre-PR
+//! serial path by >= 2x (the acceptance bar). `--no-assert` or
+//! `OCS_BENCH_NO_ASSERT=1` downgrades assertions to warnings.
+//!
+//! Run:  cargo bench --bench hotpath [-- <filter>] [--shapes small|full]
+//!       [--json PATH] [--no-assert]
+//! Env:  OCS_BENCH_QUICK=1 (short runs), OCS_BENCH_THREADS=1,2,4
+//!
+//! `--json` writes `BENCH_quant.json` (same record style as
+//! `BENCH_serving.json`); CI uploads it as an artifact.
+
+use std::path::PathBuf;
+
+use ocs::bench_support::{quant_json, CaseRecord, Runner};
+use ocs::clip::ClipMethod;
+use ocs::kernels::pool;
+use ocs::kernels::stats as kstats;
+use ocs::ocs::SplitMode;
+use ocs::quant::channelwise::fake_quant_per_channel_with;
+use ocs::quant::QuantSpec;
+use ocs::stats::Histogram;
+use ocs::tensor::TensorF;
+use ocs::util::rng::Rng;
+
+/// The pre-kernels implementations, kept verbatim as the fixed baseline
+/// every future PR is measured against (rebar's "defined rival").
+mod baseline {
+    use ocs::clip::ClipMethod;
+    use ocs::ocs::split::split_value;
+    use ocs::ocs::{identity_hooks, OcsHooks, SplitMode};
+    use ocs::quant::{fake_quant_slice, QuantSpec};
+    use ocs::stats::Histogram;
+    use ocs::tensor::TensorF;
+
+    /// Pre-PR per-channel quantizer: materializes an `axis_slice` Vec
+    /// per channel, builds a 512-bin histogram on the copy, quantizes
+    /// channel-by-channel on one thread.
+    pub fn fake_quant_per_channel(
+        w: &TensorF,
+        cout_axis: usize,
+        spec: QuantSpec,
+        clip: ClipMethod,
+    ) -> (TensorF, Vec<f32>) {
+        let (outer, alen, inner) = w.axis_geometry(cout_axis).expect("axis");
+        let mut out = w.clone();
+        let mut thresholds = Vec::with_capacity(alen);
+        let qmax = spec.qmax();
+        for c in 0..alen {
+            let slice = w.axis_slice(cout_axis, c).expect("channel");
+            let hist = Histogram::from_slice(&slice, 512);
+            let t = clip.threshold(&hist, spec);
+            thresholds.push(t);
+            let delta = spec.delta(t.max(1e-12));
+            let data = out.data_mut();
+            for o in 0..outer {
+                let base = (o * alen + c) * inner;
+                fake_quant_slice(&mut data[base..base + inner], delta, qmax);
+            }
+        }
+        (out, thresholds)
+    }
+
+    /// Pre-PR calibration statistics: streaming histogram sweep, then a
+    /// channel-max sweep, then a modulo-indexed outlier-count sweep.
+    pub fn layer_stats(batches: &[TensorF], pct: f64) -> (Histogram, Vec<f32>, Vec<u64>) {
+        let mut hist = Histogram::new(2048, 1.0);
+        for b in batches {
+            hist.observe_all(b.data());
+        }
+        let thr = hist.percentile_abs(pct);
+        let c = *batches[0].shape().last().unwrap();
+        let mut chmax = vec![0.0f32; c];
+        let mut counts = vec![0u64; c];
+        for b in batches {
+            let axis = b.rank() - 1;
+            for (m, cm) in chmax.iter_mut().zip(b.max_abs_per_axis(axis).unwrap()) {
+                *m = m.max(cm);
+            }
+            for (i, &v) in b.data().iter().enumerate() {
+                if v.abs() > thr {
+                    counts[i % c] += 1;
+                }
+            }
+        }
+        (hist, chmax, counts)
+    }
+
+    /// Pre-PR weight OCS: generic tensor ops per split (copy channel,
+    /// rewrite channel, recompute two channel maxima — four sweeps).
+    pub fn weight_ocs_generic(
+        w: &TensorF,
+        cin_axis: usize,
+        cin_pad: usize,
+        n_splits: usize,
+        mode: SplitMode,
+        delta: f32,
+    ) -> OcsHooks {
+        let mut hooks = identity_hooks(w, cin_axis, cin_pad).unwrap();
+        let mut maxes: Vec<f32> = (0..hooks.active)
+            .map(|i| hooks.w_expanded.axis_max_abs(cin_axis, i).unwrap())
+            .collect();
+        for _ in 0..n_splits {
+            if hooks.active >= cin_pad {
+                break;
+            }
+            let (src, _) = maxes
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .expect("at least one channel");
+            let dst = hooks.active;
+            hooks
+                .w_expanded
+                .axis_copy_with(cin_axis, src, dst, |v| split_value(v, delta, mode).1)
+                .unwrap();
+            hooks
+                .w_expanded
+                .axis_map_mut(cin_axis, src, |v| *v = split_value(*v, delta, mode).0)
+                .unwrap();
+            hooks.idx.data_mut()[dst] = hooks.idx.data()[src];
+            hooks.dscale.data_mut()[dst] = hooks.dscale.data()[src];
+            hooks.dbias.data_mut()[dst] = hooks.dbias.data()[src];
+            maxes[src] = hooks.w_expanded.axis_max_abs(cin_axis, src).unwrap();
+            maxes.push(hooks.w_expanded.axis_max_abs(cin_axis, dst).unwrap());
+            hooks.splits.push((src, dst));
+            hooks.active += 1;
+        }
+        hooks
+    }
+}
+
+struct Opts {
+    filter: Option<String>,
+    shapes: String,
+    json: Option<PathBuf>,
+    no_assert: bool,
+}
+
+fn parse_opts() -> Opts {
+    let mut o = Opts {
+        filter: None,
+        shapes: "full".to_string(),
+        json: None,
+        no_assert: std::env::var("OCS_BENCH_NO_ASSERT").is_ok(),
+    };
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--json" => o.json = args.next().map(PathBuf::from),
+            "--shapes" => {
+                if let Some(v) = args.next() {
+                    o.shapes = v;
+                }
+            }
+            "--no-assert" => o.no_assert = true,
+            "--bench" | "bench" => {}
+            other if !other.starts_with("--") => o.filter = Some(other.to_string()),
+            _ => {}
+        }
+    }
+    o
+}
+
+fn thread_sweep() -> Vec<usize> {
+    let avail = pool::available();
+    let requested: Vec<usize> = match std::env::var("OCS_BENCH_THREADS") {
+        Ok(list) => list
+            .split(',')
+            .filter_map(|s| s.trim().parse().ok())
+            .collect(),
+        Err(_) => vec![1, 2, 4, 8],
+    };
+    // dedup by actual participant count — asking for 8 threads on a
+    // 2-core box measures the same thing as asking for 2
+    let mut sweep = Vec::new();
+    for t in requested {
+        let actual = t.clamp(1, avail);
+        if !sweep.contains(&actual) {
+            sweep.push(actual);
+        }
+    }
+    if sweep.is_empty() {
+        sweep.push(1);
+    }
+    sweep.sort_unstable();
+    sweep
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn record(
+    cases: &mut Vec<CaseRecord>,
+    name: &str,
+    shape: String,
+    threads: usize,
+    mean_ns: f64,
+    items: f64,
+    serial_mean_ns: f64,
+) {
+    let speedup = if mean_ns > 0.0 {
+        serial_mean_ns / mean_ns
+    } else {
+        0.0
+    };
+    cases.push(CaseRecord {
+        name: name.to_string(),
+        shape,
+        threads,
+        mean_ns,
+        melems_per_s: items / (mean_ns / 1e9) / 1e6,
+        speedup_vs_serial: speedup,
+    });
+}
+
+fn main() {
+    let opts = parse_opts();
+    let mut r = Runner::with_filter(opts.filter.clone());
+    let sweep = thread_sweep();
+    let avail = pool::available();
+    let mut cases: Vec<CaseRecord> = Vec::new();
+    println!(
+        "hot-path harness: shapes={} threads available={} sweep={:?}",
+        opts.shapes, avail, sweep
+    );
+
+    let small = opts.shapes == "small";
+    let spec = QuantSpec::new(4);
+    let clip = ClipMethod::Mse;
+
+    // ---- per-channel quantization --------------------------------------
+    // acceptance shape: >= 256 output channels
+    let perchan_shapes: Vec<(usize, usize)> = if small {
+        vec![(256, 256)]
+    } else {
+        vec![(256, 1024), (512, 768)]
+    };
+    // best parallel speedup vs the pre-PR serial path, per shape
+    let mut perchan_best: Option<(String, usize, f64)> = None;
+    let mut perchan_vs_t1_best: f64 = 0.0;
+    for &(c, k) in &perchan_shapes {
+        let mut rng = Rng::new(7);
+        let mut data = rng.normal_vec(c * k);
+        for i in 0..k {
+            data[3 * k + i] *= 8.0; // a hot channel, like real weights
+        }
+        let w = TensorF::from_vec(&[c, k], data).unwrap();
+        let shape = format!("{c}x{k}");
+        let items = (c * k) as f64;
+
+        // correctness first: fused serial == pre-PR serial == fused parallel
+        let (q_old, t_old) = baseline::fake_quant_per_channel(&w, 0, spec, clip);
+        let (q1, t1) = fake_quant_per_channel_with(&w, 0, spec, clip, 1);
+        assert_eq!(bits(q_old.data()), bits(q1.data()), "fused != pre-PR serial");
+        assert_eq!(bits(&t_old), bits(&t1));
+        let tmax = *sweep.last().unwrap();
+        let (qn, tn) = fake_quant_per_channel_with(&w, 0, spec, clip, tmax);
+        assert_eq!(bits(q1.data()), bits(qn.data()), "parallel != serial");
+        assert_eq!(bits(&t1), bits(&tn));
+
+        let old = r.bench(&format!("perchan_quant/old_serial/{shape}"), || {
+            let (q, _) = baseline::fake_quant_per_channel(&w, 0, spec, clip);
+            std::hint::black_box(q.len());
+        });
+        let old_ns = old.as_ref().map(|s| s.mean_ns);
+        if let Some(s) = &old {
+            record(
+                &mut cases,
+                "perchan_quant/old_serial",
+                shape.clone(),
+                1,
+                s.mean_ns,
+                items,
+                s.mean_ns,
+            );
+        }
+        let mut t1_ns = None;
+        for &t in &sweep {
+            let stats = r.bench(&format!("perchan_quant/fused_t{t}/{shape}"), || {
+                let (q, _) = fake_quant_per_channel_with(&w, 0, spec, clip, t);
+                std::hint::black_box(q.len());
+            });
+            if let (Some(s), Some(old_ns)) = (&stats, old_ns) {
+                record(
+                    &mut cases,
+                    &format!("perchan_quant/fused_t{t}"),
+                    shape.clone(),
+                    t,
+                    s.mean_ns,
+                    items,
+                    old_ns,
+                );
+                if t == 1 {
+                    t1_ns = Some(s.mean_ns);
+                }
+                let speedup = old_ns / s.mean_ns;
+                if t > 1 {
+                    if perchan_best.as_ref().map(|b| speedup > b.2).unwrap_or(true) {
+                        perchan_best = Some((shape.clone(), t, speedup));
+                    }
+                    if let Some(t1_ns) = t1_ns {
+                        perchan_vs_t1_best = perchan_vs_t1_best.max(t1_ns / s.mean_ns);
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- calibration statistics ----------------------------------------
+    let (nb, rows, cc) = if small { (4, 32, 128) } else { (8, 64, 256) };
+    {
+        let mut rng = Rng::new(9);
+        let batches: Vec<TensorF> = (0..nb)
+            .map(|_| TensorF::from_vec(&[rows, cc], rng.normal_vec(rows * cc)).unwrap())
+            .collect();
+        let shape = format!("{nb}x{rows}x{cc}");
+        let items = (nb * rows * cc) as f64;
+
+        // determinism: serial == parallel on the fused path
+        let s1 = kstats::layer_stats(&batches, 2048, 0.99, 1);
+        let sn = kstats::layer_stats(&batches, 2048, 0.99, *sweep.last().unwrap());
+        assert_eq!(s1.hist.counts(), sn.hist.counts(), "calib parallel != serial");
+        assert_eq!(bits(&s1.channel_max), bits(&sn.channel_max));
+        assert_eq!(s1.outlier_counts, sn.outlier_counts);
+
+        let old = r.bench(&format!("calib_stats/old_serial/{shape}"), || {
+            let (h, _, _) = baseline::layer_stats(&batches, 0.99);
+            std::hint::black_box(h.count());
+        });
+        let old_ns = old.as_ref().map(|s| s.mean_ns);
+        if let Some(s) = &old {
+            record(
+                &mut cases,
+                "calib_stats/old_serial",
+                shape.clone(),
+                1,
+                s.mean_ns,
+                items,
+                s.mean_ns,
+            );
+        }
+        for &t in &sweep {
+            let stats = r.bench(&format!("calib_stats/fused_t{t}/{shape}"), || {
+                let s = kstats::layer_stats(&batches, 2048, 0.99, t);
+                std::hint::black_box(s.hist.count());
+            });
+            if let (Some(s), Some(old_ns)) = (&stats, old_ns) {
+                record(
+                    &mut cases,
+                    &format!("calib_stats/fused_t{t}"),
+                    shape.clone(),
+                    t,
+                    s.mean_ns,
+                    items,
+                    old_ns,
+                );
+            }
+        }
+    }
+
+    // ---- KL threshold sweep --------------------------------------------
+    {
+        let mut rng = Rng::new(11);
+        let n = if small { 60_000 } else { 200_000 };
+        let data: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let hist = Histogram::from_slice(&data, 2048);
+        let shape = "2048bins".to_string();
+        let stride1 = r.bench("kl_sweep/stride1", || {
+            std::hint::black_box(ocs::clip::kl::threshold_with(&hist, spec, 1));
+        });
+        let s1_ns = stride1.as_ref().map(|s| s.mean_ns);
+        if let Some(s) = &stride1 {
+            record(
+                &mut cases,
+                "kl_sweep/stride1",
+                shape.clone(),
+                1,
+                s.mean_ns,
+                2048.0,
+                s.mean_ns,
+            );
+        }
+        let stride4 = r.bench("kl_sweep/stride4", || {
+            std::hint::black_box(ocs::clip::kl::threshold_with(&hist, spec, 4));
+        });
+        if let (Some(s), Some(s1_ns)) = (&stride4, s1_ns) {
+            record(
+                &mut cases,
+                "kl_sweep/stride4",
+                shape.clone(),
+                1,
+                s.mean_ns,
+                2048.0,
+                s1_ns,
+            );
+        }
+    }
+
+    // ---- OCS transform --------------------------------------------------
+    {
+        let (c, k) = if small { (256, 256) } else { (512, 512) };
+        let n_splits = 32;
+        let mut rng = Rng::new(13);
+        let w = TensorF::from_vec(&[c, k], rng.normal_vec(c * k)).unwrap();
+        let shape = format!("{c}x{k}+{n_splits}");
+        let items = (c * k) as f64;
+        let delta = 0.01f32;
+
+        // correctness: fused split == generic-op split, bit for bit
+        let pad = c + n_splits;
+        let mode = SplitMode::QuantAware;
+        let fused = ocs::ocs::weight_ocs(&w, 0, pad, n_splits, mode, delta).unwrap();
+        let generic = baseline::weight_ocs_generic(&w, 0, pad, n_splits, mode, delta);
+        assert_eq!(
+            bits(fused.w_expanded.data()),
+            bits(generic.w_expanded.data()),
+            "fused OCS split != generic ops"
+        );
+        assert_eq!(fused.splits, generic.splits);
+
+        let old = r.bench(&format!("ocs_transform/old_generic/{shape}"), || {
+            let h = baseline::weight_ocs_generic(&w, 0, pad, n_splits, mode, delta);
+            std::hint::black_box(h.active);
+        });
+        let old_ns = old.as_ref().map(|s| s.mean_ns);
+        if let Some(s) = &old {
+            record(
+                &mut cases,
+                "ocs_transform/old_generic",
+                shape.clone(),
+                1,
+                s.mean_ns,
+                items,
+                s.mean_ns,
+            );
+        }
+        let fused_stats = r.bench(&format!("ocs_transform/fused/{shape}"), || {
+            let h = ocs::ocs::weight_ocs(&w, 0, pad, n_splits, mode, delta).unwrap();
+            std::hint::black_box(h.active);
+        });
+        if let (Some(s), Some(old_ns)) = (&fused_stats, old_ns) {
+            record(
+                &mut cases,
+                "ocs_transform/fused",
+                shape.clone(),
+                1,
+                s.mean_ns,
+                items,
+                old_ns,
+            );
+        }
+    }
+
+    // ---- verdicts --------------------------------------------------------
+    let mut failures: Vec<String> = Vec::new();
+    if let Some((shape, t, speedup)) = &perchan_best {
+        println!(
+            "\nperchan_quant: best parallel speedup vs pre-PR serial = {speedup:.2}x \
+             (shape {shape}, {t} threads; {perchan_vs_t1_best:.2}x vs fused serial)"
+        );
+        if avail >= 4 && *speedup < 2.0 {
+            failures.push(format!(
+                "parallel per-channel quant only {speedup:.2}x vs pre-PR serial (need >= 2x at 4+ threads)"
+            ));
+        }
+        if avail >= 4 && perchan_vs_t1_best > 0.0 && perchan_vs_t1_best < 1.2 {
+            failures.push(format!(
+                "parallel per-channel quant only {perchan_vs_t1_best:.2}x vs its own serial run"
+            ));
+        }
+    }
+    if let Some(path) = &opts.json {
+        std::fs::write(path, quant_json("cpu", avail, &cases)).expect("write BENCH_quant.json");
+        println!("wrote {} ({} cases)", path.display(), cases.len());
+    }
+    if !failures.is_empty() {
+        if opts.no_assert {
+            for f in &failures {
+                println!("WARN (no-assert): {f}");
+            }
+        } else {
+            for f in &failures {
+                eprintln!("FAIL: {f}");
+            }
+            std::process::exit(1);
+        }
+    }
+}

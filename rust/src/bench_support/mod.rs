@@ -59,6 +59,13 @@ impl Runner {
         let filter = std::env::args()
             .skip(1)
             .find(|a| !a.starts_with("--") && a != "bench");
+        Self::with_filter(filter)
+    }
+
+    /// For harnesses that parse their own argv (e.g. `benches/hotpath.rs`
+    /// takes `--json`/`--shapes` whose *values* would confuse the plain
+    /// positional-filter scan above). Honours `OCS_BENCH_QUICK`.
+    pub fn with_filter(filter: Option<String>) -> Self {
         let quick = std::env::var("OCS_BENCH_QUICK").is_ok();
         Runner {
             filter,
@@ -150,6 +157,55 @@ impl Runner {
     }
 }
 
+/// One row of `BENCH_quant.json` — the quant-side counterpart of a
+/// `BENCH_serving.json` sweep point (same record style: a top-level
+/// `bench` tag plus an array of flat measurement objects, so the same
+/// tooling can track both trajectories run-over-run).
+#[derive(Debug, Clone)]
+pub struct CaseRecord {
+    /// `group/variant`, e.g. `perchan_quant/fused_t4`.
+    pub name: String,
+    /// Tensor shape measured, e.g. `256x1024`.
+    pub shape: String,
+    /// Threads the variant ran with (1 = serial).
+    pub threads: usize,
+    pub mean_ns: f64,
+    /// Millions of f32 elements processed per second.
+    pub melems_per_s: f64,
+    /// mean_ns(serial baseline of the group) / mean_ns(this variant);
+    /// 1.0 for the baseline row itself.
+    pub speedup_vs_serial: f64,
+}
+
+/// Serialize hot-path cases in the repo's BENCH json shape.
+pub fn quant_json(backend: &str, threads_available: usize, cases: &[CaseRecord]) -> String {
+    use crate::util::json;
+    json::obj(vec![
+        ("bench", json::s("quant")),
+        ("backend", json::s(backend)),
+        ("threads_available", json::num(threads_available as f64)),
+        (
+            "cases",
+            json::arr(
+                cases
+                    .iter()
+                    .map(|c| {
+                        json::obj(vec![
+                            ("name", json::s(&c.name)),
+                            ("shape", json::s(&c.shape)),
+                            ("threads", json::num(c.threads as f64)),
+                            ("mean_ns", json::num(c.mean_ns)),
+                            ("melems_per_s", json::num(c.melems_per_s)),
+                            ("speedup_vs_serial", json::num(c.speedup_vs_serial)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+    .to_string()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -186,6 +242,40 @@ mod tests {
         };
         assert!(r.bench("other", || {}).is_none());
         assert!(r.bench("has_xyz_inside", || {}).is_some());
+    }
+
+    #[test]
+    fn quant_json_roundtrips() {
+        let cases = vec![
+            CaseRecord {
+                name: "perchan_quant/old_serial".into(),
+                shape: "256x1024".into(),
+                threads: 1,
+                mean_ns: 2.0e6,
+                melems_per_s: 131.0,
+                speedup_vs_serial: 1.0,
+            },
+            CaseRecord {
+                name: "perchan_quant/fused_t4".into(),
+                shape: "256x1024".into(),
+                threads: 4,
+                mean_ns: 0.5e6,
+                melems_per_s: 524.0,
+                speedup_vs_serial: 4.0,
+            },
+        ];
+        let text = quant_json("cpu", 4, &cases);
+        let v = crate::util::json::Value::parse(&text).unwrap();
+        assert_eq!(v.get("bench").unwrap().as_str().unwrap(), "quant");
+        assert_eq!(v.get("threads_available").unwrap().as_usize().unwrap(), 4);
+        let arr = v.get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(
+            arr[1].get("name").unwrap().as_str().unwrap(),
+            "perchan_quant/fused_t4"
+        );
+        assert_eq!(arr[1].get("threads").unwrap().as_usize().unwrap(), 4);
+        assert!(arr[1].get("speedup_vs_serial").unwrap().as_f64().unwrap() > 3.9);
     }
 
     #[test]

@@ -12,6 +12,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Context, Result};
 
+use crate::kernels::stats as kernels;
 use crate::model::store::WeightStore;
 use crate::model::ModelSpec;
 use crate::runtime::{Engine, Input, Inputs, Outputs};
@@ -58,22 +59,24 @@ pub fn top_k_channels(counts: &[u64], k: usize) -> Vec<usize> {
     order
 }
 
-/// Per-trailing-channel max |x|.
+/// Per-trailing-channel max |x|. Unlike the fused calibration kernel
+/// ([`crate::kernels::stats`]), this generic tensor reduction does not
+/// filter non-finite values — prefer the kernel for calibration data.
 pub fn channel_max(act: &TensorF) -> Vec<f32> {
     let axis = act.rank() - 1;
     act.max_abs_per_axis(axis).expect("rank >= 1")
 }
 
-/// Per-trailing-channel count of |x| > thr.
+/// Per-trailing-channel count of finite |x| > thr. Row-chunked: the
+/// channel index is the position inside each `chunks_exact(c)` row —
+/// the old walk computed `i % c` for every element. Non-finite values
+/// are excluded from *all* calibration statistics by design (an Inf
+/// would otherwise poison the histogram range the threshold comes
+/// from); a saturating channel still ranks high through its finite
+/// near-saturation magnitudes.
 pub fn channel_outlier_counts(act: &TensorF, thr: f32) -> Vec<u64> {
     let c = *act.shape().last().expect("rank >= 1");
-    let mut counts = vec![0u64; c];
-    for (i, &v) in act.data().iter().enumerate() {
-        if v.abs() > thr {
-            counts[i % c] += 1;
-        }
-    }
-    counts
+    crate::kernels::stats::outlier_counts(act.data(), c, thr)
 }
 
 /// Run the float probe on one batch; returns `layer name -> activation`.
@@ -133,31 +136,20 @@ pub fn calibrate(
         }
         i += batch;
     }
-    // pass 2: statistics
+    // pass 2: statistics — one fused sweep per batch (histogram +
+    // channel maxima together), batches in parallel on the kernel pool,
+    // partials folded in batch order so any thread count is
+    // bit-identical to serial; then the outlier-count sweep at the
+    // layer-wide percentile threshold (see kernels::stats::layer_stats).
     let mut layers = BTreeMap::new();
     for (layer, batches) in acts {
-        let mut hist = Histogram::new(DEFAULT_BINS, 1.0);
-        for b in &batches {
-            hist.observe_all(b.data());
-        }
-        let thr = hist.percentile_abs(OUTLIER_PERCENTILE);
-        let c = *batches[0].shape().last().unwrap();
-        let mut channel_max_acc = vec![0.0f32; c];
-        let mut outlier_counts = vec![0u64; c];
-        for b in &batches {
-            for (m, cm) in channel_max_acc.iter_mut().zip(channel_max(b)) {
-                *m = m.max(cm);
-            }
-            for (o, co) in outlier_counts.iter_mut().zip(channel_outlier_counts(b, thr)) {
-                *o += co;
-            }
-        }
+        let s = kernels::layer_stats(&batches, DEFAULT_BINS, OUTLIER_PERCENTILE, 0);
         layers.insert(
             layer,
             LayerCalib {
-                hist,
-                channel_max: channel_max_acc,
-                outlier_counts,
+                hist: s.hist,
+                channel_max: s.channel_max,
+                outlier_counts: s.outlier_counts,
             },
         );
     }

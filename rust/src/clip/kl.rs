@@ -176,6 +176,31 @@ mod tests {
     }
 
     #[test]
+    fn strided_sweep_tracks_exhaustive_on_small_bin_counts() {
+        // guards the O(bins^2) -> stride-4 shortcut: on small bin counts
+        // the strided argmin must land within one stride of the
+        // exhaustive argmin, i.e. the chosen thresholds differ by at
+        // most STRIDE bins' worth of magnitude
+        for (seed, bins) in [(31u64, 96usize), (32, 160), (33, 256)] {
+            let mut rng = Rng::new(seed);
+            let data: Vec<f32> = (0..30_000).map(|_| rng.normal()).collect();
+            let hist = Histogram::from_slice(&data, bins);
+            for bits in [4u32, 5] {
+                let spec = QuantSpec::new(bits);
+                let exhaustive = threshold_with(&hist, spec, 1);
+                let strided = threshold_with(&hist, spec, STRIDE);
+                let tol = STRIDE as f32 * hist.bin_width();
+                let diff = (exhaustive - strided).abs();
+                assert!(
+                    diff <= tol + 1e-6 || diff / exhaustive.max(1e-9) < 0.05,
+                    "bins {bins} bits {bits}: exhaustive {exhaustive} vs \
+                     strided {strided} (tol {tol})"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn narrow_hist_returns_max() {
         // fewer used bins than quantization levels: nothing to optimize
         let data = vec![0.1f32, 0.2, 0.3];

@@ -1,0 +1,169 @@
+//! Fused, parallel compute kernels — the hot-path layer under the
+//! quantization toolchain.
+//!
+//! Everything per-layer work in [`crate::pipeline`] reduces to runs over
+//! the same few access patterns, and this module owns them:
+//!
+//! * [`stats`] — one-sweep calibration statistics (histogram + channel
+//!   maxima + outlier counts) with batch-parallel, deterministic merges.
+//! * [`pool`] — the process-wide scoped thread pool (std-only, reused
+//!   like [`crate::runtime::HloTextCache`]); its one primitive returns
+//!   results in index order so parallel runs are bit-identical to
+//!   serial.
+//! * [`for_each_channel_chunk_mut`] — channel-parallel in-place
+//!   mutation: channels partition the buffer into disjoint strided runs,
+//!   so per-channel quantization parallelizes race-free with no copies.
+//! * [`split_channel`] — the fused OCS split: one strided pass writes
+//!   both halves and returns both post-split maxima, replacing the old
+//!   copy + rewrite + two max sweeps (4 passes over the channel → 1).
+//!
+//! Design notes and benchmark methodology: see `README.md` in this
+//! directory and `rust/benches/hotpath.rs` (`BENCH_quant.json`).
+
+pub mod pool;
+pub mod stats;
+
+use crate::ocs::split::{split_value, SplitMode};
+
+/// Raw base pointer smuggled into the per-channel closures. Safety rests
+/// on the channel partition argument in [`for_each_channel_chunk_mut`],
+/// not on this wrapper.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Apply `f(c, run)` to every contiguous run of every channel `c` of a
+/// row-major buffer with axis geometry `(outer, alen, inner)` (channel
+/// `c` owns the `outer` runs of length `inner` starting at
+/// `(o * alen + c) * inner`), with channels dispatched in parallel on
+/// the kernel pool (`threads` = 0 for the default width).
+///
+/// Distinct channels touch disjoint index sets, so the parallel
+/// mutation is race-free; within one channel the runs are visited in
+/// ascending `o`, exactly like the serial loop it replaces.
+pub fn for_each_channel_chunk_mut<F>(
+    data: &mut [f32],
+    outer: usize,
+    alen: usize,
+    inner: usize,
+    threads: usize,
+    f: F,
+) where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert_eq!(
+        data.len(),
+        outer * alen * inner,
+        "channel geometry mismatch"
+    );
+    if outer == 0 || alen == 0 || inner == 0 {
+        return;
+    }
+    let base = SendPtr(data.as_mut_ptr());
+    pool::map_indexed_with(threads, alen, |c| {
+        for o in 0..outer {
+            let start = (o * alen + c) * inner;
+            // SAFETY: `data` is exclusively borrowed for the whole call;
+            // the (o, c) runs tile it without overlap and this task is
+            // the only one touching channel c, so each run is accessed
+            // by exactly one thread.
+            let run = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), inner) };
+            f(c, run);
+        }
+    });
+}
+
+/// Fused OCS channel split (the §3.3 halving, materialized): one strided
+/// pass reads channel `src`, writes `dst = hi(w)` and `src = lo(w)`, and
+/// accumulates both post-split max |x| on the way through. Bit-identical
+/// to the former `axis_copy_with` + `axis_map_mut` + two `axis_max_abs`
+/// sweeps, in a quarter of the memory traffic.
+#[allow(clippy::too_many_arguments)]
+pub fn split_channel(
+    data: &mut [f32],
+    outer: usize,
+    alen: usize,
+    inner: usize,
+    src: usize,
+    dst: usize,
+    delta: f32,
+    mode: SplitMode,
+) -> (f32, f32) {
+    assert_eq!(
+        data.len(),
+        outer * alen * inner,
+        "channel geometry mismatch"
+    );
+    assert!(src < alen && dst < alen, "split channel out of range");
+    assert_ne!(src, dst, "split onto itself");
+    let mut max_lo = 0.0f32;
+    let mut max_hi = 0.0f32;
+    for o in 0..outer {
+        let sbase = (o * alen + src) * inner;
+        let dbase = (o * alen + dst) * inner;
+        for k in 0..inner {
+            let (lo, hi) = split_value(data[sbase + k], delta, mode);
+            data[sbase + k] = lo;
+            data[dbase + k] = hi;
+            let la = lo.abs();
+            if la > max_lo {
+                max_lo = la;
+            }
+            let ha = hi.abs();
+            if ha > max_hi {
+                max_hi = ha;
+            }
+        }
+    }
+    (max_lo, max_hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::TensorF;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn channel_partition_touches_every_element_once() {
+        // write channel index + visit count into each slot
+        let (outer, alen, inner) = (3usize, 5usize, 4usize);
+        let mut data = vec![0.0f32; outer * alen * inner];
+        for threads in [1usize, 4] {
+            data.iter_mut().for_each(|v| *v = 0.0);
+            for_each_channel_chunk_mut(&mut data, outer, alen, inner, threads, |c, run| {
+                for v in run {
+                    *v += 1.0 + c as f32;
+                }
+            });
+            for (i, &v) in data.iter().enumerate() {
+                let c = (i / inner) % alen;
+                assert_eq!(v, 1.0 + c as f32, "slot {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn split_channel_matches_generic_ops() {
+        let mut rng = Rng::new(21);
+        for mode in [SplitMode::Naive, SplitMode::QuantAware] {
+            let w = TensorF::from_vec(&[4, 6, 3], rng.normal_vec(4 * 6 * 3)).unwrap();
+            let delta = 0.07f32;
+            // reference: the pre-kernels op sequence
+            let mut want = w.clone();
+            want.axis_copy_with(1, 2, 5, |v| split_value(v, delta, mode).1)
+                .unwrap();
+            want.axis_map_mut(1, 2, |v| *v = split_value(*v, delta, mode).0)
+                .unwrap();
+            let want_src = want.axis_max_abs(1, 2).unwrap();
+            let want_dst = want.axis_max_abs(1, 5).unwrap();
+            // fused
+            let mut got = w.clone();
+            let (m_src, m_dst) = split_channel(got.data_mut(), 4, 6, 3, 2, 5, delta, mode);
+            assert_eq!(got.data(), want.data(), "{mode:?}");
+            assert_eq!(m_src.to_bits(), want_src.to_bits());
+            assert_eq!(m_dst.to_bits(), want_dst.to_bits());
+        }
+    }
+}

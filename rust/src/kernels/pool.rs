@@ -1,0 +1,344 @@
+//! Process-wide scoped thread pool for the compute kernels (std-only;
+//! rayon is unavailable offline).
+//!
+//! One pool per process, spun up lazily like
+//! [`crate::runtime::HloTextCache`]: `cores - 1` detached workers plus
+//! the calling thread, so a `map_indexed` at the default width uses
+//! exactly one thread per core. The only parallel primitive is
+//! [`map_indexed`] — run `f(i)` for `i in 0..n` across the pool and
+//! return the results **in index order** — because index-ordered results
+//! are what make every parallel kernel bit-identical to its serial run:
+//! work distribution is racy (an atomic cursor), but merges downstream
+//! always fold in index order, so thread count never changes a result.
+//!
+//! Nested calls are safe: a caller waiting on its helpers drains other
+//! queued jobs instead of blocking, so `map_indexed` inside `map_indexed`
+//! cannot deadlock the pool. Panics inside `f` are caught on whichever
+//! thread they hit and re-thrown on the caller after the batch quiesces.
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Duration;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Process-wide parallelism cap: 0 = auto (one thread per core). Set
+/// from `--threads` / TOML via [`crate::pipeline::PerfConfig`].
+static THREAD_CAP: AtomicUsize = AtomicUsize::new(0);
+
+/// Cap the default width used by [`map_indexed`] (0 = one per core).
+/// `set_threads(1)` forces every kernel serial — results do not change
+/// (that is tested), only wall-clock does.
+pub fn set_threads(n: usize) {
+    THREAD_CAP.store(n, Ordering::Relaxed);
+}
+
+/// The width [`map_indexed`] uses when no explicit count is given.
+/// Deliberately avoids touching the pool: a serial run (`--threads 1`)
+/// must never spawn worker threads just to learn its width.
+pub fn effective_threads() -> usize {
+    match THREAD_CAP.load(Ordering::Relaxed) {
+        0 => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+        n => n,
+    }
+}
+
+/// Maximum concurrent participants: pool workers + the calling thread.
+pub fn available() -> usize {
+    ThreadPool::global().workers() + 1
+}
+
+/// Unit tests that mutate the process-wide cap serialize on this so the
+/// default-width assertions cannot race each other.
+#[cfg(test)]
+pub(crate) fn test_cap_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+struct PoolShared {
+    queue: Mutex<VecDeque<Job>>,
+    ready: Condvar,
+}
+
+/// The pool itself. Construction is private: use [`ThreadPool::global`].
+pub struct ThreadPool {
+    shared: Arc<PoolShared>,
+    workers: usize,
+}
+
+impl ThreadPool {
+    /// The process-wide instance (workers = cores - 1, spawned once).
+    pub fn global() -> &'static ThreadPool {
+        static POOL: OnceLock<ThreadPool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            let cores = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1);
+            ThreadPool::new(cores.saturating_sub(1))
+        })
+    }
+
+    fn new(workers: usize) -> ThreadPool {
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+        });
+        for i in 0..workers {
+            let s = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name(format!("ocs-kernel-{i}"))
+                .spawn(move || worker_loop(&s))
+                .expect("spawn kernel-pool worker");
+        }
+        ThreadPool { shared, workers }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    fn try_pop(&self) -> Option<Job> {
+        self.shared
+            .queue
+            .lock()
+            .expect("kernel pool poisoned")
+            .pop_front()
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().expect("kernel pool poisoned");
+            loop {
+                match q.pop_front() {
+                    Some(j) => break j,
+                    None => q = shared.ready.wait(q).expect("kernel pool poisoned"),
+                }
+            }
+        };
+        // A panicking job is recorded by its batch; never kill the worker.
+        let _ = catch_unwind(AssertUnwindSafe(job));
+    }
+}
+
+/// One `map_indexed` invocation: an atomic work cursor plus a check-out
+/// latch the caller waits on before its stack frame may be reused.
+struct Batch<'f, T, F> {
+    next: AtomicUsize,
+    n: usize,
+    f: &'f F,
+    results: Mutex<Vec<(usize, T)>>,
+    pending: Mutex<usize>,
+    done: Condvar,
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+impl<T, F> Batch<'_, T, F>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    /// Pull indices off the cursor until exhausted. The caller runs this
+    /// too, so a batch completes even if no helper is ever scheduled.
+    fn drain(&self) {
+        let mut local: Vec<(usize, T)> = Vec::new();
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n {
+                break;
+            }
+            local.push((i, (self.f)(i)));
+        }
+        if !local.is_empty() {
+            self.results
+                .lock()
+                .expect("kernel batch poisoned")
+                .append(&mut local);
+        }
+    }
+
+    fn run_helper(&self) {
+        if let Err(p) = catch_unwind(AssertUnwindSafe(|| self.drain())) {
+            let mut slot = self.panic.lock().expect("kernel batch poisoned");
+            if slot.is_none() {
+                *slot = Some(p);
+            }
+        }
+        // Checking out is the LAST touch of the batch: the caller frees
+        // the batch only after observing pending == 0 under this mutex,
+        // which cannot happen before this guard unlocks.
+        let mut pending = self.pending.lock().expect("kernel batch poisoned");
+        *pending -= 1;
+        self.done.notify_all();
+    }
+
+    /// Block until every submitted helper job has checked out. While
+    /// waiting, drain other queued jobs: our helpers may sit behind a
+    /// different batch's jobs (nested maps), and a blind block here
+    /// would deadlock the pool.
+    fn wait(&self, pool: &ThreadPool) {
+        loop {
+            if *self.pending.lock().expect("kernel batch poisoned") == 0 {
+                return;
+            }
+            if let Some(job) = pool.try_pop() {
+                let _ = catch_unwind(AssertUnwindSafe(job));
+                continue;
+            }
+            let pending = self.pending.lock().expect("kernel batch poisoned");
+            if *pending == 0 {
+                return;
+            }
+            let (guard, _timed_out) = self
+                .done
+                .wait_timeout(pending, Duration::from_millis(1))
+                .expect("kernel batch poisoned");
+            drop(guard);
+        }
+    }
+}
+
+/// [`map_indexed_with`] at the configured default width.
+pub fn map_indexed<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    map_indexed_with(0, n, f)
+}
+
+/// Run `f(i)` for `i in 0..n` on up to `threads` threads (0 = default
+/// width) and return the results in index order. `threads == 1` runs
+/// inline with no pool traffic; any other width is bit-identical to it
+/// because each index is computed independently and the results are
+/// reassembled by index, never by completion order.
+pub fn map_indexed_with<T, F>(threads: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let requested = if threads == 0 {
+        effective_threads()
+    } else {
+        threads
+    };
+    // serial runs never instantiate the pool (no idle worker threads)
+    if requested <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let pool = ThreadPool::global();
+    let participants = requested.clamp(1, n.max(1)).min(pool.workers() + 1);
+    if participants <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let helpers = participants - 1;
+    let batch = Batch {
+        next: AtomicUsize::new(0),
+        n,
+        f: &f,
+        results: Mutex::new(Vec::with_capacity(n)),
+        pending: Mutex::new(helpers),
+        done: Condvar::new(),
+        panic: Mutex::new(None),
+    };
+    {
+        let mut q = pool.shared.queue.lock().expect("kernel pool poisoned");
+        for _ in 0..helpers {
+            let r: &Batch<'_, T, F> = &batch;
+            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || r.run_helper());
+            // SAFETY: the lifetime is erased to queue the job on the
+            // process-wide pool, but `batch.wait` below does not return
+            // until every helper has checked out, and a helper's
+            // check-out is its final access to the batch — the borrow
+            // cannot dangle. Caller-side panics are deferred until after
+            // the wait for the same reason.
+            let job: Job = unsafe { std::mem::transmute(job) };
+            q.push_back(job);
+        }
+        pool.shared.ready.notify_all();
+    }
+    let caller = catch_unwind(AssertUnwindSafe(|| batch.drain()));
+    batch.wait(pool);
+    if let Err(p) = caller {
+        resume_unwind(p);
+    }
+    if let Some(p) = batch.panic.lock().expect("kernel batch poisoned").take() {
+        resume_unwind(p);
+    }
+    let mut slots: Vec<Option<T>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    let mut results = batch.results.into_inner().expect("kernel batch poisoned");
+    for (i, v) in results.drain(..) {
+        slots[i] = Some(v);
+    }
+    slots
+        .into_iter()
+        .map(|v| v.expect("kernel pool lost a result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_matches_serial_in_order() {
+        let serial: Vec<u64> = (0..257).map(|i| (i as u64) * (i as u64)).collect();
+        for threads in [1usize, 2, 3, 8] {
+            let par = map_indexed_with(threads, 257, |i| (i as u64) * (i as u64));
+            assert_eq!(par, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert!(map_indexed_with(4, 0, |i| i).is_empty());
+        assert_eq!(map_indexed_with(4, 1, |i| i + 10), vec![10]);
+    }
+
+    #[test]
+    fn nested_maps_complete() {
+        let out = map_indexed_with(4, 6, |i| {
+            map_indexed_with(4, 8, move |j| (i * 8 + j) as u64)
+                .into_iter()
+                .sum::<u64>()
+        });
+        let expect: Vec<u64> = (0..6)
+            .map(|i| (0..8).map(|j| (i * 8 + j) as u64).sum())
+            .collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn panic_propagates_and_pool_survives() {
+        let r = catch_unwind(|| {
+            map_indexed_with(4, 64, |i| {
+                if i == 33 {
+                    panic!("boom");
+                }
+                i
+            })
+        });
+        assert!(r.is_err(), "panic in f must reach the caller");
+        // the pool still works afterwards
+        let v = map_indexed_with(4, 10, |i| i * 2);
+        assert_eq!(v, (0..10).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn thread_cap_controls_default_width() {
+        let _guard = test_cap_lock();
+        set_threads(3);
+        assert_eq!(effective_threads(), 3);
+        set_threads(0);
+        assert_eq!(effective_threads(), available());
+        assert!(available() >= 1);
+    }
+}

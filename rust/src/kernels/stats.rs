@@ -1,0 +1,286 @@
+//! Fused calibration statistics.
+//!
+//! The calibration pass used to sweep each activation batch three times
+//! (streaming histogram, per-channel max, per-channel outlier counts —
+//! the last one computing `i % c` per element). [`fused_stats`] does the
+//! histogram and channel maxima in one row-chunked sweep, and
+//! [`outlier_counts`] replaces the modulo walk with `chunks_exact(c)`
+//! rows so the channel index is just the position inside the row.
+//!
+//! Non-finite values are skipped *everywhere*: a single NaN or Inf in an
+//! activation batch must not poison the histogram range, the channel
+//! maxima, or the outlier ranking (regression-tested here and in
+//! [`crate::stats`]).
+//!
+//! [`layer_stats`] is the per-layer calibration aggregate: phase A runs
+//! the fused sweep per batch in parallel on the kernel pool and folds
+//! the partials **in batch order** (histograms all start from the same
+//! power-of-two range ladder, so the merge is exact); phase B counts
+//! outliers per batch against the layer-wide percentile threshold and
+//! folds in batch order too. The fold order is what makes `threads = 1`
+//! and `threads = N` produce bit-identical results.
+
+use crate::kernels::pool;
+use crate::stats::Histogram;
+use crate::tensor::TensorF;
+
+/// Single-sweep statistics over one `(rows, c)`-shaped buffer.
+#[derive(Debug, Clone)]
+pub struct FusedStats {
+    pub hist: Histogram,
+    /// max |x| per trailing channel (finite values only).
+    pub channel_max: Vec<f32>,
+    /// Per-channel count of finite |x| > thr; `None` when no threshold
+    /// was supplied.
+    pub outlier_counts: Option<Vec<u64>>,
+}
+
+/// One chunked sweep over `data` (laid out as rows of `c` trailing
+/// channels): magnitude histogram + moments, per-channel maxima, and —
+/// when `outlier_thr` is known up front — per-channel outlier counts.
+pub fn fused_stats(
+    data: &[f32],
+    c: usize,
+    bins: usize,
+    range_hint: f32,
+    outlier_thr: Option<f32>,
+) -> FusedStats {
+    assert!(c > 0, "fused_stats: zero channels");
+    let mut hist = Histogram::new(bins, range_hint);
+    let mut channel_max = vec![0.0f32; c];
+    // counts are only touched under `Some(thr)`; skip the allocation on
+    // the common phase-A path where the threshold is not yet known
+    let mut counts = vec![0u64; if outlier_thr.is_some() { c } else { 0 }];
+    let mut rows = data.chunks_exact(c);
+    for row in rows.by_ref() {
+        fused_row(row, &mut hist, &mut channel_max, &mut counts, outlier_thr);
+    }
+    // ragged tail — activations are (batch.., c) so this is normally empty
+    fused_row(
+        rows.remainder(),
+        &mut hist,
+        &mut channel_max,
+        &mut counts,
+        outlier_thr,
+    );
+    FusedStats {
+        hist,
+        channel_max,
+        outlier_counts: outlier_thr.map(|_| counts),
+    }
+}
+
+#[inline]
+fn fused_row(
+    row: &[f32],
+    hist: &mut Histogram,
+    channel_max: &mut [f32],
+    counts: &mut [u64],
+    outlier_thr: Option<f32>,
+) {
+    for (j, &v) in row.iter().enumerate() {
+        if !v.is_finite() {
+            continue;
+        }
+        let a = v.abs();
+        if a > channel_max[j] {
+            channel_max[j] = a;
+        }
+        if let Some(t) = outlier_thr {
+            if a > t {
+                counts[j] += 1;
+            }
+        }
+        hist.observe(v);
+    }
+}
+
+/// Per-trailing-channel count of finite |x| > thr, row-chunked — the
+/// channel index is the position inside each `chunks_exact(c)` row, not
+/// an `i % c` per element.
+pub fn outlier_counts(data: &[f32], c: usize, thr: f32) -> Vec<u64> {
+    assert!(c > 0, "outlier_counts: zero channels");
+    let mut counts = vec![0u64; c];
+    let mut rows = data.chunks_exact(c);
+    for row in rows.by_ref() {
+        for (j, &v) in row.iter().enumerate() {
+            if v.is_finite() && v.abs() > thr {
+                counts[j] += 1;
+            }
+        }
+    }
+    for (j, &v) in rows.remainder().iter().enumerate() {
+        if v.is_finite() && v.abs() > thr {
+            counts[j] += 1;
+        }
+    }
+    counts
+}
+
+/// Per-layer calibration aggregate (the §5.3 statistics).
+#[derive(Debug, Clone)]
+pub struct LayerStats {
+    pub hist: Histogram,
+    pub channel_max: Vec<f32>,
+    pub outlier_counts: Vec<u64>,
+    /// The layer-wide percentile magnitude the counts were taken at.
+    pub outlier_threshold: f32,
+}
+
+/// Two-phase layer statistics over calibration `batches` (each shaped
+/// `(.., c)`), parallel across batches with deterministic batch-order
+/// merges: identical results at any thread count (0 = default width).
+/// Uses range hint 1.0, matching the pre-kernels streaming pass.
+pub fn layer_stats(
+    batches: &[TensorF],
+    bins: usize,
+    outlier_pct: f64,
+    threads: usize,
+) -> LayerStats {
+    layer_stats_hinted(batches, bins, outlier_pct, threads, 1.0)
+}
+
+/// [`layer_stats`] with an explicit histogram range hint. Pass the
+/// exact max |x| for single-batch "oracle" statistics (full bin
+/// resolution, like a `Histogram::from_slice` on the batch); for
+/// multi-batch runs keep one shared hint — the exact power-of-two merge
+/// alignment only holds when every partial grows from the same hint.
+pub fn layer_stats_hinted(
+    batches: &[TensorF],
+    bins: usize,
+    outlier_pct: f64,
+    threads: usize,
+    range_hint: f32,
+) -> LayerStats {
+    assert!(!batches.is_empty(), "layer_stats: no batches");
+    let c = *batches[0].shape().last().expect("rank >= 1");
+    // phase A: fused histogram + channel maxima per batch. Every partial
+    // histogram starts from the same range hint, so all ranges live on
+    // one power-of-two ladder and the merges below re-bin exactly.
+    let partials = pool::map_indexed_with(threads, batches.len(), |i| {
+        debug_assert_eq!(*batches[i].shape().last().unwrap(), c);
+        fused_stats(batches[i].data(), c, bins, range_hint, None)
+    });
+    let mut iter = partials.into_iter();
+    let first = iter.next().expect("at least one batch");
+    let mut hist = first.hist;
+    let mut channel_max = first.channel_max;
+    for p in iter {
+        hist.merge(&p.hist);
+        for (m, v) in channel_max.iter_mut().zip(&p.channel_max) {
+            *m = m.max(*v);
+        }
+    }
+    let thr = hist.percentile_abs(outlier_pct);
+    // phase B: outlier counts per batch at the layer threshold
+    let per_batch = pool::map_indexed_with(threads, batches.len(), |i| {
+        outlier_counts(batches[i].data(), c, thr)
+    });
+    let mut counts = vec![0u64; c];
+    for cb in per_batch {
+        for (a, b) in counts.iter_mut().zip(&cb) {
+            *a += *b;
+        }
+    }
+    LayerStats {
+        hist,
+        channel_max,
+        outlier_counts: counts,
+        outlier_threshold: thr,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fused_matches_separate_sweeps() {
+        let mut rng = Rng::new(11);
+        let data = rng.normal_vec(32 * 12);
+        let t = TensorF::from_vec(&[32, 12], data.clone()).unwrap();
+        let fused = fused_stats(&data, 12, 256, 1.0, Some(0.9));
+        assert_eq!(fused.channel_max, t.max_abs_per_axis(1).unwrap());
+        assert_eq!(
+            fused.outlier_counts.as_deref().unwrap(),
+            &outlier_counts(&data, 12, 0.9)[..]
+        );
+        assert_eq!(fused.hist.count(), data.len() as u64);
+        let mut reference = Histogram::new(256, 1.0);
+        reference.observe_all(&data);
+        assert_eq!(fused.hist.counts(), reference.counts());
+    }
+
+    #[test]
+    fn outlier_counts_equal_modulo_walk_including_ragged_tail() {
+        let mut rng = Rng::new(12);
+        for len in [60usize, 61, 64, 7] {
+            let data = rng.normal_vec(len);
+            let c = 5;
+            let got = outlier_counts(&data, c, 0.5);
+            let mut want = vec![0u64; c];
+            for (i, &v) in data.iter().enumerate() {
+                if v.abs() > 0.5 {
+                    want[i % c] += 1;
+                }
+            }
+            assert_eq!(got, want, "len {len}");
+        }
+    }
+
+    #[test]
+    fn non_finite_values_are_skipped() {
+        let data = vec![1.0f32, f32::NAN, f32::INFINITY, -2.0, f32::NEG_INFINITY, 0.5];
+        let s = fused_stats(&data, 3, 64, 1.0, Some(0.75));
+        // channels: [1.0, NAN, INF] / [-2.0, -INF, 0.5]
+        assert_eq!(s.channel_max, vec![2.0, 0.0, 0.5]);
+        assert_eq!(s.outlier_counts.unwrap(), vec![2, 0, 0]);
+        assert_eq!(s.hist.count(), 3, "only the three finite values count");
+        assert!(s.hist.range().is_finite());
+        assert_eq!(outlier_counts(&data, 3, 0.75), vec![2, 0, 0]);
+    }
+
+    #[test]
+    fn layer_stats_aggregates_batches() {
+        let mut rng = Rng::new(13);
+        let mut batches = Vec::new();
+        for _ in 0..4 {
+            let mut v = rng.normal_vec(16 * 8);
+            v[3] = 40.0; // channel-3 outlier in every batch
+            batches.push(TensorF::from_vec(&[16, 8], v).unwrap());
+        }
+        let s = layer_stats(&batches, 512, 0.99, 1);
+        assert_eq!(s.channel_max.len(), 8);
+        assert_eq!(s.outlier_counts.len(), 8);
+        assert_eq!(s.hist.count(), (4 * 16 * 8) as u64);
+        assert!(s.channel_max[3] >= 40.0);
+        let top = crate::calib::top_k_channels(&s.outlier_counts, 1);
+        assert_eq!(top, vec![3], "planted outlier channel must rank first");
+        assert!(s.outlier_threshold > 0.0);
+    }
+
+    #[test]
+    fn layer_stats_bit_identical_across_thread_counts() {
+        let mut rng = Rng::new(14);
+        let batches: Vec<TensorF> = (0..6)
+            .map(|_| TensorF::from_vec(&[8, 16], rng.normal_vec(8 * 16)).unwrap())
+            .collect();
+        let s1 = layer_stats(&batches, 256, 0.99, 1);
+        for threads in [2usize, 4, 8] {
+            let sn = layer_stats(&batches, 256, 0.99, threads);
+            assert_eq!(s1.hist.counts(), sn.hist.counts(), "threads {threads}");
+            assert_eq!(s1.hist.count(), sn.hist.count());
+            assert_eq!(s1.hist.mean().to_bits(), sn.hist.mean().to_bits());
+            assert_eq!(s1.hist.std().to_bits(), sn.hist.std().to_bits());
+            let b1: Vec<u32> = s1.channel_max.iter().map(|v| v.to_bits()).collect();
+            let bn: Vec<u32> = sn.channel_max.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(b1, bn);
+            assert_eq!(s1.outlier_counts, sn.outlier_counts);
+            assert_eq!(
+                s1.outlier_threshold.to_bits(),
+                sn.outlier_threshold.to_bits()
+            );
+        }
+    }
+}

@@ -11,9 +11,13 @@
 //!   hooks, AOT-lowered once to HLO text under `artifacts/`.
 //! * **L3** (this crate) — everything at run time: the quantization
 //!   toolchain ([`quant`], [`clip`], [`ocs`]), activation calibration
-//!   ([`calib`]), the PJRT runtime ([`runtime`]), training/eval harness
-//!   ([`train`], [`eval`]), the sharded inference pool ([`serve`]) and
-//!   the paper-table regeneration harness ([`tables`]).
+//!   ([`calib`]), the fused/parallel compute kernels under all of them
+//!   ([`kernels`]: single-sweep statistics, channel-parallel
+//!   quantization on a process-wide thread pool, bit-identical to
+//!   serial at any width), the PJRT runtime ([`runtime`]),
+//!   training/eval harness ([`train`], [`eval`]), the sharded inference
+//!   pool ([`serve`]) and the paper-table regeneration harness
+//!   ([`tables`]).
 //!
 //! Python never runs on the request path: after `make artifacts` the
 //! `ocs` binary is self-contained.
@@ -70,6 +74,7 @@ pub mod calib;
 pub mod cli;
 pub mod clip;
 pub mod eval;
+pub mod kernels;
 pub mod miniprop;
 pub mod model;
 pub mod ocs;

@@ -41,6 +41,9 @@ USAGE:
 FLAGS:
   --artifacts DIR   artifact root (default: artifacts)
   --results DIR     table output dir (default: results)
+  --threads N       kernel-pool width for the parallel quantization /
+                    calibration kernels (default: one per core; results
+                    are bit-identical at any width)
 
 SERVE FLAGS:
   --workers N       engine shards, one thread+engine each (default: cores)
@@ -61,6 +64,8 @@ fn main() {
 
 fn run(args: &Args) -> Result<()> {
     let artifacts = args.str_or("artifacts", "artifacts").to_string();
+    // install the kernel-pool width before any command touches a hot path
+    ocs::pipeline::PerfConfig::from_args(args)?.apply();
     match args.cmd.as_deref() {
         Some("info") => cmd_info(&artifacts),
         Some("train") => cmd_train(args, &artifacts),

@@ -17,7 +17,8 @@
 
 use anyhow::{bail, Result};
 
-use super::split::{split_value, SplitMode};
+use super::split::SplitMode;
+use crate::kernels;
 use crate::tensor::{TensorF, TensorI};
 
 /// Everything the runtime needs to drive one quantizable layer.
@@ -116,6 +117,7 @@ pub fn weight_ocs(
     delta: f32,
 ) -> Result<OcsHooks> {
     let mut hooks = identity_hooks(w, cin_axis, cin_pad)?;
+    let (outer, alen_pad, inner) = hooks.w_expanded.axis_geometry(cin_axis)?;
     // per-slot current max |w|
     let mut maxes: Vec<f32> = (0..hooks.active)
         .map(|i| hooks.w_expanded.axis_max_abs(cin_axis, i).unwrap())
@@ -131,21 +133,26 @@ pub fn weight_ocs(
             .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
             .expect("at least one channel");
         let dst = hooks.active;
-        // materialize halves: dst gets the (w + delta/2)/2 half first
-        // (copy reads src before src is rewritten)
-        hooks
-            .w_expanded
-            .axis_copy_with(cin_axis, src, dst, |v| split_value(v, delta, mode).1)?;
-        hooks
-            .w_expanded
-            .axis_map_mut(cin_axis, src, |v| *v = split_value(*v, delta, mode).0)?;
+        // fused kernel: one strided pass writes dst = (w + delta/2)/2
+        // and src = (w - delta/2)/2 and yields both post-split maxes
+        // (formerly a copy, a rewrite, and two max sweeps)
+        let (max_src, max_dst) = kernels::split_channel(
+            hooks.w_expanded.data_mut(),
+            outer,
+            alen_pad,
+            inner,
+            src,
+            dst,
+            delta,
+            mode,
+        );
         // the activation channel is duplicated as-is (Eq. 3: halving
         // lives in the weights) — inherit the source slot's steering
         hooks.idx.data_mut()[dst] = hooks.idx.data()[src];
         hooks.dscale.data_mut()[dst] = hooks.dscale.data()[src];
         hooks.dbias.data_mut()[dst] = hooks.dbias.data()[src];
-        maxes[src] = hooks.w_expanded.axis_max_abs(cin_axis, src)?;
-        maxes.push(hooks.w_expanded.axis_max_abs(cin_axis, dst)?);
+        maxes[src] = max_src;
+        maxes.push(max_dst);
         hooks.splits.push((src, dst));
         hooks.active += 1;
     }

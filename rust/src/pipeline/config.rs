@@ -152,6 +152,45 @@ impl QuantConfig {
     }
 }
 
+/// Width of the kernel thread pool ([`crate::kernels::pool`]) that the
+/// parallel statistics/quantization kernels run on. `0` means one
+/// thread per core. Results are bit-identical at every width — the knob
+/// trades wall-clock only (useful to pin core budgets when the serving
+/// pool shares the machine, or `--threads 1` to force serial).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PerfConfig {
+    /// Kernel-pool width; 0 (the default) = one thread per core.
+    pub threads: usize,
+}
+
+impl PerfConfig {
+    /// Parse `--threads N` (absent = auto).
+    pub fn from_args(args: &Args) -> Result<PerfConfig> {
+        Ok(PerfConfig {
+            threads: args.parse_or("threads", 0usize)?,
+        })
+    }
+
+    /// Parse the TOML `threads` key (absent = auto).
+    pub fn from_toml(c: &Config, section: &str) -> Result<PerfConfig> {
+        let key = if section.is_empty() {
+            "threads".to_string()
+        } else {
+            format!("{section}.threads")
+        };
+        let v = c.int_or(&key, 0);
+        if v < 0 {
+            bail!("perf config: threads must be >= 0, got {v}");
+        }
+        Ok(PerfConfig { threads: v as usize })
+    }
+
+    /// Install as the process-wide kernel-pool width.
+    pub fn apply(&self) {
+        crate::kernels::pool::set_threads(self.threads);
+    }
+}
+
 /// Default worker-shard count: one per available core.
 pub fn default_workers() -> usize {
     std::thread::available_parallelism()
@@ -302,6 +341,27 @@ mod tests {
 
     fn args(s: &str) -> Args {
         Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn perf_config_parses_and_applies() {
+        assert_eq!(PerfConfig::default().threads, 0);
+        let p = PerfConfig::from_args(&args("eval --threads 3")).unwrap();
+        assert_eq!(p.threads, 3);
+        assert!(PerfConfig::from_args(&args("eval --threads lots")).is_err());
+        let c = Config::parse("[perf]\nthreads = 2\n").unwrap();
+        assert_eq!(PerfConfig::from_toml(&c, "perf").unwrap().threads, 2);
+        assert!(PerfConfig::from_toml(
+            &Config::parse("[perf]\nthreads = -1\n").unwrap(),
+            "perf"
+        )
+        .is_err());
+        // apply installs the cap; restore auto afterwards so parallel
+        // tests elsewhere keep their default width
+        let _guard = crate::kernels::pool::test_cap_lock();
+        PerfConfig { threads: 2 }.apply();
+        assert_eq!(crate::kernels::pool::effective_threads(), 2);
+        PerfConfig::default().apply();
     }
 
     #[test]

@@ -20,7 +20,7 @@
 
 pub mod config;
 
-pub use config::{QuantConfig, ServeConfig};
+pub use config::{PerfConfig, QuantConfig, ServeConfig};
 
 use anyhow::{bail, Context, Result};
 
@@ -104,12 +104,14 @@ impl PreparedModel {
 }
 
 /// Histogram over the *active* channels of an expanded weight (padded
-/// zero slots would pollute the distribution).
+/// zero slots would pollute the distribution). Streams each channel's
+/// strided runs straight into the histogram — no per-channel `Vec`.
 pub fn active_weight_hist(hooks: &ocs::OcsHooks, cin_axis: usize) -> Histogram {
     let mut hist = Histogram::new(DEFAULT_BINS, hooks.w_expanded.max_abs().max(1e-9));
     for s in 0..hooks.active {
-        let slice = hooks.w_expanded.axis_slice(cin_axis, s).expect("active slot");
-        hist.observe_all(&slice);
+        for run in hooks.w_expanded.axis_chunks(cin_axis, s).expect("active slot") {
+            hist.observe_all(run);
+        }
     }
     hist
 }

@@ -11,37 +11,62 @@
 //! per-channel grids already capture (a question the paper leaves open).
 
 use crate::clip::ClipMethod;
+use crate::kernels::{self, pool};
 use crate::quant::{fake_quant_slice, QuantSpec};
 use crate::stats::Histogram;
 use crate::tensor::TensorF;
 
+/// Bins for the per-channel threshold histograms (channels hold far
+/// fewer samples than a whole layer, so 512 bins suffice).
+const CHANNEL_BINS: usize = 512;
+
 /// Quantize `w` with an independent symmetric grid per slice along
 /// `cout_axis`. Returns the quantized tensor and per-channel thresholds.
+///
+/// Runs at the kernel pool's default width; see
+/// [`fake_quant_per_channel_with`] for an explicit thread count.
 pub fn fake_quant_per_channel(
     w: &TensorF,
     cout_axis: usize,
     spec: QuantSpec,
     clip: ClipMethod,
 ) -> (TensorF, Vec<f32>) {
+    fake_quant_per_channel_with(w, cout_axis, spec, clip, 0)
+}
+
+/// [`fake_quant_per_channel`] at an explicit thread count (0 = default
+/// width). Channels are independent — each builds its histogram over a
+/// zero-copy strided view (no per-channel `Vec` materialization), picks
+/// its threshold, and quantizes its own disjoint runs — so the result
+/// is bit-identical at every `threads` value.
+pub fn fake_quant_per_channel_with(
+    w: &TensorF,
+    cout_axis: usize,
+    spec: QuantSpec,
+    clip: ClipMethod,
+    threads: usize,
+) -> (TensorF, Vec<f32>) {
     let (outer, alen, inner) = w
         .axis_geometry(cout_axis)
         .expect("cout_axis within rank");
+    // Two pool dispatches (threshold search, then quantization) rather
+    // than one fused per-channel job: it keeps the unsafe surface
+    // confined to `for_each_channel_chunk_mut` and the histogram on the
+    // shared safe `from_chunks` path, at the cost of one extra barrier
+    // and cache pass per layer.
+    // per-channel threshold search, channels in parallel (index-ordered
+    // results keep the thresholds vector deterministic)
+    let thresholds: Vec<f32> = pool::map_indexed_with(threads, alen, |c| {
+        let view = w.axis_chunks(cout_axis, c).expect("channel");
+        let hist = Histogram::from_chunks(view, CHANNEL_BINS);
+        clip.threshold(&hist, spec)
+    });
+    // quantize each channel's strided runs in place, channels in parallel
     let mut out = w.clone();
-    let mut thresholds = Vec::with_capacity(alen);
     let qmax = spec.qmax();
-    for c in 0..alen {
-        // gather the channel, pick its threshold, quantize in place
-        let slice = w.axis_slice(cout_axis, c).expect("channel");
-        let hist = Histogram::from_slice(&slice, 512);
-        let t = clip.threshold(&hist, spec);
-        thresholds.push(t);
-        let delta = spec.delta(t.max(1e-12));
-        let data = out.data_mut();
-        for o in 0..outer {
-            let base = (o * alen + c) * inner;
-            fake_quant_slice(&mut data[base..base + inner], delta, qmax);
-        }
-    }
+    kernels::for_each_channel_chunk_mut(out.data_mut(), outer, alen, inner, threads, |c, run| {
+        fake_quant_slice(run, spec.delta(thresholds[c].max(1e-12)), qmax);
+    });
     (out, thresholds)
 }
 
@@ -107,6 +132,24 @@ mod tests {
             for v in q.axis_slice(1, c).unwrap() {
                 let k = v / delta;
                 assert!((k - k.round()).abs() < 1e-3, "ch {c}: {v} not on grid");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_is_bit_identical_to_serial() {
+        let w = weight_with_hot_channel(5);
+        let spec = QuantSpec::new(4);
+        for clip in [ClipMethod::None, ClipMethod::Mse] {
+            let (q1, t1) = fake_quant_per_channel_with(&w, 1, spec, clip, 1);
+            for threads in [2usize, 4, 8] {
+                let (qn, tn) = fake_quant_per_channel_with(&w, 1, spec, clip, threads);
+                let b1: Vec<u32> = q1.data().iter().map(|v| v.to_bits()).collect();
+                let bn: Vec<u32> = qn.data().iter().map(|v| v.to_bits()).collect();
+                assert_eq!(b1, bn, "threads {threads} ({clip:?})");
+                let tb1: Vec<u32> = t1.iter().map(|v| v.to_bits()).collect();
+                let tbn: Vec<u32> = tn.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(tb1, tbn, "thresholds at threads {threads}");
             }
         }
     }

@@ -38,13 +38,30 @@ impl Histogram {
     }
 
     pub fn from_slice(data: &[f32], bins: usize) -> Self {
+        Self::from_chunks(std::iter::once(data), bins)
+    }
+
+    /// Build from a cloneable iterator of contiguous runs (e.g. a
+    /// zero-copy [`crate::tensor::AxisChunks`] channel view) without
+    /// materializing them: one pass for the exact range, one to bin.
+    /// Non-finite values are skipped in *both* passes — a stray Inf must
+    /// not blow up the range (NaN never could: `f32::max` ignores it),
+    /// and [`Self::observe`] already refuses them.
+    pub fn from_chunks<'a, I>(chunks: I, bins: usize) -> Self
+    where
+        I: Iterator<Item = &'a [f32]> + Clone,
+    {
         let mut max = 0.0f32;
-        for &v in data {
-            max = max.max(v.abs());
+        for run in chunks.clone() {
+            for &v in run {
+                if v.is_finite() {
+                    max = max.max(v.abs());
+                }
+            }
         }
         let mut h = Histogram::new(bins, max);
-        for &v in data {
-            h.observe(v);
+        for run in chunks {
+            h.observe_all(run);
         }
         h
     }
@@ -99,6 +116,7 @@ impl Histogram {
         (i as f32 + 0.5) * self.bin_width()
     }
 
+    #[inline]
     pub fn observe(&mut self, v: f32) {
         if !v.is_finite() {
             return;
@@ -257,5 +275,32 @@ mod tests {
         h.observe(f32::INFINITY);
         h.observe(0.5);
         assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn from_slice_survives_non_finite_range_scan() {
+        // regression: an Inf in the data used to poison the range pass
+        // (max became Inf, so bin_width and every percentile were NaN);
+        // a NaN was survivable only by accident of f32::max semantics.
+        let data = vec![0.1f32, f32::INFINITY, 0.9, f32::NAN, -0.5, f32::NEG_INFINITY];
+        let h = Histogram::from_slice(&data, 64);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.range(), 0.9);
+        assert_eq!(h.max_abs(), 0.9);
+        assert!(h.bin_width().is_finite());
+        assert!(h.percentile_abs(0.99) <= 0.9 + 1e-6);
+        assert_eq!(h.counts().iter().sum::<u64>(), 3);
+    }
+
+    #[test]
+    fn from_chunks_equals_from_slice() {
+        let data: Vec<f32> = (0..96).map(|i| (i as f32 * 0.37).sin() * 3.0).collect();
+        let whole = Histogram::from_slice(&data, 128);
+        let runs: Vec<&[f32]> = data.chunks(7).collect();
+        let chunked = Histogram::from_chunks(runs.iter().copied(), 128);
+        assert_eq!(whole.counts(), chunked.counts());
+        assert_eq!(whole.count(), chunked.count());
+        assert_eq!(whole.range(), chunked.range());
+        assert_eq!(whole.max_abs(), chunked.max_abs());
     }
 }

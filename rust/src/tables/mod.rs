@@ -374,18 +374,27 @@ pub fn table3(ctx: &TableCtx) -> Result<()> {
 // ---------------------------------------------------------------------------
 
 /// Build a per-batch Calibration from the probe activations of exactly
-/// this batch — the paper's "exact knowledge of the activations".
+/// this batch — the paper's "exact knowledge of the activations". Uses
+/// the same fused kernel as the real `calibrate()` pass so both share
+/// one statistics (and non-finite) policy; the exact-range hint keeps
+/// the oracle histogram at full bin resolution like the old
+/// `Histogram::from_slice` build.
 fn batch_calibration(acts: &BTreeMap<String, TensorF>) -> Calibration {
     let mut layers = BTreeMap::new();
     for (name, a) in acts {
-        let hist = Histogram::from_slice(a.data(), 2048);
-        let thr = hist.percentile_abs(calib::OUTLIER_PERCENTILE);
+        let s = crate::kernels::stats::layer_stats_hinted(
+            std::slice::from_ref(a),
+            2048,
+            calib::OUTLIER_PERCENTILE,
+            0,
+            a.max_abs().max(1e-12),
+        );
         layers.insert(
             name.clone(),
             LayerCalib {
-                channel_max: calib::channel_max(a),
-                outlier_counts: calib::channel_outlier_counts(a, thr),
-                hist,
+                channel_max: s.channel_max,
+                outlier_counts: s.outlier_counts,
+                hist: s.hist,
             },
         );
     }

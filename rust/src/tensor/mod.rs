@@ -31,6 +31,40 @@ pub struct Tensor<T> {
     data: Vec<T>,
 }
 
+/// Zero-copy view of the slice `index[axis] == i`: iterates the `outer`
+/// contiguous runs of length `inner` (stride `axis_len * inner` apart)
+/// without materializing anything. `Clone` so two-pass consumers (range
+/// scan, then binning) can walk it twice; see
+/// [`crate::stats::Histogram::from_chunks`].
+#[derive(Debug, Clone)]
+pub struct AxisChunks<'a, T> {
+    data: &'a [T],
+    inner: usize,
+    step: usize,
+    pos: usize,
+    remaining: usize,
+}
+
+impl<'a, T> Iterator for AxisChunks<'a, T> {
+    type Item = &'a [T];
+
+    fn next(&mut self) -> Option<&'a [T]> {
+        if self.remaining == 0 {
+            return None;
+        }
+        let run = &self.data[self.pos..self.pos + self.inner];
+        self.pos += self.step;
+        self.remaining -= 1;
+        Some(run)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (self.remaining, Some(self.remaining))
+    }
+}
+
+impl<T> ExactSizeIterator for AxisChunks<'_, T> {}
+
 pub type TensorF = Tensor<f32>;
 pub type TensorI = Tensor<i32>;
 
@@ -127,6 +161,23 @@ impl<T: Copy + Default> Tensor<T> {
         let alen = self.shape[axis];
         let inner: usize = self.shape[axis + 1..].iter().product();
         Ok((outer, alen, inner))
+    }
+
+    /// Borrow the slice `index[axis] == i` as strided runs — the
+    /// zero-copy sibling of [`Self::axis_slice`] for consumers that only
+    /// iterate (histograms, maxima): no per-channel `Vec` allocation.
+    pub fn axis_chunks(&self, axis: usize, i: usize) -> Result<AxisChunks<'_, T>, TensorError> {
+        let (outer, alen, inner) = self.axis_geometry(axis)?;
+        if i >= alen {
+            return Err(TensorError::BadIndex { index: i, len: alen });
+        }
+        Ok(AxisChunks {
+            data: &self.data,
+            inner,
+            step: alen * inner,
+            pos: i * inner,
+            remaining: outer,
+        })
     }
 
     /// Copy out the slice `index[axis] == i` (length outer*inner).
@@ -278,6 +329,29 @@ mod tests {
             t.axis_slice(2, 1).unwrap(),
             vec![1.0, 3.0, 5.0, 7.0, 9.0, 11.0]
         );
+    }
+
+    #[test]
+    fn axis_chunks_match_axis_slice() {
+        let t = t3();
+        for axis in 0..3 {
+            let len = t.shape()[axis];
+            for i in 0..len {
+                let flat: Vec<f32> = t
+                    .axis_chunks(axis, i)
+                    .unwrap()
+                    .flat_map(|run| run.iter().copied())
+                    .collect();
+                assert_eq!(flat, t.axis_slice(axis, i).unwrap(), "axis {axis} i {i}");
+            }
+        }
+        // cloneable: a second pass sees the same runs
+        let view = t.axis_chunks(1, 1).unwrap();
+        let a: Vec<&[f32]> = view.clone().collect();
+        let b: Vec<&[f32]> = view.collect();
+        assert_eq!(a, b);
+        assert!(t.axis_chunks(5, 0).is_err());
+        assert!(t.axis_chunks(1, 3).is_err());
     }
 
     #[test]
