@@ -1,28 +1,242 @@
-//! End-to-end quickstart — the full three-layer stack on one workload.
+//! End-to-end quickstart for the public quantization API.
 //!
-//! 1. Train the ResNet-20 stand-in from scratch for a few hundred SGD
-//!    steps *through the AOT-compiled `train_step` artifact* (L2 JAX
-//!    graph + L1 Pallas kernels, driven from Rust over PJRT), logging
-//!    the loss curve.
-//! 2. Post-training-quantize the result to 5-bit weights four ways:
-//!    plain linear, best clipping, OCS, OCS + clip (the paper's Table 2
-//!    recipe), and print the accuracy ladder.
+//! Two modes:
+//!
+//! * **Full** (default when `artifacts/` exists): train the ResNet-20
+//!   stand-in through the AOT-compiled `train_step` artifact (L2 JAX
+//!   graph + L1 Pallas kernels over PJRT), then post-training-quantize
+//!   it through a ladder of recipes — linear, clip, OCS, OCS + clip
+//!   (the paper's Table 2 recipe), and a per-layer mixed-precision
+//!   recipe — and print the accuracy ladder.
+//! * **Sim** (`QUICKSTART_SIM=1`, or no artifacts): the same recipe
+//!   API over an in-memory model, served on the artifact-free quant-sim
+//!   pool — including the shared `PreparedCache` and a live recipe
+//!   hot-swap. This is what CI runs on a clean checkout, so the public
+//!   API shown here cannot rot.
 //!
 //! Run:  cargo run --release --example quickstart
-//! (requires `make artifacts` first)
+//!       QUICKSTART_SIM=1 cargo run --release --example quickstart
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use ocs::calib;
+use ocs::calib::{self, Calibration, LayerCalib};
 use ocs::clip::ClipMethod;
+use ocs::stats::Histogram;
 use ocs::eval;
 use ocs::model::store::WeightStore;
-use ocs::model::ModelSpec;
-use ocs::pipeline::{self, QuantConfig};
+use ocs::model::{LayerKind, LayerSpec, ModelSpec};
+use ocs::pipeline::{self, PreparedCache, QuantConfig, QuantRecipe, ServeConfig};
 use ocs::runtime::Engine;
+use ocs::serve::backend::QuantSimFactory;
+use ocs::serve::Server;
+use ocs::tensor::TensorF;
 use ocs::train::{self, data};
+use ocs::util::rng::Rng;
 
 fn main() -> Result<()> {
+    let have_artifacts = std::path::Path::new("artifacts/manifest.json").exists();
+    let force_sim = std::env::var("QUICKSTART_SIM").map(|v| v == "1").unwrap_or(false);
+    if force_sim || !have_artifacts {
+        if !have_artifacts && !force_sim {
+            println!("(no artifacts/ found — running the sim quickstart; `make artifacts` enables the full one)\n");
+        }
+        sim_quickstart()
+    } else {
+        full_quickstart()
+    }
+}
+
+/// The recipe ladder both modes walk: uniform configs lowered via
+/// `to_recipe()`, plus genuinely per-layer recipes at the end.
+fn ladder(bits: u32) -> Vec<(&'static str, QuantRecipe)> {
+    vec![
+        ("float", QuantConfig::float().to_recipe()),
+        (
+            "linear (no clip)",
+            QuantConfig::weights_with_a8(bits, ClipMethod::None, 0.0).to_recipe(),
+        ),
+        (
+            "MSE clip",
+            QuantConfig::weights_with_a8(bits, ClipMethod::Mse, 0.0).to_recipe(),
+        ),
+        (
+            "OCS r=0.02",
+            QuantConfig::weights_with_a8(bits, ClipMethod::None, 0.02).to_recipe(),
+        ),
+        (
+            "OCS r=0.02 + MSE clip",
+            QuantConfig::weights_with_a8(bits, ClipMethod::Mse, 0.02).to_recipe(),
+        ),
+        (
+            "mixed: 8-bit edges",
+            QuantConfig::weights_with_a8(bits, ClipMethod::Mse, 0.02)
+                .to_recipe()
+                .edge_w_bits(8),
+        ),
+        (
+            "skip first/last",
+            QuantConfig::weights_with_a8(bits, ClipMethod::Mse, 0.02)
+                .to_recipe()
+                .skip_first_last(),
+        ),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// Sim mode: recipes + cache + serving pool + hot-swap, no artifacts
+// ---------------------------------------------------------------------------
+
+fn sim_model() -> Result<(Arc<ModelSpec>, Arc<WeightStore>)> {
+    let layer = |name: &str| LayerSpec {
+        name: name.into(),
+        kind: LayerKind::Fc,
+        cin: 16,
+        cin_pad: 20,
+        cout: 8,
+        ksize: 0,
+        stride: 1,
+        quantized: true,
+        w_cin_axis: 0,
+        w_shape: vec![16, 8],
+        w_shape_pad: vec![20, 8],
+    };
+    let spec = ModelSpec {
+        name: "quickstart_sim".into(),
+        dir: std::path::PathBuf::new(),
+        pad_factor: 1.25,
+        num_classes: 10,
+        img_hw: 0,
+        img_c: 0,
+        vocab: 0,
+        seq_len: 0,
+        momentum: 0.9,
+        layers: vec![layer("fc1"), layer("fc2"), layer("fc3")],
+        artifacts: Default::default(),
+    };
+    let mut rng = Rng::new(2024);
+    let mut leaves = Vec::new();
+    for name in ["fc1", "fc2", "fc3"] {
+        let mut w = rng.normal_vec(16 * 8);
+        w[3 * 8] = 9.0; // a weight outlier for OCS to split
+        leaves.push((format!("{name}.W"), TensorF::from_vec(&[16, 8], w)?));
+        leaves.push((format!("{name}.b"), TensorF::zeros(&[8])));
+    }
+    Ok((Arc::new(spec), Arc::new(WeightStore::from_leaves(leaves))))
+}
+
+/// Synthetic activation statistics standing in for a probe pass — the
+/// a8 ladder entries quantize activations, which requires calibration.
+fn sim_calibration(spec: &ModelSpec) -> Calibration {
+    let data: Vec<f32> = (0..4096).map(|i| (i % 64) as f32 * 0.05).collect();
+    let mut layers = std::collections::BTreeMap::new();
+    for l in spec.quantized_layers() {
+        let mut channel_max = vec![1.0f32; l.cin];
+        channel_max[3] = 6.0; // one hot channel for activation OCS to pick
+        let mut outlier_counts = vec![0u64; l.cin];
+        outlier_counts[3] = 40;
+        layers.insert(
+            l.name.clone(),
+            LayerCalib {
+                hist: Histogram::from_slice(&data, 256),
+                channel_max,
+                outlier_counts,
+            },
+        );
+    }
+    Calibration { layers }
+}
+
+fn sim_quickstart() -> Result<()> {
+    println!("== quickstart (sim): the recipe API without artifacts ==\n");
+    let (spec, ws) = sim_model()?;
+    let calibration = Arc::new(sim_calibration(&spec));
+
+    // ---- 1. the recipe ladder, prepared through the shared cache -------
+    println!("recipe ladder over '{}' (3 fc layers):", spec.name);
+    let cache = Arc::new(PreparedCache::new());
+    for (name, recipe) in ladder(5) {
+        let prep = cache.get_or_prepare(&spec, &ws, Some(calibration.as_ref()), &recipe)?;
+        let thr: Vec<String> = prep
+            .layers
+            .iter()
+            .map(|l| format!("{:.3}", l.w_threshold))
+            .collect();
+        println!(
+            "  {name:<22} [{}]  splits {}  overhead {:.3}x  w_thr [{}]  fp {}",
+            recipe.label(),
+            prep.total_splits(),
+            prep.weight_overhead(),
+            thr.join(", "),
+            recipe.fingerprint(),
+        );
+    }
+    // preparing the ladder twice demonstrates the cache: all hits
+    for (_, recipe) in ladder(5) {
+        cache.get_or_prepare(&spec, &ws, Some(calibration.as_ref()), &recipe)?;
+    }
+    println!(
+        "prepared-cache: {} preps, {} hits ({} entries)\n",
+        cache.misses(),
+        cache.hits(),
+        cache.len()
+    );
+
+    // ---- 2. serve the recipe on the sharded pool, then hot-swap --------
+    let before_recipe = QuantConfig::weights_only(5, ClipMethod::Mse, 0.02).to_recipe();
+    let after_recipe = QuantConfig::weights_only(4, ClipMethod::Mse, 0.02)
+        .to_recipe()
+        .edge_w_bits(8);
+    let factory = Arc::new(QuantSimFactory {
+        spec: spec.clone(),
+        ws: ws.clone(),
+        calib: Some(calibration.clone()),
+        recipe: before_recipe,
+        cache: cache.clone(),
+    });
+    let server = Server::start_with(
+        factory,
+        ServeConfig {
+            workers: 2,
+            max_batch: 8,
+            max_wait: Duration::from_micros(200),
+            queue_cap: 64,
+            deadline: None,
+        },
+    )?;
+    let client = server.client();
+    let x = TensorF::from_vec(&[1, 4], vec![0.1, 0.2, 0.3, 0.4])?;
+    let before = client.infer(x.clone())?;
+    println!("pool up (2 workers, one shared prep); logits[0] = {:.3}", before[0]);
+
+    println!("hot-swapping to a mixed-precision recipe (no restart)...");
+    server.swap_recipe(after_recipe);
+    let t0 = Instant::now();
+    while server.swaps_applied() < server.worker_count() as u64
+        && t0.elapsed() < Duration::from_secs(5)
+    {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let after = client.infer(x)?;
+    println!(
+        "swaps applied {}/{}; logits[0] now {:.3} (was {:.3})",
+        server.swaps_applied(),
+        server.worker_count(),
+        after[0],
+        before[0]
+    );
+    server.shutdown()?;
+    println!("\npool drained; total preps this run: {}", cache.misses());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Full mode: train through PJRT, then the accuracy ladder
+// ---------------------------------------------------------------------------
+
+fn full_quickstart() -> Result<()> {
     let model = "miniresnet";
     let steps = std::env::var("QUICKSTART_STEPS")
         .ok()
@@ -54,37 +268,17 @@ fn main() -> Result<()> {
     let calibration = calib::calibrate(&engine, &spec, &trained, &calib_set.x, 32)?;
 
     let bits = 5;
-    let ladder = [
-        ("float", QuantConfig::float()),
-        (
-            "linear (no clip)",
-            QuantConfig::weights_with_a8(bits, ClipMethod::None, 0.0),
-        ),
-        (
-            "MSE clip",
-            QuantConfig::weights_with_a8(bits, ClipMethod::Mse, 0.0),
-        ),
-        (
-            "OCS r=0.02",
-            QuantConfig::weights_with_a8(bits, ClipMethod::None, 0.02),
-        ),
-        (
-            "OCS r=0.02 + MSE clip",
-            QuantConfig::weights_with_a8(bits, ClipMethod::Mse, 0.02),
-        ),
-    ];
     println!("\n{bits}-bit weight quantization ladder (acts 8-bit):");
-    for (name, cfg) in ladder {
-        let needs_calib = cfg.a_bits.is_some();
-        let prep = pipeline::prepare(
-            &spec,
-            &trained,
-            if needs_calib { Some(&calibration) } else { None },
-            &cfg,
-        )?;
+    for (name, recipe) in ladder(bits) {
+        let calib_arg = if recipe.needs_calibration(&spec) {
+            Some(&calibration)
+        } else {
+            None
+        };
+        let prep = pipeline::prepare_cached(&spec, &trained, calib_arg, &recipe)?;
         let acc = eval::accuracy(&engine, &spec, &prep, &test.x, &test.y, 128)?;
         println!(
-            "  {name:<24} top-1 {:>6.2}%   (weight overhead {:.3}x)",
+            "  {name:<22} top-1 {:>6.2}%   (weight overhead {:.3}x)",
             acc * 100.0,
             prep.weight_overhead()
         );

@@ -52,8 +52,11 @@ fn drive(server: &Server, clients: usize, per_client: usize, think: Duration) ->
 
 fn main() -> Result<()> {
     let model = "minivgg";
-    // 5-bit weights with MSE clip + OCS r=0.02 — a Table-2 sweet spot
-    let quant = QuantConfig::weights_with_a8(5, ClipMethod::Mse, 0.02);
+    // 5-bit weights with MSE clip + OCS r=0.02 — a Table-2 sweet spot —
+    // except the boundary layers, which stay at 8 bits (recipe override)
+    let quant = QuantConfig::weights_with_a8(5, ClipMethod::Mse, 0.02)
+        .to_recipe()
+        .edge_w_bits(8);
     println!("== serving {model} [{}] ==", quant.label());
 
     let cfg = ServeConfig {
@@ -73,6 +76,20 @@ fn main() -> Result<()> {
     let rps = drive(&server, 8, 128, Duration::ZERO)?;
     println!("{}", server.metrics().report());
     println!("throughput {rps:.0} req/s");
+
+    println!("\n-- recipe hot-swap: drop middles to 4 bits, no restart --");
+    server.swap_recipe(
+        QuantConfig::weights_with_a8(4, ClipMethod::Mse, 0.02)
+            .to_recipe()
+            .edge_w_bits(8),
+    );
+    let t0 = Instant::now();
+    while server.swaps_applied() < server.worker_count() as u64
+        && t0.elapsed() < Duration::from_secs(5)
+    {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    println!("swaps applied: {}/{}", server.swaps_applied(), server.worker_count());
 
     println!("\n-- trickle (4 clients, 5 ms think time: batches stay small) --");
     let rps = drive(&server, 4, 64, Duration::from_millis(5))?;

@@ -135,7 +135,7 @@ fn main() -> anyhow::Result<()> {
     let pjrt_factory = Arc::new(PjrtFactory {
         artifacts_dir: "artifacts".to_string(),
         model: model.to_string(),
-        quant: QuantConfig::weights_only(5, ClipMethod::Mse, 0.02),
+        recipe: QuantConfig::weights_only(5, ClipMethod::Mse, 0.02).to_recipe(),
         max_batch: 32,
     });
     let label = pjrt_factory.label();

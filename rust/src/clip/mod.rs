@@ -2,7 +2,7 @@
 //!
 //! Every method consumes a magnitude [`Histogram`] and a bitwidth and
 //! returns the clip threshold `T`; linear quantization then uses the grid
-//! `delta = T / qmax`. Methods:
+//! `delta = T / qmax`. Built-in methods:
 //!
 //! | Method       | Source                              | Module        |
 //! |--------------|-------------------------------------|---------------|
@@ -11,11 +11,22 @@
 //! | `Aciq`       | Banner et al. analytic (§4.2)       | [`aciq`]      |
 //! | `Kl`         | TensorRT/MXNet KL calibration (§4.3)| [`kl`]        |
 //! | `Percentile` | McKinstry et al. (§2.1, extension)  | [`percentile`]|
+//!
+//! The built-ins stay a plain enum ([`ClipMethod`]) — cheap to copy,
+//! parse, and fingerprint — but the recipe pipeline consumes them
+//! through the [`ClipStrategy`] trait, so custom threshold optimizers
+//! plug into a [`crate::pipeline::QuantRecipe`] (via [`ClipSpec::custom`])
+//! without touching this module. A strategy's [`ClipStrategy::name`] is
+//! its identity everywhere: labels, TOML round-trips, and the prepared-
+//! model cache fingerprint all key on it, so it must be stable and
+//! unique per distinct thresholding behaviour.
 
 pub mod aciq;
 pub mod kl;
 pub mod mse;
 pub mod percentile;
+
+use std::sync::Arc;
 
 use crate::quant::QuantSpec;
 use crate::stats::Histogram;
@@ -81,6 +92,91 @@ impl ClipMethod {
     }
 }
 
+/// A clip-threshold optimizer as a behaviour, not an enum variant.
+///
+/// [`ClipMethod`] implements this, so every built-in lowers to a trait
+/// object for free; external optimizers implement it and enter a recipe
+/// through [`ClipSpec::custom`]. `name()` is the strategy's durable
+/// identity (labels, fingerprints, TOML) — two strategies returning the
+/// same name are treated as interchangeable by the prepared-model cache.
+pub trait ClipStrategy: Send + Sync {
+    /// Stable identifier; for built-ins this round-trips through
+    /// [`ClipMethod::parse`].
+    fn name(&self) -> String;
+
+    /// Clip threshold for `spec`-bit quantization of the distribution
+    /// summarized by `hist`. Implementations should return a value in
+    /// `(0, hist.max_abs()]` for non-empty histograms.
+    fn threshold(&self, hist: &Histogram, spec: QuantSpec) -> f32;
+}
+
+impl ClipStrategy for ClipMethod {
+    fn name(&self) -> String {
+        ClipMethod::name(self)
+    }
+
+    fn threshold(&self, hist: &Histogram, spec: QuantSpec) -> f32 {
+        ClipMethod::threshold(self, hist, spec)
+    }
+}
+
+/// A recipe's clip slot: a built-in [`ClipMethod`] or a plugged-in
+/// [`ClipStrategy`]. Equality and identity are by strategy *name*.
+#[derive(Clone)]
+pub enum ClipSpec {
+    Builtin(ClipMethod),
+    Custom(Arc<dyn ClipStrategy>),
+}
+
+impl ClipSpec {
+    pub fn custom(strategy: Arc<dyn ClipStrategy>) -> ClipSpec {
+        ClipSpec::Custom(strategy)
+    }
+
+    /// Lower to the trait object the pipeline passes actually call.
+    pub fn as_strategy(&self) -> &dyn ClipStrategy {
+        match self {
+            ClipSpec::Builtin(m) => m,
+            ClipSpec::Custom(s) => s.as_ref(),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        self.as_strategy().name()
+    }
+
+    pub fn threshold(&self, hist: &Histogram, spec: QuantSpec) -> f32 {
+        self.as_strategy().threshold(hist, spec)
+    }
+
+    /// Parse a built-in strategy name (custom strategies cannot be
+    /// parsed from text — they are registered in code).
+    pub fn parse(s: &str) -> Option<ClipSpec> {
+        ClipMethod::parse(s).map(ClipSpec::Builtin)
+    }
+}
+
+impl From<ClipMethod> for ClipSpec {
+    fn from(m: ClipMethod) -> ClipSpec {
+        ClipSpec::Builtin(m)
+    }
+}
+
+impl PartialEq for ClipSpec {
+    fn eq(&self, other: &Self) -> bool {
+        self.name() == other.name()
+    }
+}
+
+impl std::fmt::Debug for ClipSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClipSpec::Builtin(m) => write!(f, "ClipSpec({})", m.name()),
+            ClipSpec::Custom(s) => write!(f, "ClipSpec(custom:{})", s.name()),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -107,6 +203,77 @@ mod tests {
             assert_eq!(ClipMethod::parse(&m.name()), Some(m));
         }
         assert_eq!(ClipMethod::parse("bogus"), None);
+    }
+
+    /// Recipe fingerprints and TOML serialization both rely on
+    /// `parse(name()) == id`, including the `percentile:<p>` payload —
+    /// checked property-style over arbitrary probabilities (f64 Display
+    /// emits the shortest string that parses back exactly).
+    #[test]
+    fn name_parse_roundtrip_property() {
+        crate::miniprop::check("clip name/parse round-trip", |rng| {
+            let m = match rng.below(5) {
+                0 => ClipMethod::None,
+                1 => ClipMethod::Mse,
+                2 => ClipMethod::Aciq,
+                3 => ClipMethod::Kl,
+                _ => ClipMethod::Percentile(rng.next_f64()),
+            };
+            let name = m.name();
+            match ClipMethod::parse(&name) {
+                Some(back) if back == m => {}
+                other => {
+                    return Err(format!("{m:?} -> '{name}' -> {other:?}"));
+                }
+            }
+            // the name must also be stable: re-derived names are equal
+            if back_name(&m) != name {
+                return Err(format!("unstable name for {m:?}"));
+            }
+            Ok(())
+        });
+        // explicit percentile edges the generator may miss
+        for p in [0.0, 1.0, 0.999, 0.5e-7, 0.9999999999999999] {
+            let m = ClipMethod::Percentile(p);
+            assert_eq!(ClipMethod::parse(&m.name()), Some(m), "p = {p}");
+        }
+        // the bare keyword keeps its documented default payload
+        assert_eq!(
+            ClipMethod::parse("percentile"),
+            Some(ClipMethod::Percentile(0.999))
+        );
+        assert_eq!(ClipMethod::parse("percentile:"), None);
+        assert_eq!(ClipMethod::parse("percentile:zzz"), None);
+    }
+
+    fn back_name(m: &ClipMethod) -> String {
+        m.name()
+    }
+
+    #[test]
+    fn clip_spec_lowers_builtin_and_custom() {
+        let hist = outlier_hist(3);
+        let spec = QuantSpec::new(4);
+        // builtin lowering computes the same threshold as the enum
+        let b = ClipSpec::from(ClipMethod::Mse);
+        assert_eq!(b.threshold(&hist, spec), ClipMethod::Mse.threshold(&hist, spec));
+        assert_eq!(b.name(), "mse");
+        assert_eq!(b, ClipSpec::parse("mse").unwrap());
+        // a custom strategy plugs in without touching clip/
+        struct HalfMax;
+        impl ClipStrategy for HalfMax {
+            fn name(&self) -> String {
+                "halfmax".into()
+            }
+            fn threshold(&self, hist: &Histogram, _spec: QuantSpec) -> f32 {
+                hist.max_abs() * 0.5
+            }
+        }
+        let c = ClipSpec::custom(Arc::new(HalfMax));
+        assert_eq!(c.threshold(&hist, spec), hist.max_abs() * 0.5);
+        assert_eq!(c.name(), "halfmax");
+        assert_ne!(c, b);
+        assert!(ClipSpec::parse("halfmax").is_none(), "custom names are code-registered");
     }
 
     #[test]

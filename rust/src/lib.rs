@@ -22,6 +22,25 @@
 //! Python never runs on the request path: after `make artifacts` the
 //! `ocs` binary is self-contained.
 //!
+//! ## Quantization recipes
+//!
+//! The quantization API is built around [`pipeline::QuantRecipe`]:
+//! model-wide defaults plus ordered per-layer overrides matched by
+//! layer-name glob, [`model::LayerKind`], or first/last position —
+//! mixed precision, per-layer OCS ratios, and skip-first/last policies
+//! in one object. [`pipeline::QuantConfig`] remains the thin uniform
+//! constructor (`cfg.to_recipe()`), clip thresholds plug in through the
+//! [`clip::ClipStrategy`] trait, and [`pipeline::prepare_recipe`] runs
+//! composable per-layer passes (OCS → weight clip/quant → activation)
+//! over a shared [`pipeline::LayerCtx`]. Every recipe has a stable
+//! fingerprint; [`pipeline::prepare_cached`] memoizes preparation in
+//! the process-wide [`pipeline::PreparedCache`] so all serve workers
+//! share one prep (table sweeps share through a ctx-scoped instance),
+//! and the serve router hot-swaps recipes into a live pool
+//! ([`serve::Server::swap_recipe`]). See
+//! `pipeline/README.md` for the override grammar (TOML `[[quant.layer]]`
+//! tables, CLI `--layer`), matching and fingerprint semantics.
+//!
 //! ## Serving architecture (the §3.5 deployment claim, at pool scale)
 //!
 //! An OCS-split model is a *plain* model, so it scales the way plain
@@ -54,9 +73,13 @@
 //! target/release/ocs train --model miniresnet   # train through PJRT
 //! target/release/ocs table --id 2               # reproduce Table 2
 //! target/release/ocs serve --model minivgg --workers 4 --sweep 1,2,4
+//! # per-layer recipe: 4-bit middles, 8-bit boundary layers
+//! target/release/ocs eval --model minivgg --w-bits 4 \
+//!     --layer "%edge:w_bits=8"
 //! cargo run --release --example quickstart
-//! # no artifacts? the pool still runs end-to-end on the sim backend:
+//! # no artifacts? the pool and the recipe API run on the sim backends:
 //! cargo run --release -- serve --sim --workers 2 --json BENCH_serving.json
+//! QUICKSTART_SIM=1 cargo run --release --example quickstart
 //! ```
 
 // CI runs `cargo clippy -- -D warnings`. Correctness lints stay hard

@@ -18,7 +18,7 @@ use ocs::info;
 use ocs::model::store::WeightStore;
 use ocs::model::ModelSpec;
 use ocs::ocs::{OcsTarget, SplitMode};
-use ocs::pipeline::{self, QuantConfig};
+use ocs::pipeline::{self, QuantConfig, QuantRecipe};
 use ocs::runtime::Engine;
 use ocs::tables::TableCtx;
 use ocs::train::{self, data};
@@ -31,9 +31,10 @@ USAGE:
   ocs train --model all|minivgg|miniresnet|miniincept|lstmlm [--steps N] [--lr F]
   ocs eval  --model NAME [--w-bits N] [--a-bits N] [--w-clip M] [--a-clip M]
             [--ocs-ratio R] [--ocs-target weights|activations] [--split naive|qa]
+            [--layer OVERRIDES]
   ocs table --id all|1|2|3|4|5|6|fig1 [--quick]
   ocs report --model NAME [--bits N] [--ocs-ratio R]
-  ocs serve --model NAME [--requests N] [--w-bits N]
+  ocs serve --model NAME [--requests N] [--w-bits N] [--layer OVERRIDES]
             [--workers N] [--queue-cap N] [--deadline-ms MS]
             [--max-batch N] [--max-wait-us US]
             [--sweep 1,2,4] [--json PATH] [--sim]
@@ -44,6 +45,15 @@ FLAGS:
   --threads N       kernel-pool width for the parallel quantization /
                     calibration kernels (default: one per core; results
                     are bit-identical at any width)
+  --layer SPECS     per-layer recipe overrides, ';'-separated:
+                    'MATCH:key=value,...' where MATCH is a layer-name
+                    glob or %first|%last|%edge|%conv|%fc|%embed (combine
+                    with '+'), and keys are skip, w_bits, a_bits (0 =
+                    float), w_clip, a_clip, ocs_ratio, ocs_target,
+                    split_mode. Later overrides win.
+                    e.g. --layer 'fc*:w_bits=4;%edge:w_bits=8'
+                    (TOML files: [[quant.layer]] tables, same keys plus
+                    match/kind/pos)
 
 SERVE FLAGS:
   --workers N       engine shards, one thread+engine each (default: cores)
@@ -185,6 +195,16 @@ fn parse_config(args: &Args) -> Result<QuantConfig> {
     Ok(cfg)
 }
 
+/// Full recipe from the CLI: uniform defaults (`parse_config`) plus any
+/// `--layer` per-layer overrides.
+fn parse_recipe(args: &Args) -> Result<QuantRecipe> {
+    let recipe = parse_config(args)?.to_recipe();
+    match args.str("layer") {
+        Some(flag) => recipe.with_cli_overrides(flag).context("bad --layer"),
+        None => Ok(recipe),
+    }
+}
+
 fn cmd_eval(args: &Args, artifacts: &str) -> Result<()> {
     let name = args.req("model")?;
     let spec = ModelSpec::load_named(artifacts, name)?;
@@ -192,26 +212,25 @@ fn cmd_eval(args: &Args, artifacts: &str) -> Result<()> {
     if !trained {
         ocs::warnln!("no trained weights for {name}; evaluating the init seed (run `ocs train` first)");
     }
-    let cfg = parse_config(args)?;
+    let recipe = parse_recipe(args)?;
     let engine = Engine::cpu()?;
     if spec.is_lm() {
         let corpus = data::synth_corpus(40_000, spec.vocab, 92);
         let windows = data::token_windows(&corpus, spec.seq_len, 32);
-        let prep = pipeline::prepare(&spec, &ws, None, &cfg)?;
+        let prep = pipeline::prepare_recipe(&spec, &ws, None, &recipe)?;
         let ppl = eval::perplexity(&engine, &spec, &prep, &windows)?;
-        println!("{name} [{}]: perplexity {ppl:.2}", cfg.label());
+        println!("{name} [{}]: perplexity {ppl:.2}", recipe.label());
     } else {
-        let calib_needed = cfg.a_bits.is_some();
-        let calib = if calib_needed {
+        let calib = if recipe.needs_calibration(&spec) {
             let calib_set = data::synth_images(256, 29);
             Some(ocs::calib::calibrate(&engine, &spec, &ws, &calib_set.x, 32)?)
         } else {
             None
         };
         let test = data::synth_images(2_000, 31);
-        let prep = pipeline::prepare(&spec, &ws, calib.as_ref(), &cfg)?;
+        let prep = pipeline::prepare_recipe(&spec, &ws, calib.as_ref(), &recipe)?;
         let acc = eval::accuracy(&engine, &spec, &prep, &test.x, &test.y, 128)?;
-        println!("{name} [{}]: top-1 {:.2}%", cfg.label(), acc * 100.0);
+        println!("{name} [{}]: top-1 {:.2}%", recipe.label(), acc * 100.0);
     }
     Ok(())
 }
@@ -242,11 +261,14 @@ fn cmd_serve(args: &Args, artifacts: &str) -> Result<()> {
     }
     let name = args.req("model")?;
     let wb: u32 = args.parse_or("w-bits", 5)?;
-    let quant = QuantConfig::weights_only(wb, ClipMethod::Mse, 0.02);
+    let mut recipe = QuantConfig::weights_only(wb, ClipMethod::Mse, 0.02).to_recipe();
+    if let Some(flag) = args.str("layer") {
+        recipe = recipe.with_cli_overrides(flag).context("bad --layer")?;
+    }
     ocs::serve::self_test(
         artifacts,
         name,
-        quant,
+        recipe,
         requests,
         &serve_cfg,
         &sweep,

@@ -1,0 +1,281 @@
+//! Process-wide cache of prepared models, keyed by
+//! `(model, recipe fingerprint, inputs token)` — the quantization-side
+//! sibling of [`crate::runtime::HloTextCache`].
+//!
+//! `pipeline::prepare` is the expensive step of standing up a worker or
+//! a table cell: OCS split planning, histogram builds, clip-threshold
+//! sweeps, and fake-quantization over every layer. The sharded server
+//! runs it once *per worker*, and table sweeps re-run it for every
+//! repeated config — N workers × M sweep points of identical work. This
+//! cache makes each distinct `(model, recipe, weights+calibration)`
+//! combination prepare exactly once per process; all consumers share the
+//! result via `Arc<PreparedModel>`.
+//!
+//! The recipe side of the key is [`QuantRecipe::fingerprint`]. Because a
+//! model *name* does not pin the layer structure (two artifact dirs can
+//! differ in padding or quantized flags), the weights (init vs trained),
+//! or the calibration set (quick vs full, per-batch oracle), the key
+//! also folds in an *inputs token*: an FNV-1a hash over the spec's layer
+//! table, the weight-store contents, and the calibration statistics.
+//! That keeps Table-4-style per-batch oracle preparations (and
+//! structurally different same-name specs) from aliasing each other, at
+//! the cost of one cheap hash pass over the weights per lookup (orders
+//! of magnitude cheaper than `prepare` itself).
+//!
+//! Preparation happens under the cache lock, mirroring `HloTextCache`:
+//! N workers racing on a cold key must produce exactly one prepare, and
+//! serializing the racers *is* the win — the losers would otherwise
+//! each burn a core redoing it.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::Result;
+
+use crate::calib::Calibration;
+use crate::model::store::WeightStore;
+use crate::model::ModelSpec;
+
+use super::recipe::QuantRecipe;
+use super::{prepare_recipe, PreparedModel};
+
+/// Shared prepared-model cache with hit/miss accounting.
+#[derive(Default)]
+pub struct PreparedCache {
+    map: Mutex<HashMap<(String, String, u64), Arc<PreparedModel>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PreparedCache {
+    pub fn new() -> PreparedCache {
+        PreparedCache::default()
+    }
+
+    /// The process-wide instance ([`super::prepare_cached`] and the
+    /// serving backends use this one).
+    pub fn global() -> &'static PreparedCache {
+        static GLOBAL: OnceLock<PreparedCache> = OnceLock::new();
+        GLOBAL.get_or_init(PreparedCache::default)
+    }
+
+    /// Fetch the prepared model for `(spec, ws, calib, recipe)`, running
+    /// [`prepare_recipe`] on the first request only.
+    pub fn get_or_prepare(
+        &self,
+        spec: &ModelSpec,
+        ws: &WeightStore,
+        calib: Option<&Calibration>,
+        recipe: &QuantRecipe,
+    ) -> Result<Arc<PreparedModel>> {
+        let key = (
+            spec.name.clone(),
+            recipe.fingerprint(),
+            inputs_token(spec, ws, calib),
+        );
+        let mut map = self.map.lock().expect("prepared cache poisoned");
+        if let Some(prep) = map.get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(prep.clone());
+        }
+        // prepare under the lock: racing workers produce one prep
+        let prep = Arc::new(prepare_recipe(spec, ws, calib, recipe)?);
+        map.insert(key, prep.clone());
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        Ok(prep)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().expect("prepared cache poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Drop every cached prep (tests; long-lived processes that retire
+    /// weight sets can reclaim memory here).
+    pub fn clear(&self) {
+        self.map.lock().expect("prepared cache poisoned").clear();
+    }
+}
+
+/// Hash of everything `prepare` consumes besides the recipe: the spec's
+/// layer structure (a model *name* does not pin padded shapes or
+/// quantized flags across artifact dirs), weight leaves (names, exact
+/// f32 bits), and calibration statistics (per-layer histogram
+/// counts/ranges, channel maxima, outlier counts).
+fn inputs_token(spec: &ModelSpec, ws: &WeightStore, calib: Option<&Calibration>) -> u64 {
+    let mut h = crate::util::hash::Fnv1a::new();
+    for l in &spec.layers {
+        h.str(&l.name);
+        h.u64(l.cin as u64);
+        h.u64(l.cin_pad as u64);
+        h.u64(l.cout as u64);
+        h.u64(l.w_cin_axis as u64);
+        h.byte(l.quantized as u8);
+        h.byte(match l.kind {
+            crate::model::LayerKind::Conv => 0,
+            crate::model::LayerKind::Fc => 1,
+            crate::model::LayerKind::Embed => 2,
+        });
+        for &d in &l.w_shape_pad {
+            h.u64(d as u64);
+        }
+    }
+    for name in ws.names() {
+        h.str(name);
+        if let Some(t) = ws.bundle.f32s.get(name) {
+            h.u64(t.len() as u64);
+            for &v in t.data() {
+                h.u32(v.to_bits());
+            }
+        }
+    }
+    match calib {
+        None => h.u64(0),
+        Some(c) => {
+            h.u64(1 + c.layers.len() as u64);
+            for (name, lc) in &c.layers {
+                h.str(name);
+                h.u64(lc.hist.count());
+                h.u32(lc.hist.range().to_bits());
+                for &m in &lc.channel_max {
+                    h.u32(m.to_bits());
+                }
+                for &o in &lc.outlier_counts {
+                    h.u64(o);
+                }
+            }
+        }
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clip::ClipMethod;
+    use crate::model::{LayerKind, LayerSpec};
+    use crate::pipeline::QuantConfig;
+    use crate::tensor::TensorF;
+    use crate::util::rng::Rng;
+
+    fn fake_spec() -> ModelSpec {
+        ModelSpec {
+            name: "fake".into(),
+            dir: std::path::PathBuf::new(),
+            pad_factor: 1.25,
+            num_classes: 4,
+            img_hw: 0,
+            img_c: 0,
+            vocab: 0,
+            seq_len: 0,
+            momentum: 0.9,
+            layers: vec![LayerSpec {
+                name: "f1".into(),
+                kind: LayerKind::Fc,
+                cin: 8,
+                cin_pad: 10,
+                cout: 4,
+                ksize: 0,
+                stride: 1,
+                quantized: true,
+                w_cin_axis: 0,
+                w_shape: vec![8, 4],
+                w_shape_pad: vec![10, 4],
+            }],
+            artifacts: Default::default(),
+        }
+    }
+
+    fn fake_ws(seed: u64) -> WeightStore {
+        let mut rng = Rng::new(seed);
+        WeightStore::from_leaves(vec![
+            ("f1.W".into(), TensorF::from_vec(&[8, 4], rng.normal_vec(32)).unwrap()),
+            ("f1.b".into(), TensorF::zeros(&[4])),
+        ])
+    }
+
+    #[test]
+    fn second_prepare_hits_and_shares() {
+        let cache = PreparedCache::new();
+        let spec = fake_spec();
+        let ws = fake_ws(1);
+        let recipe = QuantRecipe::uniform(&QuantConfig::weights_only(4, ClipMethod::Mse, 0.0));
+        let a = cache.get_or_prepare(&spec, &ws, None, &recipe).unwrap();
+        let b = cache.get_or_prepare(&spec, &ws, None, &recipe).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "one prep, shared");
+        assert_eq!((cache.misses(), cache.hits(), cache.len()), (1, 1, 1));
+    }
+
+    #[test]
+    fn distinct_recipes_weights_do_not_alias() {
+        let cache = PreparedCache::new();
+        let spec = fake_spec();
+        let ws = fake_ws(1);
+        let r4 = QuantRecipe::uniform(&QuantConfig::weights_only(4, ClipMethod::None, 0.0));
+        let r5 = QuantRecipe::uniform(&QuantConfig::weights_only(5, ClipMethod::None, 0.0));
+        let a = cache.get_or_prepare(&spec, &ws, None, &r4).unwrap();
+        let b = cache.get_or_prepare(&spec, &ws, None, &r5).unwrap();
+        assert!(!Arc::ptr_eq(&a, &b));
+        // same model name + recipe, different weights: the inputs token
+        // keeps init-vs-trained (and oracle-calib) preps separate
+        let c = cache.get_or_prepare(&spec, &fake_ws(2), None, &r4).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(cache.misses(), 3);
+        assert_eq!(cache.hits(), 0);
+        cache.clear();
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn structural_spec_changes_do_not_alias() {
+        // same model name, same weight bytes, different layer structure
+        // (e.g. two artifact dirs with different pad factors) must not
+        // share a prep
+        let cache = PreparedCache::new();
+        let ws = fake_ws(1);
+        let recipe = QuantRecipe::uniform(&QuantConfig::weights_only(4, ClipMethod::None, 0.0));
+        let a = cache.get_or_prepare(&fake_spec(), &ws, None, &recipe).unwrap();
+        let mut spec2 = fake_spec();
+        spec2.layers[0].cin_pad = 12;
+        spec2.layers[0].w_shape_pad = vec![12, 4];
+        let b = cache.get_or_prepare(&spec2, &ws, None, &recipe).unwrap();
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(b.layers[0].w.shape(), &[12, 4], "prep follows the new padding");
+        assert_eq!(a.layers[0].w.shape(), &[10, 4]);
+        assert_eq!(cache.misses(), 2);
+    }
+
+    #[test]
+    fn concurrent_cold_key_prepares_once() {
+        let cache = Arc::new(PreparedCache::new());
+        let spec = Arc::new(fake_spec());
+        let ws = Arc::new(fake_ws(3));
+        let recipe = QuantRecipe::uniform(&QuantConfig::weights_only(4, ClipMethod::Kl, 0.05));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let (cache, spec, ws, recipe) =
+                (cache.clone(), spec.clone(), ws.clone(), recipe.clone());
+            handles.push(std::thread::spawn(move || {
+                cache.get_or_prepare(&spec, &ws, None, &recipe).unwrap()
+            }));
+        }
+        let preps: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for p in &preps[1..] {
+            assert!(Arc::ptr_eq(&preps[0], p));
+        }
+        assert_eq!(cache.misses(), 1, "exactly one prepare ran");
+        assert_eq!(cache.hits(), 7);
+    }
+}

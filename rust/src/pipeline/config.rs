@@ -1,8 +1,10 @@
 //! Run configuration: [`QuantConfig`] captures a full paper experiment
-//! cell (bits × clip method × OCS ratio/target/mode); [`ServeConfig`]
-//! captures the serving-pool shape (worker shards, batching, admission
-//! control, deadlines). Both parse from CLI flags and the TOML-subset
-//! experiment files.
+//! cell (bits × clip method × OCS ratio/target/mode) and lowers to a
+//! uniform [`super::QuantRecipe`] via [`QuantConfig::to_recipe`] — use a
+//! recipe directly for per-layer overrides; [`ServeConfig`] captures the
+//! serving-pool shape (worker shards, batching, admission control,
+//! deadlines). Both parse from CLI flags and the TOML-subset experiment
+//! files.
 
 use std::time::Duration;
 
@@ -85,6 +87,13 @@ impl QuantConfig {
     pub fn with_mode(mut self, mode: SplitMode) -> Self {
         self.split_mode = mode;
         self
+    }
+
+    /// Lower to a uniform [`super::QuantRecipe`]: the same policy for
+    /// every layer, no overrides. `QuantConfig` is the thin constructor;
+    /// the recipe is what the pipeline actually consumes.
+    pub fn to_recipe(&self) -> super::QuantRecipe {
+        super::QuantRecipe::uniform(self)
     }
 
     /// Compact label for table rows / logs.

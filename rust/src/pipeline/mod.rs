@@ -1,26 +1,65 @@
-//! The quantization pipeline: `QuantConfig` → per-layer clip/OCS plan →
-//! the exact runtime inputs the AOT artifact consumes.
+//! The quantization pipeline: a [`QuantRecipe`] → per-layer resolved
+//! policies → composable per-layer passes → the exact runtime inputs the
+//! AOT artifact consumes.
 //!
-//! This is where the paper's §5 experimental recipe lives:
+//! ## Recipes
 //!
-//! 1. **Weight OCS** (optional, §3.4): split `ceil(r * C)` channels,
-//!    iteratively targeting the largest |w|. Quantization-aware splitting
-//!    needs the final grid step, which itself depends on the post-split
-//!    distribution — resolved with two passes (naive split → threshold →
-//!    QA split on that grid → re-threshold).
-//! 2. **Weight clipping + quantization**: threshold from the configured
-//!    [`ClipMethod`] over the post-OCS histogram, then fake-quantize onto
-//!    the Eq. 1 grid. Weights ship to the artifact already quantized.
-//! 3. **Activation side**: clip threshold from [`calib`] histograms →
-//!    runtime `(adelta, aqmax)` scalars; activation OCS (§5.3) splits the
-//!    calibration-ranked outlier channels via `channel_dup` scales.
+//! The paper's §5 experimental recipe ("OCS + Best Clip") was originally
+//! one flat [`QuantConfig`] applied uniformly to every layer. The API is
+//! now built around [`QuantRecipe`]: model-wide defaults plus ordered
+//! per-layer overrides (layer-name glob / [`crate::model::LayerKind`] /
+//! first-last position), resolved to one [`recipe::LayerRecipe`] per
+//! layer. `QuantConfig` remains as the thin uniform constructor — it
+//! lowers via [`QuantRecipe::uniform`] and [`prepare`] stays
+//! bit-identical to the pre-recipe pipeline for uniform configs. Clip
+//! thresholds go through [`crate::clip::ClipSpec`], so custom
+//! [`crate::clip::ClipStrategy`] implementations participate without
+//! touching `clip/`.
 //!
-//! The paper's Table-2 "OCS + Best Clip" recipe is just a `QuantConfig`
-//! with both `ocs_ratio > 0` and a non-`None` `w_clip`.
+//! ## Passes
+//!
+//! [`prepare_recipe`] runs three composable passes per quantized layer
+//! over a shared [`LayerCtx`]:
+//!
+//! 1. [`pass_ocs`] (optional, §3.4): split `ceil(r * C)` channels,
+//!    iteratively targeting the largest |w|. Quantization-aware
+//!    splitting needs the final grid step, which itself depends on the
+//!    post-split distribution — resolved with two passes (naive split →
+//!    threshold → QA split on that grid → re-threshold). Activation OCS
+//!    (§5.3) instead splits the calibration-ranked outlier channels via
+//!    `channel_dup` scales; the selected channels are recorded on the
+//!    ctx as a mark vector.
+//! 2. [`pass_weight_quant`]: threshold from the resolved clip strategy
+//!    over the post-OCS histogram, then fake-quantize onto the Eq. 1
+//!    grid. Weights ship to the artifact already quantized.
+//! 3. [`pass_activation`]: clip threshold from [`crate::calib`]
+//!    histograms →
+//!    runtime `(adelta, aqmax)` scalars; under activation OCS the grid
+//!    covers the post-split channel max (paper §5.3: no extra clipping).
+//!
+//! The paper's Table-2 "OCS + Best Clip" recipe is just a uniform
+//! recipe with both `ocs_ratio > 0` and a non-`None` `w_clip`; mixed
+//! precision, per-layer OCS ratios, and skip-first/last policies are
+//! one override away. See `pipeline/README.md` for matching,
+//! fingerprinting, cache, and hot-swap semantics.
+//!
+//! ## Caching
+//!
+//! Preparation is memoizable: a resolved recipe has a stable
+//! [`QuantRecipe::fingerprint`], and [`prepare_cached`] routes through
+//! the process-wide [`PreparedCache`] so all serve workers share one
+//! prep per distinct (model, recipe, inputs); table sweeps get the same
+//! sharing from a ctx-scoped instance owned by `tables::TableCtx`.
 
+pub mod cache;
 pub mod config;
+pub mod recipe;
 
+pub use cache::PreparedCache;
 pub use config::{PerfConfig, QuantConfig, ServeConfig};
+pub use recipe::{LayerMatch, LayerOverride, LayerPolicy, LayerPos, LayerRecipe, QuantRecipe};
+
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -57,7 +96,9 @@ pub struct LayerPrep {
 #[derive(Debug, Clone)]
 pub struct PreparedModel {
     pub model: String,
-    pub config: QuantConfig,
+    /// The recipe this prep was resolved from (uniform for plain
+    /// [`QuantConfig`] call sites).
+    pub recipe: QuantRecipe,
     pub layers: Vec<LayerPrep>,
     /// Unquantized layers: (name, W, Some(b)).
     pub raw: Vec<(String, TensorF, Option<TensorF>)>,
@@ -116,123 +157,246 @@ pub fn active_weight_hist(hooks: &ocs::OcsHooks, cin_axis: usize) -> Histogram {
     hist
 }
 
-/// Prepare one quantizable layer.
-fn prepare_layer(
-    layer: &LayerSpec,
-    ws: &WeightStore,
-    calib: Option<&Calibration>,
-    cfg: &QuantConfig,
-) -> Result<LayerPrep> {
-    let w = ws.weight(&layer.name)?;
-    let b = ws.bias(&layer.name)?;
+/// Shared state the per-layer passes read and write: the resolved
+/// policy, the layer's tensors, and every intermediate the passes hand
+/// to each other (OCS hooks, split marks, quantized weight, activation
+/// grid). [`LayerCtx::finish`] folds it into a [`LayerPrep`].
+pub struct LayerCtx<'a> {
+    pub layer: &'a LayerSpec,
+    pub rc: &'a LayerRecipe,
+    calib: Option<&'a Calibration>,
+    w: &'a TensorF,
+    b: &'a TensorF,
+    /// Set by [`pass_ocs`].
+    hooks: Option<ocs::OcsHooks>,
+    /// Which original channels were split (activation OCS): one flag per
+    /// calibration channel, so downstream max scans are O(C) instead of
+    /// the old O(C×S) `contains` walk.
+    split_marks: Vec<bool>,
+    /// Set by [`pass_weight_quant`].
+    wq: Option<TensorF>,
+    w_threshold: f32,
+    /// `(adelta, aqmax, a_threshold)`, set by [`pass_activation`]
+    /// (`(1.0, -1.0, 0.0)` when activations stay float).
+    a_grid: Option<(f32, f32, f32)>,
+}
+
+impl<'a> LayerCtx<'a> {
+    pub fn new(
+        layer: &'a LayerSpec,
+        ws: &'a WeightStore,
+        calib: Option<&'a Calibration>,
+        rc: &'a LayerRecipe,
+    ) -> Result<LayerCtx<'a>> {
+        Ok(LayerCtx {
+            layer,
+            rc,
+            calib,
+            w: ws.weight(&layer.name)?,
+            b: ws.bias(&layer.name)?,
+            hooks: None,
+            split_marks: Vec::new(),
+            wq: None,
+            w_threshold: 0.0,
+            a_grid: None,
+        })
+    }
+
+    fn w_spec(&self) -> Option<QuantSpec> {
+        self.rc.w_bits.map(QuantSpec::new)
+    }
+
+    fn a_spec(&self) -> Option<QuantSpec> {
+        self.rc.a_bits.map(QuantSpec::new)
+    }
+
+    fn hooks(&self) -> Result<&ocs::OcsHooks> {
+        self.hooks.as_ref().context("pass_ocs must run first")
+    }
+
+    /// Consume the ctx into the runtime-ready layer prep. All three
+    /// passes must have run (enforced — a skipped pass is an error, not
+    /// a silently-float layer).
+    pub fn finish(self) -> Result<LayerPrep> {
+        let hooks = self.hooks.context("pass_ocs did not run")?;
+        let wq = self.wq.context("pass_weight_quant did not run")?;
+        let (adelta, aqmax, a_threshold) = self.a_grid.context("pass_activation did not run")?;
+        Ok(LayerPrep {
+            name: self.layer.name.clone(),
+            w: wq,
+            b: self.b.clone(),
+            idx: hooks.idx.clone(),
+            dscale: hooks.dscale.clone(),
+            dbias: hooks.dbias.clone(),
+            adelta,
+            aqmax,
+            w_threshold: self.w_threshold,
+            a_threshold,
+            cin: self.layer.cin,
+            active: hooks.active,
+            splits: hooks.splits.len(),
+        })
+    }
+}
+
+/// Mark vector over `len` channels with the listed indices set
+/// (out-of-range indices — expanded slots — are ignored).
+fn mark_channels<I: IntoIterator<Item = usize>>(indices: I, len: usize) -> Vec<bool> {
+    let mut marks = vec![false; len];
+    for i in indices {
+        if i < len {
+            marks[i] = true;
+        }
+    }
+    marks
+}
+
+/// Max |x| per layer after halving the marked channels. O(C) over the
+/// [`LayerCtx`] mark vector (the pre-refactor list scan was O(C×S)).
+fn post_split_max(channel_max: &[f32], split_marks: &[bool]) -> f32 {
+    debug_assert_eq!(channel_max.len(), split_marks.len());
+    let mut m = 0.0f32;
+    for (&v, &split) in channel_max.iter().zip(split_marks) {
+        m = m.max(if split { v * 0.5 } else { v });
+    }
+    m
+}
+
+/// Pass 1 — OCS. Builds the layer's [`ocs::OcsHooks`] (identity hooks
+/// when OCS is off or inapplicable) and, for activation OCS, the
+/// split-channel mark vector the activation pass reuses.
+pub fn pass_ocs(cx: &mut LayerCtx) -> Result<()> {
+    let layer = cx.layer;
+    let rc = cx.rc;
     let axis = layer.w_cin_axis;
     let cin_pad = layer.cin_pad;
-
-    let w_spec = cfg.w_bits.map(QuantSpec::new);
-    let a_spec = cfg.a_bits.map(QuantSpec::new);
-
-    // ---- OCS ---------------------------------------------------------------
-    let hooks = match (cfg.ocs_target, cfg.ocs_ratio > 0.0) {
-        (OcsTarget::Weights, true) if w_spec.is_some() => {
-            let n = plan::splits_for(layer.cin, cfg.ocs_ratio, cin_pad);
+    let hooks = match (rc.ocs_target, rc.ocs_ratio > 0.0) {
+        (OcsTarget::Weights, true) if cx.w_spec().is_some() => {
+            let n = plan::splits_for(layer.cin, rc.ocs_ratio, cin_pad);
             // pass 1 (naive) to discover the post-split grid
-            let h0 = ocs::weight_ocs(w, axis, cin_pad, n, SplitMode::Naive, 0.0)?;
-            match cfg.split_mode {
+            let h0 = ocs::weight_ocs(cx.w, axis, cin_pad, n, SplitMode::Naive, 0.0)?;
+            match rc.split_mode {
                 SplitMode::Naive => h0,
                 SplitMode::QuantAware => {
-                    let spec = w_spec.unwrap();
-                    let thr0 = cfg.w_clip.threshold(&active_weight_hist(&h0, axis), spec);
+                    let spec = cx.w_spec().unwrap();
+                    let thr0 = rc.w_clip.threshold(&active_weight_hist(&h0, axis), spec);
                     let delta0 = spec.delta(thr0);
-                    ocs::weight_ocs(w, axis, cin_pad, n, SplitMode::QuantAware, delta0)?
+                    ocs::weight_ocs(cx.w, axis, cin_pad, n, SplitMode::QuantAware, delta0)?
                 }
             }
         }
-        (OcsTarget::Activations, true) if a_spec.is_some() => {
-            let calib = calib.context("activation OCS requires calibration")?;
+        (OcsTarget::Activations, true) if cx.a_spec().is_some() => {
+            let calib = cx.calib.context("activation OCS requires calibration")?;
             let lc = calib.layer(&layer.name)?;
-            let n = plan::splits_for(layer.cin, cfg.ocs_ratio, cin_pad);
+            let n = plan::splits_for(layer.cin, rc.ocs_ratio, cin_pad);
             let channels = crate::calib::top_k_channels(&lc.outlier_counts, n);
             // activation grid after splitting: split channels halve, so
             // the no-clip threshold is the post-split channel max
-            let spec = a_spec.unwrap();
-            let post_max = post_split_max(&lc.channel_max, &channels);
+            let spec = cx.a_spec().unwrap();
+            let marks = mark_channels(channels.iter().copied(), lc.channel_max.len());
+            let post_max = post_split_max(&lc.channel_max, &marks);
             let adelta = spec.delta(post_max.max(1e-12));
-            ocs::activation_ocs(w, axis, cin_pad, &channels, cfg.split_mode, adelta)?
+            let hooks =
+                ocs::activation_ocs(cx.w, axis, cin_pad, &channels, rc.split_mode, adelta)?;
+            // the performed splits (src slots) drive the final grid
+            cx.split_marks = mark_channels(
+                hooks.splits.iter().map(|&(s, _)| s),
+                lc.channel_max.len(),
+            );
+            hooks
         }
-        _ => ocs::identity_hooks(w, axis, cin_pad)?,
+        _ => ocs::identity_hooks(cx.w, axis, cin_pad)?,
     };
+    cx.hooks = Some(hooks);
+    Ok(())
+}
 
-    // ---- weight quantization -------------------------------------------------
-    let (wq, w_threshold) = match w_spec {
+/// Pass 2 — weight clip + fake-quantization onto the Eq. 1 grid
+/// (pass-through clone when weights stay float).
+pub fn pass_weight_quant(cx: &mut LayerCtx) -> Result<()> {
+    let (wq, w_threshold) = match cx.w_spec() {
         Some(spec) => {
-            let hist = active_weight_hist(&hooks, axis);
-            let thr = cfg.w_clip.threshold(&hist, spec);
+            let hooks = cx.hooks()?;
+            let hist = active_weight_hist(hooks, cx.layer.w_cin_axis);
+            let thr = cx.rc.w_clip.threshold(&hist, spec);
             (fake_quant_tensor(&hooks.w_expanded, thr, spec), thr)
         }
-        None => (hooks.w_expanded.clone(), 0.0),
+        None => (cx.hooks()?.w_expanded.clone(), 0.0),
     };
+    cx.wq = Some(wq);
+    cx.w_threshold = w_threshold;
+    Ok(())
+}
 
-    // ---- activation quantization ----------------------------------------------
-    let (adelta, aqmax, a_threshold) = match a_spec {
+/// Pass 3 — activation grid: clip threshold from calibration (or the
+/// post-split channel max under activation OCS) → `(adelta, aqmax)`.
+pub fn pass_activation(cx: &mut LayerCtx) -> Result<()> {
+    let grid = match cx.a_spec() {
         Some(spec) => {
-            let calib = calib.context("activation quantization requires calibration")?;
-            let lc = calib.layer(&layer.name)?;
-            let thr = if cfg.ocs_target == OcsTarget::Activations && cfg.ocs_ratio > 0.0 {
+            let calib = cx
+                .calib
+                .context("activation quantization requires calibration")?;
+            let lc = calib.layer(&cx.layer.name)?;
+            let thr = if cx.rc.ocs_target == OcsTarget::Activations && cx.rc.ocs_ratio > 0.0 {
                 // paper §5.3: activation OCS is evaluated without extra
                 // clipping; the grid covers the post-split max
-                let channels: Vec<usize> = hooks.splits.iter().map(|&(s, _)| s).collect();
-                post_split_max(&lc.channel_max, &channels)
+                post_split_max(&lc.channel_max, &cx.split_marks)
             } else {
-                cfg.a_clip.threshold(&lc.hist, spec)
+                cx.rc.a_clip.threshold(&lc.hist, spec)
             };
             (spec.delta(thr.max(1e-12)), spec.qmax(), thr)
         }
         None => (1.0, -1.0, 0.0),
     };
-
-    Ok(LayerPrep {
-        name: layer.name.clone(),
-        w: wq,
-        b: b.clone(),
-        idx: hooks.idx.clone(),
-        dscale: hooks.dscale.clone(),
-        dbias: hooks.dbias.clone(),
-        adelta,
-        aqmax,
-        w_threshold,
-        a_threshold,
-        cin: layer.cin,
-        active: hooks.active,
-        splits: hooks.splits.len(),
-    })
+    cx.a_grid = Some(grid);
+    Ok(())
 }
 
-/// Max |x| per layer after halving the listed channels.
-fn post_split_max(channel_max: &[f32], split: &[usize]) -> f32 {
-    let mut m = 0.0f32;
-    for (c, &v) in channel_max.iter().enumerate() {
-        let v = if split.contains(&c) { v * 0.5 } else { v };
-        m = m.max(v);
-    }
-    m
+/// Prepare one quantizable layer under its resolved policy: the three
+/// passes in order, then fold.
+fn prepare_layer(
+    layer: &LayerSpec,
+    ws: &WeightStore,
+    calib: Option<&Calibration>,
+    rc: &LayerRecipe,
+) -> Result<LayerPrep> {
+    let mut cx = LayerCtx::new(layer, ws, calib, rc)?;
+    pass_ocs(&mut cx)?;
+    pass_weight_quant(&mut cx)?;
+    pass_activation(&mut cx)?;
+    cx.finish()
 }
 
-/// Prepare a whole model under `cfg`. `calib` is required iff
-/// activations are quantized (or activation-OCS is requested).
-pub fn prepare(
+/// Prepare a whole model under `recipe`. `calib` is required iff some
+/// resolved layer quantizes activations (or requests activation OCS).
+///
+/// A layer the recipe skips (`quantize = false`) still yields a
+/// [`LayerPrep`] — the artifact consumes its hook inputs regardless —
+/// but with identity hooks and quantization fully bypassed, exactly as
+/// a float config would produce.
+pub fn prepare_recipe(
     spec: &ModelSpec,
     ws: &WeightStore,
     calib: Option<&Calibration>,
-    cfg: &QuantConfig,
+    recipe: &QuantRecipe,
 ) -> Result<PreparedModel> {
-    if cfg.a_bits.is_some() && calib.is_none() {
-        bail!("QuantConfig quantizes activations but no calibration given");
-    }
+    let first = spec.quantized_layers().next().map(|l| l.name.clone());
+    let last = spec.quantized_layers().last().map(|l| l.name.clone());
     let mut layers = Vec::new();
     let mut raw = Vec::new();
     for layer in &spec.layers {
         if layer.quantized {
-            layers.push(prepare_layer(layer, ws, calib, cfg)?);
+            let is_first = first.as_deref() == Some(layer.name.as_str());
+            let is_last = last.as_deref() == Some(layer.name.as_str());
+            let rc = recipe.resolve(layer, is_first, is_last);
+            let rc = if rc.quantize { rc } else { LayerRecipe::skip() };
+            if rc.needs_calibration() && calib.is_none() {
+                bail!(
+                    "recipe quantizes activations of layer '{}' but no calibration given",
+                    layer.name
+                );
+            }
+            layers.push(prepare_layer(layer, ws, calib, &rc)?);
         } else {
             let w = ws.weight(&layer.name)?.clone();
             let b = match layer.kind {
@@ -244,15 +408,43 @@ pub fn prepare(
     }
     Ok(PreparedModel {
         model: spec.name.clone(),
-        config: cfg.clone(),
+        recipe: recipe.clone(),
         layers,
         raw,
     })
 }
 
+/// Prepare under a flat uniform [`QuantConfig`] — the thin compat
+/// constructor. Bit-identical to [`prepare_recipe`] on
+/// [`QuantRecipe::uniform`] (it *is* that call).
+pub fn prepare(
+    spec: &ModelSpec,
+    ws: &WeightStore,
+    calib: Option<&Calibration>,
+    cfg: &QuantConfig,
+) -> Result<PreparedModel> {
+    if cfg.a_bits.is_some() && calib.is_none() {
+        bail!("QuantConfig quantizes activations but no calibration given");
+    }
+    prepare_recipe(spec, ws, calib, &QuantRecipe::uniform(cfg))
+}
+
+/// [`prepare_recipe`] through the process-wide [`PreparedCache`]: one
+/// prep per distinct (model, recipe fingerprint, weights+calibration),
+/// shared via `Arc` across table sweeps and serve workers.
+pub fn prepare_cached(
+    spec: &ModelSpec,
+    ws: &WeightStore,
+    calib: Option<&Calibration>,
+    recipe: &QuantRecipe,
+) -> Result<Arc<PreparedModel>> {
+    PreparedCache::global().get_or_prepare(spec, ws, calib, recipe)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::calib::LayerCalib;
     use crate::clip::ClipMethod;
     use crate::util::rng::Rng;
 
@@ -282,10 +474,19 @@ mod tests {
         ])
     }
 
+    /// Resolve a uniform config against the fake layer (what the old
+    /// flat-config `prepare_layer` consumed).
+    fn rc_of(cfg: &QuantConfig) -> LayerRecipe {
+        QuantRecipe::uniform(cfg).resolve(&fake_layer(), false, false)
+    }
+
+    fn prep_one(cfg: &QuantConfig, ws: &WeightStore, calib: Option<&Calibration>) -> LayerPrep {
+        prepare_layer(&fake_layer(), ws, calib, &rc_of(cfg)).unwrap()
+    }
+
     #[test]
     fn float_config_is_passthrough() {
-        let cfg = QuantConfig::float();
-        let prep = prepare_layer(&fake_layer(), &fake_ws(0), None, &cfg).unwrap();
+        let prep = prep_one(&QuantConfig::float(), &fake_ws(0), None);
         assert_eq!(prep.aqmax, -1.0);
         assert_eq!(prep.splits, 0);
         assert_eq!(prep.w.shape(), &[10, 4]);
@@ -299,7 +500,7 @@ mod tests {
     #[test]
     fn weight_quant_snaps_to_grid() {
         let cfg = QuantConfig::weights_only(4, ClipMethod::None, 0.0);
-        let prep = prepare_layer(&fake_layer(), &fake_ws(1), None, &cfg).unwrap();
+        let prep = prep_one(&cfg, &fake_ws(1), None);
         let delta = prep.w_threshold / 7.0;
         for &v in prep.w.data() {
             let k = v / delta;
@@ -311,8 +512,8 @@ mod tests {
     fn weight_ocs_splits_outlier_and_reduces_threshold() {
         let no_ocs = QuantConfig::weights_only(4, ClipMethod::None, 0.0);
         let ocs = QuantConfig::weights_only(4, ClipMethod::None, 0.13); // ceil(.13*8)=2
-        let p0 = prepare_layer(&fake_layer(), &fake_ws(2), None, &no_ocs).unwrap();
-        let p1 = prepare_layer(&fake_layer(), &fake_ws(2), None, &ocs).unwrap();
+        let p0 = prep_one(&no_ocs, &fake_ws(2), None);
+        let p1 = prep_one(&ocs, &fake_ws(2), None);
         assert_eq!(p1.splits, 2);
         assert_eq!(p1.active, 10);
         assert!(
@@ -331,14 +532,8 @@ mod tests {
         let cfg = QuantConfig::weights_only(5, ClipMethod::Mse, 0.01);
         let prep = PreparedModel {
             model: "fake".into(),
-            config: cfg,
-            layers: vec![prepare_layer(
-                &fake_layer(),
-                &fake_ws(3),
-                None,
-                &QuantConfig::weights_only(5, ClipMethod::Mse, 0.01),
-            )
-            .unwrap()],
+            recipe: QuantRecipe::uniform(&cfg),
+            layers: vec![prep_one(&cfg, &fake_ws(3), None)],
             raw: vec![("stem".into(), TensorF::zeros(&[3, 3, 3, 8]), Some(TensorF::zeros(&[8])))],
         };
         let mut inputs: Inputs = Default::default();
@@ -353,16 +548,14 @@ mod tests {
 
     #[test]
     fn overhead_counts_extra_channels() {
-        let prep_l = prepare_layer(
-            &fake_layer(),
+        let prep_l = prep_one(
+            &QuantConfig::weights_only(4, ClipMethod::None, 0.25), // 2 splits
             &fake_ws(4),
             None,
-            &QuantConfig::weights_only(4, ClipMethod::None, 0.25), // 2 splits
-        )
-        .unwrap();
+        );
         let pm = PreparedModel {
             model: "fake".into(),
-            config: QuantConfig::float(),
+            recipe: QuantRecipe::float(),
             layers: vec![prep_l],
             raw: vec![],
         };
@@ -371,8 +564,232 @@ mod tests {
     }
 
     #[test]
-    fn post_split_max_halves_selected() {
-        assert_eq!(post_split_max(&[1.0, 8.0, 3.0], &[1]), 4.0);
-        assert_eq!(post_split_max(&[1.0, 8.0, 3.0], &[]), 8.0);
+    fn post_split_max_halves_marked() {
+        assert_eq!(
+            post_split_max(&[1.0, 8.0, 3.0], &mark_channels([1], 3)),
+            4.0
+        );
+        assert_eq!(
+            post_split_max(&[1.0, 8.0, 3.0], &mark_channels([], 3)),
+            8.0
+        );
+        // out-of-range (expanded-slot) indices are ignored
+        assert_eq!(
+            post_split_max(&[1.0, 8.0, 3.0], &mark_channels([1, 9], 3)),
+            4.0
+        );
+    }
+
+    /// Synthetic calibration for the fake layer: channel 2 dominates the
+    /// range, channels 2 and 5 have the most outliers.
+    fn fake_calib() -> Calibration {
+        let mut channel_max = vec![1.0f32; 8];
+        channel_max[2] = 10.0;
+        channel_max[5] = 1.0;
+        let mut outlier_counts = vec![0u64; 8];
+        outlier_counts[2] = 50;
+        outlier_counts[5] = 20;
+        let data: Vec<f32> = (0..4096).map(|i| (i % 100) as f32 * 0.1).collect();
+        let mut layers = std::collections::BTreeMap::new();
+        layers.insert(
+            "f1".into(),
+            LayerCalib {
+                hist: Histogram::from_slice(&data, 256),
+                channel_max,
+                outlier_counts,
+            },
+        );
+        Calibration { layers }
+    }
+
+    #[test]
+    fn activation_ocs_prepares_with_post_split_grid() {
+        // acts_only(4, ..., 0.25): 8-bit weights, 4-bit acts, activation
+        // OCS splitting ceil(0.25 * 8) = 2 channels
+        let cfg = QuantConfig::acts_only(4, ClipMethod::None, 0.25);
+        let calib = fake_calib();
+        let prep = prep_one(&cfg, &fake_ws(5), Some(&calib));
+        assert_eq!(prep.splits, 2, "two outlier channels split");
+        assert_eq!(prep.active, 10);
+        // grid: channel 2 (max 10) halves to 5, everything else <= 1
+        assert!((prep.a_threshold - 5.0).abs() < 1e-6, "{}", prep.a_threshold);
+        let spec = QuantSpec::new(4);
+        assert!((prep.adelta - spec.delta(5.0)).abs() < 1e-9);
+        assert_eq!(prep.aqmax, spec.qmax());
+        // the duplicated slots carry halved activation scales
+        let halved = prep.dscale.data().iter().filter(|&&s| s == 0.5).count();
+        assert!(halved >= 2, "split slots must halve: {:?}", prep.dscale.data());
+        // weights still got their 8-bit treatment
+        assert!(prep.w_threshold > 0.0);
+    }
+
+    #[test]
+    fn activation_ocs_requires_calibration() {
+        let cfg = QuantConfig::acts_only(4, ClipMethod::None, 0.1);
+        let spec = ModelSpec {
+            name: "fake".into(),
+            dir: std::path::PathBuf::new(),
+            pad_factor: 1.25,
+            num_classes: 4,
+            img_hw: 0,
+            img_c: 0,
+            vocab: 0,
+            seq_len: 0,
+            momentum: 0.9,
+            layers: vec![fake_layer()],
+            artifacts: Default::default(),
+        };
+        let err = prepare(&spec, &fake_ws(6), None, &cfg).unwrap_err();
+        assert!(err.to_string().contains("calibration"), "{err:#}");
+        // recipe path reports the same constraint per-layer
+        let err2 =
+            prepare_recipe(&spec, &fake_ws(6), None, &QuantRecipe::uniform(&cfg)).unwrap_err();
+        assert!(err2.to_string().contains("f1"), "{err2:#}");
+    }
+
+    fn three_layer_spec() -> ModelSpec {
+        let mut layers = Vec::new();
+        for name in ["f1", "f2", "f3"] {
+            let mut l = fake_layer();
+            l.name = name.into();
+            layers.push(l);
+        }
+        ModelSpec {
+            name: "trio".into(),
+            dir: std::path::PathBuf::new(),
+            pad_factor: 1.25,
+            num_classes: 4,
+            img_hw: 0,
+            img_c: 0,
+            vocab: 0,
+            seq_len: 0,
+            momentum: 0.9,
+            layers,
+            artifacts: Default::default(),
+        }
+    }
+
+    fn three_layer_ws(seed: u64) -> WeightStore {
+        let mut rng = Rng::new(seed);
+        let mut leaves = Vec::new();
+        for name in ["f1", "f2", "f3"] {
+            leaves.push((
+                format!("{name}.W"),
+                TensorF::from_vec(&[8, 4], rng.normal_vec(32)).unwrap(),
+            ));
+            leaves.push((format!("{name}.b"), TensorF::zeros(&[4])));
+        }
+        WeightStore::from_leaves(leaves)
+    }
+
+    #[test]
+    fn mixed_precision_recipe_resolves_per_layer() {
+        // 4-bit middle, 8-bit first/last — the classic mixed recipe
+        let recipe =
+            QuantRecipe::uniform(&QuantConfig::weights_only(4, ClipMethod::None, 0.0))
+                .edge_w_bits(8);
+        let spec = three_layer_spec();
+        let ws = three_layer_ws(7);
+        let prep = prepare_recipe(&spec, &ws, None, &recipe).unwrap();
+        assert_eq!(prep.layers.len(), 3);
+        // every weight sits on its layer's grid: qmax 127 for the edges,
+        // 7 for the middle
+        for (l, qmax) in prep.layers.iter().zip([127.0f32, 7.0, 127.0]) {
+            let delta = l.w_threshold / qmax;
+            for &v in l.w.data() {
+                let k = v / delta;
+                assert!(
+                    (k - k.round()).abs() < 1e-3,
+                    "{}: {v} not on the {qmax}-level grid",
+                    l.name
+                );
+            }
+        }
+        // the middle layer's coarse grid must differ from the edges'
+        let d_mid = prep.layers[1].w_threshold / 7.0;
+        let d_edge = prep.layers[0].w_threshold / 127.0;
+        assert!(d_mid > d_edge * 2.0, "4-bit grid must be coarser");
+    }
+
+    #[test]
+    fn skip_override_keeps_layer_float_but_hooked() {
+        let recipe = QuantRecipe::uniform(&QuantConfig::weights_only(4, ClipMethod::Mse, 0.1))
+            .with_override(LayerMatch::name("f2"), LayerPolicy::skip());
+        let spec = three_layer_spec();
+        let ws = three_layer_ws(8);
+        let prep = prepare_recipe(&spec, &ws, None, &recipe).unwrap();
+        // the skipped layer still produces hook inputs (the artifact
+        // needs them) but carries the original float weights, unsplit
+        let f2 = &prep.layers[1];
+        assert_eq!(f2.splits, 0);
+        assert_eq!(f2.w_threshold, 0.0);
+        assert_eq!(&f2.w.data()[..32], ws.weight("f2").unwrap().data());
+        // its neighbours are quantized and OCS-split
+        assert!(prep.layers[0].splits > 0);
+        assert!(prep.layers[0].w_threshold > 0.0);
+        let mut inputs: Inputs = Default::default();
+        prep.insert_inputs(&mut inputs);
+        assert!(inputs.contains_key("f2.idx"), "skipped layer keeps hooks");
+    }
+
+    #[test]
+    fn uniform_recipe_prepares_bit_identical_to_config() {
+        // the compat guarantee: QuantConfig call sites see the exact
+        // same PreparedModel the pre-recipe pipeline produced
+        let spec = three_layer_spec();
+        let ws = three_layer_ws(9);
+        let calib = {
+            let mut c = fake_calib();
+            let f1 = c.layers["f1"].clone();
+            c.layers.insert("f2".into(), f1.clone());
+            c.layers.insert("f3".into(), f1);
+            c
+        };
+        for cfg in [
+            QuantConfig::float(),
+            QuantConfig::weights_only(5, ClipMethod::Mse, 0.05),
+            QuantConfig::weights_with_a8(4, ClipMethod::Kl, 0.02),
+            QuantConfig::acts_only(6, ClipMethod::Aciq, 0.1),
+        ] {
+            let a = prepare(&spec, &ws, Some(&calib), &cfg).unwrap();
+            let b =
+                prepare_recipe(&spec, &ws, Some(&calib), &QuantRecipe::uniform(&cfg)).unwrap();
+            assert_eq!(a.layers.len(), b.layers.len());
+            for (x, y) in a.layers.iter().zip(&b.layers) {
+                assert_eq!(x.w.data(), y.w.data(), "{}: weights differ", x.name);
+                assert_eq!(x.idx.data(), y.idx.data());
+                assert_eq!(x.dscale.data(), y.dscale.data());
+                assert_eq!(x.dbias.data(), y.dbias.data());
+                assert_eq!(x.adelta.to_bits(), y.adelta.to_bits());
+                assert_eq!(x.aqmax.to_bits(), y.aqmax.to_bits());
+                assert_eq!(x.w_threshold.to_bits(), y.w_threshold.to_bits());
+                assert_eq!(x.a_threshold.to_bits(), y.a_threshold.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn passes_enforce_ordering() {
+        let ws = fake_ws(10);
+        let layer = fake_layer();
+        let rc = rc_of(&QuantConfig::weights_only(4, ClipMethod::None, 0.0));
+        let mut cx = LayerCtx::new(&layer, &ws, None, &rc).unwrap();
+        assert!(pass_weight_quant(&mut cx).is_err(), "needs pass_ocs first");
+        pass_ocs(&mut cx).unwrap();
+        pass_weight_quant(&mut cx).unwrap();
+        pass_activation(&mut cx).unwrap();
+        let prep = cx.finish().unwrap();
+        assert_eq!(prep.name, "f1");
+        // finish without the weight pass is an error, not a panic
+        let mut cx2 = LayerCtx::new(&layer, &ws, None, &rc).unwrap();
+        pass_ocs(&mut cx2).unwrap();
+        assert!(cx2.finish().is_err());
+        // ... and so is finish without the activation pass (a skipped
+        // pass must never silently serve float activations)
+        let mut cx3 = LayerCtx::new(&layer, &ws, None, &rc).unwrap();
+        pass_ocs(&mut cx3).unwrap();
+        pass_weight_quant(&mut cx3).unwrap();
+        let err = cx3.finish().unwrap_err();
+        assert!(err.to_string().contains("pass_activation"), "{err:#}");
     }
 }

@@ -1,0 +1,980 @@
+//! [`QuantRecipe`] — the paper's §5 recipe as a first-class, per-layer
+//! policy object.
+//!
+//! A recipe is model-wide defaults (the old flat [`QuantConfig`] fields)
+//! plus an ordered list of [`LayerOverride`]s. Each override pairs a
+//! [`LayerMatch`] — layer-name glob, [`LayerKind`], and/or position
+//! (first/last quantized layer) — with a partial [`LayerPolicy`].
+//! Resolution folds every matching override onto the defaults in
+//! declaration order (later overrides win on the fields they set),
+//! yielding one fully-specified [`LayerRecipe`] per layer. That enables
+//! mixed precision (8-bit first/last, 4-bit middle), per-layer OCS
+//! ratios, and skip-first/last-layer policies — the per-layer knobs the
+//! paper's first/last-layer observation and follow-ups like SplitQuant
+//! make standard — without giving up the one-line uniform configs.
+//!
+//! Every recipe has a stable [`QuantRecipe::fingerprint`] derived from a
+//! canonical text form; the process-wide [`super::PreparedCache`] keys
+//! prepared models on it, and the serve router hot-swaps recipes by it.
+//! Clip slots hold a [`ClipSpec`], so custom [`crate::clip::ClipStrategy`]
+//! implementations participate in recipes (identified by their `name()`).
+//!
+//! Text forms:
+//! * TOML — `[quant]` defaults plus `[[quant.layer]]` tables:
+//!   `match = "fc*"`, `kind = "conv"`, `pos = "first"|"last"|"edge"`,
+//!   and any of `skip`, `quantize`, `w_bits`, `a_bits` (0 = float),
+//!   `w_clip`, `a_clip`, `ocs_ratio`, `ocs_target`, `split_mode`.
+//! * CLI — `--layer "fc*:w_bits=4,ocs_ratio=0.1;%edge:w_bits=8"`:
+//!   `;`-separated overrides, each `match:key=value,...` where match is
+//!   a name glob or `%first`/`%last`/`%edge`/`%conv`/`%fc`/`%embed`
+//!   (combinable with `+`).
+
+use anyhow::{bail, Context, Result};
+
+use crate::clip::{ClipMethod, ClipSpec};
+use crate::model::{LayerKind, LayerSpec, ModelSpec};
+use crate::ocs::{OcsTarget, SplitMode};
+use crate::util::toml::Config;
+
+use super::config::QuantConfig;
+
+/// `*` / `?` glob match (no character classes — layer names are plain
+/// identifiers). Iterative with single-star backtracking.
+pub fn glob_match(pat: &str, text: &str) -> bool {
+    let p: Vec<char> = pat.chars().collect();
+    let t: Vec<char> = text.chars().collect();
+    let (mut pi, mut ti) = (0usize, 0usize);
+    let mut star: Option<(usize, usize)> = None; // (pat pos after '*', text mark)
+    while ti < t.len() {
+        if pi < p.len() && (p[pi] == '?' || p[pi] == t[ti]) {
+            pi += 1;
+            ti += 1;
+        } else if pi < p.len() && p[pi] == '*' {
+            star = Some((pi + 1, ti));
+            pi += 1;
+        } else if let Some((sp, mark)) = star {
+            pi = sp;
+            ti = mark + 1;
+            star = Some((sp, mark + 1));
+        } else {
+            return false;
+        }
+    }
+    while pi < p.len() && p[pi] == '*' {
+        pi += 1;
+    }
+    pi == p.len()
+}
+
+/// Positional matcher relative to the model's *quantized* layer list.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerPos {
+    First,
+    Last,
+    /// First or last (the "treat boundary layers differently" policy).
+    Edge,
+}
+
+impl LayerPos {
+    pub fn parse(s: &str) -> Option<LayerPos> {
+        match s {
+            "first" => Some(LayerPos::First),
+            "last" => Some(LayerPos::Last),
+            "edge" => Some(LayerPos::Edge),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LayerPos::First => "first",
+            LayerPos::Last => "last",
+            LayerPos::Edge => "edge",
+        }
+    }
+}
+
+fn parse_kind(s: &str) -> Option<LayerKind> {
+    match s {
+        "conv" => Some(LayerKind::Conv),
+        "fc" => Some(LayerKind::Fc),
+        "embed" => Some(LayerKind::Embed),
+        _ => None,
+    }
+}
+
+fn kind_name(k: LayerKind) -> &'static str {
+    match k {
+        LayerKind::Conv => "conv",
+        LayerKind::Fc => "fc",
+        LayerKind::Embed => "embed",
+    }
+}
+
+/// Which layers an override applies to. All set conditions must hold;
+/// an empty match (the default) matches every layer.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LayerMatch {
+    pub name_glob: Option<String>,
+    pub kind: Option<LayerKind>,
+    pub pos: Option<LayerPos>,
+}
+
+impl LayerMatch {
+    pub fn name(glob: impl Into<String>) -> LayerMatch {
+        LayerMatch {
+            name_glob: Some(glob.into()),
+            ..LayerMatch::default()
+        }
+    }
+
+    pub fn kind(kind: LayerKind) -> LayerMatch {
+        LayerMatch {
+            kind: Some(kind),
+            ..LayerMatch::default()
+        }
+    }
+
+    pub fn pos(pos: LayerPos) -> LayerMatch {
+        LayerMatch {
+            pos: Some(pos),
+            ..LayerMatch::default()
+        }
+    }
+
+    /// `is_first` / `is_last` are relative to the model's quantized
+    /// layers (a model with one quantized layer is both).
+    pub fn matches(&self, layer: &LayerSpec, is_first: bool, is_last: bool) -> bool {
+        if let Some(glob) = &self.name_glob {
+            if !glob_match(glob, &layer.name) {
+                return false;
+            }
+        }
+        if let Some(kind) = self.kind {
+            if layer.kind != kind {
+                return false;
+            }
+        }
+        match self.pos {
+            Some(LayerPos::First) if !is_first => false,
+            Some(LayerPos::Last) if !is_last => false,
+            Some(LayerPos::Edge) if !(is_first || is_last) => false,
+            _ => true,
+        }
+    }
+
+    /// CLI token: a name glob and/or `%first|%last|%edge|%conv|%fc|%embed`
+    /// markers, combined with `+` (e.g. `fc*+%last`).
+    pub fn parse(token: &str) -> Result<LayerMatch> {
+        let token = token.trim();
+        if token.is_empty() {
+            bail!("empty layer match");
+        }
+        let mut m = LayerMatch::default();
+        for part in token.split('+') {
+            let part = part.trim();
+            if let Some(marker) = part.strip_prefix('%') {
+                if let Some(pos) = LayerPos::parse(marker) {
+                    m.pos = Some(pos);
+                } else if let Some(kind) = parse_kind(marker) {
+                    m.kind = Some(kind);
+                } else {
+                    bail!("unknown layer matcher '%{marker}' (first|last|edge|conv|fc|embed)");
+                }
+            } else if part.is_empty() {
+                bail!("empty component in layer match '{token}'");
+            } else if let Some(prev) = &m.name_glob {
+                // only one glob per match — a second is almost always a
+                // typo ('+' for ';'), so refuse rather than silently
+                // keeping the last one
+                bail!("layer match '{token}' has two name globs ('{prev}' and '{part}'); use ';' to write separate overrides");
+            } else {
+                m.name_glob = Some(part.to_string());
+            }
+        }
+        Ok(m)
+    }
+
+    fn canonical(&self) -> String {
+        let mut parts = Vec::new();
+        if let Some(g) = &self.name_glob {
+            parts.push(format!("name={g}"));
+        }
+        if let Some(k) = self.kind {
+            parts.push(format!("kind={}", kind_name(k)));
+        }
+        if let Some(p) = self.pos {
+            parts.push(format!("pos={}", p.name()));
+        }
+        if parts.is_empty() {
+            "*".into()
+        } else {
+            parts.join("&")
+        }
+    }
+}
+
+/// A partial policy: only the set fields override the recipe defaults.
+/// Bit fields use `0` for "force float" (matching the TOML convention
+/// where `w_bits = 0` means unquantized).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LayerPolicy {
+    /// `Some(false)` = keep the layer float entirely (skip).
+    pub quantize: Option<bool>,
+    pub w_bits: Option<u32>,
+    pub a_bits: Option<u32>,
+    pub w_clip: Option<ClipSpec>,
+    pub a_clip: Option<ClipSpec>,
+    pub ocs_ratio: Option<f64>,
+    pub ocs_target: Option<OcsTarget>,
+    pub split_mode: Option<SplitMode>,
+}
+
+impl LayerPolicy {
+    pub fn skip() -> LayerPolicy {
+        LayerPolicy {
+            quantize: Some(false),
+            ..LayerPolicy::default()
+        }
+    }
+
+    pub fn w_bits(bits: u32) -> LayerPolicy {
+        LayerPolicy {
+            w_bits: Some(bits),
+            ..LayerPolicy::default()
+        }
+    }
+
+    pub fn with_w_bits(mut self, bits: u32) -> LayerPolicy {
+        self.w_bits = Some(bits);
+        self
+    }
+
+    pub fn with_a_bits(mut self, bits: u32) -> LayerPolicy {
+        self.a_bits = Some(bits);
+        self
+    }
+
+    pub fn with_w_clip(mut self, clip: impl Into<ClipSpec>) -> LayerPolicy {
+        self.w_clip = Some(clip.into());
+        self
+    }
+
+    pub fn with_a_clip(mut self, clip: impl Into<ClipSpec>) -> LayerPolicy {
+        self.a_clip = Some(clip.into());
+        self
+    }
+
+    pub fn with_ocs_ratio(mut self, ratio: f64) -> LayerPolicy {
+        self.ocs_ratio = Some(ratio);
+        self
+    }
+
+    pub fn with_ocs_target(mut self, target: OcsTarget) -> LayerPolicy {
+        self.ocs_target = Some(target);
+        self
+    }
+
+    pub fn with_split_mode(mut self, mode: SplitMode) -> LayerPolicy {
+        self.split_mode = Some(mode);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        *self == LayerPolicy::default()
+    }
+
+    /// Set one field from its text form (shared by the CLI and TOML
+    /// parsers). `skip` accepts a bare key (value "true").
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "skip" => {
+                let skip = parse_bool(value).context("bad 'skip' value")?;
+                self.quantize = Some(!skip);
+            }
+            "quantize" => {
+                self.quantize = Some(parse_bool(value).context("bad 'quantize' value")?);
+            }
+            "w_bits" => self.w_bits = Some(parse_bits(value).context("bad 'w_bits'")?),
+            "a_bits" => self.a_bits = Some(parse_bits(value).context("bad 'a_bits'")?),
+            "w_clip" => {
+                self.w_clip =
+                    Some(ClipSpec::parse(value).with_context(|| format!("bad w_clip '{value}'"))?)
+            }
+            "a_clip" => {
+                self.a_clip =
+                    Some(ClipSpec::parse(value).with_context(|| format!("bad a_clip '{value}'"))?)
+            }
+            "ocs_ratio" => {
+                let r: f64 = value.parse().with_context(|| format!("bad ocs_ratio '{value}'"))?;
+                if !(0.0..=1.0).contains(&r) {
+                    bail!("ocs_ratio {r} outside [0, 1]");
+                }
+                self.ocs_ratio = Some(r);
+            }
+            "ocs_target" => {
+                self.ocs_target = Some(match value {
+                    "weights" => OcsTarget::Weights,
+                    "activations" => OcsTarget::Activations,
+                    other => bail!("bad ocs_target '{other}'"),
+                })
+            }
+            "split_mode" | "split" => {
+                self.split_mode = Some(
+                    SplitMode::parse(value).with_context(|| format!("bad split_mode '{value}'"))?,
+                )
+            }
+            other => bail!("unknown layer-policy key '{other}'"),
+        }
+        Ok(())
+    }
+
+    fn canonical(&self) -> String {
+        let mut parts = Vec::new();
+        if let Some(q) = self.quantize {
+            parts.push(format!("quantize={q}"));
+        }
+        if let Some(b) = self.w_bits {
+            parts.push(format!("w_bits={b}"));
+        }
+        if let Some(b) = self.a_bits {
+            parts.push(format!("a_bits={b}"));
+        }
+        if let Some(c) = &self.w_clip {
+            parts.push(format!("w_clip={}", c.name()));
+        }
+        if let Some(c) = &self.a_clip {
+            parts.push(format!("a_clip={}", c.name()));
+        }
+        if let Some(r) = self.ocs_ratio {
+            parts.push(format!("ocs_ratio={r}"));
+        }
+        if let Some(t) = self.ocs_target {
+            parts.push(format!("ocs_target={}", target_name(t)));
+        }
+        if let Some(m) = self.split_mode {
+            parts.push(format!("split_mode={}", m.name()));
+        }
+        parts.join(",")
+    }
+}
+
+fn parse_bool(s: &str) -> Result<bool> {
+    match s {
+        "true" | "1" | "yes" => Ok(true),
+        "false" | "0" | "no" => Ok(false),
+        other => bail!("expected a bool, got '{other}'"),
+    }
+}
+
+/// Bit fields: `0` = float (no quantization on that side); otherwise
+/// the grid range [`crate::quant::QuantSpec`] supports (2..=16).
+fn parse_bits(s: &str) -> Result<u32> {
+    let b: u32 = s.parse().with_context(|| format!("expected bits, got '{s}'"))?;
+    if b != 0 && !(2..=16).contains(&b) {
+        bail!("bits {b} outside 0 (float) or 2..=16");
+    }
+    Ok(b)
+}
+
+fn target_name(t: OcsTarget) -> &'static str {
+    match t {
+        OcsTarget::Weights => "weights",
+        OcsTarget::Activations => "activations",
+    }
+}
+
+fn bits_opt(b: u32) -> Option<u32> {
+    if b == 0 {
+        None
+    } else {
+        Some(b)
+    }
+}
+
+/// One matcher + partial policy pair.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerOverride {
+    pub matches: LayerMatch,
+    pub policy: LayerPolicy,
+}
+
+impl LayerOverride {
+    /// CLI form: `match:key=value,key=value` (bare `skip` allowed).
+    /// Clip values may themselves contain `:` (`w_clip=percentile:0.99`)
+    /// — only the first `:` separates the matcher.
+    pub fn parse(spec: &str) -> Result<LayerOverride> {
+        let (match_part, policy_part) = spec
+            .split_once(':')
+            .with_context(|| format!("layer override '{spec}': expected 'match:key=value,...'"))?;
+        let matches = LayerMatch::parse(match_part)?;
+        let mut policy = LayerPolicy::default();
+        for kv in policy_part.split(',') {
+            let kv = kv.trim();
+            if kv.is_empty() {
+                continue;
+            }
+            match kv.split_once('=') {
+                Some((k, v)) => policy.set(k.trim(), v.trim())?,
+                None => policy.set(kv, "true")?,
+            }
+        }
+        if policy.is_empty() {
+            bail!("layer override '{spec}' sets no policy fields");
+        }
+        Ok(LayerOverride { matches, policy })
+    }
+
+    fn canonical(&self) -> String {
+        format!("{}=>{}", self.matches.canonical(), self.policy.canonical())
+    }
+}
+
+/// The fully-resolved quantization policy for one layer (what the
+/// pipeline passes actually consume).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerRecipe {
+    /// `false` = serve this layer float even though the artifact marks
+    /// it quantizable (skip-layer policy).
+    pub quantize: bool,
+    pub w_bits: Option<u32>,
+    pub a_bits: Option<u32>,
+    pub w_clip: ClipSpec,
+    pub a_clip: ClipSpec,
+    pub ocs_ratio: f64,
+    pub ocs_target: OcsTarget,
+    pub split_mode: SplitMode,
+}
+
+impl LayerRecipe {
+    /// The resolved policy for a layer the recipe keeps float: identity
+    /// hooks, quantization fully bypassed on both sides.
+    pub fn skip() -> LayerRecipe {
+        LayerRecipe {
+            quantize: false,
+            w_bits: None,
+            a_bits: None,
+            w_clip: ClipMethod::None.into(),
+            a_clip: ClipMethod::None.into(),
+            ocs_ratio: 0.0,
+            ocs_target: OcsTarget::Weights,
+            split_mode: SplitMode::QuantAware,
+        }
+    }
+
+    pub fn needs_calibration(&self) -> bool {
+        self.quantize && self.a_bits.is_some()
+    }
+
+    /// Compact per-layer tag (mirrors [`QuantConfig::label`]).
+    pub fn label(&self) -> String {
+        if !self.quantize {
+            return "float(skip)".into();
+        }
+        let w = self
+            .w_bits
+            .map(|b| format!("w{b}:{}", self.w_clip.name()))
+            .unwrap_or_else(|| "wf".into());
+        let a = self
+            .a_bits
+            .map(|b| format!("a{b}:{}", self.a_clip.name()))
+            .unwrap_or_else(|| "af".into());
+        let ocs = if self.ocs_ratio > 0.0 {
+            format!(
+                " ocs[{} r={} {}]",
+                target_name(self.ocs_target),
+                self.ocs_ratio,
+                self.split_mode.name()
+            )
+        } else {
+            String::new()
+        };
+        format!("{w} {a}{ocs}")
+    }
+}
+
+/// Model-wide defaults + ordered per-layer overrides. See the module
+/// docs for the text forms; see [`QuantRecipe::resolve`] for semantics.
+#[derive(Debug, Clone)]
+pub struct QuantRecipe {
+    pub w_bits: Option<u32>,
+    pub a_bits: Option<u32>,
+    pub w_clip: ClipSpec,
+    pub a_clip: ClipSpec,
+    pub ocs_ratio: f64,
+    pub ocs_target: OcsTarget,
+    pub split_mode: SplitMode,
+    pub overrides: Vec<LayerOverride>,
+}
+
+impl Default for QuantRecipe {
+    fn default() -> Self {
+        QuantRecipe::float()
+    }
+}
+
+impl From<QuantConfig> for QuantRecipe {
+    fn from(cfg: QuantConfig) -> QuantRecipe {
+        QuantRecipe::uniform(&cfg)
+    }
+}
+
+impl QuantRecipe {
+    /// Float baseline, no overrides.
+    pub fn float() -> QuantRecipe {
+        QuantRecipe::uniform(&QuantConfig::float())
+    }
+
+    /// Lower a flat [`QuantConfig`] to a uniform recipe: same policy for
+    /// every layer, no overrides. `prepare` on this recipe is
+    /// bit-identical to the pre-recipe pipeline on the config.
+    pub fn uniform(cfg: &QuantConfig) -> QuantRecipe {
+        QuantRecipe {
+            w_bits: cfg.w_bits,
+            a_bits: cfg.a_bits,
+            w_clip: cfg.w_clip.into(),
+            a_clip: cfg.a_clip.into(),
+            ocs_ratio: cfg.ocs_ratio,
+            ocs_target: cfg.ocs_target,
+            split_mode: cfg.split_mode,
+            overrides: Vec::new(),
+        }
+    }
+
+    /// Append one override (later overrides win on conflicts).
+    pub fn with_override(mut self, matches: LayerMatch, policy: LayerPolicy) -> QuantRecipe {
+        self.overrides.push(LayerOverride { matches, policy });
+        self
+    }
+
+    pub fn push_override(&mut self, ov: LayerOverride) {
+        self.overrides.push(ov);
+    }
+
+    /// The paper's first/last-layer caution as a one-liner: keep the
+    /// boundary layers float.
+    pub fn skip_first_last(self) -> QuantRecipe {
+        self.with_override(LayerMatch::pos(LayerPos::Edge), LayerPolicy::skip())
+    }
+
+    /// Mixed precision: boundary layers at `bits` weight bits, the
+    /// defaults everywhere else.
+    pub fn edge_w_bits(self, bits: u32) -> QuantRecipe {
+        self.with_override(LayerMatch::pos(LayerPos::Edge), LayerPolicy::w_bits(bits))
+    }
+
+    /// Resolve the effective policy for one layer. `is_first`/`is_last`
+    /// are relative to the model's quantized layers; overrides fold onto
+    /// the defaults in declaration order, later ones winning on the
+    /// fields they set.
+    pub fn resolve(&self, layer: &LayerSpec, is_first: bool, is_last: bool) -> LayerRecipe {
+        let mut rc = LayerRecipe {
+            quantize: true,
+            w_bits: self.w_bits,
+            a_bits: self.a_bits,
+            w_clip: self.w_clip.clone(),
+            a_clip: self.a_clip.clone(),
+            ocs_ratio: self.ocs_ratio,
+            ocs_target: self.ocs_target,
+            split_mode: self.split_mode,
+        };
+        for ov in &self.overrides {
+            if !ov.matches.matches(layer, is_first, is_last) {
+                continue;
+            }
+            let p = &ov.policy;
+            if let Some(q) = p.quantize {
+                rc.quantize = q;
+            }
+            if let Some(b) = p.w_bits {
+                rc.w_bits = bits_opt(b);
+            }
+            if let Some(b) = p.a_bits {
+                rc.a_bits = bits_opt(b);
+            }
+            if let Some(c) = &p.w_clip {
+                rc.w_clip = c.clone();
+            }
+            if let Some(c) = &p.a_clip {
+                rc.a_clip = c.clone();
+            }
+            if let Some(r) = p.ocs_ratio {
+                rc.ocs_ratio = r;
+            }
+            if let Some(t) = p.ocs_target {
+                rc.ocs_target = t;
+            }
+            if let Some(m) = p.split_mode {
+                rc.split_mode = m;
+            }
+        }
+        rc
+    }
+
+    /// True iff this recipe is a plain uniform config (no overrides).
+    pub fn is_uniform(&self) -> bool {
+        self.overrides.is_empty()
+    }
+
+    /// Does preparing `spec` under this recipe require activation
+    /// calibration? True iff some quantized layer's resolved policy
+    /// quantizes activations.
+    pub fn needs_calibration(&self, spec: &ModelSpec) -> bool {
+        let quantized: Vec<&LayerSpec> = spec.layers.iter().filter(|l| l.quantized).collect();
+        let n = quantized.len();
+        quantized.iter().enumerate().any(|(i, l)| {
+            let rc = self.resolve(l, i == 0, i + 1 == n);
+            rc.needs_calibration()
+        })
+    }
+
+    /// Canonical text form — the fingerprint pre-image. Stable across
+    /// processes and releases of this struct's field order (the format
+    /// is versioned with a `q1|` prefix).
+    pub fn canonical(&self) -> String {
+        let bits = |b: Option<u32>| b.map(|b| b.to_string()).unwrap_or_else(|| "f".into());
+        let mut s = format!(
+            "q1|w:{}/{}|a:{}/{}|ocs:{}/{}/{}",
+            bits(self.w_bits),
+            self.w_clip.name(),
+            bits(self.a_bits),
+            self.a_clip.name(),
+            self.ocs_ratio,
+            target_name(self.ocs_target),
+            self.split_mode.name(),
+        );
+        for ov in &self.overrides {
+            s.push('|');
+            s.push_str(&ov.canonical());
+        }
+        s
+    }
+
+    /// Stable 64-bit fingerprint (hex) of the canonical form — the
+    /// [`super::PreparedCache`] key component and hot-swap identity.
+    pub fn fingerprint(&self) -> String {
+        format!(
+            "{:016x}",
+            crate::util::hash::Fnv1a::hash_bytes(self.canonical().as_bytes())
+        )
+    }
+
+    /// Compact label for logs and bench records.
+    pub fn label(&self) -> String {
+        let base = LayerRecipe {
+            quantize: true,
+            w_bits: self.w_bits,
+            a_bits: self.a_bits,
+            w_clip: self.w_clip.clone(),
+            a_clip: self.a_clip.clone(),
+            ocs_ratio: self.ocs_ratio,
+            ocs_target: self.ocs_target,
+            split_mode: self.split_mode,
+        }
+        .label();
+        if self.overrides.is_empty() {
+            base
+        } else {
+            format!("{base} +{} layer override(s)", self.overrides.len())
+        }
+    }
+
+    /// Parse a full recipe from a TOML section: flat defaults under
+    /// `[section]` plus `[[section.layer]]` override tables.
+    pub fn from_toml(c: &Config, section: &str) -> Result<QuantRecipe> {
+        let mut recipe = QuantRecipe::uniform(&QuantConfig::from_toml(c, section)?);
+        let arr = if section.is_empty() {
+            "layer".to_string()
+        } else {
+            format!("{section}.layer")
+        };
+        for i in 0..c.array_len(&arr) {
+            let key = |k: &str| format!("{arr}.{i}.{k}");
+            let mut matches = LayerMatch::default();
+            if c.get(&key("match")).is_some() {
+                matches.name_glob = Some(c.str(&key("match"))?.to_string());
+            }
+            if c.get(&key("kind")).is_some() {
+                let ks = c.str(&key("kind"))?;
+                matches.kind =
+                    Some(parse_kind(ks).with_context(|| format!("bad layer kind '{ks}'"))?);
+            }
+            if c.get(&key("pos")).is_some() {
+                let ps = c.str(&key("pos"))?;
+                matches.pos =
+                    Some(LayerPos::parse(ps).with_context(|| format!("bad layer pos '{ps}'"))?);
+            }
+            let mut policy = LayerPolicy::default();
+            // strict bool reads: `skip = "true"` (a string) must error,
+            // not silently fall back to a default
+            if c.get(&key("skip")).is_some() {
+                policy.quantize = Some(!c.bool(&key("skip"))?);
+            }
+            if c.get(&key("quantize")).is_some() {
+                policy.quantize = Some(c.bool(&key("quantize"))?);
+            }
+            for bits_key in ["w_bits", "a_bits"] {
+                if c.get(&key(bits_key)).is_some() {
+                    let v = c.int(&key(bits_key))?;
+                    if v < 0 {
+                        bail!("[[{arr}]] #{i}: {bits_key} {v} is negative");
+                    }
+                    policy
+                        .set(bits_key, &v.to_string())
+                        .with_context(|| format!("[[{arr}]] #{i}"))?;
+                }
+            }
+            for str_key in ["w_clip", "a_clip", "ocs_target", "split_mode"] {
+                if c.get(&key(str_key)).is_some() {
+                    policy.set(str_key, c.str(&key(str_key))?)?;
+                }
+            }
+            if c.get(&key("ocs_ratio")).is_some() {
+                policy.set("ocs_ratio", &c.float(&key("ocs_ratio"))?.to_string())?;
+            }
+            if policy.is_empty() {
+                bail!("[[{arr}]] #{i} sets no policy fields");
+            }
+            recipe.push_override(LayerOverride { matches, policy });
+        }
+        Ok(recipe)
+    }
+
+    /// Parse the CLI `--layer` flag value: `;`-separated
+    /// [`LayerOverride::parse`] specs appended to `self`.
+    pub fn with_cli_overrides(mut self, flag: &str) -> Result<QuantRecipe> {
+        for spec in flag.split(';') {
+            let spec = spec.trim();
+            if spec.is_empty() {
+                continue;
+            }
+            self.push_override(LayerOverride::parse(spec)?);
+        }
+        Ok(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clip::ClipMethod;
+
+    fn layer(name: &str, kind: LayerKind) -> LayerSpec {
+        LayerSpec {
+            name: name.into(),
+            kind,
+            cin: 8,
+            cin_pad: 10,
+            cout: 4,
+            ksize: 0,
+            stride: 1,
+            quantized: true,
+            w_cin_axis: 0,
+            w_shape: vec![8, 4],
+            w_shape_pad: vec![10, 4],
+        }
+    }
+
+    #[test]
+    fn glob_matching() {
+        assert!(glob_match("*", "anything"));
+        assert!(glob_match("fc*", "fc1"));
+        assert!(glob_match("fc*", "fc"));
+        assert!(!glob_match("fc*", "conv1"));
+        assert!(glob_match("*1", "fc1"));
+        assert!(glob_match("c?nv*", "conv_stem"));
+        assert!(glob_match("a*b*c", "a_x_b_y_c"));
+        assert!(!glob_match("a*b*c", "a_x_b_y"));
+        assert!(glob_match("", ""));
+        assert!(!glob_match("", "x"));
+        assert!(glob_match("**", "x"));
+    }
+
+    #[test]
+    fn match_conditions_and_positions() {
+        let fc = layer("fc1", LayerKind::Fc);
+        let conv = layer("conv_stem", LayerKind::Conv);
+        assert!(LayerMatch::name("fc*").matches(&fc, false, false));
+        assert!(!LayerMatch::name("fc*").matches(&conv, false, false));
+        assert!(LayerMatch::kind(LayerKind::Conv).matches(&conv, false, false));
+        assert!(LayerMatch::pos(LayerPos::First).matches(&fc, true, false));
+        assert!(!LayerMatch::pos(LayerPos::First).matches(&fc, false, true));
+        assert!(LayerMatch::pos(LayerPos::Edge).matches(&fc, false, true));
+        assert!(!LayerMatch::pos(LayerPos::Edge).matches(&fc, false, false));
+        // conjunction: both conditions must hold
+        let both = LayerMatch {
+            name_glob: Some("fc*".into()),
+            kind: Some(LayerKind::Conv),
+            pos: None,
+        };
+        assert!(!both.matches(&fc, false, false));
+        // the empty match matches everything
+        assert!(LayerMatch::default().matches(&conv, false, false));
+    }
+
+    #[test]
+    fn resolve_later_override_wins() {
+        let cfg = QuantConfig::weights_only(8, ClipMethod::Mse, 0.0);
+        let recipe = QuantRecipe::uniform(&cfg)
+            .with_override(LayerMatch::name("fc*"), LayerPolicy::w_bits(4))
+            .with_override(LayerMatch::name("fc9"), LayerPolicy::w_bits(2));
+        let l = layer("fc1", LayerKind::Fc);
+        let rc = recipe.resolve(&l, false, false);
+        assert_eq!(rc.w_bits, Some(4));
+        assert_eq!(rc.w_clip, ClipMethod::Mse.into(), "unset fields inherit");
+        let l9 = layer("fc9", LayerKind::Fc);
+        assert_eq!(recipe.resolve(&l9, false, false).w_bits, Some(2));
+        let c = layer("conv1", LayerKind::Conv);
+        assert_eq!(recipe.resolve(&c, false, false).w_bits, Some(8));
+        // bits = 0 forces float; skip forces quantize = false
+        let r2 = QuantRecipe::uniform(&cfg)
+            .with_override(LayerMatch::name("fc*"), LayerPolicy::w_bits(0))
+            .with_override(LayerMatch::name("conv*"), LayerPolicy::skip());
+        assert_eq!(r2.resolve(&l, false, false).w_bits, None);
+        assert!(!r2.resolve(&c, false, false).quantize);
+        assert!(r2.resolve(&l, false, false).quantize);
+    }
+
+    #[test]
+    fn skip_first_last_and_edge_bits() {
+        let l = layer("f1", LayerKind::Fc);
+        let r = QuantRecipe::uniform(&QuantConfig::weights_only(4, ClipMethod::None, 0.0))
+            .skip_first_last();
+        assert!(!r.resolve(&l, true, false).quantize);
+        assert!(!r.resolve(&l, false, true).quantize);
+        assert!(r.resolve(&l, false, false).quantize);
+        let m = QuantRecipe::uniform(&QuantConfig::weights_only(4, ClipMethod::None, 0.0))
+            .edge_w_bits(8);
+        assert_eq!(m.resolve(&l, true, false).w_bits, Some(8));
+        assert_eq!(m.resolve(&l, false, false).w_bits, Some(4));
+    }
+
+    #[test]
+    fn fingerprint_stable_and_sensitive() {
+        let a = QuantRecipe::uniform(&QuantConfig::weights_only(5, ClipMethod::Mse, 0.02));
+        let b = QuantRecipe::uniform(&QuantConfig::weights_only(5, ClipMethod::Mse, 0.02));
+        assert_eq!(a.fingerprint(), b.fingerprint(), "same recipe, same print");
+        assert_eq!(a.fingerprint().len(), 16);
+        let c = QuantRecipe::uniform(&QuantConfig::weights_only(4, ClipMethod::Mse, 0.02));
+        assert_ne!(a.fingerprint(), c.fingerprint(), "bits change the print");
+        let d = a.clone().with_override(LayerMatch::name("fc*"), LayerPolicy::w_bits(4));
+        assert_ne!(a.fingerprint(), d.fingerprint(), "overrides change the print");
+        // override *order* is semantic (later wins) and fingerprinted
+        let e = QuantRecipe::uniform(&QuantConfig::float())
+            .with_override(LayerMatch::name("a*"), LayerPolicy::w_bits(4))
+            .with_override(LayerMatch::name("b*"), LayerPolicy::w_bits(5));
+        let f = QuantRecipe::uniform(&QuantConfig::float())
+            .with_override(LayerMatch::name("b*"), LayerPolicy::w_bits(5))
+            .with_override(LayerMatch::name("a*"), LayerPolicy::w_bits(4));
+        assert_ne!(e.fingerprint(), f.fingerprint());
+        // float() is the Default
+        assert_eq!(QuantRecipe::default().fingerprint(), QuantRecipe::float().fingerprint());
+    }
+
+    #[test]
+    fn cli_override_parsing() {
+        let ov = LayerOverride::parse("fc*:w_bits=4,ocs_ratio=0.1").unwrap();
+        assert_eq!(ov.matches, LayerMatch::name("fc*"));
+        assert_eq!(ov.policy.w_bits, Some(4));
+        assert_eq!(ov.policy.ocs_ratio, Some(0.1));
+        let skip = LayerOverride::parse("%edge:skip").unwrap();
+        assert_eq!(skip.matches, LayerMatch::pos(LayerPos::Edge));
+        assert_eq!(skip.policy.quantize, Some(false));
+        let combo = LayerOverride::parse("fc*+%last:w_bits=8,w_clip=percentile:0.99").unwrap();
+        assert_eq!(combo.matches.name_glob.as_deref(), Some("fc*"));
+        assert_eq!(combo.matches.pos, Some(LayerPos::Last));
+        assert_eq!(
+            combo.policy.w_clip,
+            Some(ClipMethod::Percentile(0.99).into()),
+            "clip payloads keep their ':'"
+        );
+        let kinds = LayerOverride::parse("%conv:a_bits=8").unwrap();
+        assert_eq!(kinds.matches.kind, Some(LayerKind::Conv));
+        assert!(LayerOverride::parse("noseparator").is_err());
+        assert!(LayerOverride::parse("fc*:").is_err(), "no policy fields");
+        assert!(LayerOverride::parse("fc*:bogus_key=1").is_err());
+        assert!(LayerOverride::parse("%bogus:skip").is_err());
+        assert!(LayerOverride::parse("fc*:ocs_ratio=2.0").is_err(), "ratio > 1");
+        assert!(
+            LayerOverride::parse("conv*+fc*:w_bits=4").is_err(),
+            "two globs in one match is a typo, not a union"
+        );
+        let recipe = QuantRecipe::float()
+            .with_cli_overrides("fc*:w_bits=4; %edge:w_bits=8")
+            .unwrap();
+        assert_eq!(recipe.overrides.len(), 2);
+    }
+
+    #[test]
+    fn toml_recipe_with_layer_tables() {
+        let c = Config::parse(
+            r#"
+[quant]
+w_bits = 5
+w_clip = "mse"
+ocs_ratio = 0.02
+
+[[quant.layer]]
+match = "fc*"
+w_bits = 4
+ocs_ratio = 0.1
+
+[[quant.layer]]
+pos = "edge"
+w_bits = 8
+skip = false
+
+[[quant.layer]]
+kind = "embed"
+skip = true
+"#,
+        )
+        .unwrap();
+        let r = QuantRecipe::from_toml(&c, "quant").unwrap();
+        assert_eq!(r.w_bits, Some(5));
+        assert_eq!(r.overrides.len(), 3);
+        let fc = layer("fc1", LayerKind::Fc);
+        let rc = r.resolve(&fc, false, false);
+        assert_eq!(rc.w_bits, Some(4));
+        assert_eq!(rc.ocs_ratio, 0.1);
+        assert_eq!(rc.w_clip, ClipMethod::Mse.into(), "defaults inherited");
+        // edge override is later, so it beats the fc* one on w_bits
+        let rc_edge = r.resolve(&fc, true, false);
+        assert_eq!(rc_edge.w_bits, Some(8));
+        assert!(rc_edge.quantize);
+        let emb = layer("emb", LayerKind::Embed);
+        assert!(!r.resolve(&emb, false, false).quantize);
+        // an override table with no policy keys is an error
+        let bad = Config::parse("[q]\n[[q.layer]]\nmatch = \"x\"\n").unwrap();
+        assert!(QuantRecipe::from_toml(&bad, "q").is_err());
+        // a mistyped bool must error loudly, not silently default
+        let strbool = Config::parse("[q]\n[[q.layer]]\nskip = \"true\"\n").unwrap();
+        assert!(QuantRecipe::from_toml(&strbool, "q").is_err());
+        // no [[...layer]] tables -> plain uniform recipe
+        let plain = Config::parse("[q]\nw_bits = 6\n").unwrap();
+        let pr = QuantRecipe::from_toml(&plain, "q").unwrap();
+        assert!(pr.is_uniform());
+        assert_eq!(pr.w_bits, Some(6));
+    }
+
+    #[test]
+    fn uniform_lowering_matches_config() {
+        let cfg = QuantConfig::acts_only(6, ClipMethod::Kl, 0.05);
+        let r = QuantRecipe::uniform(&cfg);
+        let l = layer("any", LayerKind::Conv);
+        let rc = r.resolve(&l, true, true);
+        assert!(rc.quantize);
+        assert_eq!(rc.w_bits, cfg.w_bits);
+        assert_eq!(rc.a_bits, cfg.a_bits);
+        assert_eq!(rc.w_clip, cfg.w_clip.into());
+        assert_eq!(rc.a_clip, cfg.a_clip.into());
+        assert_eq!(rc.ocs_ratio, cfg.ocs_ratio);
+        assert_eq!(rc.ocs_target, cfg.ocs_target);
+        assert_eq!(rc.split_mode, cfg.split_mode);
+        assert!(rc.needs_calibration());
+        assert!(r.label().contains("a6:kl"), "{}", r.label());
+        let with_ov = r.with_override(LayerMatch::default(), LayerPolicy::skip());
+        assert!(with_ov.label().contains("override"), "{}", with_ov.label());
+        assert!(!with_ov.resolve(&l, false, false).needs_calibration());
+    }
+}

@@ -6,24 +6,39 @@
 //! config) and the worker calls [`EngineFactory::build`] on its own
 //! thread, producing a thread-local [`WorkerEngine`] that stays put.
 //!
-//! Two factories ship:
+//! Three factories ship:
 //! * [`PjrtFactory`] — the real stack: model spec + weights + quant
-//!   pipeline + PJRT engine per worker. Artifact HLO text is shared
-//!   across workers through [`crate::runtime::HloTextCache`].
+//!   recipe + PJRT engine per worker. Artifact HLO text is shared
+//!   across workers through [`crate::runtime::HloTextCache`], and the
+//!   prepared quantization pipeline through the process-wide
+//!   [`PreparedCache`] — N workers, one prepare.
 //! * [`SimFactory`] — a synthetic CPU-burning model. Deterministic
-//!   logits, tunable per-batch/per-item cost. This is what CI and the
-//!   router tests run on: it needs no artifacts and no PJRT, but still
+//!   logits, tunable per-batch/per-item cost. This is what the router
+//!   tests run on: it needs no artifacts and no PJRT, but still
 //!   occupies a core the way a real engine does, so worker-scaling
 //!   measurements remain meaningful.
+//! * [`QuantSimFactory`] — the quantization pipeline *without* PJRT: it
+//!   runs the full recipe prepare (through a [`PreparedCache`]) over an
+//!   in-memory model and serves logits deterministically derived from
+//!   the prepared weights. CI uses it to exercise recipe serving,
+//!   cache sharing, and hot-swap end-to-end on a clean checkout.
+//!
+//! Recipe hot-swap: [`WorkerEngine::swap`] re-prepares the worker's
+//! pipeline under a new [`QuantRecipe`] without tearing the engine
+//! down. The default implementation refuses (backends that hold no
+//! prep have nothing to swap); `PjrtWorker` and `QuantSimWorker`
+//! rebuild their prepared inputs through the cache.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
+use crate::calib::Calibration;
 use crate::eval::pad_rows;
 use crate::model::store::WeightStore;
 use crate::model::ModelSpec;
-use crate::pipeline::{self, QuantConfig};
+use crate::pipeline::{self, PreparedCache, PreparedModel, QuantRecipe};
 use crate::runtime::{Engine, Input, Inputs};
 use crate::tensor::TensorF;
 
@@ -34,6 +49,17 @@ pub trait WorkerEngine {
     /// logits of shape `(m, classes)` with `m >= n`; callers ignore the
     /// padding rows beyond `n`.
     fn infer(&mut self, batch: &TensorF) -> Result<TensorF>;
+
+    /// Re-prepare this worker's quantization pipeline under `recipe`
+    /// without rebuilding the engine. Called by the worker loop between
+    /// batches (never mid-batch), so in-flight work always completes on
+    /// the prep it started with. Backends that carry no prepared state
+    /// refuse by default; on error the worker keeps serving the old
+    /// prep.
+    fn swap(&mut self, recipe: &QuantRecipe) -> Result<()> {
+        let _ = recipe;
+        bail!("this backend does not support recipe hot-swap")
+    }
 }
 
 /// Thread-safe recipe for building per-worker engines.
@@ -49,9 +75,24 @@ pub trait EngineFactory: Send + Sync + 'static {
 pub struct PjrtFactory {
     pub artifacts_dir: String,
     pub model: String,
-    pub quant: QuantConfig,
+    pub recipe: QuantRecipe,
     /// Pre-compile every fwd artifact up to twice this batch.
     pub max_batch: usize,
+}
+
+/// Build the calibration a recipe needs (or `None`): the serve-side
+/// fixed synthetic calibration set, probed through this worker's engine.
+fn serve_calibration(
+    engine: &Engine,
+    spec: &ModelSpec,
+    ws: &WeightStore,
+    recipe: &QuantRecipe,
+) -> Result<Option<Calibration>> {
+    if !recipe.needs_calibration(spec) {
+        return Ok(None);
+    }
+    let calib_set = crate::train::data::synth_images(64, 929);
+    Ok(Some(crate::calib::calibrate(engine, spec, ws, &calib_set.x, 32)?))
 }
 
 impl EngineFactory for PjrtFactory {
@@ -62,13 +103,9 @@ impl EngineFactory for PjrtFactory {
         }
         let (ws, _) = WeightStore::load_best(&spec)?;
         let engine = Engine::cpu()?;
-        let calib = if self.quant.a_bits.is_some() {
-            let calib_set = crate::train::data::synth_images(64, 929);
-            Some(crate::calib::calibrate(&engine, &spec, &ws, &calib_set.x, 32)?)
-        } else {
-            None
-        };
-        let prep = pipeline::prepare(&spec, &ws, calib.as_ref(), &self.quant)?;
+        let calib = serve_calibration(&engine, &spec, &ws, &self.recipe)?;
+        // the process-wide cache: the first worker prepares, the rest share
+        let prep = pipeline::prepare_cached(&spec, &ws, calib.as_ref(), &self.recipe)?;
         let mut base: Inputs = Default::default();
         prep.insert_inputs(&mut base);
         // pre-compile every batch size this worker may route to
@@ -81,18 +118,29 @@ impl EngineFactory for PjrtFactory {
             "worker {worker_id}: PJRT engine ready ({} executables cached)",
             engine.cached_count()
         );
-        Ok(Box::new(PjrtWorker { spec, engine, base }))
+        Ok(Box::new(PjrtWorker {
+            spec,
+            ws,
+            engine,
+            base,
+            calib,
+        }))
     }
 
     fn label(&self) -> String {
-        format!("pjrt:{} [{}]", self.model, self.quant.label())
+        format!("pjrt:{} [{}]", self.model, self.recipe.label())
     }
 }
 
+/// The spec/ws/calib are retained past startup so [`WorkerEngine::swap`]
+/// can re-prepare without reloading; the calibration (fixed-seed probe)
+/// is computed at most once per worker and reused across swaps.
 struct PjrtWorker {
     spec: ModelSpec,
+    ws: WeightStore,
     engine: Engine,
     base: Inputs,
+    calib: Option<Calibration>,
 }
 
 impl WorkerEngine for PjrtWorker {
@@ -108,6 +156,21 @@ impl WorkerEngine for PjrtWorker {
         self.base.insert("x".into(), Input::F32(xb));
         let mut out = exe.execute(&self.base)?;
         out.take("logits")
+    }
+
+    fn swap(&mut self, recipe: &QuantRecipe) -> Result<()> {
+        let needs_calib = recipe.needs_calibration(&self.spec);
+        if needs_calib && self.calib.is_none() {
+            // first activation-quantizing recipe on this worker: probe
+            // once, reuse for every later swap (the calib set is fixed)
+            self.calib = serve_calibration(&self.engine, &self.spec, &self.ws, recipe)?;
+        }
+        let calib = if needs_calib { self.calib.as_ref() } else { None };
+        let prep = pipeline::prepare_cached(&self.spec, &self.ws, calib, recipe)?;
+        let mut base: Inputs = Default::default();
+        prep.insert_inputs(&mut base);
+        self.base = base;
+        Ok(())
     }
 }
 
@@ -190,9 +253,104 @@ impl WorkerEngine for SimWorker {
     }
 }
 
+/// Artifact-free recipe serving: the *real* quantization pipeline (OCS,
+/// clip, fake-quant, recipe resolution, [`PreparedCache`] sharing) over
+/// an in-memory model, with logits computed deterministically from the
+/// prepared weights — so tests and CI observe which prep a worker is
+/// serving, including across hot-swaps, without PJRT.
+pub struct QuantSimFactory {
+    pub spec: Arc<ModelSpec>,
+    pub ws: Arc<WeightStore>,
+    pub calib: Option<Arc<Calibration>>,
+    pub recipe: QuantRecipe,
+    /// A shared cache instance for the pool (`Arc::new(PreparedCache::
+    /// new())`, cloned into every factory that should share preps) —
+    /// tests use a private one to assert hit/miss counts in isolation.
+    /// (The `&'static` process-global of [`PreparedCache::global`] is
+    /// what the PJRT path uses via `prepare_cached`; this field wants an
+    /// owned `Arc` so sim pools can be torn down with their cache.)
+    pub cache: Arc<PreparedCache>,
+}
+
+/// A scalar that pins down the prepared weights: changing any quantized
+/// value, grid, or threshold moves it (so swapped recipes are visible in
+/// the served logits).
+fn weight_signature(prep: &PreparedModel) -> f32 {
+    let mut sig = 0.0f64;
+    for l in &prep.layers {
+        for &v in l.w.data() {
+            sig += v as f64;
+        }
+        sig += l.adelta as f64 + l.w_threshold as f64 + l.splits as f64;
+    }
+    sig as f32
+}
+
+impl EngineFactory for QuantSimFactory {
+    fn build(&self, _worker_id: usize) -> Result<Box<dyn WorkerEngine>> {
+        if self.spec.num_classes == 0 {
+            bail!("quant-sim backend needs num_classes >= 1");
+        }
+        let prep = self
+            .cache
+            .get_or_prepare(&self.spec, &self.ws, self.calib.as_deref(), &self.recipe)?;
+        Ok(Box::new(QuantSimWorker {
+            spec: self.spec.clone(),
+            ws: self.ws.clone(),
+            calib: self.calib.clone(),
+            cache: self.cache.clone(),
+            classes: self.spec.num_classes,
+            wsig: weight_signature(prep.as_ref()),
+        }))
+    }
+
+    fn label(&self) -> String {
+        format!("qsim:{} [{}]", self.spec.name, self.recipe.label())
+    }
+}
+
+struct QuantSimWorker {
+    spec: Arc<ModelSpec>,
+    ws: Arc<WeightStore>,
+    calib: Option<Arc<Calibration>>,
+    cache: Arc<PreparedCache>,
+    classes: usize,
+    wsig: f32,
+}
+
+impl WorkerEngine for QuantSimWorker {
+    fn infer(&mut self, batch: &TensorF) -> Result<TensorF> {
+        let n = batch.shape().first().copied().unwrap_or(0);
+        if n == 0 || batch.len() % n != 0 {
+            bail!("quant-sim backend: bad batch shape {:?}", batch.shape());
+        }
+        let row = batch.len() / n;
+        let mut data = Vec::with_capacity(n * self.classes);
+        for i in 0..n {
+            let s: f32 = batch.data()[i * row..(i + 1) * row].iter().sum();
+            for c in 0..self.classes {
+                data.push(s + self.wsig + c as f32);
+            }
+        }
+        Ok(TensorF::from_vec(&[n, self.classes], data)?)
+    }
+
+    fn swap(&mut self, recipe: &QuantRecipe) -> Result<()> {
+        let prep = self
+            .cache
+            .get_or_prepare(&self.spec, &self.ws, self.calib.as_deref(), recipe)?;
+        self.wsig = weight_signature(prep.as_ref());
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::clip::ClipMethod;
+    use crate::model::{LayerKind, LayerSpec};
+    use crate::pipeline::QuantConfig;
+    use crate::util::rng::Rng;
 
     #[test]
     fn sim_logits_deterministic_and_shaped() {
@@ -210,6 +368,8 @@ mod tests {
         // row 0 sums to 6, row 1 to 15; class c adds c
         assert_eq!(a.data()[0], 6.0);
         assert_eq!(a.data()[4 + 1], 16.0);
+        // the plain sim holds no prep, so hot-swap refuses
+        assert!(w.swap(&QuantRecipe::float()).is_err());
     }
 
     #[test]
@@ -236,9 +396,77 @@ mod tests {
         let p = PjrtFactory {
             artifacts_dir: "artifacts".into(),
             model: "minivgg".into(),
-            quant: QuantConfig::float(),
+            recipe: QuantRecipe::float(),
             max_batch: 8,
         };
         assert!(p.label().contains("minivgg"));
+    }
+
+    fn qsim(recipe: QuantRecipe, cache: Arc<PreparedCache>) -> QuantSimFactory {
+        let layers = vec![LayerSpec {
+            name: "f1".into(),
+            kind: LayerKind::Fc,
+            cin: 8,
+            cin_pad: 10,
+            cout: 4,
+            ksize: 0,
+            stride: 1,
+            quantized: true,
+            w_cin_axis: 0,
+            w_shape: vec![8, 4],
+            w_shape_pad: vec![10, 4],
+        }];
+        let spec = ModelSpec {
+            name: "qsim".into(),
+            dir: std::path::PathBuf::new(),
+            pad_factor: 1.25,
+            num_classes: 4,
+            img_hw: 0,
+            img_c: 0,
+            vocab: 0,
+            seq_len: 0,
+            momentum: 0.9,
+            layers,
+            artifacts: Default::default(),
+        };
+        let mut rng = Rng::new(11);
+        let mut wdata = rng.normal_vec(32);
+        wdata[5 * 4] = 9.0; // outlier channel
+        let ws = WeightStore::from_leaves(vec![
+            ("f1.W".into(), TensorF::from_vec(&[8, 4], wdata).unwrap()),
+            ("f1.b".into(), TensorF::zeros(&[4])),
+        ]);
+        QuantSimFactory {
+            spec: Arc::new(spec),
+            ws: Arc::new(ws),
+            calib: None,
+            recipe,
+            cache,
+        }
+    }
+
+    #[test]
+    fn quant_sim_serves_prep_and_hot_swaps() {
+        let cache = Arc::new(PreparedCache::new());
+        let r4 = QuantConfig::weights_only(4, ClipMethod::None, 0.0).to_recipe();
+        let r8 = QuantConfig::weights_only(8, ClipMethod::Mse, 0.1).to_recipe();
+        let f = qsim(r4.clone(), cache.clone());
+        let mut w = f.build(0).unwrap();
+        assert!(f.label().starts_with("qsim:"), "{}", f.label());
+        let x = TensorF::from_vec(&[1, 3], vec![0.5, 0.25, 0.25]).unwrap();
+        let before = w.infer(&x).unwrap();
+        // same recipe again: cache hit, identical logits
+        let mut w2 = f.build(1).unwrap();
+        assert_eq!(w2.infer(&x).unwrap().data(), before.data());
+        assert_eq!((cache.misses(), cache.hits()), (1, 1));
+        // hot-swap to a different recipe: logits must move
+        w.swap(&r8).unwrap();
+        let after = w.infer(&x).unwrap();
+        assert_ne!(before.data(), after.data(), "swap must be observable");
+        assert_eq!(cache.misses(), 2);
+        // swapping back reuses the cached original prep
+        w.swap(&r4).unwrap();
+        assert_eq!(w.infer(&x).unwrap().data(), before.data());
+        assert_eq!(cache.misses(), 2, "swap-back is a cache hit");
     }
 }

@@ -37,6 +37,10 @@ pub struct Metrics {
     pub batch_items_sq_total: AtomicU64,
     pub deadline_exceeded: AtomicU64,
     pub exec_errors: AtomicU64,
+    /// Recipe hot-swaps this worker applied (see `serve::Server::swap_recipe`).
+    pub recipe_swaps: AtomicU64,
+    /// Hot-swaps this worker failed to apply (kept serving the old prep).
+    pub swap_errors: AtomicU64,
     latency_buckets: [AtomicU64; BUCKETS],
     batch_buckets: [AtomicU64; BATCH_BUCKETS],
 }
@@ -89,6 +93,14 @@ impl Metrics {
         self.exec_errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn record_recipe_swap(&self) {
+        self.recipe_swaps.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_swap_error(&self) {
+        self.swap_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn request_count(&self) -> u64 {
         self.requests.load(Ordering::Relaxed)
     }
@@ -105,6 +117,8 @@ impl Metrics {
             batch_items_sq_total: self.batch_items_sq_total.load(Ordering::Relaxed),
             deadline_exceeded: self.deadline_exceeded.load(Ordering::Relaxed),
             exec_errors: self.exec_errors.load(Ordering::Relaxed),
+            recipe_swaps: self.recipe_swaps.load(Ordering::Relaxed),
+            swap_errors: self.swap_errors.load(Ordering::Relaxed),
             ..Snapshot::default()
         };
         for (dst, src) in s.latency_buckets.iter_mut().zip(&self.latency_buckets) {
@@ -130,6 +144,8 @@ pub struct Snapshot {
     pub batch_items_sq_total: u64,
     pub deadline_exceeded: u64,
     pub exec_errors: u64,
+    pub recipe_swaps: u64,
+    pub swap_errors: u64,
     latency_buckets: [u64; BUCKETS],
     batch_buckets: [u64; BATCH_BUCKETS],
 }
@@ -145,6 +161,8 @@ impl Snapshot {
         self.batch_items_sq_total += other.batch_items_sq_total;
         self.deadline_exceeded += other.deadline_exceeded;
         self.exec_errors += other.exec_errors;
+        self.recipe_swaps += other.recipe_swaps;
+        self.swap_errors += other.swap_errors;
         for (dst, src) in self.latency_buckets.iter_mut().zip(&other.latency_buckets) {
             *dst += src;
         }
@@ -214,7 +232,7 @@ impl Snapshot {
     }
 
     pub fn report_line(&self) -> String {
-        format!(
+        let mut line = format!(
             "requests {} | batches {} | mean batch {:.1} (weighted {:.1}) | \
              latency mean {:.2} ms p50 ~{:.2} ms p99 ~{:.2} ms max {:.2} ms | \
              deadline-exceeded {} | exec errors {}",
@@ -228,7 +246,14 @@ impl Snapshot {
             self.latency_us_max as f64 / 1e3,
             self.deadline_exceeded,
             self.exec_errors,
-        )
+        );
+        if self.recipe_swaps > 0 || self.swap_errors > 0 {
+            line.push_str(&format!(
+                " | recipe swaps {} ({} failed)",
+                self.recipe_swaps, self.swap_errors
+            ));
+        }
+        line
     }
 }
 
@@ -386,6 +411,20 @@ mod tests {
         assert_eq!(s.latency_percentile_us(0.99), 0);
         assert_eq!(s.mean_batch(), 0.0);
         assert_eq!(s.mean_batch_weighted(), 0.0);
+    }
+
+    #[test]
+    fn swap_counters_aggregate_and_report() {
+        let pool = PoolMetrics::new(2);
+        pool.worker(0).record_recipe_swap();
+        pool.worker(1).record_recipe_swap();
+        pool.worker(1).record_swap_error();
+        let agg = pool.aggregate();
+        assert_eq!(agg.recipe_swaps, 2);
+        assert_eq!(agg.swap_errors, 1);
+        assert!(agg.report_line().contains("recipe swaps 2 (1 failed)"));
+        // silent when no swap ever happened
+        assert!(!Metrics::default().snapshot().report_line().contains("recipe swaps"));
     }
 
     #[test]

@@ -25,7 +25,10 @@
 //! threads: the only correct shape is shard-per-thread, each worker
 //! owning its whole stack (engine, prepared pipeline, executable cache).
 //! Workers build those stacks concurrently at startup; artifact text is
-//! read once per process via [`crate::runtime::HloTextCache`].
+//! read once per process via [`crate::runtime::HloTextCache`], and the
+//! prepared quantization pipeline once per distinct recipe via the
+//! process-wide [`crate::pipeline::PreparedCache`] — worker 2..N share
+//! worker 1's prep through an `Arc`.
 //!
 //! ## Admission control and deadlines
 //!
@@ -37,6 +40,17 @@
 //! batch: expired jobs are answered with an error instead of wasting a
 //! forward pass.
 //!
+//! ## Recipe hot-swap
+//!
+//! [`Server::swap_recipe`] publishes a new [`QuantRecipe`] to every
+//! worker without restarting the pool. Workers notice between batches
+//! (or within one idle-poll tick, ~50 ms) and re-prepare through the
+//! process-wide [`crate::pipeline::PreparedCache`] — so N workers
+//! swapping to the same recipe still prepare once. In-flight and
+//! already-batched requests drain on the old prep; a worker whose swap
+//! fails keeps serving the old prep and counts a `swap_error`. Poll
+//! [`Server::swaps_applied`] to observe roll-out across the pool.
+//!
 //! ## Shutdown
 //!
 //! [`Server::shutdown`] flips the stop flag: the router rejects new
@@ -47,15 +61,15 @@ pub mod backend;
 pub mod metrics;
 
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::pipeline::QuantConfig;
+use crate::pipeline::QuantRecipe;
 use crate::tensor::TensorF;
 use crate::util::json;
 
@@ -63,6 +77,15 @@ use backend::{EngineFactory, PjrtFactory, SimFactory, WorkerEngine};
 
 pub use crate::pipeline::ServeConfig;
 pub use metrics::{Metrics, PoolMetrics, Snapshot};
+
+/// The published-recipe slot workers poll between batches. The epoch
+/// counter tells a worker *that* something changed without holding the
+/// lock; the recipe itself is read under it.
+#[derive(Default)]
+struct SwapSlot {
+    epoch: AtomicU64,
+    recipe: Mutex<Option<QuantRecipe>>,
+}
 
 /// One queued inference request.
 struct Job {
@@ -169,20 +192,23 @@ pub struct Server {
     handles: Vec<JoinHandle<()>>,
     metrics: Arc<PoolMetrics>,
     stop: Arc<AtomicBool>,
+    swap: Arc<SwapSlot>,
 }
 
 impl Server {
     /// Production entry point: PJRT engines over the AOT artifacts.
+    /// `recipe` may be uniform (`QuantConfig::to_recipe()`) or carry
+    /// per-layer overrides.
     pub fn start(
         artifacts_dir: &str,
         model: &str,
-        quant: QuantConfig,
+        recipe: QuantRecipe,
         cfg: ServeConfig,
     ) -> Result<Server> {
         let factory = Arc::new(PjrtFactory {
             artifacts_dir: artifacts_dir.to_string(),
             model: model.to_string(),
-            quant,
+            recipe,
             max_batch: cfg.max_batch,
         });
         Server::start_with(factory, cfg)
@@ -196,6 +222,7 @@ impl Server {
         cfg.validate()?;
         let metrics = Arc::new(PoolMetrics::new(cfg.workers));
         let stop = Arc::new(AtomicBool::new(false));
+        let swap = Arc::new(SwapSlot::default());
         let mut shards = Vec::with_capacity(cfg.workers);
         let mut handles = Vec::with_capacity(cfg.workers);
         let mut readies = Vec::with_capacity(cfg.workers);
@@ -207,6 +234,7 @@ impl Server {
             let worker_outstanding = outstanding.clone();
             let worker_factory = factory.clone();
             let worker_stop = stop.clone();
+            let worker_swap = swap.clone();
             let worker_cfg = cfg.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("ocs-worker-{id}"))
@@ -219,6 +247,7 @@ impl Server {
                         worker_metrics,
                         worker_outstanding,
                         worker_stop,
+                        worker_swap,
                         ready_tx,
                     )
                 })
@@ -269,7 +298,40 @@ impl Server {
             handles,
             metrics,
             stop,
+            swap,
         })
+    }
+
+    /// Publish a new quantization recipe to every worker without
+    /// restarting the pool. Workers apply it between batches (idle
+    /// workers within one poll tick); requests already admitted or in
+    /// flight drain on the old prep. Re-preparation goes through the
+    /// process-wide [`crate::pipeline::PreparedCache`], so the pool
+    /// pays one prepare per distinct recipe. A worker whose backend
+    /// rejects the swap (or whose re-prepare fails) keeps serving the
+    /// old prep and records a swap error.
+    ///
+    /// Returns immediately; poll [`Server::swaps_applied`] (against
+    /// [`Server::worker_count`]) to observe the roll-out.
+    ///
+    /// Every distinct recipe ever served stays in the prepared-model
+    /// cache (that is what makes swap-back instant); an operator cycling
+    /// through many recipes on a long-lived process can reclaim the
+    /// memory with [`crate::pipeline::PreparedCache::clear`] — in-flight
+    /// preps stay alive through their `Arc`s.
+    pub fn swap_recipe(&self, recipe: QuantRecipe) {
+        crate::info!("publishing recipe swap: {}", recipe.label());
+        let mut slot = self.swap.recipe.lock().expect("swap slot poisoned");
+        *slot = Some(recipe);
+        // bump after the recipe is in place: a worker that sees the new
+        // epoch always reads the new recipe (it locks to read)
+        self.swap.epoch.fetch_add(1, Ordering::Release);
+    }
+
+    /// Total recipe swaps applied across all workers (each successful
+    /// [`Server::swap_recipe`] roll-out adds `worker_count()`).
+    pub fn swaps_applied(&self) -> u64 {
+        self.metrics.aggregate().recipe_swaps
     }
 
     pub fn client(&self) -> Client {
@@ -325,6 +387,7 @@ fn worker_loop(
     metrics: Arc<Metrics>,
     outstanding: Arc<AtomicUsize>,
     stop: Arc<AtomicBool>,
+    swap: Arc<SwapSlot>,
     ready: SyncSender<Result<()>>,
 ) {
     let mut engine = match factory.build(id) {
@@ -337,11 +400,42 @@ fn worker_loop(
             return;
         }
     };
+    // epoch 0 = "no recipe ever published": starting from 0 (not the
+    // current value) means a swap published while this worker was still
+    // building is applied on its first loop iteration, not missed
+    let mut swap_epoch = 0u64;
     loop {
+        // apply any published recipe swap strictly between batches, so
+        // in-flight work always completes on the prep it started with
+        let epoch = swap.epoch.load(Ordering::Acquire);
+        if epoch != swap_epoch {
+            let (epoch, recipe) = {
+                let slot = swap.recipe.lock().expect("swap slot poisoned");
+                // re-read under the lock: the slot a worker acts on is
+                // always at least as new as the epoch it records
+                (swap.epoch.load(Ordering::Acquire), slot.clone())
+            };
+            swap_epoch = epoch;
+            if let Some(recipe) = recipe {
+                match engine.swap(&recipe) {
+                    Ok(()) => {
+                        metrics.record_recipe_swap();
+                        crate::debugln!("worker {id}: recipe swapped to {}", recipe.label());
+                    }
+                    Err(e) => {
+                        metrics.record_swap_error();
+                        crate::warnln!(
+                            "worker {id}: recipe swap failed, keeping the old prep: {e:#}"
+                        );
+                    }
+                }
+            }
+        }
         // wait for the first job of a batch; wake periodically to honour
-        // the stop flag even while clients keep the channel open. Jobs
-        // still queued at stop are returned by recv_timeout before it
-        // ever times out, so the queue fully drains first.
+        // the stop flag (and recipe swaps) even while clients keep the
+        // channel open. Jobs still queued at stop are returned by
+        // recv_timeout before it ever times out, so the queue fully
+        // drains first.
         let first = match rx.recv_timeout(Duration::from_millis(50)) {
             Ok(j) => j,
             Err(RecvTimeoutError::Timeout) => {
@@ -604,7 +698,7 @@ pub fn self_test_with(
 pub fn self_test(
     artifacts_dir: &str,
     model: &str,
-    quant: QuantConfig,
+    recipe: QuantRecipe,
     requests: usize,
     cfg: &ServeConfig,
     sweep: &[usize],
@@ -613,7 +707,7 @@ pub fn self_test(
     let factory = Arc::new(PjrtFactory {
         artifacts_dir: artifacts_dir.to_string(),
         model: model.to_string(),
-        quant,
+        recipe,
         max_batch: cfg.max_batch,
     });
     self_test_with(factory, cfg, requests, sweep, json_out).map(|_| ())

@@ -44,6 +44,11 @@ pub struct TableCtx {
     pub quick: bool,
     engine: Engine,
     envs: std::cell::RefCell<BTreeMap<String, std::rc::Rc<ModelEnv>>>,
+    /// Ctx-scoped (not the process-global) prepared-model cache: sweep
+    /// cells that repeat share one prep, and everything is dropped with
+    /// the ctx instead of pinning every sweep cell for the process
+    /// lifetime.
+    prep_cache: pipeline::PreparedCache,
 }
 
 /// Everything cached per model: spec, weights, calibration, test data.
@@ -64,7 +69,14 @@ impl TableCtx {
             quick,
             engine: Engine::cpu()?,
             envs: Default::default(),
+            prep_cache: pipeline::PreparedCache::new(),
         })
+    }
+
+    /// The ctx-scoped prepared-model cache (hit/miss accounting for
+    /// sweeps).
+    pub fn prep_cache(&self) -> &pipeline::PreparedCache {
+        &self.prep_cache
     }
 
     fn test_n(&self) -> usize {
@@ -114,18 +126,33 @@ impl TableCtx {
         Ok(env)
     }
 
-    /// Accuracy (%) of one CNN quantization config.
+    /// Accuracy (%) of one CNN quantization config (uniform recipe).
     pub fn acc(&self, env: &ModelEnv, cfg: &QuantConfig) -> Result<f64> {
+        self.acc_recipe(env, &cfg.to_recipe())
+    }
+
+    /// Accuracy (%) of one CNN quantization recipe. Preparation goes
+    /// through the ctx's [`pipeline::PreparedCache`]: sweeps that
+    /// revisit a cell (table 1 and table 2 share several, and every
+    /// "best clip" re-run repeats a sweep point) prepare it once.
+    pub fn acc_recipe(&self, env: &ModelEnv, recipe: &pipeline::QuantRecipe) -> Result<f64> {
         let test = env.test.as_ref().context("CNN env")?;
-        let prep = pipeline::prepare(&env.spec, &env.ws, env.calib.as_ref(), cfg)?;
+        let prep = self
+            .prep_cache
+            .get_or_prepare(&env.spec, &env.ws, env.calib.as_ref(), recipe)?;
         Ok(eval::accuracy(&self.engine, &env.spec, &prep, &test.x, &test.y, 128)? * 100.0)
     }
 
-    /// Perplexity of one LSTM config.
+    /// Perplexity of one LSTM config (uniform recipe).
     pub fn ppl(&self, env: &ModelEnv, cfg: &QuantConfig) -> Result<f64> {
+        self.ppl_recipe(env, &cfg.to_recipe())
+    }
+
+    /// Perplexity of one LSTM recipe, prepared through the ctx cache.
+    pub fn ppl_recipe(&self, env: &ModelEnv, recipe: &pipeline::QuantRecipe) -> Result<f64> {
         let corpus = data::synth_corpus(if self.quick { 20_000 } else { 40_000 }, env.spec.vocab, 92);
         let windows = data::token_windows(&corpus, env.spec.seq_len, 32);
-        let prep = pipeline::prepare(&env.spec, &env.ws, None, cfg)?;
+        let prep = self.prep_cache.get_or_prepare(&env.spec, &env.ws, None, recipe)?;
         eval::perplexity(&self.engine, &env.spec, &prep, &windows)
     }
 
@@ -422,7 +449,9 @@ pub fn table4(ctx: &TableCtx) -> Result<()> {
             let mut i = 0;
             while i < n {
                 let xb = calib::slice_rows(&test.x, i, bsz)?;
-                // oracle: probe THIS batch, select channels from it
+                // oracle: probe THIS batch, select channels from it.
+                // Deliberately uncached: every batch is a distinct
+                // calibration, so cache entries would never be revisited.
                 let acts = calib::probe_batch(&ctx.engine, &env.spec, &env.ws, &xb)?;
                 let oracle = batch_calibration(&acts);
                 let prep = pipeline::prepare(&env.spec, &env.ws, Some(&oracle), &cfg)?;
@@ -473,7 +502,9 @@ pub fn table5(ctx: &TableCtx) -> Result<()> {
     let _ = write!(out, "{:<22} |", "Rel. Weight Size");
     for r in ratios {
         let cfg = QuantConfig::weights_only(8, ClipMethod::None, r);
-        let prep = pipeline::prepare(&env.spec, &env.ws, None, &cfg)?;
+        let prep = ctx
+            .prep_cache
+            .get_or_prepare(&env.spec, &env.ws, None, &cfg.to_recipe())?;
         let _ = write!(out, " {:>6.3} |", prep.weight_overhead());
     }
     let _ = writeln!(out);
@@ -494,7 +525,9 @@ pub fn table5(ctx: &TableCtx) -> Result<()> {
     let _ = write!(out, "{:<22} |", "Rel. Activation Size");
     for r in ratios {
         let cfg = QuantConfig::acts_only(8, ClipMethod::None, r);
-        let prep = pipeline::prepare(&env.spec, &env.ws, env.calib.as_ref(), &cfg)?;
+        let prep =
+            ctx.prep_cache
+                .get_or_prepare(&env.spec, &env.ws, env.calib.as_ref(), &cfg.to_recipe())?;
         let mut base = 0usize;
         let mut extra = 0usize;
         for l in &prep.layers {

@@ -1,0 +1,82 @@
+//! Incremental FNV-1a 64 — the one hash this crate uses for stable,
+//! dependency-free content fingerprints (recipe fingerprints, the
+//! prepared-model cache's inputs token). Stable across platforms and
+//! processes; NOT cryptographic — identity for caching, not integrity.
+
+/// Incremental FNV-1a 64 hasher.
+pub struct Fnv1a(u64);
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Fnv1a::new()
+    }
+}
+
+impl Fnv1a {
+    pub fn new() -> Fnv1a {
+        Fnv1a(0xcbf2_9ce4_8422_2325)
+    }
+
+    #[inline]
+    pub fn byte(&mut self, b: u8) {
+        self.0 ^= b as u64;
+        self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+
+    pub fn bytes(&mut self, bs: &[u8]) {
+        for &b in bs {
+            self.byte(b);
+        }
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    /// Hash a string with a terminator so `("ab","c") != ("a","bc")`.
+    pub fn str(&mut self, s: &str) {
+        self.bytes(s.as_bytes());
+        self.byte(0xff);
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+
+    /// One-shot convenience.
+    pub fn hash_bytes(bs: &[u8]) -> u64 {
+        let mut h = Fnv1a::new();
+        h.bytes(bs);
+        h.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors_and_separation() {
+        // FNV-1a 64 reference vectors
+        assert_eq!(Fnv1a::hash_bytes(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(Fnv1a::hash_bytes(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(Fnv1a::hash_bytes(b"foobar"), 0x8594_4171_f738_77b8);
+        // str() terminators keep field boundaries distinct
+        let mut a = Fnv1a::new();
+        a.str("ab");
+        a.str("c");
+        let mut b = Fnv1a::new();
+        b.str("a");
+        b.str("bc");
+        assert_ne!(a.finish(), b.finish());
+        // incremental == one-shot
+        let mut inc = Fnv1a::new();
+        inc.bytes(b"foo");
+        inc.bytes(b"bar");
+        assert_eq!(inc.finish(), Fnv1a::hash_bytes(b"foobar"));
+    }
+}

@@ -4,6 +4,7 @@
 //! usual ecosystem crates (rand, serde_json, toml, env_logger, clap) are
 //! reimplemented here at the scale this project needs.
 
+pub mod hash;
 pub mod json;
 pub mod logging;
 pub mod rng;

@@ -1,8 +1,11 @@
 //! TOML-subset parser for experiment/serving config files.
 //!
 //! Supports the subset this project's configs use: `[section]` headers,
+//! `[[section]]` array-of-tables headers (each occurrence opens a new
+//! table addressed as `section.<index>.<key>`; see [`Config::array_len`])
+//! — the shape `[[quant.layer]]` per-layer recipe overrides use —
 //! `key = value` with string / integer / float / bool / homogeneous
-//! array values, `#` comments. No nested tables-in-arrays, no dates.
+//! array values, `#` comments. No inline tables, no dates.
 
 use std::collections::BTreeMap;
 
@@ -28,19 +31,37 @@ pub enum TomlError {
 }
 
 /// A parsed config: `section.key -> value`; keys before any section
-/// header live in the "" section.
+/// header live in the "" section. `[[name]]` array-of-tables entries are
+/// flattened to `name.<index>.<key>` keys, with the occurrence count
+/// kept in `arrays` so callers can iterate without probing.
 #[derive(Debug, Default, Clone)]
 pub struct Config {
     values: BTreeMap<String, TomlValue>,
+    arrays: BTreeMap<String, usize>,
 }
 
 impl Config {
     pub fn parse(src: &str) -> Result<Config, TomlError> {
         let mut values = BTreeMap::new();
+        let mut arrays: BTreeMap<String, usize> = BTreeMap::new();
         let mut section = String::new();
         for (ln, raw) in src.lines().enumerate() {
             let line = strip_comment(raw).trim();
             if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("[[") {
+                let name = rest
+                    .strip_suffix("]]")
+                    .ok_or_else(|| TomlError::Line(ln + 1, "unterminated [[section]]".into()))?
+                    .trim()
+                    .to_string();
+                if name.is_empty() {
+                    return Err(TomlError::Line(ln + 1, "empty [[section]] name".into()));
+                }
+                let idx = arrays.entry(name.clone()).or_insert(0);
+                section = format!("{name}.{idx}");
+                *idx += 1;
                 continue;
             }
             if let Some(rest) = line.strip_prefix('[') {
@@ -63,7 +84,7 @@ impl Config {
             };
             values.insert(full, value);
         }
-        Ok(Config { values })
+        Ok(Config { values, arrays })
     }
 
     pub fn load(path: &str) -> anyhow::Result<Config> {
@@ -96,11 +117,15 @@ impl Config {
             None => Err(TomlError::Missing(key.into())),
         }
     }
-    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+    pub fn bool(&self, key: &str) -> Result<bool, TomlError> {
         match self.values.get(key) {
-            Some(TomlValue::Bool(b)) => *b,
-            _ => default,
+            Some(TomlValue::Bool(b)) => Ok(*b),
+            Some(_) => Err(TomlError::Type(key.into(), "bool")),
+            None => Err(TomlError::Missing(key.into())),
         }
+    }
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.bool(key).unwrap_or(default)
     }
     pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.str(key).unwrap_or(default)
@@ -141,6 +166,11 @@ impl Config {
     }
     pub fn keys(&self) -> impl Iterator<Item = &String> {
         self.values.keys()
+    }
+    /// How many `[[name]]` tables the file declared; table `i`'s keys
+    /// live under `name.<i>.<key>`.
+    pub fn array_len(&self, name: &str) -> usize {
+        self.arrays.get(name).copied().unwrap_or(0)
     }
 }
 
@@ -265,6 +295,38 @@ model = "miniresnet"
     fn string_arrays() {
         let c = Config::parse(r#"models = ["a", "b,c"]"#).unwrap();
         assert_eq!(c.strs("models").unwrap(), vec!["a", "b,c"]);
+    }
+
+    #[test]
+    fn array_of_tables() {
+        let c = Config::parse(
+            r#"
+[quant]
+w_bits = 5
+
+[[quant.layer]]
+match = "fc*"
+w_bits = 4
+
+[[quant.layer]]
+kind = "conv"
+ocs_ratio = 0.05
+
+[other]
+x = 1
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.array_len("quant.layer"), 2);
+        assert_eq!(c.array_len("missing"), 0);
+        assert_eq!(c.int("quant.w_bits").unwrap(), 5);
+        assert_eq!(c.str("quant.layer.0.match").unwrap(), "fc*");
+        assert_eq!(c.int("quant.layer.0.w_bits").unwrap(), 4);
+        assert_eq!(c.str("quant.layer.1.kind").unwrap(), "conv");
+        assert_eq!(c.float("quant.layer.1.ocs_ratio").unwrap(), 0.05);
+        assert_eq!(c.int("other.x").unwrap(), 1);
+        assert!(Config::parse("[[nope]").is_err());
+        assert!(Config::parse("[[]]").is_err());
     }
 
     #[test]

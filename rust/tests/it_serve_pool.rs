@@ -62,7 +62,7 @@ fn startup_failure_surfaces_and_joins_cleanly() {
     let err = Server::start(
         "definitely_missing_artifacts",
         "minivgg",
-        ocs::pipeline::QuantConfig::float(),
+        ocs::pipeline::QuantConfig::float().to_recipe(),
         cfg,
     )
     .unwrap_err();

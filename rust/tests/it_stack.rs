@@ -217,7 +217,7 @@ fn serving_matches_direct_execution() {
     let server = Server::start(
         "artifacts",
         "minivgg",
-        QuantConfig::float(),
+        QuantConfig::float().to_recipe(),
         ServeConfig {
             workers: 1,
             max_batch: 1,
