@@ -1,0 +1,322 @@
+//! Rebar-style tracked harness for the native integer GEMM — the
+//! datapath every future perf PR optimizes against.
+//!
+//! The fixed rival is the naive serial i8×i8→i32 triple loop, kept
+//! verbatim in [`baseline`]. Before anything is timed, the packed
+//! serial kernel, the packed parallel kernel at every swept width, and
+//! the fused dequant epilogue are all verified **exactly equal** to
+//! that baseline (integer arithmetic — any mismatch is a hard failure,
+//! not noise). On machines with 4+ threads the harness then asserts the
+//! packed parallel kernel beats the naive serial baseline by >= 2x.
+//!
+//! Run:  cargo bench --bench gemm [-- <filter>] [--shapes small|full]
+//!       [--json PATH] [--no-assert]
+//! Env:  OCS_BENCH_QUICK=1 (short runs), OCS_BENCH_THREADS=1,2,4,
+//!       OCS_BENCH_NO_ASSERT=1
+//!
+//! `--json` writes `BENCH_native.json` (same record style as
+//! `BENCH_quant.json` / `BENCH_serving.json`); CI's native-smoke job
+//! uploads it so the integer-kernel trajectory accumulates per PR.
+
+use std::path::PathBuf;
+
+use ocs::bench_support::{native_json, CaseRecord, Runner};
+use ocs::clip::ClipMethod;
+use ocs::kernels::gemm::{self, PackedB};
+use ocs::kernels::pool;
+use ocs::pipeline::{self, QuantConfig, QuantRecipe};
+use ocs::runtime::native::{native_calibrate, synthetic_mlp, NativeExecutable};
+use ocs::util::rng::Rng;
+
+/// The pre-PR execution story, kept verbatim: no packing, no blocking,
+/// no threads — the defined rival every record is measured against.
+mod baseline {
+    /// Naive serial i8 GEMM, i32 accumulators.
+    pub fn gemm_i8_naive(a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
+        let mut out = vec![0i32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0i32;
+                for kk in 0..k {
+                    acc += a[i * k + kk] as i32 * b[kk * n + j] as i32;
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    /// Naive serial dequant epilogue over a separate i32 matrix (the
+    /// unfused two-pass shape the packed kernel fuses away).
+    pub fn dequant_naive(acc: &[i32], m: usize, n: usize, scales: &[f32], bias: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[i * n + j] = acc[i * n + j] as f32 * scales[j] + bias[j];
+            }
+        }
+        out
+    }
+}
+
+struct Opts {
+    filter: Option<String>,
+    shapes: String,
+    json: Option<PathBuf>,
+    no_assert: bool,
+}
+
+fn parse_opts() -> Opts {
+    let mut o = Opts {
+        filter: None,
+        shapes: "full".to_string(),
+        json: None,
+        no_assert: std::env::var("OCS_BENCH_NO_ASSERT").is_ok(),
+    };
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--json" => o.json = args.next().map(PathBuf::from),
+            "--shapes" => {
+                if let Some(v) = args.next() {
+                    o.shapes = v;
+                }
+            }
+            "--no-assert" => o.no_assert = true,
+            "--bench" | "bench" => {}
+            other if !other.starts_with("--") => o.filter = Some(other.to_string()),
+            _ => {}
+        }
+    }
+    o
+}
+
+fn thread_sweep() -> Vec<usize> {
+    let avail = pool::available();
+    let requested: Vec<usize> = match std::env::var("OCS_BENCH_THREADS") {
+        Ok(list) => list
+            .split(',')
+            .filter_map(|s| s.trim().parse().ok())
+            .collect(),
+        Err(_) => vec![1, 2, 4, 8],
+    };
+    let mut sweep = Vec::new();
+    for t in requested {
+        let actual = t.clamp(1, avail);
+        if !sweep.contains(&actual) {
+            sweep.push(actual);
+        }
+    }
+    if sweep.is_empty() {
+        sweep.push(1);
+    }
+    sweep.sort_unstable();
+    sweep
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn record(
+    cases: &mut Vec<CaseRecord>,
+    name: &str,
+    shape: String,
+    threads: usize,
+    mean_ns: f64,
+    items: f64,
+    serial_mean_ns: f64,
+) {
+    let speedup = if mean_ns > 0.0 {
+        serial_mean_ns / mean_ns
+    } else {
+        0.0
+    };
+    cases.push(CaseRecord {
+        name: name.to_string(),
+        shape,
+        threads,
+        mean_ns,
+        melems_per_s: items / (mean_ns / 1e9) / 1e6,
+        speedup_vs_serial: speedup,
+    });
+}
+
+fn rand_i8(rng: &mut Rng, n: usize) -> Vec<i8> {
+    (0..n).map(|_| (rng.below(255) as i32 - 127) as i8).collect()
+}
+
+fn main() {
+    let opts = parse_opts();
+    let mut r = Runner::with_filter(opts.filter.clone());
+    let sweep = thread_sweep();
+    let avail = pool::available();
+    let mut cases: Vec<CaseRecord> = Vec::new();
+    println!(
+        "native GEMM harness: shapes={} threads available={} sweep={:?}",
+        opts.shapes, avail, sweep
+    );
+
+    let small = opts.shapes == "small";
+    // (m, k, n): batch-of-patches × inner × output channels — the
+    // first shape mirrors an im2col'd conv layer, the second a fat FC
+    let gemm_shapes: Vec<(usize, usize, usize)> = if small {
+        vec![(128, 288, 96)]
+    } else {
+        vec![(256, 1152, 96), (256, 960, 256), (64, 4096, 128)]
+    };
+
+    let mut best_parallel: Option<(String, usize, f64)> = None;
+    let mut best_vs_packed_serial = 0.0f64;
+    for &(m, k, n) in &gemm_shapes {
+        let mut rng = Rng::new(17);
+        let a = rand_i8(&mut rng, m * k);
+        let b = rand_i8(&mut rng, k * n);
+        let scales: Vec<f32> = (0..n).map(|j| 1e-3 + j as f32 * 1e-6).collect();
+        let bias: Vec<f32> = (0..n).map(|j| j as f32 * 0.01).collect();
+        let shape = format!("{m}x{k}x{n}");
+        let macs = (m * k * n) as f64;
+
+        // ---- correctness gate: everything equals the naive baseline --
+        let want = baseline::gemm_i8_naive(&a, &b, m, k, n);
+        let pb = PackedB::pack(&b, k, n);
+        assert_eq!(gemm::gemm_i8(&a, &pb, m, 1), want, "packed serial != naive");
+        let tmax = *sweep.last().unwrap();
+        assert_eq!(gemm::gemm_i8(&a, &pb, m, tmax), want, "packed parallel != naive");
+        let dq_want = baseline::dequant_naive(&want, m, n, &scales, &bias);
+        let dq_got = gemm::gemm_i8_dequant(&a, &pb, m, &scales, &bias, tmax);
+        assert_eq!(bits(&dq_want), bits(&dq_got), "fused dequant != two-pass");
+
+        // ---- timings -------------------------------------------------
+        let naive = r.bench(&format!("i8_gemm/naive_serial/{shape}"), || {
+            let out = baseline::gemm_i8_naive(&a, &b, m, k, n);
+            std::hint::black_box(out.len());
+        });
+        let naive_ns = naive.as_ref().map(|s| s.mean_ns);
+        if let Some(s) = &naive {
+            record(
+                &mut cases,
+                "i8_gemm/naive_serial",
+                shape.clone(),
+                1,
+                s.mean_ns,
+                macs,
+                s.mean_ns,
+            );
+        }
+        let mut packed_serial_ns = None;
+        for &t in &sweep {
+            let stats = r.bench(&format!("i8_gemm/packed_t{t}/{shape}"), || {
+                let out = gemm::gemm_i8_dequant(&a, &pb, m, &scales, &bias, t);
+                std::hint::black_box(out.len());
+            });
+            if let (Some(s), Some(naive_ns)) = (&stats, naive_ns) {
+                record(
+                    &mut cases,
+                    &format!("i8_gemm/packed_t{t}"),
+                    shape.clone(),
+                    t,
+                    s.mean_ns,
+                    macs,
+                    naive_ns,
+                );
+                if t == 1 {
+                    packed_serial_ns = Some(s.mean_ns);
+                }
+                if t > 1 {
+                    let speedup = naive_ns / s.mean_ns;
+                    if best_parallel.as_ref().map(|b| speedup > b.2).unwrap_or(true) {
+                        best_parallel = Some((shape.clone(), t, speedup));
+                    }
+                    if let Some(ps) = packed_serial_ns {
+                        best_vs_packed_serial = best_vs_packed_serial.max(ps / s.mean_ns);
+                    }
+                }
+            }
+        }
+        // packing cost, for the record (paid once per prepared layer)
+        let pack_stats = r.bench(&format!("i8_gemm/pack_b/{shape}"), || {
+            let p = PackedB::pack(&b, k, n);
+            std::hint::black_box(p.packed_bytes());
+        });
+        if let Some(s) = &pack_stats {
+            record(
+                &mut cases,
+                "i8_gemm/pack_b",
+                shape.clone(),
+                1,
+                s.mean_ns,
+                (k * n) as f64,
+                s.mean_ns,
+            );
+        }
+    }
+
+    // ---- end-to-end: the synthetic MLP through the native engine -----
+    {
+        let (spec, ws) = synthetic_mlp(2027);
+        let images = ocs::train::data::synth_images(64, 99).x;
+        let calib = native_calibrate(&spec, &ws, &images, 32).expect("native calibration");
+        let int_recipe = QuantConfig {
+            w_bits: Some(8),
+            a_bits: Some(8),
+            w_clip: ClipMethod::Mse,
+            ..QuantConfig::float()
+        }
+        .to_recipe();
+        let int_prep =
+            pipeline::prepare_recipe(&spec, &ws, Some(&calib), &int_recipe).expect("prepare");
+        let int_exe = NativeExecutable::build(&spec, &int_prep).expect("build int");
+        assert_eq!(int_exe.int_layers(), 2, "MLP must take the integer path");
+        let float_prep =
+            pipeline::prepare_recipe(&spec, &ws, None, &QuantRecipe::float()).expect("prepare");
+        let float_exe = NativeExecutable::build(&spec, &float_prep).expect("build float");
+        let shape = "mlp_b32".to_string();
+        let imgs32 = ocs::calib::slice_rows(&images, 0, 32).unwrap();
+        let fstats = r.bench("native_infer/float_b32", || {
+            let y = float_exe.infer(&imgs32).unwrap();
+            std::hint::black_box(y.len());
+        });
+        let f_ns = fstats.as_ref().map(|s| s.mean_ns);
+        if let Some(s) = &fstats {
+            record(&mut cases, "native_infer/float_b32", shape.clone(), 1, s.mean_ns, 32.0, s.mean_ns);
+        }
+        let istats = r.bench("native_infer/int_b32", || {
+            let y = int_exe.infer(&imgs32).unwrap();
+            std::hint::black_box(y.len());
+        });
+        if let (Some(s), Some(f_ns)) = (&istats, f_ns) {
+            record(&mut cases, "native_infer/int_b32", shape, 1, s.mean_ns, 32.0, f_ns);
+        }
+    }
+
+    // ---- verdicts ----------------------------------------------------
+    let mut failures: Vec<String> = Vec::new();
+    if let Some((shape, t, speedup)) = &best_parallel {
+        println!(
+            "\ni8_gemm: best parallel speedup vs naive serial = {speedup:.2}x \
+             (shape {shape}, {t} threads; {best_vs_packed_serial:.2}x vs packed serial)"
+        );
+        if avail >= 4 && *speedup < 2.0 {
+            failures.push(format!(
+                "packed parallel i8 GEMM only {speedup:.2}x vs naive serial (need >= 2x at 4+ threads)"
+            ));
+        }
+    }
+    if let Some(path) = &opts.json {
+        std::fs::write(path, native_json("cpu", avail, &cases)).expect("write BENCH_native.json");
+        println!("wrote {} ({} cases)", path.display(), cases.len());
+    }
+    if !failures.is_empty() {
+        if opts.no_assert {
+            for f in &failures {
+                println!("WARN (no-assert): {f}");
+            }
+        } else {
+            for f in &failures {
+                eprintln!("FAIL: {f}");
+            }
+            std::process::exit(1);
+        }
+    }
+}

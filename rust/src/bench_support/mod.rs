@@ -177,11 +177,18 @@ pub struct CaseRecord {
     pub speedup_vs_serial: f64,
 }
 
-/// Serialize hot-path cases in the repo's BENCH json shape.
-pub fn quant_json(backend: &str, threads_available: usize, cases: &[CaseRecord]) -> String {
+/// Serialize hot-path cases in the repo's BENCH json shape under an
+/// arbitrary `bench` tag (`"quant"` → `BENCH_quant.json`, `"native"` →
+/// `BENCH_native.json`, ...).
+pub fn cases_json(
+    bench: &str,
+    backend: &str,
+    threads_available: usize,
+    cases: &[CaseRecord],
+) -> String {
     use crate::util::json;
     json::obj(vec![
-        ("bench", json::s("quant")),
+        ("bench", json::s(bench)),
         ("backend", json::s(backend)),
         ("threads_available", json::num(threads_available as f64)),
         (
@@ -204,6 +211,17 @@ pub fn quant_json(backend: &str, threads_available: usize, cases: &[CaseRecord])
         ),
     ])
     .to_string()
+}
+
+/// [`cases_json`] under the `"quant"` tag (`BENCH_quant.json`).
+pub fn quant_json(backend: &str, threads_available: usize, cases: &[CaseRecord]) -> String {
+    cases_json("quant", backend, threads_available, cases)
+}
+
+/// [`cases_json`] under the `"native"` tag (`BENCH_native.json`,
+/// emitted by `benches/gemm.rs`).
+pub fn native_json(backend: &str, threads_available: usize, cases: &[CaseRecord]) -> String {
+    cases_json("native", backend, threads_available, cases)
 }
 
 #[cfg(test)]
@@ -276,6 +294,14 @@ mod tests {
         );
         assert_eq!(arr[1].get("threads").unwrap().as_usize().unwrap(), 4);
         assert!(arr[1].get("speedup_vs_serial").unwrap().as_f64().unwrap() > 3.9);
+    }
+
+    #[test]
+    fn cases_json_tags() {
+        let text = native_json("cpu", 2, &[]);
+        let v = crate::util::json::Value::parse(&text).unwrap();
+        assert_eq!(v.get("bench").unwrap().as_str().unwrap(), "native");
+        assert!(v.get("cases").unwrap().as_arr().unwrap().is_empty());
     }
 
     #[test]

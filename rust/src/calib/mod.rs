@@ -136,11 +136,17 @@ pub fn calibrate(
         }
         i += batch;
     }
-    // pass 2: statistics — one fused sweep per batch (histogram +
-    // channel maxima together), batches in parallel on the kernel pool,
-    // partials folded in batch order so any thread count is
-    // bit-identical to serial; then the outlier-count sweep at the
-    // layer-wide percentile threshold (see kernels::stats::layer_stats).
+    Ok(statistics(acts))
+}
+
+/// Fold gathered per-layer activation batches into the calibration
+/// statistics — one fused sweep per batch (histogram + channel maxima
+/// together), batches in parallel on the kernel pool, partials folded
+/// in batch order so any thread count is bit-identical to serial; then
+/// the outlier-count sweep at the layer-wide percentile threshold (see
+/// `kernels::stats::layer_stats`). Shared by the PJRT probe above and
+/// the native probe ([`crate::runtime::native::native_calibrate`]).
+pub fn statistics(acts: BTreeMap<String, Vec<TensorF>>) -> Calibration {
     let mut layers = BTreeMap::new();
     for (layer, batches) in acts {
         let s = kernels::layer_stats(&batches, DEFAULT_BINS, OUTLIER_PERCENTILE, 0);
@@ -153,7 +159,7 @@ pub fn calibrate(
             },
         );
     }
-    Ok(Calibration { layers })
+    Calibration { layers }
 }
 
 /// Copy rows [start, start+count) of a batch-major tensor.

@@ -1,48 +1,93 @@
-//! Evaluators: top-1 accuracy (CNN benchmarks) and perplexity (LSTM LM),
-//! running entirely through the AOT-compiled fwd artifacts.
+//! Evaluators: top-1 accuracy (CNN benchmarks) and perplexity (LSTM LM).
+//!
+//! Accuracy is backend-agnostic: it chunks the dataset through a
+//! [`ForwardPass`], which is either the AOT artifact path
+//! ([`accuracy`] — pads each chunk to the artifact batch) or the native
+//! integer backend ([`accuracy_native`] — any batch, no artifacts, real
+//! quantized arithmetic). Perplexity drives the LM artifact; window
+//! counts that are not a multiple of the artifact batch are zero-padded
+//! and the padding's contribution is masked back out of `nll`/`ntok`
+//! (LM rows are independent — fresh `h0`/`c0` per row — so the pad
+//! rows contribute exactly the all-zero batch's per-row share, measured
+//! once and subtracted).
 
 use anyhow::{bail, Result};
 
 use crate::calib::slice_rows;
 use crate::model::ModelSpec;
 use crate::pipeline::PreparedModel;
+use crate::runtime::native::NativeExecutable;
 use crate::runtime::{Engine, Input, Inputs};
 use crate::tensor::{TensorF, TensorI};
 
-/// Top-1 accuracy of a prepared model over `(images, labels)`.
-/// Uses the largest fwd artifact <= requested batch; the final partial
-/// chunk is zero-padded and its padded rows excluded from scoring.
-pub fn accuracy(
-    engine: &Engine,
-    spec: &ModelSpec,
-    prep: &PreparedModel,
+/// One evaluation backend: a forward pass at some preferred chunk size.
+pub trait ForwardPass {
+    /// Rows the evaluator should feed per call.
+    fn batch(&self) -> usize;
+
+    /// Logits `(m, classes)` for `x` `(rows, ...)` with `m >= rows`;
+    /// rows beyond the input are padding and ignored by callers.
+    fn forward(&mut self, x: &TensorF) -> Result<TensorF>;
+}
+
+/// The artifact path: pads every chunk to the fwd artifact's batch.
+struct ArtifactForward {
+    exe: std::rc::Rc<crate::runtime::Executable>,
+    base: Inputs,
+}
+
+impl ForwardPass for ArtifactForward {
+    fn batch(&self) -> usize {
+        self.exe.batch()
+    }
+
+    fn forward(&mut self, x: &TensorF) -> Result<TensorF> {
+        let b = self.exe.batch();
+        let xb = if x.shape()[0] == b {
+            x.clone()
+        } else {
+            pad_rows(x, b)?
+        };
+        self.base.insert("x".into(), Input::F32(xb));
+        let mut out = self.exe.execute(&self.base)?;
+        out.take("logits")
+    }
+}
+
+/// The native integer path: any chunk size, no padding needed.
+struct NativeForward<'a> {
+    exe: &'a NativeExecutable,
+    batch: usize,
+}
+
+impl ForwardPass for NativeForward<'_> {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn forward(&mut self, x: &TensorF) -> Result<TensorF> {
+        self.exe.infer(x)
+    }
+}
+
+/// Top-1 accuracy over `(images, labels)` through any backend.
+pub fn accuracy_with(
+    fp: &mut dyn ForwardPass,
     images: &TensorF,
     labels: &[i32],
-    batch: usize,
 ) -> Result<f64> {
     let n = images.shape()[0];
     if n != labels.len() {
         bail!("images ({n}) vs labels ({}) mismatch", labels.len());
     }
-    let art = spec.fwd_for_batch(batch)?;
-    let exe = engine.load(art)?;
-    let b = art.batch;
-    let mut base: Inputs = Default::default();
-    prep.insert_inputs(&mut base);
-
+    let b = fp.batch().max(1);
     let mut correct = 0usize;
     let mut seen = 0usize;
     let mut i = 0usize;
     while i < n {
         let take = (n - i).min(b);
-        let xb = if take == b {
-            slice_rows(images, i, b)?
-        } else {
-            pad_rows(&slice_rows(images, i, take)?, b)?
-        };
-        base.insert("x".into(), Input::F32(xb));
-        let out = exe.execute(&base)?;
-        let logits = out.get("logits")?;
+        let xb = slice_rows(images, i, take)?;
+        let logits = fp.forward(&xb)?;
         for (row, pred) in logits.argmax_rows().into_iter().enumerate().take(take) {
             if pred as i32 == labels[i + row] {
                 correct += 1;
@@ -54,9 +99,58 @@ pub fn accuracy(
     Ok(correct as f64 / seen.max(1) as f64)
 }
 
+/// Top-1 accuracy through the AOT fwd artifact (largest batch <=
+/// requested; partial chunks are zero-padded, padded rows excluded).
+pub fn accuracy(
+    engine: &Engine,
+    spec: &ModelSpec,
+    prep: &PreparedModel,
+    images: &TensorF,
+    labels: &[i32],
+    batch: usize,
+) -> Result<f64> {
+    let art = spec.fwd_for_batch(batch)?;
+    let exe = engine.load(art)?;
+    let mut base: Inputs = Default::default();
+    prep.insert_inputs(&mut base);
+    accuracy_with(&mut ArtifactForward { exe, base }, images, labels)
+}
+
+/// Top-1 accuracy through the native integer backend — real quantized
+/// compute, no artifacts or PJRT involved.
+pub fn accuracy_native(
+    exe: &NativeExecutable,
+    images: &TensorF,
+    labels: &[i32],
+    batch: usize,
+) -> Result<f64> {
+    accuracy_with(
+        &mut NativeForward { exe, batch },
+        images,
+        labels,
+    )
+}
+
+/// Rows `[start, start + rows)` of `windows`, zero-padded to `b` rows.
+pub(crate) fn pad_chunk(windows: &TensorI, start: usize, rows: usize, b: usize) -> Result<TensorI> {
+    let row: usize = windows.shape()[1..].iter().product();
+    if start + rows > windows.shape()[0] {
+        bail!("pad_chunk: {start}+{rows} > {}", windows.shape()[0]);
+    }
+    if rows > b {
+        bail!("pad_chunk: {rows} rows exceed batch {b}");
+    }
+    let mut data = windows.data()[start * row..(start + rows) * row].to_vec();
+    data.resize(b * row, 0);
+    Ok(TensorI::from_vec(&[b, windows.shape()[1]], data)?)
+}
+
 /// Perplexity of the LSTM LM over token windows `(N, seq_len + 1)`.
-/// N must be a multiple of the fwd artifact batch (the datasets this
-/// repo generates are sized accordingly).
+/// Any `N >= 1`: full chunks run as-is; a final partial chunk is
+/// zero-padded to the artifact batch and the padding's `nll`/`ntok`
+/// share (the all-zero batch's, scaled by the pad fraction) is
+/// subtracted — the LM treats batch rows independently, so this masks
+/// the pad rows exactly, mirroring `accuracy`'s partial-chunk handling.
 pub fn perplexity(
     engine: &Engine,
     spec: &ModelSpec,
@@ -64,30 +158,40 @@ pub fn perplexity(
     windows: &TensorI,
 ) -> Result<f64> {
     let n = windows.shape()[0];
+    if n == 0 {
+        bail!("no token windows to evaluate");
+    }
     let art = spec.fwd_for_batch(1)?;
     let b = art.batch;
-    if n % b != 0 {
-        bail!("window count {n} must be a multiple of the artifact batch {b}");
-    }
     let exe = engine.load(art)?;
     let mut base: Inputs = Default::default();
     prep.insert_inputs(&mut base);
 
-    let row: usize = windows.shape()[1..].iter().product();
     let mut nll = 0.0f64;
     let mut ntok = 0.0f64;
-    for chunk in 0..(n / b) {
-        let start = chunk * b * row;
-        let tb = TensorI::from_vec(
-            &[b, windows.shape()[1]],
-            windows.data()[start..start + b * row].to_vec(),
-        )?;
+    let full = n / b;
+    for chunk in 0..full {
+        let tb = pad_chunk(windows, chunk * b, b, b)?;
         base.insert("tokens".into(), Input::I32(tb));
         let out = exe.execute(&base)?;
         nll += out.scalar("nll_sum")? as f64;
         ntok += out.scalar("ntok")? as f64;
     }
-    if ntok == 0.0 {
+    let rem = n % b;
+    if rem > 0 {
+        let tb = pad_chunk(windows, full * b, rem, b)?;
+        base.insert("tokens".into(), Input::I32(tb));
+        let out = exe.execute(&base)?;
+        let (nll_p, ntok_p) = (out.scalar("nll_sum")? as f64, out.scalar("ntok")? as f64);
+        // the pad rows are all-zero windows; measure a full zero batch
+        // once and subtract the pad fraction of it
+        base.insert("tokens".into(), Input::I32(TensorI::zeros(&[b, windows.shape()[1]])));
+        let zout = exe.execute(&base)?;
+        let pad_frac = (b - rem) as f64 / b as f64;
+        nll += nll_p - zout.scalar("nll_sum")? as f64 * pad_frac;
+        ntok += ntok_p - zout.scalar("ntok")? as f64 * pad_frac;
+    }
+    if ntok <= 0.0 {
         bail!("no tokens evaluated");
     }
     Ok((nll / ntok).exp())
@@ -108,5 +212,60 @@ mod tests {
         let p = pad_rows(&t, 4).unwrap();
         assert_eq!(p.shape(), &[4, 3]);
         assert_eq!(&p.data()[6..], &[0.0; 6]);
+    }
+
+    #[test]
+    fn pad_chunk_fills_and_bounds() {
+        let w = TensorI::from_vec(&[3, 2], vec![1, 2, 3, 4, 5, 6]).unwrap();
+        let c = pad_chunk(&w, 1, 2, 4).unwrap();
+        assert_eq!(c.shape(), &[4, 2]);
+        assert_eq!(c.data(), &[3, 4, 5, 6, 0, 0, 0, 0]);
+        // exact chunk: no padding
+        let e = pad_chunk(&w, 0, 3, 3).unwrap();
+        assert_eq!(e.data(), w.data());
+        assert!(pad_chunk(&w, 2, 2, 4).is_err(), "out of range");
+        assert!(pad_chunk(&w, 0, 3, 2).is_err(), "rows > batch");
+    }
+
+    #[test]
+    fn accuracy_with_masks_partial_chunks() {
+        // a fake backend that doubles as a padding probe: it must never
+        // see more than `batch` rows, and the evaluator must ignore
+        // every row beyond the real ones
+        struct Fake {
+            calls: usize,
+        }
+        impl ForwardPass for Fake {
+            fn batch(&self) -> usize {
+                4
+            }
+            fn forward(&mut self, x: &TensorF) -> Result<TensorF> {
+                self.calls += 1;
+                let rows = x.shape()[0];
+                assert!(rows <= 4);
+                // logits: class = round(first feature); one extra
+                // padding row of garbage to prove callers ignore it
+                let mut data = Vec::new();
+                for r in 0..rows {
+                    let cls = x.data()[r * x.len() / rows] as usize;
+                    for c in 0..3 {
+                        data.push(if c == cls { 1.0 } else { 0.0 });
+                    }
+                }
+                data.extend_from_slice(&[9.0, 0.0, 0.0]);
+                Ok(TensorF::from_vec(&[rows + 1, 3], data)?)
+            }
+        }
+        // 6 samples: batches of 4 + partial 2
+        let images = TensorF::from_vec(
+            &[6, 2],
+            vec![0., 0., 1., 0., 2., 0., 0., 0., 1., 0., 2., 0.],
+        )
+        .unwrap();
+        let labels = vec![0, 1, 2, 0, 1, 0]; // last label wrong on purpose
+        let mut fp = Fake { calls: 0 };
+        let acc = accuracy_with(&mut fp, &images, &labels).unwrap();
+        assert_eq!(fp.calls, 2, "4-row chunk + 2-row partial");
+        assert!((acc - 5.0 / 6.0).abs() < 1e-9, "{acc}");
     }
 }

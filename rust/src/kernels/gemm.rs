@@ -1,0 +1,403 @@
+//! Native integer GEMM — the i8×i8→i32 matrix kernel under the native
+//! inference backend ([`crate::runtime::native`]).
+//!
+//! The paper's deployment pitch is that an OCS-split model is a plain
+//! quantized model, servable on commodity integer hardware. This module
+//! is that datapath in Rust: weights land as packed `i8` panels
+//! ([`PackedB`], built once per prepared layer by
+//! [`crate::quant::pack`]), activations arrive as `i8` rows, and the
+//! kernel accumulates in `i32` with a fused per-output-channel
+//! dequantize + bias epilogue — one pass from integer accumulators back
+//! to `f32` activations.
+//!
+//! ## Blocking and packing
+//!
+//! * **B panels** ([`PackedB`]): the weight matrix `(k, n)` is repacked
+//!   into column panels of width [`NR`], each panel laid out k-major
+//!   (`panel[kk * NR + j]`), so the microkernel streams both operands
+//!   contiguously. Ragged right edges are zero-padded — `0 * x == 0`
+//!   in integer arithmetic, so padding never changes a result.
+//! * **Row blocks** (`MB` rows): the parallel unit. Each block owns a
+//!   disjoint slice of the output, so blocks run race-free on the
+//!   kernel pool ([`super::pool`]); integer accumulation is exact, so
+//!   any thread count is bit-identical to serial *by arithmetic*, not
+//!   just by ordering discipline.
+//! * **K blocks** (`KC` deep): panels are walked in depth slices so
+//!   the active panel slice plus the A row block stay cache-resident on
+//!   long inner dimensions.
+//!
+//! The f32 twins ([`gemm_f32_ref`], [`gemm_f32`]) carry the layers the
+//! integer path cannot (float activations, >8-bit weights) and serve as
+//! the bit-exactness reference for the parallel split: the parallel f32
+//! kernel keeps the serial per-row accumulation order, so it too is
+//! bit-identical at every width.
+//!
+//! Overflow: each product is at most `127² = 16129`, so `i32`
+//! accumulators are exact for any `k <= 133_000` — far beyond every
+//! layer in this repo ([`PackedB::pack`] asserts the bound).
+
+use super::pool;
+
+/// Packed panel width (output channels per microkernel tile).
+pub const NR: usize = 16;
+/// Depth of one K block (i8 panel slice: `KC * NR` = 4 KiB).
+const KC: usize = 256;
+/// Rows of A per parallel work item.
+const MB: usize = 32;
+
+/// Largest inner dimension the i32 accumulator provably cannot
+/// overflow: `k * 127 * 127 <= i32::MAX`.
+pub const MAX_K: usize = (i32::MAX / (127 * 127)) as usize;
+
+/// Raw output pointer smuggled into the per-block closures. Safety
+/// rests on the disjoint row-block partition at each use site.
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Weight matrix `(k, n)` repacked into k-major column panels of width
+/// [`NR`], ready for [`gemm_i8`] / [`gemm_i8_dequant`]. Built once per
+/// prepared layer, reused for every batch.
+#[derive(Debug, Clone)]
+pub struct PackedB {
+    pub k: usize,
+    pub n: usize,
+    /// `ceil(n / NR)` panels, each `k * NR` bytes; ragged columns zero.
+    data: Vec<i8>,
+}
+
+impl PackedB {
+    /// Pack a row-major `(k, n)` i8 matrix.
+    pub fn pack(b: &[i8], k: usize, n: usize) -> PackedB {
+        assert_eq!(b.len(), k * n, "pack_b geometry mismatch");
+        assert!(k <= MAX_K, "inner dim {k} risks i32 overflow");
+        let panels = n.div_ceil(NR);
+        let mut data = vec![0i8; panels * k * NR];
+        for p in 0..panels {
+            let j0 = p * NR;
+            let w = NR.min(n - j0);
+            let base = p * k * NR;
+            for kk in 0..k {
+                for jj in 0..w {
+                    data[base + kk * NR + jj] = b[kk * n + j0 + jj];
+                }
+            }
+        }
+        PackedB { k, n, data }
+    }
+
+    #[inline]
+    fn panel(&self, p: usize) -> &[i8] {
+        &self.data[p * self.k * NR..(p + 1) * self.k * NR]
+    }
+
+    /// Packed payload size in bytes (diagnostics).
+    pub fn packed_bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Naive serial reference: `out[i][j] = Σ_k a[i][k] * b[k][j]` in i32.
+/// This is the ground truth the packed/parallel kernel must match
+/// exactly (and the fixed baseline `benches/gemm.rs` times against).
+pub fn gemm_i8_ref(a: &[i8], b: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
+    assert_eq!(a.len(), m * k, "A geometry mismatch");
+    assert_eq!(b.len(), k * n, "B geometry mismatch");
+    let mut out = vec![0i32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0i32;
+            for kk in 0..k {
+                acc += a[i * k + kk] as i32 * b[kk * n + j] as i32;
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+/// One row block `[i0, i1)` of A against every panel of B, accumulated
+/// into `out` (the block's `(i1 - i0) * n` slice, assumed zeroed).
+fn gemm_i8_block(a: &[i8], i0: usize, i1: usize, pb: &PackedB, out: &mut [i32]) {
+    let (k, n) = (pb.k, pb.n);
+    let panels = n.div_ceil(NR);
+    let mut kc0 = 0usize;
+    while kc0 < k {
+        let kc1 = k.min(kc0 + KC);
+        for p in 0..panels {
+            let panel = pb.panel(p);
+            let j0 = p * NR;
+            let w = NR.min(n - j0);
+            for i in i0..i1 {
+                let arow = &a[i * k + kc0..i * k + kc1];
+                let mut acc = [0i32; NR];
+                for (kk, &av) in arow.iter().enumerate() {
+                    let av = av as i32;
+                    let prow = &panel[(kc0 + kk) * NR..(kc0 + kk) * NR + NR];
+                    for jj in 0..NR {
+                        acc[jj] += av * prow[jj] as i32;
+                    }
+                }
+                let orow = &mut out[(i - i0) * n + j0..(i - i0) * n + j0 + w];
+                for jj in 0..w {
+                    orow[jj] += acc[jj];
+                }
+            }
+        }
+        kc0 = kc1;
+    }
+}
+
+/// Packed, row-block-parallel i8 GEMM: `(m, k) × (k, n) → (m, n)` i32.
+/// Bit-identical to [`gemm_i8_ref`] at every thread count (`threads`
+/// = 0 for the pool's default width) — integer accumulation is exact.
+pub fn gemm_i8(a: &[i8], pb: &PackedB, m: usize, threads: usize) -> Vec<i32> {
+    let n = pb.n;
+    assert_eq!(a.len(), m * pb.k, "A geometry mismatch");
+    let mut out = vec![0i32; m * n];
+    if m == 0 || n == 0 {
+        return out;
+    }
+    let nblocks = m.div_ceil(MB);
+    let base = SendPtr(out.as_mut_ptr());
+    pool::map_indexed_with(threads, nblocks, |blk| {
+        let i0 = blk * MB;
+        let i1 = m.min(i0 + MB);
+        // SAFETY: `out` is exclusively borrowed for the whole call and
+        // row blocks tile it without overlap; block `blk` is the only
+        // task touching rows [i0, i1).
+        let out_blk =
+            unsafe { std::slice::from_raw_parts_mut(base.0.add(i0 * n), (i1 - i0) * n) };
+        gemm_i8_block(a, i0, i1, pb, out_blk);
+    });
+    out
+}
+
+/// [`gemm_i8`] with the dequantize + bias epilogue fused per row block:
+/// `out[i][j] = acc[i][j] as f32 * scales[j] + bias[j]`.
+///
+/// `scales[j]` is the combined grid step of output channel `j`
+/// (activation delta × weight delta); the i32 accumulators never
+/// round-trip through memory as a full matrix — each block dequantizes
+/// its own rows while they are still cache-hot.
+pub fn gemm_i8_dequant(
+    a: &[i8],
+    pb: &PackedB,
+    m: usize,
+    scales: &[f32],
+    bias: &[f32],
+    threads: usize,
+) -> Vec<f32> {
+    let n = pb.n;
+    assert_eq!(a.len(), m * pb.k, "A geometry mismatch");
+    assert_eq!(scales.len(), n, "scales per output channel");
+    assert_eq!(bias.len(), n, "bias per output channel");
+    let mut out = vec![0.0f32; m * n];
+    if m == 0 || n == 0 {
+        return out;
+    }
+    let nblocks = m.div_ceil(MB);
+    let base = SendPtr(out.as_mut_ptr());
+    pool::map_indexed_with(threads, nblocks, |blk| {
+        let i0 = blk * MB;
+        let i1 = m.min(i0 + MB);
+        let rows = i1 - i0;
+        let mut acc = vec![0i32; rows * n];
+        gemm_i8_block(a, i0, i1, pb, &mut acc);
+        // SAFETY: disjoint row blocks, as in `gemm_i8`.
+        let out_blk = unsafe { std::slice::from_raw_parts_mut(base.0.add(i0 * n), rows * n) };
+        for r in 0..rows {
+            for j in 0..n {
+                out_blk[r * n + j] = acc[r * n + j] as f32 * scales[j] + bias[j];
+            }
+        }
+    });
+    out
+}
+
+/// Naive serial f32 reference GEMM (`bias` broadcast per output column
+/// when given). Kept for bit-exactness checks of the parallel split.
+pub fn gemm_f32_ref(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    bias: Option<&[f32]>,
+) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "A geometry mismatch");
+    assert_eq!(b.len(), k * n, "B geometry mismatch");
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let orow = &mut out[i * n..(i + 1) * n];
+        if let Some(bias) = bias {
+            orow.copy_from_slice(bias);
+        }
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            let brow = &b[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// Row-block-parallel f32 GEMM for the layers the integer path cannot
+/// carry (float activations, >8-bit weight grids). The inner loop is
+/// the exact per-row accumulation order of [`gemm_f32_ref`], so every
+/// thread count is bit-identical to the serial reference.
+pub fn gemm_f32(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    bias: Option<&[f32]>,
+    threads: usize,
+) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "A geometry mismatch");
+    assert_eq!(b.len(), k * n, "B geometry mismatch");
+    let mut out = vec![0.0f32; m * n];
+    if m == 0 || n == 0 {
+        return out;
+    }
+    let nblocks = m.div_ceil(MB);
+    let base = SendPtr(out.as_mut_ptr());
+    pool::map_indexed_with(threads, nblocks, |blk| {
+        let i0 = blk * MB;
+        let i1 = m.min(i0 + MB);
+        // SAFETY: disjoint row blocks, as in `gemm_i8`.
+        let out_blk =
+            unsafe { std::slice::from_raw_parts_mut(base.0.add(i0 * n), (i1 - i0) * n) };
+        for i in i0..i1 {
+            let orow = &mut out_blk[(i - i0) * n..(i - i0 + 1) * n];
+            if let Some(bias) = bias {
+                orow.copy_from_slice(bias);
+            }
+            for kk in 0..k {
+                let av = a[i * k + kk];
+                let brow = &b[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_i8(rng: &mut Rng, n: usize) -> Vec<i8> {
+        (0..n).map(|_| (rng.below(255) as i32 - 127) as i8).collect()
+    }
+
+    #[test]
+    fn pack_roundtrips_all_columns() {
+        let mut rng = Rng::new(1);
+        for &(k, n) in &[(3usize, 1usize), (5, 16), (7, 17), (4, 33)] {
+            let b = rand_i8(&mut rng, k * n);
+            let pb = PackedB::pack(&b, k, n);
+            for j in 0..n {
+                let p = j / NR;
+                let jj = j % NR;
+                for kk in 0..k {
+                    assert_eq!(
+                        pb.panel(p)[kk * NR + jj],
+                        b[kk * n + j],
+                        "k={k} n={n} ({kk},{j})"
+                    );
+                }
+            }
+            assert_eq!(pb.packed_bytes(), n.div_ceil(NR) * k * NR);
+        }
+    }
+
+    #[test]
+    fn packed_matches_naive_exactly() {
+        let mut rng = Rng::new(2);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (2, 3, 5), (17, 40, 19), (33, 300, 37)] {
+            let a = rand_i8(&mut rng, m * k);
+            let b = rand_i8(&mut rng, k * n);
+            let want = gemm_i8_ref(&a, &b, m, k, n);
+            let pb = PackedB::pack(&b, k, n);
+            for threads in [1usize, 4] {
+                assert_eq!(gemm_i8(&a, &pb, m, threads), want, "{m}x{k}x{n} t{threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn kc_blocking_boundary_is_exact() {
+        // k straddling the KC block edge exercises the partial-block path
+        let mut rng = Rng::new(3);
+        let (m, k, n) = (3usize, KC + 7, 5usize);
+        let a = rand_i8(&mut rng, m * k);
+        let b = rand_i8(&mut rng, k * n);
+        let pb = PackedB::pack(&b, k, n);
+        assert_eq!(gemm_i8(&a, &pb, m, 1), gemm_i8_ref(&a, &b, m, k, n));
+    }
+
+    #[test]
+    fn dequant_epilogue_scales_per_channel() {
+        let mut rng = Rng::new(4);
+        let (m, k, n) = (5usize, 12usize, 9usize);
+        let a = rand_i8(&mut rng, m * k);
+        let b = rand_i8(&mut rng, k * n);
+        let scales: Vec<f32> = (0..n).map(|j| 0.01 + j as f32 * 0.001).collect();
+        let bias: Vec<f32> = (0..n).map(|j| j as f32 * 0.5).collect();
+        let pb = PackedB::pack(&b, k, n);
+        let acc = gemm_i8_ref(&a, &b, m, k, n);
+        for threads in [1usize, 4] {
+            let out = gemm_i8_dequant(&a, &pb, m, &scales, &bias, threads);
+            for i in 0..m {
+                for j in 0..n {
+                    let want = acc[i * n + j] as f32 * scales[j] + bias[j];
+                    assert_eq!(out[i * n + j].to_bits(), want.to_bits(), "({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f32_parallel_bit_identical_to_ref() {
+        let mut rng = Rng::new(5);
+        let (m, k, n) = (70usize, 33usize, 21usize);
+        let a = rng.normal_vec(m * k);
+        let b = rng.normal_vec(k * n);
+        let bias = rng.normal_vec(n);
+        let want = gemm_f32_ref(&a, &b, m, k, n, Some(bias.as_slice()));
+        for threads in [1usize, 2, 8] {
+            let got = gemm_f32(&a, &b, m, k, n, Some(bias.as_slice()), threads);
+            let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+            let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(wb, gb, "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn empty_shapes() {
+        let pb = PackedB::pack(&[], 0, 4);
+        assert!(gemm_i8(&[], &pb, 0, 4).is_empty());
+        let pb2 = PackedB::pack(&[1, 2, 3], 3, 1);
+        assert_eq!(gemm_i8(&[], &pb2, 0, 1), Vec::<i32>::new());
+        assert!(gemm_f32(&[], &[], 0, 0, 0, None, 2).is_empty());
+    }
+
+    #[test]
+    fn saturated_inputs_do_not_overflow() {
+        // worst case: every operand at ±127 over a long k
+        let (m, k, n) = (2usize, 4096usize, 3usize);
+        let a = vec![127i8; m * k];
+        let b = vec![-127i8; k * n];
+        let pb = PackedB::pack(&b, k, n);
+        let out = gemm_i8(&a, &pb, m, 2);
+        assert!(out.iter().all(|&v| v == -(127 * 127 * k as i32)));
+    }
+}

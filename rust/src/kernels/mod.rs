@@ -16,10 +16,16 @@
 //! * [`split_channel`] — the fused OCS split: one strided pass writes
 //!   both halves and returns both post-split maxima, replacing the old
 //!   copy + rewrite + two max sweeps (4 passes over the channel → 1).
+//! * [`gemm`] — the native integer datapath: packed, row-block-parallel
+//!   i8×i8→i32 GEMM with a fused per-output-channel dequantize + bias
+//!   epilogue (plus f32 twins for the layers integers cannot carry).
+//!   [`crate::runtime::native`] executes whole models on it.
 //!
 //! Design notes and benchmark methodology: see `README.md` in this
-//! directory and `rust/benches/hotpath.rs` (`BENCH_quant.json`).
+//! directory, `rust/benches/hotpath.rs` (`BENCH_quant.json`), and
+//! `rust/benches/gemm.rs` (`BENCH_native.json`).
 
+pub mod gemm;
 pub mod pool;
 pub mod stats;
 

@@ -57,14 +57,31 @@
 //! `--queue-cap`, `--deadline-ms`, `--max-batch`, `--max-wait-us` (see
 //! `ocs serve`), or [`pipeline::ServeConfig`] in code/TOML.
 //!
+//! ## The native integer backend
+//!
+//! The paper's deployment pitch is that an OCS model is a plain
+//! *integer* model. [`runtime::native`] executes it as one: prepared
+//! models lower to true `i8` payloads ([`quant::pack`], round-trip
+//! exactness asserted against the Eq. 1 grid), activations quantize to
+//! their grid integers, and the hot path is a packed, cache-blocked,
+//! pool-parallel i8×i8→i32 GEMM with a fused per-output-channel
+//! dequant + bias epilogue ([`kernels::gemm`]) — FC layers directly,
+//! conv via im2col. No artifacts, no PJRT: `ocs eval --backend native`
+//! and `ocs serve --backend native` run real quantized compute on
+//! every build (`--sim-free` serves a built-in model on a clean
+//! checkout), and `benches/gemm.rs` tracks the kernel per PR
+//! (`BENCH_native.json`).
+//!
 //! ## Build modes
 //!
 //! The default build has **no PJRT dependency**: [`runtime`] compiles
 //! against an API-identical stub, artifact execution reports a clear
 //! error, and the serving stack runs on a synthetic engine
-//! ([`serve::backend::SimFactory`]) — this is what CI builds and tests
-//! on every push. Building with `--features pjrt` (and the vendored
-//! `xla` crate) enables real artifact execution; no other code changes.
+//! ([`serve::backend::SimFactory`]) or the native integer backend
+//! ([`serve::backend::NativeFactory`]) — this is what CI builds and
+//! tests on every push. Building with `--features pjrt` (and the
+//! vendored `xla` crate) enables real artifact execution; no other
+//! code changes.
 //!
 //! ## Quick start
 //!

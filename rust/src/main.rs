@@ -9,6 +9,8 @@
 //! ocs serve --model <name>          dynamic-batching serving self-test
 //! ```
 
+use std::sync::Arc;
+
 use anyhow::{bail, Context, Result};
 
 use ocs::cli::Args;
@@ -18,8 +20,10 @@ use ocs::info;
 use ocs::model::store::WeightStore;
 use ocs::model::ModelSpec;
 use ocs::ocs::{OcsTarget, SplitMode};
-use ocs::pipeline::{self, QuantConfig, QuantRecipe};
+use ocs::pipeline::{self, PreparedCache, QuantConfig, QuantRecipe, ServeBackend};
+use ocs::runtime::native::{native_calibrate, NativeEngine};
 use ocs::runtime::Engine;
+use ocs::serve::backend::NativeFactory;
 use ocs::tables::TableCtx;
 use ocs::train::{self, data};
 
@@ -31,13 +35,15 @@ USAGE:
   ocs train --model all|minivgg|miniresnet|miniincept|lstmlm [--steps N] [--lr F]
   ocs eval  --model NAME [--w-bits N] [--a-bits N] [--w-clip M] [--a-clip M]
             [--ocs-ratio R] [--ocs-target weights|activations] [--split naive|qa]
-            [--layer OVERRIDES]
+            [--layer OVERRIDES] [--backend pjrt|native]
   ocs table --id all|1|2|3|4|5|6|fig1 [--quick]
   ocs report --model NAME [--bits N] [--ocs-ratio R]
-  ocs serve --model NAME [--requests N] [--w-bits N] [--layer OVERRIDES]
+  ocs serve --model NAME [--requests N] [--w-bits N] [--a-bits N]
+            [--layer OVERRIDES]
             [--workers N] [--queue-cap N] [--deadline-ms MS]
             [--max-batch N] [--max-wait-us US]
-            [--sweep 1,2,4] [--json PATH] [--sim]
+            [--sweep 1,2,4] [--json PATH]
+            [--backend pjrt|sim|native] [--sim] [--sim-free]
 
 FLAGS:
   --artifacts DIR   artifact root (default: artifacts)
@@ -61,7 +67,21 @@ SERVE FLAGS:
   --deadline-ms MS  per-request deadline; late jobs get an error response
   --sweep LIST      run the self-test at each worker count, e.g. 1,2,4
   --json PATH       write a BENCH_serving.json throughput/latency record
-  --sim             synthetic backend (no artifacts/PJRT needed)
+  --backend B       worker engine: pjrt (artifacts, default), sim
+                    (synthetic), native (packed i8 GEMM — real quantized
+                    compute, no PJRT; TOML: serve.backend). The native
+                    backend defaults to --a-bits 8 so its hot path is
+                    the integer GEMM (--a-bits 0 forces the f32 body)
+  --sim             alias for --backend sim
+  --sim-free        with --backend native: serve the built-in synthetic
+                    MLP instead of an artifacts-dir model (no --model)
+  --prep-cache-cap N  bound the prepared-model LRU cache (default 64,
+                    0 = unbounded; evictions are counted in the report)
+
+EVAL FLAGS:
+  --backend B       pjrt (artifacts, default) or native: evaluate on the
+                    native integer backend — real quantized arithmetic,
+                    works on the stub build (CNN models only)
 ";
 
 fn main() {
@@ -76,6 +96,9 @@ fn run(args: &Args) -> Result<()> {
     let artifacts = args.str_or("artifacts", "artifacts").to_string();
     // install the kernel-pool width before any command touches a hot path
     ocs::pipeline::PerfConfig::from_args(args)?.apply();
+    if let Some(cap) = args.parse_opt::<usize>("prep-cache-cap")? {
+        PreparedCache::global().set_capacity(cap);
+    }
     match args.cmd.as_deref() {
         Some("info") => cmd_info(&artifacts),
         Some("train") => cmd_train(args, &artifacts),
@@ -213,6 +236,11 @@ fn cmd_eval(args: &Args, artifacts: &str) -> Result<()> {
         ocs::warnln!("no trained weights for {name}; evaluating the init seed (run `ocs train` first)");
     }
     let recipe = parse_recipe(args)?;
+    match ServeBackend::from_args(args)? {
+        ServeBackend::Pjrt => {}
+        ServeBackend::Native => return eval_native(&spec, &ws, &recipe),
+        ServeBackend::Sim => bail!("eval has no sim backend (--backend pjrt|native)"),
+    }
     let engine = Engine::cpu()?;
     if spec.is_lm() {
         let corpus = data::synth_corpus(40_000, spec.vocab, 92);
@@ -235,6 +263,35 @@ fn cmd_eval(args: &Args, artifacts: &str) -> Result<()> {
     Ok(())
 }
 
+/// `ocs eval --backend native`: CNN accuracy on the integer backend —
+/// real quantized compute, no artifact execution (works on the stub
+/// build, where the PJRT path can only error).
+fn eval_native(spec: &ModelSpec, ws: &WeightStore, recipe: &QuantRecipe) -> Result<()> {
+    if spec.is_lm() {
+        bail!("--backend native evaluates the CNN models (the LSTM LM is artifact-only)");
+    }
+    let calib = if recipe.needs_calibration(spec) {
+        let calib_set = data::synth_images(256, 29);
+        Some(native_calibrate(spec, ws, &calib_set.x, 32)?)
+    } else {
+        None
+    };
+    let prep = pipeline::prepare_recipe(spec, ws, calib.as_ref(), recipe)?;
+    let engine = NativeEngine::new(spec.clone());
+    let exe = engine.load(&prep)?;
+    let test = data::synth_images(2_000, 31);
+    let acc = eval::accuracy_native(&exe, &test.x, &test.y, 128)?;
+    println!(
+        "{} [{}] (native, {} int / {} f32 layers): top-1 {:.2}%",
+        spec.name,
+        recipe.label(),
+        exe.int_layers(),
+        exe.float_layers(),
+        acc * 100.0
+    );
+    Ok(())
+}
+
 fn cmd_table(args: &Args, artifacts: &str) -> Result<()> {
     let id = args.str_or("id", "all");
     let ctx = TableCtx::new(
@@ -243,6 +300,26 @@ fn cmd_table(args: &Args, artifacts: &str) -> Result<()> {
         args.bool_or("quick", false),
     )?;
     ctx.run(id)
+}
+
+/// The serve-time default recipe (5-bit MSE-clipped weights, a little
+/// OCS) plus any `--w-bits` / `--a-bits` / `--layer` overrides.
+/// `default_a_bits` is backend-dependent: the native backend defaults
+/// to 8-bit activations so its hot path is the packed i8×i8 GEMM (with
+/// float activations every layer would fall back to the f32 body); the
+/// PJRT path keeps its historical weights-only default.
+fn serve_recipe(args: &Args, default_a_bits: u32) -> Result<QuantRecipe> {
+    let wb: u32 = args.parse_or("w-bits", 5)?;
+    let mut cfg = QuantConfig::weights_only(wb, ClipMethod::Mse, 0.02);
+    let ab: u32 = args.parse_or("a-bits", default_a_bits)?;
+    if ab > 0 {
+        cfg.a_bits = Some(ab);
+    }
+    let mut recipe = cfg.to_recipe();
+    if let Some(flag) = args.str("layer") {
+        recipe = recipe.with_cli_overrides(flag).context("bad --layer")?;
+    }
+    Ok(recipe)
 }
 
 fn cmd_serve(args: &Args, artifacts: &str) -> Result<()> {
@@ -256,22 +333,40 @@ fn cmd_serve(args: &Args, artifacts: &str) -> Result<()> {
         }
     }
     let json_out = args.str("json").map(std::path::PathBuf::from);
-    if args.bool_or("sim", false) {
-        return ocs::serve::self_test_sim(requests, &serve_cfg, &sweep, json_out.as_deref());
+    match ServeBackend::from_args(args)? {
+        ServeBackend::Sim => {
+            ocs::serve::self_test_sim(requests, &serve_cfg, &sweep, json_out.as_deref())
+        }
+        ServeBackend::Native => {
+            // a8 default: float activations would demote every layer to
+            // the f32 body — the int datapath is the point of `native`
+            let recipe = serve_recipe(args, 8)?;
+            let factory = if args.bool_or("sim-free", false) {
+                NativeFactory::synthetic(recipe)?
+            } else {
+                NativeFactory::from_artifacts(artifacts, args.req("model")?, recipe)?
+            };
+            // the factory cache inherits the global capacity (set from
+            // --prep-cache-cap in run()) at construction
+            let cache = factory.cache.clone();
+            ocs::serve::self_test_with(
+                Arc::new(factory),
+                &serve_cfg,
+                requests,
+                &sweep,
+                json_out.as_deref(),
+            )?;
+            println!("{}", cache.stats_line());
+            Ok(())
+        }
+        ServeBackend::Pjrt => ocs::serve::self_test(
+            artifacts,
+            args.req("model")?,
+            serve_recipe(args, 0)?,
+            requests,
+            &serve_cfg,
+            &sweep,
+            json_out.as_deref(),
+        ),
     }
-    let name = args.req("model")?;
-    let wb: u32 = args.parse_or("w-bits", 5)?;
-    let mut recipe = QuantConfig::weights_only(wb, ClipMethod::Mse, 0.02).to_recipe();
-    if let Some(flag) = args.str("layer") {
-        recipe = recipe.with_cli_overrides(flag).context("bad --layer")?;
-    }
-    ocs::serve::self_test(
-        artifacts,
-        name,
-        recipe,
-        requests,
-        &serve_cfg,
-        &sweep,
-        json_out.as_deref(),
-    )
 }

@@ -26,9 +26,19 @@
 //! N workers racing on a cold key must produce exactly one prepare, and
 //! serializing the racers *is* the win — the losers would otherwise
 //! each burn a core redoing it.
+//!
+//! The cache is **bounded**: at most [`PreparedCache::capacity`]
+//! entries (default [`DEFAULT_CAP`], `--prep-cache-cap` / 0 =
+//! unbounded), evicting the least-recently-used prep past the bound.
+//! Per-tenant recipe serving cycles through arbitrarily many distinct
+//! recipes on a long-lived process; before the bound the only recourse
+//! was a manual [`PreparedCache::clear`]. Evicted preps still in use
+//! stay alive through their `Arc`s — eviction drops the cache's
+//! reference, never a worker's. Evictions are counted
+//! ([`PreparedCache::evictions`]) next to hits/misses.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::Result;
@@ -40,12 +50,40 @@ use crate::model::ModelSpec;
 use super::recipe::QuantRecipe;
 use super::{prepare_recipe, PreparedModel};
 
-/// Shared prepared-model cache with hit/miss accounting.
-#[derive(Default)]
+/// Default entry bound — generous (a prep per distinct recipe; sweeps
+/// and per-tenant pools rarely hold this many live at once).
+pub const DEFAULT_CAP: usize = 64;
+
+/// One cached prep plus its recency stamp.
+struct Entry {
+    prep: Arc<PreparedModel>,
+    last_used: u64,
+}
+
+/// Shared prepared-model cache with hit/miss/eviction accounting and
+/// LRU bounding.
 pub struct PreparedCache {
-    map: Mutex<HashMap<(String, String, u64), Arc<PreparedModel>>>,
+    map: Mutex<HashMap<(String, String, u64), Entry>>,
+    /// Entry bound; 0 = unbounded.
+    cap: AtomicUsize,
+    /// Monotonic recency clock (bumped under the map lock).
+    tick: AtomicU64,
     hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl Default for PreparedCache {
+    fn default() -> Self {
+        PreparedCache {
+            map: Mutex::new(HashMap::new()),
+            cap: AtomicUsize::new(DEFAULT_CAP),
+            tick: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
 }
 
 impl PreparedCache {
@@ -61,7 +99,8 @@ impl PreparedCache {
     }
 
     /// Fetch the prepared model for `(spec, ws, calib, recipe)`, running
-    /// [`prepare_recipe`] on the first request only.
+    /// [`prepare_recipe`] on the first request only. Past the capacity,
+    /// the least-recently-used entry is evicted.
     pub fn get_or_prepare(
         &self,
         spec: &ModelSpec,
@@ -75,15 +114,45 @@ impl PreparedCache {
             inputs_token(spec, ws, calib),
         );
         let mut map = self.map.lock().expect("prepared cache poisoned");
-        if let Some(prep) = map.get(&key) {
+        let now = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+        if let Some(e) = map.get_mut(&key) {
+            e.last_used = now;
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(prep.clone());
+            return Ok(e.prep.clone());
         }
         // prepare under the lock: racing workers produce one prep
         let prep = Arc::new(prepare_recipe(spec, ws, calib, recipe)?);
-        map.insert(key, prep.clone());
+        map.insert(
+            key,
+            Entry {
+                prep: prep.clone(),
+                last_used: now,
+            },
+        );
         self.misses.fetch_add(1, Ordering::Relaxed);
+        let cap = self.cap.load(Ordering::Relaxed);
+        while cap > 0 && map.len() > cap {
+            // O(len) stale scan — the cache holds at most `cap` + 1
+            // entries and evictions are rare next to a prepare's cost
+            let oldest = map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty map");
+            map.remove(&oldest);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
         Ok(prep)
+    }
+
+    /// Set the entry bound (0 = unbounded). Shrinking below the current
+    /// population evicts LRU-first on the next insert, not eagerly.
+    pub fn set_capacity(&self, cap: usize) {
+        self.cap.store(cap, Ordering::Relaxed);
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap.load(Ordering::Relaxed)
     }
 
     pub fn len(&self) -> usize {
@@ -100,6 +169,22 @@ impl PreparedCache {
 
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// One-line accounting summary for serve reports.
+    pub fn stats_line(&self) -> String {
+        format!(
+            "prep cache: {} entries (cap {}), {} hits, {} misses, {} evictions",
+            self.len(),
+            self.capacity(),
+            self.hits(),
+            self.misses(),
+            self.evictions()
+        )
     }
 
     /// Drop every cached prep (tests; long-lived processes that retire
@@ -255,6 +340,64 @@ mod tests {
         assert_eq!(b.layers[0].w.shape(), &[12, 4], "prep follows the new padding");
         assert_eq!(a.layers[0].w.shape(), &[10, 4]);
         assert_eq!(cache.misses(), 2);
+    }
+
+    fn recipe_bits(bits: u32) -> QuantRecipe {
+        QuantRecipe::uniform(&QuantConfig::weights_only(bits, ClipMethod::None, 0.0))
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let cache = PreparedCache::new();
+        cache.set_capacity(2);
+        assert_eq!(cache.capacity(), 2);
+        let spec = fake_spec();
+        let ws = fake_ws(9);
+        cache.get_or_prepare(&spec, &ws, None, &recipe_bits(4)).unwrap();
+        cache.get_or_prepare(&spec, &ws, None, &recipe_bits(5)).unwrap();
+        // touch the 4-bit prep so the 5-bit one is LRU
+        cache.get_or_prepare(&spec, &ws, None, &recipe_bits(4)).unwrap();
+        // inserting a third evicts the 5-bit prep, not the 4-bit one
+        cache.get_or_prepare(&spec, &ws, None, &recipe_bits(6)).unwrap();
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.evictions(), 1);
+        let miss_before = cache.misses();
+        cache.get_or_prepare(&spec, &ws, None, &recipe_bits(4)).unwrap();
+        assert_eq!(cache.misses(), miss_before, "4-bit prep survived");
+        cache.get_or_prepare(&spec, &ws, None, &recipe_bits(5)).unwrap();
+        assert_eq!(cache.misses(), miss_before + 1, "5-bit prep was evicted");
+        assert_eq!(cache.evictions(), 2, "re-inserting 5 evicted another");
+        assert!(cache.stats_line().contains("evictions"), "{}", cache.stats_line());
+    }
+
+    #[test]
+    fn unbounded_capacity_never_evicts() {
+        let cache = PreparedCache::new();
+        cache.set_capacity(0);
+        let spec = fake_spec();
+        let ws = fake_ws(10);
+        for bits in 2..=8 {
+            cache.get_or_prepare(&spec, &ws, None, &recipe_bits(bits)).unwrap();
+        }
+        assert_eq!(cache.len(), 7);
+        assert_eq!(cache.evictions(), 0);
+    }
+
+    #[test]
+    fn evicted_preps_stay_alive_through_arcs() {
+        let cache = PreparedCache::new();
+        cache.set_capacity(1);
+        let spec = fake_spec();
+        let ws = fake_ws(11);
+        let held = cache.get_or_prepare(&spec, &ws, None, &recipe_bits(4)).unwrap();
+        cache.get_or_prepare(&spec, &ws, None, &recipe_bits(5)).unwrap();
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.evictions(), 1);
+        // the evicted prep is still usable by its holder
+        assert_eq!(held.layers.len(), 1);
+        // and re-requesting it is an honest miss, producing a new prep
+        let again = cache.get_or_prepare(&spec, &ws, None, &recipe_bits(4)).unwrap();
+        assert!(!Arc::ptr_eq(&held, &again));
     }
 
     #[test]

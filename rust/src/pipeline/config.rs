@@ -200,6 +200,66 @@ impl PerfConfig {
     }
 }
 
+/// Which engine the serve pool builds on each worker thread.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ServeBackend {
+    /// AOT artifacts through PJRT (the stub refuses to execute them on
+    /// a default build — use `native` or `sim` there).
+    #[default]
+    Pjrt,
+    /// Synthetic CPU-burning engine (router tests, CI serving smoke).
+    Sim,
+    /// Native integer backend: real quantized compute on the packed i8
+    /// GEMM kernels, no artifacts or PJRT required
+    /// ([`crate::serve::backend::NativeFactory`]).
+    Native,
+}
+
+impl ServeBackend {
+    pub fn parse(s: &str) -> Result<ServeBackend> {
+        Ok(match s {
+            "pjrt" => ServeBackend::Pjrt,
+            "sim" => ServeBackend::Sim,
+            "native" => ServeBackend::Native,
+            other => bail!("bad backend '{other}' (pjrt|sim|native)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServeBackend::Pjrt => "pjrt",
+            ServeBackend::Sim => "sim",
+            ServeBackend::Native => "native",
+        }
+    }
+
+    /// Parse `--backend pjrt|sim|native`; the legacy `--sim` flag is an
+    /// alias for `--backend sim` (and conflicts with an explicit
+    /// different `--backend`).
+    pub fn from_args(args: &Args) -> Result<ServeBackend> {
+        let explicit = args.str("backend").map(ServeBackend::parse).transpose()?;
+        if args.bool_or("sim", false) {
+            return match explicit {
+                None | Some(ServeBackend::Sim) => Ok(ServeBackend::Sim),
+                Some(other) => {
+                    bail!("--sim conflicts with --backend {}", other.name())
+                }
+            };
+        }
+        Ok(explicit.unwrap_or_default())
+    }
+
+    /// Parse the TOML `backend` key of a section (absent = pjrt).
+    pub fn from_toml(c: &Config, section: &str) -> Result<ServeBackend> {
+        let key = if section.is_empty() {
+            "backend".to_string()
+        } else {
+            format!("{section}.backend")
+        };
+        ServeBackend::parse(c.str_or(&key, "pjrt"))
+    }
+}
+
 /// Default worker-shard count: one per available core.
 pub fn default_workers() -> usize {
     std::thread::available_parallelism()
@@ -371,6 +431,36 @@ mod tests {
         PerfConfig { threads: 2 }.apply();
         assert_eq!(crate::kernels::pool::effective_threads(), 2);
         PerfConfig::default().apply();
+    }
+
+    #[test]
+    fn serve_backend_parses() {
+        assert_eq!(ServeBackend::from_args(&args("serve")).unwrap(), ServeBackend::Pjrt);
+        assert_eq!(
+            ServeBackend::from_args(&args("serve --backend native")).unwrap(),
+            ServeBackend::Native
+        );
+        assert_eq!(
+            ServeBackend::from_args(&args("serve --sim")).unwrap(),
+            ServeBackend::Sim
+        );
+        // legacy --sim agrees with an explicit --backend sim
+        assert_eq!(
+            ServeBackend::from_args(&args("serve --sim --backend sim")).unwrap(),
+            ServeBackend::Sim
+        );
+        assert!(ServeBackend::from_args(&args("serve --sim --backend native")).is_err());
+        assert!(ServeBackend::from_args(&args("serve --backend warp")).is_err());
+        let c = Config::parse("[serve]\nbackend = \"native\"\n").unwrap();
+        assert_eq!(
+            ServeBackend::from_toml(&c, "serve").unwrap(),
+            ServeBackend::Native
+        );
+        assert_eq!(
+            ServeBackend::from_toml(&Config::parse("").unwrap(), "serve").unwrap(),
+            ServeBackend::Pjrt
+        );
+        assert_eq!(ServeBackend::Native.name(), "native");
     }
 
     #[test]

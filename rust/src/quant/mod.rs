@@ -10,6 +10,7 @@
 
 pub mod channelwise;
 pub mod error;
+pub mod pack;
 
 use crate::tensor::TensorF;
 use crate::util::round_half_up;

@@ -1,0 +1,472 @@
+//! Lower a fake-quantized [`PreparedModel`] into true integer payloads —
+//! the bridge between the simulation-grade pipeline (f32 values that
+//! merely *sit on* a quantization grid) and the native integer datapath
+//! ([`crate::kernels::gemm`], [`crate::runtime::native`]).
+//!
+//! [`pass_weight_quant`](crate::pipeline::pass_weight_quant) ships
+//! weights as f32 tensors whose every value is `q * delta` for an
+//! integer `q` with `|q| <= qmax` (Eq. 1). This module recovers those
+//! integers, **asserting bit-exact round-trip** per element — the grid
+//! guarantees `(q as f32) * delta` reproduces the prepared value
+//! exactly, so a mismatch means the prep was not actually on its grid
+//! and packing refuses rather than serving silently-wrong integers.
+//!
+//! OCS interacts trivially by design: splits are materialized into the
+//! padded channel slots *before* weight quantization, so the packed
+//! matrix simply carries `cin_pad` input channels (duplicated channels
+//! included) and the `idx`/`dscale`/`dbias` steering vectors ride along
+//! for the activation-side `channel_dup`.
+//!
+//! A layer takes the [`LayerBody::Int`] lowering only when the whole
+//! datapath is integer-representable: weights on a <= 8-bit grid *and*
+//! activations quantized to <= 8 bits (`0 < aqmax <= 127`). Everything
+//! else — float layers, skipped layers, float activations, >8-bit
+//! grids — keeps its f32 body and runs on the f32 reference GEMM; the
+//! native engine mixes both per layer.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::kernels::gemm::PackedB;
+use crate::model::{LayerKind, LayerSpec, ModelSpec};
+use crate::pipeline::{LayerPrep, PreparedModel};
+use crate::quant::QuantSpec;
+use crate::tensor::TensorF;
+use crate::util::round_half_up;
+
+/// The execution body of one packed layer.
+#[derive(Debug, Clone)]
+pub enum LayerBody {
+    /// Full integer datapath: packed i8 weights (`K × cout`), the
+    /// per-output-channel dequant scales (activation delta × weight
+    /// delta), and the f32 bias the epilogue adds.
+    Int {
+        wq: PackedB,
+        /// `dequant[j] = adelta * wdelta` — vector-shaped so per-channel
+        /// weight grids slot in without touching the kernel.
+        dequant: Vec<f32>,
+        bias: Vec<f32>,
+        /// The weight grid step the integers were recovered on.
+        wdelta: f32,
+    },
+    /// f32 fallback: the (possibly fake-quantized) weight matrix
+    /// row-major `(K, cout)` plus bias, run on the f32 GEMM.
+    Float { w: Vec<f32>, bias: Vec<f32> },
+}
+
+/// One layer lowered for native execution. `K` is the GEMM inner dim:
+/// `ksize² * cin_eff` for conv (HWIO row-major is already `(K, cout)`),
+/// `cin_eff` for fc — where `cin_eff` is `cin_pad` for hooked layers
+/// and the raw `cin` for unquantized ones.
+#[derive(Debug, Clone)]
+pub struct PackedLayer {
+    pub name: String,
+    pub kind: LayerKind,
+    pub ksize: usize,
+    pub stride: usize,
+    pub cin: usize,
+    /// Input channels the GEMM consumes (`cin_pad` when hooked).
+    pub cin_eff: usize,
+    pub cout: usize,
+    /// `true` when the artifact feeds this layer through `channel_dup`
+    /// (quantizable layers, even when a recipe skips them).
+    pub hooked: bool,
+    /// Channel-dup steering (length `cin_eff` when hooked, empty
+    /// otherwise): `x_exp[j] = x[idx[j]] * dscale[j] + dbias[j]`.
+    pub idx: Vec<i32>,
+    pub dscale: Vec<f32>,
+    pub dbias: Vec<f32>,
+    /// Activation grid (`aqmax <= 0` = float activations).
+    pub adelta: f32,
+    pub aqmax: f32,
+    pub body: LayerBody,
+}
+
+impl PackedLayer {
+    /// Whether this layer runs on the integer kernel.
+    pub fn is_int(&self) -> bool {
+        matches!(self.body, LayerBody::Int { .. })
+    }
+
+    /// GEMM inner dimension.
+    pub fn gemm_k(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv => self.ksize * self.ksize * self.cin_eff,
+            _ => self.cin_eff,
+        }
+    }
+}
+
+/// A whole model lowered for the native backend.
+#[derive(Debug, Clone)]
+pub struct PackedModel {
+    pub model: String,
+    pub layers: BTreeMap<String, PackedLayer>,
+    /// Layers on the integer datapath / on the f32 fallback.
+    pub int_layers: usize,
+    pub float_layers: usize,
+}
+
+impl PackedModel {
+    pub fn layer(&self, name: &str) -> Result<&PackedLayer> {
+        self.layers
+            .get(name)
+            .with_context(|| format!("packed model {}: no layer '{name}'", self.model))
+    }
+
+    /// Compact tag for logs: `native[5i/2f]`.
+    pub fn label(&self) -> String {
+        format!("native[{}i/{}f]", self.int_layers, self.float_layers)
+    }
+}
+
+/// Recover the integer grid points of a fake-quantized weight tensor.
+/// Returns the i8 payload, or an error naming the first off-grid value
+/// (which would mean the prep was not produced by the Eq. 1 quantizer).
+fn lower_ints(w: &TensorF, delta: f32, qmax: f32, layer: &str) -> Result<Vec<i8>> {
+    let mut out = Vec::with_capacity(w.len());
+    if delta <= 0.0 {
+        // degenerate grid: every value must be exactly zero
+        for (i, &v) in w.data().iter().enumerate() {
+            if v != 0.0 {
+                bail!("layer {layer}: value {v} at {i} on a zero-width grid");
+            }
+            out.push(0i8);
+        }
+        return Ok(out);
+    }
+    for (i, &v) in w.data().iter().enumerate() {
+        let q = round_half_up(v / delta);
+        if q.abs() > qmax || q.abs() > 127.0 {
+            bail!("layer {layer}: grid index {q} at {i} exceeds qmax {qmax}");
+        }
+        // the round-trip exactness the grid guarantees — checked, not
+        // assumed: a single ulp of drift here would silently corrupt
+        // every logit downstream
+        if (q * delta).to_bits() != v.to_bits() {
+            bail!(
+                "layer {layer}: value {v} at {i} does not round-trip on grid delta {delta} \
+                 (got {})",
+                q * delta
+            );
+        }
+        out.push(q as i8);
+    }
+    Ok(out)
+}
+
+/// Lower one prepared (hooked) layer.
+fn pack_layer(
+    layer: &LayerSpec,
+    prep: &LayerPrep,
+    w_bits: Option<u32>,
+) -> Result<PackedLayer> {
+    let cout = layer.cout;
+    let cin_eff = layer.cin_pad;
+    let kk = prep.w.len() / cout.max(1);
+    if kk * cout != prep.w.len() {
+        bail!("layer {}: weight {} not divisible by cout {cout}", layer.name, prep.w.len());
+    }
+    let bias = prep.b.data().to_vec();
+    if bias.len() != cout {
+        bail!("layer {}: bias {} != cout {cout}", layer.name, bias.len());
+    }
+    // integer-eligible: weight grid <= 8 bits AND activations quantized
+    // to <= 8 bits — only then is the whole layer an i8×i8 product
+    let int_ok = matches!(w_bits, Some(b) if (2..=8).contains(&b))
+        && prep.aqmax > 0.0
+        && prep.aqmax <= 127.0;
+    let body = if int_ok {
+        let spec = QuantSpec::new(w_bits.unwrap());
+        let wdelta = spec.delta(prep.w_threshold);
+        let ints = lower_ints(&prep.w, wdelta, spec.qmax(), &layer.name)?;
+        let wq = PackedB::pack(&ints, kk, cout);
+        let dequant = vec![prep.adelta * wdelta; cout];
+        LayerBody::Int {
+            wq,
+            dequant,
+            bias,
+            wdelta,
+        }
+    } else {
+        LayerBody::Float {
+            w: prep.w.data().to_vec(),
+            bias,
+        }
+    };
+    Ok(PackedLayer {
+        name: layer.name.clone(),
+        kind: layer.kind,
+        ksize: layer.ksize,
+        stride: layer.stride,
+        cin: layer.cin,
+        cin_eff,
+        cout,
+        hooked: true,
+        idx: prep.idx.data().to_vec(),
+        dscale: prep.dscale.data().to_vec(),
+        dbias: prep.dbias.data().to_vec(),
+        adelta: prep.adelta,
+        aqmax: prep.aqmax,
+        body,
+    })
+}
+
+/// Lower a whole [`PreparedModel`]: hooked layers through their
+/// resolved per-layer recipes (integer where the datapath allows, f32
+/// otherwise), raw unquantized layers as plain f32 bodies.
+pub fn pack_prepared(spec: &ModelSpec, prep: &PreparedModel) -> Result<PackedModel> {
+    let first = spec.quantized_layers().next().map(|l| l.name.clone());
+    let last = spec.quantized_layers().last().map(|l| l.name.clone());
+    let mut layers = BTreeMap::new();
+    let mut int_layers = 0usize;
+    let mut float_layers = 0usize;
+    for lp in &prep.layers {
+        let layer = spec.layer(&lp.name)?;
+        let is_first = first.as_deref() == Some(layer.name.as_str());
+        let is_last = last.as_deref() == Some(layer.name.as_str());
+        let rc = prep.recipe.resolve(layer, is_first, is_last);
+        let w_bits = if rc.quantize { rc.w_bits } else { None };
+        let packed = pack_layer(layer, lp, w_bits)?;
+        if packed.is_int() {
+            int_layers += 1;
+        } else {
+            float_layers += 1;
+        }
+        layers.insert(packed.name.clone(), packed);
+    }
+    for (name, w, b) in &prep.raw {
+        let layer = spec.layer(name)?;
+        let cout = layer.cout;
+        let bias = match b {
+            Some(b) => b.data().to_vec(),
+            None => vec![0.0f32; if layer.kind == LayerKind::Embed { 0 } else { cout }],
+        };
+        float_layers += 1;
+        layers.insert(
+            name.clone(),
+            PackedLayer {
+                name: name.clone(),
+                kind: layer.kind,
+                ksize: layer.ksize,
+                stride: layer.stride,
+                cin: layer.cin,
+                cin_eff: layer.cin,
+                cout,
+                hooked: false,
+                idx: Vec::new(),
+                dscale: Vec::new(),
+                dbias: Vec::new(),
+                adelta: 1.0,
+                aqmax: -1.0,
+                body: LayerBody::Float {
+                    w: w.data().to_vec(),
+                    bias,
+                },
+            },
+        );
+    }
+    Ok(PackedModel {
+        model: prep.model.clone(),
+        layers,
+        int_layers,
+        float_layers,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clip::ClipMethod;
+    use crate::kernels::gemm;
+    use crate::model::store::WeightStore;
+    use crate::pipeline::{self, QuantConfig};
+    use crate::util::rng::Rng;
+
+    fn fc_layer(name: &str, cin: usize, cin_pad: usize, cout: usize) -> LayerSpec {
+        LayerSpec {
+            name: name.into(),
+            kind: LayerKind::Fc,
+            cin,
+            cin_pad,
+            cout,
+            ksize: 0,
+            stride: 1,
+            quantized: true,
+            w_cin_axis: 0,
+            w_shape: vec![cin, cout],
+            w_shape_pad: vec![cin_pad, cout],
+        }
+    }
+
+    fn mlp_spec() -> ModelSpec {
+        ModelSpec {
+            name: "packer".into(),
+            dir: std::path::PathBuf::new(),
+            pad_factor: 1.25,
+            num_classes: 4,
+            img_hw: 0,
+            img_c: 0,
+            vocab: 0,
+            seq_len: 0,
+            momentum: 0.9,
+            layers: vec![fc_layer("f1", 8, 10, 6), fc_layer("f2", 6, 8, 4)],
+            artifacts: Default::default(),
+        }
+    }
+
+    fn mlp_ws(seed: u64) -> WeightStore {
+        let mut rng = Rng::new(seed);
+        let mut w1 = rng.normal_vec(48);
+        w1[5 * 6] = 7.0; // outlier channel
+        WeightStore::from_leaves(vec![
+            ("f1.W".into(), TensorF::from_vec(&[8, 6], w1).unwrap()),
+            ("f1.b".into(), TensorF::from_vec(&[6], rng.normal_vec(6)).unwrap()),
+            ("f2.W".into(), TensorF::from_vec(&[6, 4], rng.normal_vec(24)).unwrap()),
+            ("f2.b".into(), TensorF::zeros(&[4])),
+        ])
+    }
+
+    /// 4-bit weights + 8-bit activations + OCS: the full integer path.
+    fn int_recipe() -> pipeline::QuantRecipe {
+        QuantConfig {
+            w_bits: Some(4),
+            a_bits: Some(8),
+            w_clip: ClipMethod::None,
+            a_clip: ClipMethod::None,
+            ocs_ratio: 0.13,
+            ..QuantConfig::float()
+        }
+        .to_recipe()
+    }
+
+    fn calib_for(spec: &ModelSpec) -> crate::calib::Calibration {
+        let mut layers = std::collections::BTreeMap::new();
+        for l in &spec.layers {
+            let data: Vec<f32> = (0..1024).map(|i| ((i % 64) as f32 - 32.0) * 0.05).collect();
+            layers.insert(
+                l.name.clone(),
+                crate::calib::LayerCalib {
+                    hist: crate::stats::Histogram::from_slice(&data, 256),
+                    channel_max: vec![1.5f32; l.cin],
+                    outlier_counts: vec![1u64; l.cin],
+                },
+            );
+        }
+        crate::calib::Calibration { layers }
+    }
+
+    #[test]
+    fn int_lowering_roundtrips_and_multiplies_exactly() {
+        let spec = mlp_spec();
+        let ws = mlp_ws(3);
+        let calib = calib_for(&spec);
+        let prep = pipeline::prepare_recipe(&spec, &ws, Some(&calib), &int_recipe()).unwrap();
+        let pm = pack_prepared(&spec, &prep).unwrap();
+        assert_eq!(pm.int_layers, 2);
+        assert_eq!(pm.float_layers, 0);
+        let f1 = pm.layer("f1").unwrap();
+        assert!(f1.is_int());
+        assert_eq!(f1.cin_eff, 10);
+        assert_eq!(f1.gemm_k(), 10);
+        // OCS-duplicated slots are packed post-split: steering has live
+        // duplicate slots beyond cin
+        assert!(f1.idx.len() == 10 && f1.dscale[8] == 1.0);
+        // the packed ints reproduce the fake-quantized weight exactly
+        let LayerBody::Int { wq, wdelta, .. } = &f1.body else {
+            panic!("expected int body");
+        };
+        let wprep = &prep.layers[0].w;
+        // dequantize via a GEMM against identity-ish probes: column j of
+        // an identity A picks out weight row j
+        let m = f1.gemm_k();
+        let mut eye = vec![0i8; m * m];
+        for i in 0..m {
+            eye[i * m + i] = 1;
+        }
+        let acc = gemm::gemm_i8(&eye, wq, m, 1);
+        for (i, &v) in wprep.data().iter().enumerate() {
+            let got = acc[i] as f32 * wdelta;
+            assert_eq!(got.to_bits(), v.to_bits(), "element {i}");
+        }
+    }
+
+    #[test]
+    fn float_acts_fall_back_to_f32_body() {
+        let spec = mlp_spec();
+        let ws = mlp_ws(4);
+        // weights-only: no activation grid, so no integer datapath
+        let recipe = QuantConfig::weights_only(4, ClipMethod::None, 0.0).to_recipe();
+        let prep = pipeline::prepare_recipe(&spec, &ws, None, &recipe).unwrap();
+        let pm = pack_prepared(&spec, &prep).unwrap();
+        assert_eq!(pm.int_layers, 0);
+        assert_eq!(pm.float_layers, 2);
+        let f1 = pm.layer("f1").unwrap();
+        assert!(!f1.is_int());
+        assert!(f1.hooked);
+        assert_eq!(f1.aqmax, -1.0);
+    }
+
+    #[test]
+    fn wide_grids_fall_back_to_f32_body() {
+        let spec = mlp_spec();
+        let ws = mlp_ws(5);
+        let calib = calib_for(&spec);
+        // 12-bit weights exceed i8 — must stay f32 even with 8-bit acts
+        let recipe = QuantConfig {
+            w_bits: Some(12),
+            a_bits: Some(8),
+            ..QuantConfig::float()
+        }
+        .to_recipe();
+        let prep = pipeline::prepare_recipe(&spec, &ws, Some(&calib), &recipe).unwrap();
+        let pm = pack_prepared(&spec, &prep).unwrap();
+        assert_eq!(pm.int_layers, 0);
+        assert!(pm.label().contains("0i/2f"), "{}", pm.label());
+    }
+
+    #[test]
+    fn off_grid_weights_are_refused() {
+        let t = TensorF::from_vec(&[2], vec![0.35, 0.1]).unwrap();
+        // delta 0.1: 0.35 is not a grid multiple bit-for-bit
+        let err = lower_ints(&t, 0.1, 7.0, "bad").unwrap_err();
+        assert!(err.to_string().contains("round-trip"), "{err:#}");
+        // zero-width grid accepts only exact zeros
+        let z = TensorF::zeros(&[3]);
+        assert_eq!(lower_ints(&z, 0.0, 7.0, "z").unwrap(), vec![0, 0, 0]);
+        let nz = TensorF::from_vec(&[1], vec![0.5]).unwrap();
+        assert!(lower_ints(&nz, 0.0, 7.0, "nz").is_err());
+    }
+
+    #[test]
+    fn grid_values_always_roundtrip() {
+        // every representable grid point must lower exactly
+        let spec = QuantSpec::new(8);
+        for &thr in &[0.37f32, 1.0, 12.5, 1e-3] {
+            let delta = spec.delta(thr);
+            let vals: Vec<f32> = (-127..=127).map(|q| q as f32 * delta).collect();
+            let t = TensorF::from_vec(&[vals.len()], vals.clone()).unwrap();
+            let ints = lower_ints(&t, delta, spec.qmax(), "grid").unwrap();
+            for (q, &v) in ints.iter().zip(&vals) {
+                assert_eq!((*q as f32 * delta).to_bits(), v.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn skipped_layer_packs_float_but_hooked() {
+        let spec = mlp_spec();
+        let ws = mlp_ws(6);
+        let calib = calib_for(&spec);
+        let recipe = int_recipe().with_override(
+            pipeline::LayerMatch::name("f2"),
+            pipeline::LayerPolicy::skip(),
+        );
+        let prep = pipeline::prepare_recipe(&spec, &ws, Some(&calib), &recipe).unwrap();
+        let pm = pack_prepared(&spec, &prep).unwrap();
+        assert_eq!(pm.int_layers, 1);
+        let f2 = pm.layer("f2").unwrap();
+        assert!(!f2.is_int() && f2.hooked);
+    }
+}

@@ -24,12 +24,19 @@
 //! in [`stub`] takes the place of the `xla` crate: literal marshalling
 //! works, compilation/execution return a descriptive error, and the
 //! serving stack uses its synthetic backend instead.
+//!
+//! [`native`] is the artifact-free sibling: the same models executed on
+//! the CPU integer datapath (packed i8 GEMM with a per-channel dequant
+//! epilogue), with real quantized arithmetic on *every* build — the
+//! stub build included.
 
 pub mod hlo_cache;
+pub mod native;
 #[cfg(not(feature = "pjrt"))]
 pub(crate) mod stub;
 
 pub use hlo_cache::HloTextCache;
+pub use native::{NativeEngine, NativeExecutable};
 
 #[cfg(not(feature = "pjrt"))]
 use self::stub as xla;

@@ -1,0 +1,1025 @@
+//! Native integer inference backend — real quantized compute with no
+//! PJRT and no AOT artifacts.
+//!
+//! The PJRT path executes the models as pre-lowered HLO; on the default
+//! (stub) build that path cannot run at all, and even with PJRT the
+//! "quantized" arithmetic is simulated in f32. This module executes the
+//! same models directly on the CPU integer datapath:
+//!
+//! * weights come from [`crate::quant::pack`] as true `i8` payloads
+//!   with per-output-channel dequant scales (OCS duplicates already
+//!   materialized into the padded slots);
+//! * activations run `channel_dup` (`x_exp[j] = x[idx[j]] * dscale[j] +
+//!   dbias[j]`) and Eq. 1 fake-quant between layers with exactly the
+//!   artifact semantics (`aqmax <= 0` bypasses, round-half-up,
+//!   clamp to ±aqmax) — but the quantized values stay *integers* and
+//!   feed the packed i8 GEMM ([`crate::kernels::gemm`]) instead of
+//!   being dequantized back to f32 first;
+//! * FC layers are direct GEMMs; conv layers lower to GEMM via im2col
+//!   (SAME padding, NHWC × HWIO, matching the XLA lowering);
+//! * layers the integer datapath cannot carry (float activations,
+//!   >8-bit grids, recipe-skipped or unquantized layers) run on the f32
+//!   reference GEMM — the two body kinds mix freely per layer.
+//!
+//! Topology comes from [`NativeGraph`]: the three CNN benchmark models
+//! are mirrored from `python/compile/model.py` node for node, and any
+//! all-FC spec (tests, the [`synthetic_mlp`] serving model) gets a
+//! generic flatten → fc/relu chain. The LSTM LM stays artifact-only.
+//!
+//! [`NativeEngine`] mirrors the PJRT [`super::Engine`] shape — build
+//! once, `load` per prepared model with a fingerprint-keyed executable
+//! cache — `ocs eval --backend native` drives it exactly as the PJRT
+//! eval drives `Engine` (the serve workers hold one
+//! [`NativeExecutable`] each and rebuild on hot-swap instead).
+//! A float-recipe executable doubles as the calibration probe
+//! ([`native_calibrate`]): it records each quantizable layer's input
+//! activation, which makes activation-quantizing recipes fully
+//! self-sufficient without PJRT.
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::calib::{self, Calibration};
+use crate::kernels::gemm;
+use crate::model::store::WeightStore;
+use crate::model::{LayerKind, LayerSpec, ModelSpec};
+use crate::pipeline::{self, PreparedModel, QuantRecipe};
+use crate::quant::pack::{pack_prepared, LayerBody, PackedLayer, PackedModel};
+use crate::tensor::TensorF;
+use crate::util::round_half_up;
+
+/// One node of a native execution graph. Nodes reference earlier nodes
+/// by index; the last node's activation is the model output.
+#[derive(Debug, Clone)]
+enum Node {
+    /// The network input batch.
+    Input,
+    /// Parametric layer (conv / fc) applied to `src`.
+    Layer { name: String, src: usize },
+    Relu { src: usize },
+    /// SAME-padded max-pool (`k`×`k`, stride `s`).
+    MaxPool { src: usize, k: usize, s: usize },
+    Add { a: usize, b: usize },
+    /// Concatenate along the trailing channel axis.
+    ConcatC { srcs: Vec<usize> },
+    GlobalAvgPool { src: usize },
+    Flatten { src: usize },
+}
+
+/// The forward topology of one model, mirrored from
+/// `python/compile/model.py`.
+#[derive(Debug, Clone)]
+pub struct NativeGraph {
+    nodes: Vec<Node>,
+}
+
+impl NativeGraph {
+    fn new() -> NativeGraph {
+        NativeGraph {
+            nodes: vec![Node::Input],
+        }
+    }
+
+    fn push(&mut self, n: Node) -> usize {
+        self.nodes.push(n);
+        self.nodes.len() - 1
+    }
+
+    fn layer(&mut self, spec: &ModelSpec, name: &str, src: usize) -> Result<usize> {
+        spec.layer(name)?; // existence check at build time, not run time
+        Ok(self.push(Node::Layer {
+            name: name.to_string(),
+            src,
+        }))
+    }
+
+    /// Build the graph for `spec`, or explain why it has none.
+    pub fn for_model(spec: &ModelSpec) -> Result<NativeGraph> {
+        if spec.is_lm() {
+            bail!(
+                "native backend: model '{}' is the LSTM LM — recurrent topology runs through \
+                 the PJRT artifacts only",
+                spec.name
+            );
+        }
+        match spec.name.as_str() {
+            "minivgg" => Self::minivgg(spec),
+            "miniresnet" => Self::miniresnet(spec),
+            "miniincept" => Self::miniincept(spec),
+            _ if !spec.layers.is_empty()
+                && spec.layers.iter().all(|l| l.kind == LayerKind::Fc) =>
+            {
+                Self::mlp(spec)
+            }
+            other => bail!(
+                "native backend has no graph for model '{other}' (known: minivgg, miniresnet, \
+                 miniincept, and all-FC specs)"
+            ),
+        }
+    }
+
+    /// Plain conv stack (`python/compile/model.py::MiniVGG::forward`).
+    fn minivgg(spec: &ModelSpec) -> Result<NativeGraph> {
+        let mut g = NativeGraph::new();
+        let mut x = g.layer(spec, "c1", 0)?;
+        x = g.push(Node::Relu { src: x });
+        x = g.layer(spec, "c2", x)?;
+        x = g.push(Node::Relu { src: x });
+        x = g.push(Node::MaxPool { src: x, k: 2, s: 2 });
+        x = g.layer(spec, "c3", x)?;
+        x = g.push(Node::Relu { src: x });
+        x = g.layer(spec, "c4", x)?;
+        x = g.push(Node::Relu { src: x });
+        x = g.push(Node::MaxPool { src: x, k: 2, s: 2 });
+        x = g.layer(spec, "c5", x)?;
+        x = g.push(Node::Relu { src: x });
+        x = g.push(Node::MaxPool { src: x, k: 2, s: 2 });
+        x = g.push(Node::Flatten { src: x });
+        x = g.layer(spec, "f1", x)?;
+        x = g.push(Node::Relu { src: x });
+        g.layer(spec, "f2", x)?;
+        Ok(g)
+    }
+
+    /// ResNet-20-like residual stack (`MiniResNet::forward`).
+    fn miniresnet(spec: &ModelSpec) -> Result<NativeGraph> {
+        const WIDTHS: [usize; 3] = [16, 32, 64];
+        const BLOCKS: usize = 2;
+        let mut g = NativeGraph::new();
+        let mut x = g.layer(spec, "stem", 0)?;
+        x = g.push(Node::Relu { src: x });
+        let mut cin = 16usize;
+        for (si, &w) in WIDTHS.iter().enumerate() {
+            for bi in 0..BLOCKS {
+                let bname = format!("s{si}b{bi}");
+                let mut h = g.layer(spec, &format!("{bname}c1"), x)?;
+                h = g.push(Node::Relu { src: h });
+                h = g.layer(spec, &format!("{bname}c2"), h)?;
+                let sc = if cin != w {
+                    g.layer(spec, &format!("{bname}sc"), x)?
+                } else {
+                    x
+                };
+                let sum = g.push(Node::Add { a: h, b: sc });
+                x = g.push(Node::Relu { src: sum });
+                cin = w;
+            }
+        }
+        x = g.push(Node::GlobalAvgPool { src: x });
+        g.layer(spec, "fc", x)?;
+        Ok(g)
+    }
+
+    /// Parallel-branch blocks (`MiniIncept::forward`).
+    fn miniincept(spec: &ModelSpec) -> Result<NativeGraph> {
+        let mut g = NativeGraph::new();
+        let mut x = g.layer(spec, "stem", 0)?;
+        x = g.push(Node::Relu { src: x });
+        x = g.push(Node::MaxPool { src: x, k: 2, s: 2 });
+        for (block, reduce) in [("a", Some("red")), ("b", None)] {
+            let mut b1 = g.layer(spec, &format!("{block}_b1"), x)?;
+            b1 = g.push(Node::Relu { src: b1 });
+            let mut b2 = g.layer(spec, &format!("{block}_b2a"), x)?;
+            b2 = g.push(Node::Relu { src: b2 });
+            b2 = g.layer(spec, &format!("{block}_b2b"), b2)?;
+            b2 = g.push(Node::Relu { src: b2 });
+            let pooled = g.push(Node::MaxPool { src: x, k: 3, s: 1 });
+            let mut b3 = g.layer(spec, &format!("{block}_b3"), pooled)?;
+            b3 = g.push(Node::Relu { src: b3 });
+            x = g.push(Node::ConcatC {
+                srcs: vec![b1, b2, b3],
+            });
+            if let Some(red) = reduce {
+                x = g.layer(spec, red, x)?;
+                x = g.push(Node::Relu { src: x });
+            }
+        }
+        x = g.push(Node::GlobalAvgPool { src: x });
+        g.layer(spec, "fc", x)?;
+        Ok(g)
+    }
+
+    /// Generic all-FC chain: flatten, then fc/relu per layer (no relu
+    /// after the last). Carries test specs and [`synthetic_mlp`].
+    fn mlp(spec: &ModelSpec) -> Result<NativeGraph> {
+        let mut g = NativeGraph::new();
+        let mut x = g.push(Node::Flatten { src: 0 });
+        let n = spec.layers.len();
+        for (i, l) in spec.layers.iter().enumerate() {
+            x = g.layer(spec, &l.name, x)?;
+            if i + 1 < n {
+                x = g.push(Node::Relu { src: x });
+            }
+        }
+        Ok(g)
+    }
+
+    /// Names of every parametric layer the graph executes.
+    pub fn layer_names(&self) -> Vec<&str> {
+        self.nodes
+            .iter()
+            .filter_map(|n| match n {
+                Node::Layer { name, .. } => Some(name.as_str()),
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+/// A model lowered and ready to execute natively: topology + packed
+/// integer/f32 layer payloads.
+pub struct NativeExecutable {
+    graph: NativeGraph,
+    packed: PackedModel,
+    /// Kernel-pool width for the GEMMs (0 = default).
+    threads: usize,
+}
+
+impl NativeExecutable {
+    /// Lower `prep` for native execution. Fails when the model has no
+    /// native graph or a layer is off its quantization grid.
+    pub fn build(spec: &ModelSpec, prep: &PreparedModel) -> Result<NativeExecutable> {
+        let graph = NativeGraph::for_model(spec)?;
+        let packed = pack_prepared(spec, prep)?;
+        for name in graph.layer_names() {
+            packed.layer(name)?; // every graph layer must have a payload
+        }
+        Ok(NativeExecutable {
+            graph,
+            packed,
+            threads: 0,
+        })
+    }
+
+    /// Pin the GEMM thread width (0 = pool default). Results are
+    /// bit-identical at every width.
+    pub fn with_threads(mut self, threads: usize) -> NativeExecutable {
+        self.threads = threads;
+        self
+    }
+
+    /// Layers running on the integer datapath / the f32 fallback.
+    pub fn int_layers(&self) -> usize {
+        self.packed.int_layers
+    }
+
+    pub fn float_layers(&self) -> usize {
+        self.packed.float_layers
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}:{}", self.packed.model, self.packed.label())
+    }
+
+    /// Forward pass: `(B, ...)` input → `(B, classes)` logits. Any
+    /// batch size — the native path has no artifact batch grid.
+    pub fn infer(&self, x: &TensorF) -> Result<TensorF> {
+        self.run(x, None)
+    }
+
+    /// Forward pass that also records each hooked layer's *input*
+    /// activation (the distribution calibration profiles) — the native
+    /// twin of the `probe` artifact. Meaningful on a float-recipe
+    /// executable, where hooks are identity.
+    pub fn infer_probe(&self, x: &TensorF) -> Result<(TensorF, BTreeMap<String, TensorF>)> {
+        let mut probe = BTreeMap::new();
+        let out = self.run(x, Some(&mut probe))?;
+        Ok((out, probe))
+    }
+
+    fn run(
+        &self,
+        x: &TensorF,
+        mut probe: Option<&mut BTreeMap<String, TensorF>>,
+    ) -> Result<TensorF> {
+        if x.rank() < 2 || x.shape()[0] == 0 {
+            bail!("native infer: batch input required, got shape {:?}", x.shape());
+        }
+        let mut vals: Vec<Option<TensorF>> = Vec::with_capacity(self.graph.nodes.len());
+        vals.resize_with(self.graph.nodes.len(), || None);
+        for i in 0..self.graph.nodes.len() {
+            let v = match &self.graph.nodes[i] {
+                Node::Input => x.clone(),
+                Node::Layer { name, src } => {
+                    let pl = self.packed.layer(name)?;
+                    let xin = node_val(&vals, *src)?;
+                    if pl.hooked {
+                        if let Some(p) = probe.as_mut() {
+                            p.insert(name.clone(), xin.clone());
+                        }
+                    }
+                    self.apply_layer(pl, xin)
+                        .with_context(|| format!("layer {name}"))?
+                }
+                Node::Relu { src } => node_val(&vals, *src)?.map(|v| v.max(0.0)),
+                Node::MaxPool { src, k, s } => maxpool_same(node_val(&vals, *src)?, *k, *s)?,
+                Node::Add { a, b } => {
+                    let ta = node_val(&vals, *a)?;
+                    let tb = node_val(&vals, *b)?;
+                    if ta.shape() != tb.shape() {
+                        bail!("add shape mismatch: {:?} vs {:?}", ta.shape(), tb.shape());
+                    }
+                    let data = ta
+                        .data()
+                        .iter()
+                        .zip(tb.data())
+                        .map(|(&u, &v)| u + v)
+                        .collect();
+                    TensorF::from_vec(ta.shape(), data)?
+                }
+                Node::ConcatC { srcs } => {
+                    let parts: Vec<&TensorF> = srcs
+                        .iter()
+                        .map(|&s| node_val(&vals, s))
+                        .collect::<Result<_>>()?;
+                    concat_channels(&parts)?
+                }
+                Node::GlobalAvgPool { src } => global_avg_pool(node_val(&vals, *src)?)?,
+                Node::Flatten { src } => {
+                    let t = node_val(&vals, *src)?;
+                    let b = t.shape()[0];
+                    let rest: usize = t.shape()[1..].iter().product();
+                    t.clone().reshape(&[b, rest])?
+                }
+            };
+            vals[i] = Some(v);
+        }
+        Ok(vals
+            .pop()
+            .flatten()
+            .expect("graph has at least the input node"))
+    }
+
+    /// One parametric layer: channel_dup → activation quant → GEMM
+    /// (integer or f32 body), conv via im2col.
+    fn apply_layer(&self, pl: &PackedLayer, x: &TensorF) -> Result<TensorF> {
+        match pl.kind {
+            LayerKind::Fc => self.fc(pl, x),
+            LayerKind::Conv => self.conv(pl, x),
+            LayerKind::Embed => bail!("embed layers are artifact-only"),
+        }
+    }
+
+    fn fc(&self, pl: &PackedLayer, x: &TensorF) -> Result<TensorF> {
+        if x.rank() != 2 {
+            bail!("fc expects (B, cin), got {:?}", x.shape());
+        }
+        let b = x.shape()[0];
+        let xe = expand_channels(x, pl)?;
+        let out = match &pl.body {
+            LayerBody::Int {
+                wq, dequant, bias, ..
+            } => {
+                let q = quantize_acts(xe.data(), pl.adelta, pl.aqmax);
+                gemm::gemm_i8_dequant(&q, wq, b, dequant, bias, self.threads)
+            }
+            LayerBody::Float { w, bias } => {
+                let a = fake_quant_acts(xe, pl.adelta, pl.aqmax);
+                gemm::gemm_f32(
+                    a.data(),
+                    w,
+                    b,
+                    pl.gemm_k(),
+                    pl.cout,
+                    Some(bias.as_slice()),
+                    self.threads,
+                )
+            }
+        };
+        Ok(TensorF::from_vec(&[b, pl.cout], out)?)
+    }
+
+    fn conv(&self, pl: &PackedLayer, x: &TensorF) -> Result<TensorF> {
+        if x.rank() != 4 {
+            bail!("conv expects (B, H, W, C), got {:?}", x.shape());
+        }
+        let xe = expand_channels(x, pl)?;
+        let (bsz, h, w) = (xe.shape()[0], xe.shape()[1], xe.shape()[2]);
+        let c = xe.shape()[3];
+        let (k, s) = (pl.ksize, pl.stride);
+        let (oh, ow) = (h.div_ceil(s), w.div_ceil(s));
+        let pad_h = ((oh - 1) * s + k).saturating_sub(h);
+        let pad_w = ((ow - 1) * s + k).saturating_sub(w);
+        let (pt, plft) = (pad_h / 2, pad_w / 2);
+        let m = bsz * oh * ow;
+        let out = match &pl.body {
+            LayerBody::Int {
+                wq, dequant, bias, ..
+            } => {
+                let q = quantize_acts(xe.data(), pl.adelta, pl.aqmax);
+                let cols = im2col(&q, bsz, h, w, c, k, s, pt, plft, oh, ow);
+                gemm::gemm_i8_dequant(&cols, wq, m, dequant, bias, self.threads)
+            }
+            LayerBody::Float { w: wt, bias } => {
+                let a = fake_quant_acts(xe, pl.adelta, pl.aqmax);
+                let cols = im2col(a.data(), bsz, h, w, c, k, s, pt, plft, oh, ow);
+                gemm::gemm_f32(
+                    &cols,
+                    wt,
+                    m,
+                    pl.gemm_k(),
+                    pl.cout,
+                    Some(bias.as_slice()),
+                    self.threads,
+                )
+            }
+        };
+        Ok(TensorF::from_vec(&[bsz, oh, ow, pl.cout], out)?)
+    }
+}
+
+fn node_val(vals: &[Option<TensorF>], i: usize) -> Result<&TensorF> {
+    vals.get(i)
+        .and_then(|v| v.as_ref())
+        .context("graph node referenced before evaluation")
+}
+
+/// `channel_dup` on the trailing axis: `(… , cin)` → `(… , cin_eff)`.
+/// Pass-through clone for unhooked layers.
+fn expand_channels(x: &TensorF, pl: &PackedLayer) -> Result<TensorF> {
+    let c = *x.shape().last().context("rank >= 1")?;
+    if c != pl.cin {
+        bail!(
+            "layer {}: input has {c} channels, expected {}",
+            pl.name,
+            pl.cin
+        );
+    }
+    if !pl.hooked {
+        return Ok(x.clone());
+    }
+    let ce = pl.cin_eff;
+    let rows = x.len() / c.max(1);
+    let mut out = vec![0.0f32; rows * ce];
+    for r in 0..rows {
+        let xr = &x.data()[r * c..(r + 1) * c];
+        let or = &mut out[r * ce..(r + 1) * ce];
+        for j in 0..ce {
+            or[j] = xr[pl.idx[j] as usize] * pl.dscale[j] + pl.dbias[j];
+        }
+    }
+    let mut shape = x.shape().to_vec();
+    *shape.last_mut().unwrap() = ce;
+    Ok(TensorF::from_vec(&shape, out)?)
+}
+
+/// Quantize activations straight to their grid integers (the values
+/// Eq. 1 fake-quant would dequantize back): `clamp(Q(x/Δ), ±aqmax)`.
+fn quantize_acts(xs: &[f32], adelta: f32, aqmax: f32) -> Vec<i8> {
+    if adelta <= 0.0 {
+        return vec![0i8; xs.len()];
+    }
+    xs.iter()
+        .map(|&x| round_half_up(x / adelta).clamp(-aqmax, aqmax) as i8)
+        .collect()
+}
+
+/// Artifact-exact f32 fake-quant for the f32 body (`aqmax <= 0`
+/// bypasses, as in the Pallas kernel).
+fn fake_quant_acts(mut x: TensorF, adelta: f32, aqmax: f32) -> TensorF {
+    if aqmax > 0.0 {
+        crate::quant::fake_quant_slice(x.data_mut(), adelta, aqmax);
+    }
+    x
+}
+
+/// im2col for SAME-padded NHWC conv: row `(b, oy, ox)` holds the
+/// `k*k*c` patch in `(ky, kx, c)` order — exactly the HWIO weight
+/// layout, so the conv is one GEMM. Out-of-image taps stay `T::default()`
+/// (zero — identical in integer and f32 space).
+#[allow(clippy::too_many_arguments)]
+fn im2col<T: Copy + Default>(
+    x: &[T],
+    bsz: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    s: usize,
+    pad_top: usize,
+    pad_left: usize,
+    oh: usize,
+    ow: usize,
+) -> Vec<T> {
+    let kk = k * k * c;
+    let mut out = vec![T::default(); bsz * oh * ow * kk];
+    let mut row = 0usize;
+    for b in 0..bsz {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let rbase = row * kk;
+                row += 1;
+                let mut col = 0usize;
+                for ky in 0..k {
+                    let iy = (oy * s + ky) as isize - pad_top as isize;
+                    let in_y = iy >= 0 && (iy as usize) < h;
+                    for kx in 0..k {
+                        let ix = (ox * s + kx) as isize - pad_left as isize;
+                        if in_y && ix >= 0 && (ix as usize) < w {
+                            let src = ((b * h + iy as usize) * w + ix as usize) * c;
+                            out[rbase + col..rbase + col + c]
+                                .copy_from_slice(&x[src..src + c]);
+                        }
+                        col += c;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// SAME-padded max-pool over `(B, H, W, C)`; padding taps are -inf
+/// (never selected — every SAME window overlaps the image).
+fn maxpool_same(x: &TensorF, k: usize, s: usize) -> Result<TensorF> {
+    if x.rank() != 4 {
+        bail!("maxpool expects (B, H, W, C), got {:?}", x.shape());
+    }
+    let (bsz, h, w, c) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let (oh, ow) = (h.div_ceil(s), w.div_ceil(s));
+    let pad_h = ((oh - 1) * s + k).saturating_sub(h);
+    let pad_w = ((ow - 1) * s + k).saturating_sub(w);
+    let (pt, pl) = (pad_h / 2, pad_w / 2);
+    let data = x.data();
+    let mut out = vec![f32::NEG_INFINITY; bsz * oh * ow * c];
+    for b in 0..bsz {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let obase = ((b * oh + oy) * ow + ox) * c;
+                for ky in 0..k {
+                    let iy = (oy * s + ky) as isize - pt as isize;
+                    if iy < 0 || iy as usize >= h {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * s + kx) as isize - pl as isize;
+                        if ix < 0 || ix as usize >= w {
+                            continue;
+                        }
+                        let ibase = ((b * h + iy as usize) * w + ix as usize) * c;
+                        for ch in 0..c {
+                            let v = data[ibase + ch];
+                            if v > out[obase + ch] {
+                                out[obase + ch] = v;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(TensorF::from_vec(&[bsz, oh, ow, c], out)?)
+}
+
+/// Mean over the spatial axes: `(B, H, W, C)` → `(B, C)`.
+fn global_avg_pool(x: &TensorF) -> Result<TensorF> {
+    if x.rank() != 4 {
+        bail!("global_avg_pool expects (B, H, W, C), got {:?}", x.shape());
+    }
+    let (bsz, h, w, c) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let hw = (h * w).max(1);
+    let mut out = vec![0.0f32; bsz * c];
+    for b in 0..bsz {
+        for p in 0..h * w {
+            let ibase = (b * h * w + p) * c;
+            for ch in 0..c {
+                out[b * c + ch] += x.data()[ibase + ch];
+            }
+        }
+        for ch in 0..c {
+            out[b * c + ch] /= hw as f32;
+        }
+    }
+    Ok(TensorF::from_vec(&[bsz, c], out)?)
+}
+
+/// Concat along the trailing channel axis (all leading dims equal).
+fn concat_channels(parts: &[&TensorF]) -> Result<TensorF> {
+    let first = parts.first().context("concat of nothing")?;
+    let lead = &first.shape()[..first.rank() - 1];
+    let mut ctot = 0usize;
+    for p in parts {
+        if &p.shape()[..p.rank() - 1] != lead {
+            bail!("concat leading-shape mismatch: {:?} vs {:?}", p.shape(), first.shape());
+        }
+        ctot += *p.shape().last().unwrap();
+    }
+    let rows: usize = lead.iter().product();
+    let mut out = vec![0.0f32; rows * ctot];
+    for r in 0..rows {
+        let mut off = 0usize;
+        for p in parts {
+            let pc = *p.shape().last().unwrap();
+            out[r * ctot + off..r * ctot + off + pc]
+                .copy_from_slice(&p.data()[r * pc..(r + 1) * pc]);
+            off += pc;
+        }
+    }
+    let mut shape = lead.to_vec();
+    shape.push(ctot);
+    Ok(TensorF::from_vec(&shape, out)?)
+}
+
+/// Native engine: the [`super::Engine`]-shaped entry point for the
+/// integer backend. Holds the model spec and a per-engine executable
+/// cache keyed by recipe fingerprint (one engine serves one weight
+/// set, exactly like a PJRT engine serves one artifact dir).
+pub struct NativeEngine {
+    spec: ModelSpec,
+    cache: RefCell<HashMap<String, Rc<NativeExecutable>>>,
+}
+
+impl NativeEngine {
+    pub fn new(spec: ModelSpec) -> NativeEngine {
+        NativeEngine {
+            spec,
+            cache: RefCell::new(HashMap::new()),
+        }
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    /// Lower + cache an executable for `prep` (keyed by its recipe
+    /// fingerprint — an engine serves one weight/calibration set, so
+    /// the fingerprint pins the prep).
+    pub fn load(&self, prep: &PreparedModel) -> Result<Rc<NativeExecutable>> {
+        let key = prep.recipe.fingerprint();
+        if let Some(e) = self.cache.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let exe = Rc::new(NativeExecutable::build(&self.spec, prep)?);
+        crate::debugln!(
+            "native executable ready: {} ({} int / {} f32 layers)",
+            exe.label(),
+            exe.int_layers(),
+            exe.float_layers()
+        );
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    pub fn cached_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+/// Activation calibration through the native float forward — the
+/// artifact-free twin of [`crate::calib::calibrate`]: run a
+/// float-recipe executable as the probe, collect every quantizable
+/// layer's input activation, fold the fused statistics.
+pub fn native_calibrate(
+    spec: &ModelSpec,
+    ws: &WeightStore,
+    images: &TensorF,
+    batch: usize,
+) -> Result<Calibration> {
+    if spec.is_lm() {
+        bail!("activation calibration targets CNN models");
+    }
+    let n = images.shape()[0];
+    if n < batch || batch == 0 {
+        bail!("calibration set ({n}) smaller than probe batch ({batch})");
+    }
+    let float_prep = pipeline::prepare_recipe(spec, ws, None, &QuantRecipe::float())?;
+    let exe = NativeExecutable::build(spec, &float_prep)?;
+    let mut acts: BTreeMap<String, Vec<TensorF>> = BTreeMap::new();
+    let mut i = 0usize;
+    while i + batch <= n {
+        let xb = calib::slice_rows(images, i, batch)?;
+        let (_, probe) = exe.infer_probe(&xb)?;
+        for (layer, a) in probe {
+            acts.entry(layer).or_default().push(a);
+        }
+        i += batch;
+    }
+    Ok(calib::statistics(acts))
+}
+
+/// A small in-memory quantizable MLP (`(B, 16, 16, 3)` images →
+/// 10 classes) with outlier-bearing weights — the built-in model behind
+/// artifact-free native serving (`ocs serve --backend native
+/// --sim-free`) and the native integration tests. Deterministic per
+/// seed.
+pub fn synthetic_mlp(seed: u64) -> (ModelSpec, WeightStore) {
+    use crate::util::rng::Rng;
+    let dims = [(768usize, 64usize), (64, 10)];
+    let pad = |c: usize| (c as f64 * 1.25).ceil() as usize;
+    let mut layers = Vec::new();
+    let mut leaves = Vec::new();
+    let mut rng = Rng::new(seed);
+    for (i, &(cin, cout)) in dims.iter().enumerate() {
+        let name = format!("f{}", i + 1);
+        layers.push(LayerSpec {
+            name: name.clone(),
+            kind: LayerKind::Fc,
+            cin,
+            cin_pad: pad(cin),
+            cout,
+            ksize: 0,
+            stride: 1,
+            quantized: true,
+            w_cin_axis: 0,
+            w_shape: vec![cin, cout],
+            w_shape_pad: vec![pad(cin), cout],
+        });
+        let std = (2.0f32 / cin as f32).sqrt();
+        let mut w: Vec<f32> = rng.normal_vec(cin * cout).iter().map(|v| v * std).collect();
+        // a few hot input channels, like trained weights (what OCS splits)
+        for hot in 0..3 {
+            let ch = (hot * 31 + 7) % cin;
+            for j in 0..cout {
+                w[ch * cout + j] *= 6.0;
+            }
+        }
+        leaves.push((
+            format!("{name}.W"),
+            TensorF::from_vec(&[cin, cout], w).expect("synthetic weight"),
+        ));
+        leaves.push((
+            format!("{name}.b"),
+            TensorF::from_vec(&[cout], rng.normal_vec(cout).iter().map(|v| v * 0.05).collect())
+                .expect("synthetic bias"),
+        ));
+    }
+    let spec = ModelSpec {
+        name: "native-mlp".into(),
+        dir: std::path::PathBuf::new(),
+        pad_factor: 1.25,
+        num_classes: 10,
+        img_hw: 16,
+        img_c: 3,
+        vocab: 0,
+        seq_len: 0,
+        momentum: 0.9,
+        layers,
+        artifacts: BTreeMap::new(),
+    };
+    (spec, WeightStore::from_leaves(leaves))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clip::ClipMethod;
+    use crate::pipeline::QuantConfig;
+    use crate::util::rng::Rng;
+
+    fn small_images(n: usize, seed: u64) -> TensorF {
+        let mut rng = Rng::new(seed);
+        TensorF::from_vec(&[n, 16, 16, 3], rng.normal_vec(n * 16 * 16 * 3)).unwrap()
+    }
+
+    #[test]
+    fn synthetic_mlp_floats_through() {
+        let (spec, ws) = synthetic_mlp(1);
+        let prep =
+            pipeline::prepare_recipe(&spec, &ws, None, &QuantRecipe::float()).unwrap();
+        let exe = NativeExecutable::build(&spec, &prep).unwrap();
+        assert_eq!(exe.int_layers(), 0);
+        let x = small_images(3, 2);
+        let y = exe.infer(&x).unwrap();
+        assert_eq!(y.shape(), &[3, 10]);
+        assert!(y.data().iter().all(|v| v.is_finite()));
+        // determinism + batch-independence: row 0 alone == row 0 of 3
+        let x1 = calib::slice_rows(&x, 0, 1).unwrap();
+        let y1 = exe.infer(&x1).unwrap();
+        for j in 0..10 {
+            assert_eq!(y1.data()[j].to_bits(), y.data()[j].to_bits());
+        }
+    }
+
+    #[test]
+    fn int_path_tracks_float_path() {
+        let (spec, ws) = synthetic_mlp(3);
+        let images = small_images(32, 4);
+        let calib = native_calibrate(&spec, &ws, &images, 8).unwrap();
+        let cfg = QuantConfig {
+            w_bits: Some(8),
+            a_bits: Some(8),
+            w_clip: ClipMethod::None,
+            a_clip: ClipMethod::None,
+            ..QuantConfig::float()
+        };
+        let prep =
+            pipeline::prepare_recipe(&spec, &ws, Some(&calib), &cfg.to_recipe()).unwrap();
+        let exe = NativeExecutable::build(&spec, &prep).unwrap();
+        assert_eq!(exe.int_layers(), 2, "{}", exe.label());
+        let float_prep =
+            pipeline::prepare_recipe(&spec, &ws, None, &QuantRecipe::float()).unwrap();
+        let fexe = NativeExecutable::build(&spec, &float_prep).unwrap();
+        let x = small_images(4, 5);
+        let yq = exe.infer(&x).unwrap();
+        let yf = fexe.infer(&x).unwrap();
+        assert_eq!(yq.shape(), yf.shape());
+        // 8/8 quantization: logits close but not identical to float
+        let max_abs = yf.data().iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let mut max_err = 0.0f32;
+        for (a, b) in yq.data().iter().zip(yf.data()) {
+            max_err = max_err.max((a - b).abs());
+        }
+        assert!(
+            max_err < 0.1 * max_abs.max(1.0),
+            "int path drifted: err {max_err}, scale {max_abs}"
+        );
+        assert_ne!(yq.data(), yf.data(), "quantization must be observable");
+    }
+
+    #[test]
+    fn native_threads_bit_identical() {
+        let (spec, ws) = synthetic_mlp(6);
+        let images = small_images(16, 7);
+        let calib = native_calibrate(&spec, &ws, &images, 8).unwrap();
+        let cfg = QuantConfig {
+            w_bits: Some(4),
+            a_bits: Some(8),
+            ocs_ratio: 0.1,
+            ..QuantConfig::float()
+        };
+        let prep =
+            pipeline::prepare_recipe(&spec, &ws, Some(&calib), &cfg.to_recipe()).unwrap();
+        let x = small_images(9, 8);
+        let e1 = NativeExecutable::build(&spec, &prep).unwrap().with_threads(1);
+        let y1 = e1.infer(&x).unwrap();
+        for t in [2usize, 8] {
+            let et = NativeExecutable::build(&spec, &prep).unwrap().with_threads(t);
+            let yt = et.infer(&x).unwrap();
+            let b1: Vec<u32> = y1.data().iter().map(|v| v.to_bits()).collect();
+            let bt: Vec<u32> = yt.data().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(b1, bt, "threads {t}");
+        }
+    }
+
+    #[test]
+    fn engine_caches_by_fingerprint() {
+        let (spec, ws) = synthetic_mlp(9);
+        let engine = NativeEngine::new(spec.clone());
+        let r4 = QuantConfig::weights_only(4, ClipMethod::None, 0.0).to_recipe();
+        let r5 = QuantConfig::weights_only(5, ClipMethod::None, 0.0).to_recipe();
+        let p4 = pipeline::prepare_recipe(&spec, &ws, None, &r4).unwrap();
+        let p5 = pipeline::prepare_recipe(&spec, &ws, None, &r5).unwrap();
+        let a = engine.load(&p4).unwrap();
+        let b = engine.load(&p4).unwrap();
+        assert!(Rc::ptr_eq(&a, &b));
+        let c = engine.load(&p5).unwrap();
+        assert!(!Rc::ptr_eq(&a, &c));
+        assert_eq!(engine.cached_count(), 2);
+        assert_eq!(engine.spec().name, "native-mlp");
+    }
+
+    #[test]
+    fn probe_records_hooked_layer_inputs() {
+        let (spec, ws) = synthetic_mlp(10);
+        let prep =
+            pipeline::prepare_recipe(&spec, &ws, None, &QuantRecipe::float()).unwrap();
+        let exe = NativeExecutable::build(&spec, &prep).unwrap();
+        let x = small_images(2, 11);
+        let (_, probe) = exe.infer_probe(&x).unwrap();
+        assert_eq!(probe.len(), 2);
+        // f1 sees the flattened image, f2 sees the 64-wide hidden act
+        assert_eq!(probe["f1"].shape(), &[2, 768]);
+        assert_eq!(probe["f2"].shape(), &[2, 64]);
+    }
+
+    #[test]
+    fn lm_and_unknown_models_are_refused() {
+        let (mut spec, _) = synthetic_mlp(12);
+        spec.name = "lstmlm".into();
+        let err = NativeGraph::for_model(&spec).unwrap_err();
+        assert!(err.to_string().contains("LSTM"), "{err:#}");
+        let mut spec2 = spec.clone();
+        spec2.name = "mystery".into();
+        spec2.layers[0].kind = LayerKind::Conv;
+        assert!(NativeGraph::for_model(&spec2).is_err());
+    }
+
+    #[test]
+    fn conv_im2col_matches_direct_conv() {
+        // a tiny unhooked conv layer vs a naive direct convolution
+        let mut rng = Rng::new(13);
+        let (h, w, cin, cout, k, s) = (5usize, 6usize, 3usize, 4usize, 3usize, 2usize);
+        let x = TensorF::from_vec(&[2, h, w, cin], rng.normal_vec(2 * h * w * cin)).unwrap();
+        let wt = rng.normal_vec(k * k * cin * cout);
+        let bias = rng.normal_vec(cout);
+        let pl = PackedLayer {
+            name: "c".into(),
+            kind: LayerKind::Conv,
+            ksize: k,
+            stride: s,
+            cin,
+            cin_eff: cin,
+            cout,
+            hooked: false,
+            idx: vec![],
+            dscale: vec![],
+            dbias: vec![],
+            adelta: 1.0,
+            aqmax: -1.0,
+            body: LayerBody::Float {
+                w: wt.clone(),
+                bias: bias.clone(),
+            },
+        };
+        let exe = NativeExecutable {
+            graph: NativeGraph::new(),
+            packed: PackedModel {
+                model: "conv-test".into(),
+                layers: BTreeMap::new(),
+                int_layers: 0,
+                float_layers: 1,
+            },
+            threads: 1,
+        };
+        let got = exe.conv(&pl, &x).unwrap();
+        // direct SAME conv reference
+        let (oh, ow) = (h.div_ceil(s), w.div_ceil(s));
+        assert_eq!(got.shape(), &[2, oh, ow, cout]);
+        let pad_h = ((oh - 1) * s + k).saturating_sub(h);
+        let pad_w = ((ow - 1) * s + k).saturating_sub(w);
+        let (pt, plft) = (pad_h / 2, pad_w / 2);
+        for b in 0..2 {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    for co in 0..cout {
+                        let mut acc = bias[co];
+                        for ky in 0..k {
+                            for kx in 0..k {
+                                let iy = (oy * s + ky) as isize - pt as isize;
+                                let ix = (ox * s + kx) as isize - plft as isize;
+                                if iy < 0 || iy as usize >= h || ix < 0 || ix as usize >= w {
+                                    continue;
+                                }
+                                for ci in 0..cin {
+                                    let xv = x.data()
+                                        [((b * h + iy as usize) * w + ix as usize) * cin + ci];
+                                    let wv = wt[((ky * k + kx) * cin + ci) * cout + co];
+                                    acc += xv * wv;
+                                }
+                            }
+                        }
+                        let gv = got.data()[((b * oh + oy) * ow + ox) * cout + co];
+                        assert!(
+                            (gv - acc).abs() < 1e-4,
+                            "({b},{oy},{ox},{co}): {gv} vs {acc}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn maxpool_matches_reference() {
+        // 1x4x4x1, k=2 s=2: plain 2x2 windows
+        let x = TensorF::from_vec(
+            &[1, 4, 4, 1],
+            vec![
+                1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0, 11.0, 12.0, 13.0, 14.0,
+                15.0, 16.0,
+            ],
+        )
+        .unwrap();
+        let y = maxpool_same(&x, 2, 2).unwrap();
+        assert_eq!(y.shape(), &[1, 2, 2, 1]);
+        assert_eq!(y.data(), &[6.0, 8.0, 14.0, 16.0]);
+        // k=3 s=1 SAME keeps the shape; corners see a 2x2 window
+        let y2 = maxpool_same(&x, 3, 1).unwrap();
+        assert_eq!(y2.shape(), &[1, 4, 4, 1]);
+        assert_eq!(y2.data()[0], 6.0, "corner window = max of 2x2");
+        assert_eq!(y2.data()[5], 11.0, "interior window = max of 3x3");
+    }
+
+    #[test]
+    fn gap_and_concat() {
+        let x = TensorF::from_vec(&[1, 2, 2, 2], vec![1., 2., 3., 4., 5., 6., 7., 8.]).unwrap();
+        let g = global_avg_pool(&x).unwrap();
+        assert_eq!(g.shape(), &[1, 2]);
+        assert_eq!(g.data(), &[4.0, 5.0]);
+        let a = TensorF::from_vec(&[1, 1, 1, 2], vec![1., 2.]).unwrap();
+        let b = TensorF::from_vec(&[1, 1, 1, 1], vec![3.]).unwrap();
+        let cat = concat_channels(&[&a, &b]).unwrap();
+        assert_eq!(cat.shape(), &[1, 1, 1, 3]);
+        assert_eq!(cat.data(), &[1., 2., 3.]);
+    }
+
+    #[test]
+    fn quantize_acts_matches_fake_quant() {
+        let mut rng = Rng::new(14);
+        let xs = rng.normal_vec(256);
+        let (adelta, aqmax) = (0.03f32, 127.0f32);
+        let q = quantize_acts(&xs, adelta, aqmax);
+        for (&x, &qi) in xs.iter().zip(&q) {
+            let fq = crate::quant::fake_quant_val(x, adelta, aqmax);
+            assert_eq!(
+                (qi as f32 * adelta).to_bits(),
+                fq.to_bits(),
+                "x={x} q={qi}"
+            );
+        }
+        assert!(quantize_acts(&xs, 0.0, 127.0).iter().all(|&q| q == 0));
+    }
+}

@@ -6,7 +6,7 @@
 //! config) and the worker calls [`EngineFactory::build`] on its own
 //! thread, producing a thread-local [`WorkerEngine`] that stays put.
 //!
-//! Three factories ship:
+//! Four factories ship:
 //! * [`PjrtFactory`] — the real stack: model spec + weights + quant
 //!   recipe + PJRT engine per worker. Artifact HLO text is shared
 //!   across workers through [`crate::runtime::HloTextCache`], and the
@@ -22,6 +22,12 @@
 //!   in-memory model and serves logits deterministically derived from
 //!   the prepared weights. CI uses it to exercise recipe serving,
 //!   cache sharing, and hot-swap end-to-end on a clean checkout.
+//! * [`NativeFactory`] — **real quantized compute, no PJRT and no
+//!   artifacts**: each worker executes the model on the native integer
+//!   backend ([`crate::runtime::native`]) — packed i8 GEMM with a
+//!   fused per-channel dequant epilogue. Works over an artifacts-dir
+//!   model (stub builds serve real logits this way) or the built-in
+//!   synthetic MLP (`ocs serve --backend native --sim-free`).
 //!
 //! Recipe hot-swap: [`WorkerEngine::swap`] re-prepares the worker's
 //! pipeline under a new [`QuantRecipe`] without tearing the engine
@@ -29,7 +35,7 @@
 //! prep have nothing to swap); `PjrtWorker` and `QuantSimWorker`
 //! rebuild their prepared inputs through the cache.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
@@ -344,6 +350,162 @@ impl WorkerEngine for QuantSimWorker {
     }
 }
 
+/// The native integer backend: every worker runs real quantized compute
+/// on the packed i8 GEMM kernels — the same `Engine`-shaped surface as
+/// PJRT, with no artifacts, no HLO, and no `pjrt` feature. The prepared
+/// pipeline is shared across workers through `cache` exactly like the
+/// other recipe-carrying factories, and hot-swap re-lowers the packed
+/// weights per worker.
+pub struct NativeFactory {
+    pub spec: Arc<ModelSpec>,
+    pub ws: Arc<WeightStore>,
+    /// The pool's shared calibration slot: the fixed-seed native probe
+    /// runs at most once per pool, however many workers build on (or
+    /// hot-swap to) an activation-quantizing recipe.
+    pub calib: Arc<Mutex<Option<Arc<Calibration>>>>,
+    pub recipe: QuantRecipe,
+    /// Shared prepared-model cache for the pool (see
+    /// [`QuantSimFactory::cache`] for the owned-vs-global trade-off).
+    /// Inherits the process-wide capacity (`--prep-cache-cap`) at
+    /// construction.
+    pub cache: Arc<PreparedCache>,
+    /// Kernel-pool width for each worker's GEMMs. Default 1: the pool
+    /// already runs one worker per core, so per-worker serial GEMMs
+    /// keep worker scaling clean; a single-worker deployment can widen.
+    pub gemm_threads: usize,
+}
+
+/// The pool's calibration, computed through the native float probe on
+/// first need and shared ever after (serializing racers on the slot
+/// lock, like [`PreparedCache`] — the losers would only redo identical
+/// fixed-seed work).
+fn native_calibration(
+    slot: &Mutex<Option<Arc<Calibration>>>,
+    spec: &ModelSpec,
+    ws: &WeightStore,
+) -> Result<Arc<Calibration>> {
+    let mut guard = slot.lock().expect("native calib slot poisoned");
+    if let Some(c) = guard.as_ref() {
+        return Ok(c.clone());
+    }
+    let calib_set = crate::train::data::synth_images(64, 929);
+    let c = Arc::new(crate::runtime::native::native_calibrate(
+        spec,
+        ws,
+        &calib_set.x,
+        32,
+    )?);
+    *guard = Some(c.clone());
+    Ok(c)
+}
+
+impl NativeFactory {
+    /// Over an explicit in-memory model (tests, embedded serving).
+    /// Runs the native calibration probe up front when the recipe
+    /// quantizes activations.
+    pub fn over(spec: ModelSpec, ws: WeightStore, recipe: QuantRecipe) -> Result<NativeFactory> {
+        let calib = Arc::new(Mutex::new(None));
+        if recipe.needs_calibration(&spec) {
+            native_calibration(&calib, &spec, &ws)?;
+        }
+        let cache = Arc::new(PreparedCache::new());
+        cache.set_capacity(PreparedCache::global().capacity());
+        Ok(NativeFactory {
+            spec: Arc::new(spec),
+            ws: Arc::new(ws),
+            calib,
+            recipe,
+            cache,
+            gemm_threads: 1,
+        })
+    }
+
+    /// The built-in synthetic MLP — fully artifact-free serving
+    /// (`ocs serve --backend native --sim-free`).
+    pub fn synthetic(recipe: QuantRecipe) -> Result<NativeFactory> {
+        let (spec, ws) = crate::runtime::native::synthetic_mlp(2027);
+        Self::over(spec, ws, recipe)
+    }
+
+    /// A real artifacts-dir model executed natively (no PJRT: the spec
+    /// and weights are read, the HLO never is).
+    pub fn from_artifacts(
+        artifacts_dir: &str,
+        model: &str,
+        recipe: QuantRecipe,
+    ) -> Result<NativeFactory> {
+        let spec = ModelSpec::load_named(artifacts_dir, model)?;
+        let (ws, trained) = WeightStore::load_best(&spec)?;
+        if !trained {
+            crate::warnln!("no trained weights for {model}; serving the init seed");
+        }
+        Self::over(spec, ws, recipe)
+    }
+}
+
+impl EngineFactory for NativeFactory {
+    fn build(&self, worker_id: usize) -> Result<Box<dyn WorkerEngine>> {
+        let calib = if self.recipe.needs_calibration(&self.spec) {
+            Some(native_calibration(&self.calib, &self.spec, &self.ws)?)
+        } else {
+            None
+        };
+        let prep =
+            self.cache
+                .get_or_prepare(&self.spec, &self.ws, calib.as_deref(), &self.recipe)?;
+        let exe = crate::runtime::native::NativeExecutable::build(&self.spec, &prep)?
+            .with_threads(self.gemm_threads);
+        crate::debugln!(
+            "worker {worker_id}: native engine ready ({} int / {} f32 layers)",
+            exe.int_layers(),
+            exe.float_layers()
+        );
+        Ok(Box::new(NativeWorker {
+            spec: self.spec.clone(),
+            ws: self.ws.clone(),
+            calib: self.calib.clone(),
+            cache: self.cache.clone(),
+            gemm_threads: self.gemm_threads,
+            exe,
+        }))
+    }
+
+    fn label(&self) -> String {
+        format!("native:{} [{}]", self.spec.name, self.recipe.label())
+    }
+}
+
+struct NativeWorker {
+    spec: Arc<ModelSpec>,
+    ws: Arc<WeightStore>,
+    /// Shared with the factory and every sibling worker: a swap to the
+    /// pool's first activation-quantizing recipe probes once, pool-wide.
+    calib: Arc<Mutex<Option<Arc<Calibration>>>>,
+    cache: Arc<PreparedCache>,
+    gemm_threads: usize,
+    exe: crate::runtime::native::NativeExecutable,
+}
+
+impl WorkerEngine for NativeWorker {
+    fn infer(&mut self, batch: &TensorF) -> Result<TensorF> {
+        self.exe.infer(batch)
+    }
+
+    fn swap(&mut self, recipe: &QuantRecipe) -> Result<()> {
+        let calib = if recipe.needs_calibration(&self.spec) {
+            Some(native_calibration(&self.calib, &self.spec, &self.ws)?)
+        } else {
+            None
+        };
+        let prep = self
+            .cache
+            .get_or_prepare(&self.spec, &self.ws, calib.as_deref(), recipe)?;
+        self.exe = crate::runtime::native::NativeExecutable::build(&self.spec, &prep)?
+            .with_threads(self.gemm_threads);
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -443,6 +605,27 @@ mod tests {
             recipe,
             cache,
         }
+    }
+
+    #[test]
+    fn native_factory_serves_and_swaps() {
+        let recipe = QuantConfig::weights_only(5, ClipMethod::Mse, 0.05).to_recipe();
+        let f = NativeFactory::synthetic(recipe).unwrap();
+        assert!(f.label().starts_with("native:"), "{}", f.label());
+        let mut w = f.build(0).unwrap();
+        let x = crate::train::data::synth_images(2, 5).x;
+        let a = w.infer(&x).unwrap();
+        assert_eq!(a.shape(), &[2, 10]);
+        assert!(a.data().iter().all(|v| v.is_finite()));
+        // hot-swap to float: the served logits must move
+        w.swap(&QuantRecipe::float()).unwrap();
+        let b = w.infer(&x).unwrap();
+        assert_ne!(a.data(), b.data(), "swap must be observable");
+        // swap back: a cache hit, identical logits again
+        w.swap(&f.recipe).unwrap();
+        assert_eq!(w.infer(&x).unwrap().data(), a.data());
+        assert_eq!(f.cache.misses(), 2, "swap-back re-lowers from the cache");
+        assert!(f.cache.hits() >= 1);
     }
 
     #[test]

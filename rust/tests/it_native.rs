@@ -1,0 +1,423 @@
+//! Integration tests for the native integer backend: the packed i8 GEMM
+//! kernel (property-tested against the naive i32 reference), the
+//! prepared-model → i8 lowering, end-to-end native-vs-prepared logit
+//! agreement, and the serve pool running real quantized compute with no
+//! artifacts and no PJRT.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use ocs::calib::slice_rows;
+use ocs::clip::ClipMethod;
+use ocs::kernels::gemm::{self, PackedB};
+use ocs::miniprop::{check, ensure, gen_usize};
+use ocs::model::store::WeightStore;
+use ocs::model::{LayerKind, LayerSpec, ModelSpec};
+use ocs::pipeline::{self, PreparedCache, QuantConfig, QuantRecipe, ServeConfig};
+use ocs::quant::fake_quant_val;
+use ocs::quant::pack::{pack_prepared, LayerBody};
+use ocs::runtime::native::{native_calibrate, synthetic_mlp, NativeExecutable};
+use ocs::serve::backend::{EngineFactory, NativeFactory, WorkerEngine};
+use ocs::serve::Server;
+use ocs::tensor::TensorF;
+use ocs::util::rng::Rng;
+
+fn rand_i8(rng: &mut Rng, n: usize) -> Vec<i8> {
+    (0..n).map(|_| (rng.below(255) as i32 - 127) as i8).collect()
+}
+
+#[test]
+fn property_packed_gemm_equals_naive_reference() {
+    check("i8-gemm-vs-naive", |rng| {
+        let m = gen_usize(rng, 1, 40);
+        let k = gen_usize(rng, 1, 120);
+        let n = gen_usize(rng, 1, 50);
+        let a = rand_i8(rng, m * k);
+        let b = rand_i8(rng, k * n);
+        let want = gemm::gemm_i8_ref(&a, &b, m, k, n);
+        let pb = PackedB::pack(&b, k, n);
+        let got = gemm::gemm_i8(&a, &pb, m, 1);
+        ensure(got == want, format!("packed != naive at {m}x{k}x{n}"))
+    });
+}
+
+#[test]
+fn property_parallel_gemm_bit_identical_at_any_width() {
+    check("i8-gemm-thread-identity", |rng| {
+        let m = gen_usize(rng, 1, 80);
+        let k = gen_usize(rng, 1, 64);
+        let n = gen_usize(rng, 1, 40);
+        let a = rand_i8(rng, m * k);
+        let b = rand_i8(rng, k * n);
+        let pb = PackedB::pack(&b, k, n);
+        let serial = gemm::gemm_i8(&a, &pb, m, 1);
+        let threads = gen_usize(rng, 2, 16);
+        let par = gemm::gemm_i8(&a, &pb, m, threads);
+        ensure(par == serial, format!("threads {threads} diverged at {m}x{k}x{n}"))?;
+        // the fused dequant epilogue too, bit for bit
+        let scales: Vec<f32> = (0..n).map(|j| 0.002 + j as f32 * 1e-4).collect();
+        let bias: Vec<f32> = (0..n).map(|j| j as f32 * 0.1).collect();
+        let d1 = gemm::gemm_i8_dequant(&a, &pb, m, &scales, &bias, 1);
+        let dn = gemm::gemm_i8_dequant(&a, &pb, m, &scales, &bias, threads);
+        let b1: Vec<u32> = d1.iter().map(|v| v.to_bits()).collect();
+        let bn: Vec<u32> = dn.iter().map(|v| v.to_bits()).collect();
+        ensure(b1 == bn, format!("dequant threads {threads} diverged"))
+    });
+}
+
+fn mlp_spec(cin: usize, hidden: usize, classes: usize) -> ModelSpec {
+    let pad = |c: usize| (c as f64 * 1.25).ceil() as usize;
+    let mk = |name: &str, cin: usize, cout: usize| LayerSpec {
+        name: name.into(),
+        kind: LayerKind::Fc,
+        cin,
+        cin_pad: pad(cin),
+        cout,
+        ksize: 0,
+        stride: 1,
+        quantized: true,
+        w_cin_axis: 0,
+        w_shape: vec![cin, cout],
+        w_shape_pad: vec![pad(cin), cout],
+    };
+    ModelSpec {
+        name: "it-native-mlp".into(),
+        dir: std::path::PathBuf::new(),
+        pad_factor: 1.25,
+        num_classes: classes,
+        img_hw: 0,
+        img_c: 0,
+        vocab: 0,
+        seq_len: 0,
+        momentum: 0.9,
+        layers: vec![mk("f1", cin, hidden), mk("f2", hidden, classes)],
+        artifacts: Default::default(),
+    }
+}
+
+fn mlp_ws(spec: &ModelSpec, seed: u64) -> WeightStore {
+    let mut rng = Rng::new(seed);
+    let mut leaves = Vec::new();
+    for l in &spec.layers {
+        let mut w = rng.normal_vec(l.cin * l.cout);
+        // plant an outlier channel for OCS to split
+        for j in 0..l.cout {
+            w[(l.cin / 2) * l.cout + j] *= 8.0;
+        }
+        leaves.push((
+            format!("{}.W", l.name),
+            TensorF::from_vec(&[l.cin, l.cout], w).unwrap(),
+        ));
+        leaves.push((
+            format!("{}.b", l.name),
+            TensorF::from_vec(&[l.cout], rng.normal_vec(l.cout)).unwrap(),
+        ));
+    }
+    WeightStore::from_leaves(leaves)
+}
+
+/// f32 reference forward of a prepared 2-layer MLP, mirroring the
+/// artifact semantics exactly: channel_dup → fake-quant → matmul+bias,
+/// relu between layers. The native integer path must agree with this to
+/// accumulation-rounding tolerance.
+fn reference_forward(prep: &pipeline::PreparedModel, x: &[f32], batch: usize) -> Vec<f32> {
+    let mut act: Vec<f32> = x.to_vec();
+    let mut width = act.len() / batch;
+    for (li, l) in prep.layers.iter().enumerate() {
+        let ce = l.idx.len();
+        let cout = l.b.len();
+        // channel_dup
+        let mut xe = vec![0.0f32; batch * ce];
+        for r in 0..batch {
+            for j in 0..ce {
+                xe[r * ce + j] = act[r * width + l.idx.data()[j] as usize]
+                    * l.dscale.data()[j]
+                    + l.dbias.data()[j];
+            }
+        }
+        // activation fake-quant (aqmax <= 0 bypasses)
+        if l.aqmax > 0.0 {
+            for v in xe.iter_mut() {
+                *v = fake_quant_val(*v, l.adelta, l.aqmax);
+            }
+        }
+        // matmul + bias against the fake-quantized weight
+        let mut out = vec![0.0f32; batch * cout];
+        for r in 0..batch {
+            for j in 0..cout {
+                let mut acc = l.b.data()[j];
+                for kk in 0..ce {
+                    acc += xe[r * ce + kk] * l.w.data()[kk * cout + j];
+                }
+                out[r * cout + j] = acc;
+            }
+        }
+        if li + 1 < prep.layers.len() {
+            for v in out.iter_mut() {
+                *v = v.max(0.0);
+            }
+        }
+        act = out;
+        width = cout;
+    }
+    act
+}
+
+#[test]
+fn native_logits_agree_with_prepared_pipeline() {
+    let spec = mlp_spec(24, 12, 5);
+    let ws = mlp_ws(&spec, 7);
+    let mut rng = Rng::new(8);
+    let batch = 6;
+    let images = TensorF::from_vec(&[batch, 24], rng.normal_vec(batch * 24)).unwrap();
+    let calib = native_calibrate(&spec, &ws, &images, batch).unwrap();
+    for cfg in [
+        QuantConfig::float(),
+        QuantConfig::weights_only(4, ClipMethod::Mse, 0.1),
+        QuantConfig {
+            w_bits: Some(8),
+            a_bits: Some(8),
+            ocs_ratio: 0.1,
+            ..QuantConfig::float()
+        },
+        QuantConfig {
+            w_bits: Some(4),
+            a_bits: Some(6),
+            w_clip: ClipMethod::Mse,
+            ..QuantConfig::float()
+        },
+    ] {
+        let recipe = cfg.to_recipe();
+        let prep = pipeline::prepare_recipe(&spec, &ws, Some(&calib), &recipe).unwrap();
+        let exe = NativeExecutable::build(&spec, &prep).unwrap();
+        let got = exe.infer(&images).unwrap();
+        let want = reference_forward(&prep, images.data(), batch);
+        assert_eq!(got.shape(), &[batch, 5]);
+        let scale = want.iter().fold(1.0f32, |m, v| m.max(v.abs()));
+        for (i, (&g, &w)) in got.data().iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() <= 1e-3 * scale,
+                "[{}] logit {i}: native {g} vs prepared {w} (scale {scale})",
+                recipe.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn packed_layers_choose_int_exactly_when_datapath_allows() {
+    let spec = mlp_spec(16, 8, 4);
+    let ws = mlp_ws(&spec, 9);
+    let mut rng = Rng::new(10);
+    let images = TensorF::from_vec(&[8, 16], rng.normal_vec(8 * 16)).unwrap();
+    let calib = native_calibrate(&spec, &ws, &images, 8).unwrap();
+    // (recipe, expected int layers)
+    let cases: Vec<(QuantRecipe, usize)> = vec![
+        (QuantConfig::float().to_recipe(), 0),
+        (QuantConfig::weights_only(4, ClipMethod::None, 0.0).to_recipe(), 0),
+        (
+            QuantConfig {
+                w_bits: Some(4),
+                a_bits: Some(8),
+                ..QuantConfig::float()
+            }
+            .to_recipe(),
+            2,
+        ),
+        (
+            // mixed precision: one layer beyond i8, one inside
+            QuantConfig {
+                w_bits: Some(4),
+                a_bits: Some(8),
+                ..QuantConfig::float()
+            }
+            .to_recipe()
+            .with_override(
+                pipeline::LayerMatch::name("f2"),
+                pipeline::LayerPolicy::w_bits(12),
+            ),
+            1,
+        ),
+    ];
+    for (recipe, want_int) in cases {
+        let calib_ref = if recipe.needs_calibration(&spec) {
+            Some(&calib)
+        } else {
+            None
+        };
+        let prep = pipeline::prepare_recipe(&spec, &ws, calib_ref, &recipe).unwrap();
+        let pm = pack_prepared(&spec, &prep).unwrap();
+        assert_eq!(pm.int_layers, want_int, "[{}]", recipe.label());
+        // every int body's dequant scale is adelta * wdelta
+        for pl in pm.layers.values() {
+            if let LayerBody::Int { dequant, wdelta, .. } = &pl.body {
+                for &d in dequant {
+                    assert_eq!(d.to_bits(), (pl.adelta * wdelta).to_bits());
+                }
+                // recovered grid is real (zero-width grids only pack
+                // all-zero layers, which these weights are not)
+                assert!(*wdelta > 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn native_pool_serves_quantized_logits_artifact_free() {
+    // weights + 8-bit activations: the full i8×i8 integer datapath
+    // (weights-only would demote every layer to the f32 body)
+    let recipe = QuantConfig::weights_with_a8(5, ClipMethod::Mse, 0.05).to_recipe();
+    let factory = NativeFactory::synthetic(recipe.clone()).unwrap();
+    let cache = factory.cache.clone();
+    let (spec, ws, calib_slot) = (
+        factory.spec.clone(),
+        factory.ws.clone(),
+        factory.calib.clone(),
+    );
+    let cfg = ServeConfig {
+        workers: 2,
+        max_batch: 8,
+        max_wait: Duration::from_micros(200),
+        queue_cap: 64,
+        deadline: None,
+    };
+    let server = Server::start_with(Arc::new(factory), cfg).unwrap();
+    // both workers shared one prepare through the pool cache
+    assert_eq!(cache.misses(), 1, "N workers, one prepare");
+    assert_eq!(cache.hits(), 1);
+    // and the pool really is serving the integer datapath: the shared
+    // prep lowers both layers to packed i8 bodies
+    {
+        let calib = calib_slot.lock().unwrap();
+        let prep = cache
+            .get_or_prepare(&spec, &ws, calib.as_deref(), &recipe)
+            .unwrap();
+        let exe = NativeExecutable::build(&spec, &prep).unwrap();
+        assert_eq!(exe.int_layers(), 2, "{}", exe.label());
+    }
+    let client = server.client();
+    let images = ocs::train::data::synth_images(16, 33);
+    let row0 = slice_rows(&images.x, 0, 1).unwrap();
+    let logits = client.infer(row0.clone()).unwrap();
+    assert_eq!(logits.len(), 10);
+    assert!(logits.iter().all(|v| v.is_finite()));
+    // deterministic across repeats (same worker or not)
+    let again = client.infer(row0.clone()).unwrap();
+    assert_eq!(logits, again);
+    // hot-swap to float: the pool must converge and logits must move
+    server.swap_recipe(QuantRecipe::float());
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while server.swaps_applied() < 2 && std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(server.swaps_applied(), 2, "swap must roll out to both workers");
+    let float_logits = client.infer(row0).unwrap();
+    assert_ne!(logits, float_logits, "recipe swap must be observable");
+    server.shutdown().unwrap();
+    assert_eq!(cache.misses(), 2, "one more prepare for the float recipe");
+}
+
+#[test]
+fn native_pool_batches_requests_correctly() {
+    // several clients in flight: the worker fuses rows into one GEMM
+    // batch; every client must get its own row back
+    let recipe = QuantConfig::weights_only(4, ClipMethod::None, 0.0).to_recipe();
+    let factory = NativeFactory::synthetic(recipe).unwrap();
+    let cfg = ServeConfig {
+        workers: 1,
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+        queue_cap: 64,
+        deadline: None,
+    };
+    let server = Server::start_with(Arc::new(factory), cfg).unwrap();
+    let images = ocs::train::data::synth_images(12, 44);
+    // ground truth: one at a time
+    let mut solo = Vec::new();
+    for i in 0..12 {
+        let x = slice_rows(&images.x, i, 1).unwrap();
+        solo.push(server.client().infer(x).unwrap());
+    }
+    // now concurrently, forcing fused batches
+    let mut handles = Vec::new();
+    for i in 0..12 {
+        let client = server.client();
+        let x = slice_rows(&images.x, i, 1).unwrap();
+        handles.push(std::thread::spawn(move || client.infer(x).unwrap()));
+    }
+    for (i, h) in handles.into_iter().enumerate() {
+        let got = h.join().unwrap();
+        let want = &solo[i];
+        for (a, b) in got.iter().zip(want) {
+            assert_eq!(a.to_bits(), b.to_bits(), "request {i} got another row's logits");
+        }
+    }
+    let batched = server.metrics().aggregate().batches;
+    assert!(batched >= 1);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn synthetic_model_survives_prep_cache_lru() {
+    // native worker swap across more recipes than the cache cap: late
+    // swap-backs re-prepare (miss) instead of failing
+    let (spec, ws) = synthetic_mlp(21);
+    let recipe = QuantConfig::weights_only(4, ClipMethod::None, 0.0).to_recipe();
+    let factory = NativeFactory::over(spec, ws, recipe).unwrap();
+    factory.cache.set_capacity(2);
+    let mut worker = factory.build(0).unwrap();
+    let x = ocs::train::data::synth_images(1, 5).x;
+    let base = worker.infer(&x).unwrap();
+    for bits in [5u32, 6, 7] {
+        worker
+            .swap(&QuantConfig::weights_only(bits, ClipMethod::None, 0.0).to_recipe())
+            .unwrap();
+    }
+    assert!(factory.cache.evictions() > 0, "cap 2 must evict across 4 recipes");
+    // swapping back to the (evicted) original recipe still works
+    worker
+        .swap(&QuantConfig::weights_only(4, ClipMethod::None, 0.0).to_recipe())
+        .unwrap();
+    let again = worker.infer(&x).unwrap();
+    let a: Vec<u32> = base.data().iter().map(|v| v.to_bits()).collect();
+    let b: Vec<u32> = again.data().iter().map(|v| v.to_bits()).collect();
+    assert_eq!(a, b, "re-prepared prep must serve identical logits");
+}
+
+#[test]
+fn shared_cache_isolated_per_factory() {
+    // two pools over different factories must not cross-share preps
+    let r = QuantConfig::weights_only(4, ClipMethod::None, 0.0).to_recipe();
+    let f1 = NativeFactory::synthetic(r.clone()).unwrap();
+    let f2 = NativeFactory::synthetic(r).unwrap();
+    assert!(!Arc::ptr_eq(&f1.cache, &f2.cache));
+    let _w1 = f1.build(0).unwrap();
+    let _w2 = f2.build(0).unwrap();
+    assert_eq!((f1.cache.misses(), f2.cache.misses()), (1, 1));
+    // an explicitly shared cache does share
+    let (spec, ws) = synthetic_mlp(2027);
+    let mut f3 = NativeFactory::over(
+        spec,
+        ws,
+        QuantConfig::weights_only(4, ClipMethod::None, 0.0).to_recipe(),
+    )
+    .unwrap();
+    f3.cache = f1.cache.clone();
+    let _w3 = f3.build(0).unwrap();
+    // same seed, same recipe: f3's build is a hit on f1's cache
+    assert_eq!(
+        (f1.cache.misses(), f1.cache.hits()),
+        (1, 1),
+        "shared cache must reuse the identical prep"
+    );
+}
+
+#[test]
+fn prepared_cache_reuse_is_bounded_wrt_global() {
+    // the global cache respects a runtime capacity change
+    let g = PreparedCache::global();
+    let before = g.capacity();
+    g.set_capacity(123);
+    assert_eq!(g.capacity(), 123);
+    g.set_capacity(before);
+}
