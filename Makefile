@@ -3,7 +3,7 @@
 
 CARGO_DIR := rust
 
-.PHONY: verify build test fmt lint artifacts serve-smoke clean
+.PHONY: verify build test fmt lint artifacts serve-smoke bench-record clean
 
 # Tier-1 gate: the exact command CI runs on every push.
 verify:
@@ -30,6 +30,21 @@ artifacts:
 serve-smoke:
 	cd $(CARGO_DIR) && cargo run --release -- serve --sim \
 		--workers 2 --requests 128 --sweep 1,2 --json ../BENCH_serving.json
+
+# Refresh the committed perf baselines under records/ (quick mode, small
+# shapes — the same settings CI's smoke jobs run, so `ocs bench diff`
+# compares like against like). Each record is then schema-checked.
+# Commit the results together with the PR that changed performance.
+bench-record:
+	cd $(CARGO_DIR) && OCS_BENCH_QUICK=1 cargo bench --bench hotpath -- \
+		--shapes small --no-assert --json ../records/BENCH_quant.json
+	cd $(CARGO_DIR) && OCS_BENCH_QUICK=1 cargo bench --bench gemm -- \
+		--shapes small --no-assert --json ../records/BENCH_native.json
+	cd $(CARGO_DIR) && OCS_BENCH_QUICK=1 cargo run --release -- serve --sim \
+		--workers 2 --requests 128 --sweep 1,2 --json ../records/BENCH_serving.json
+	cd $(CARGO_DIR) && cargo run --release -- bench check ../records/BENCH_quant.json --bench quant
+	cd $(CARGO_DIR) && cargo run --release -- bench check ../records/BENCH_native.json --bench native
+	cd $(CARGO_DIR) && cargo run --release -- bench check ../records/BENCH_serving.json --bench serving
 
 clean:
 	cd $(CARGO_DIR) && cargo clean

@@ -14,13 +14,16 @@
 //! Env:  OCS_BENCH_QUICK=1 (short runs), OCS_BENCH_THREADS=1,2,4,
 //!       OCS_BENCH_NO_ASSERT=1
 //!
-//! `--json` writes `BENCH_native.json` (same record style as
-//! `BENCH_quant.json` / `BENCH_serving.json`); CI's native-smoke job
-//! uploads it so the integer-kernel trajectory accumulates per PR.
+//! `--json` writes `BENCH_native.json`, a versioned
+//! [`ocs::bench_record::BenchRecord`] (same format as `BENCH_quant.json`
+//! / `BENCH_serving.json`); CI's native-smoke job validates it with
+//! `ocs bench check`, uploads it, and `ocs bench diff` gates it against
+//! the committed baseline in `records/`.
 
 use std::path::PathBuf;
 
-use ocs::bench_support::{native_json, CaseRecord, Runner};
+use ocs::bench_record::BenchRecord;
+use ocs::bench_support::{CaseRecord, Runner};
 use ocs::clip::ClipMethod;
 use ocs::kernels::gemm::{self, PackedB};
 use ocs::kernels::pool;
@@ -279,7 +282,15 @@ fn main() {
         });
         let f_ns = fstats.as_ref().map(|s| s.mean_ns);
         if let Some(s) = &fstats {
-            record(&mut cases, "native_infer/float_b32", shape.clone(), 1, s.mean_ns, 32.0, s.mean_ns);
+            record(
+                &mut cases,
+                "native_infer/float_b32",
+                shape.clone(),
+                1,
+                s.mean_ns,
+                32.0,
+                s.mean_ns,
+            );
         }
         let istats = r.bench("native_infer/int_b32", || {
             let y = int_exe.infer(&imgs32).unwrap();
@@ -304,7 +315,8 @@ fn main() {
         }
     }
     if let Some(path) = &opts.json {
-        std::fs::write(path, native_json("cpu", avail, &cases)).expect("write BENCH_native.json");
+        let rec = BenchRecord::from_cases("native", "cpu", avail, &cases);
+        rec.write(path).expect("write BENCH_native.json");
         println!("wrote {} ({} cases)", path.display(), cases.len());
     }
     if !failures.is_empty() {

@@ -19,12 +19,16 @@
 //!       [--json PATH] [--no-assert]
 //! Env:  OCS_BENCH_QUICK=1 (short runs), OCS_BENCH_THREADS=1,2,4
 //!
-//! `--json` writes `BENCH_quant.json` (same record style as
-//! `BENCH_serving.json`); CI uploads it as an artifact.
+//! `--json` writes `BENCH_quant.json`, a versioned
+//! [`ocs::bench_record::BenchRecord`] (same format as `BENCH_native.json`
+//! / `BENCH_serving.json`); CI validates it with `ocs bench check`,
+//! uploads it as an artifact, and `ocs bench diff` gates it against the
+//! committed baseline in `records/`.
 
 use std::path::PathBuf;
 
-use ocs::bench_support::{quant_json, CaseRecord, Runner};
+use ocs::bench_record::BenchRecord;
+use ocs::bench_support::{CaseRecord, Runner};
 use ocs::clip::ClipMethod;
 use ocs::kernels::pool;
 use ocs::kernels::stats as kstats;
@@ -484,7 +488,8 @@ fn main() {
         }
     }
     if let Some(path) = &opts.json {
-        std::fs::write(path, quant_json("cpu", avail, &cases)).expect("write BENCH_quant.json");
+        let rec = BenchRecord::from_cases("quant", "cpu", avail, &cases);
+        rec.write(path).expect("write BENCH_quant.json");
         println!("wrote {} ({} cases)", path.display(), cases.len());
     }
     if !failures.is_empty() {

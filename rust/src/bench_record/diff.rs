@@ -1,0 +1,373 @@
+//! Record-vs-record comparison with explicit noise handling — the
+//! engine behind `ocs bench diff OLD NEW`.
+//!
+//! Cases are matched by row name; each common case gets a **regression
+//! factor** that respects the metric's direction (`> 1` is always
+//! "worse", whether the metric is wall time or throughput). A
+//! configurable noise threshold `t` splits verdicts three ways:
+//!
+//! * `factor > 1 + t`        → [`Verdict::Regressed`]
+//! * `factor < 1 / (1 + t)`  → [`Verdict::Improved`]
+//! * otherwise               → [`Verdict::WithinNoise`]
+//!
+//! Cases present on only one side are reported as added/removed, never
+//! failed — CI runners have varying core counts, so thread-sweep rows
+//! legitimately come and go. Host or quick-mode mismatches likewise
+//! produce a warning (ratios across hosts are noise-dominated; see
+//! `docs/BENCH_FORMAT.md` for the thresholds each context uses), not an
+//! error.
+
+use std::fmt::Write as _;
+
+use anyhow::{bail, Result};
+
+use super::BenchRecord;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    Improved,
+    WithinNoise,
+    Regressed,
+}
+
+impl Verdict {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Verdict::Improved => "improved",
+            Verdict::WithinNoise => "within noise",
+            Verdict::Regressed => "REGRESSED",
+        }
+    }
+}
+
+/// One matched case.
+#[derive(Debug, Clone)]
+pub struct DiffRow {
+    pub name: String,
+    pub old: f64,
+    pub new: f64,
+    pub unit: String,
+    /// Direction-normalized: `> 1` is worse, `< 1` is better.
+    pub factor: f64,
+    pub verdict: Verdict,
+}
+
+/// Full comparison of two records of the same bench tag.
+#[derive(Debug, Clone)]
+pub struct Diff {
+    pub bench: String,
+    /// Allowed relative regression (0.25 = new may be up to 25% worse).
+    pub threshold: f64,
+    pub rows: Vec<DiffRow>,
+    /// Case names only in the new record.
+    pub added: Vec<String>,
+    /// Case names only in the old record.
+    pub removed: Vec<String>,
+    /// Set when host metadata or quick flags differ — ratios are then
+    /// noise-dominated and only a generous threshold is meaningful.
+    pub host_note: Option<String>,
+}
+
+/// Compare `new` against `old` under noise threshold `threshold`.
+/// Records must share a bench tag and both pass
+/// [`BenchRecord::validate`]; a unit change for the same case name is
+/// treated as a remove+add (the metric is no longer comparable).
+pub fn diff(old: &BenchRecord, new: &BenchRecord, threshold: f64) -> Result<Diff> {
+    if old.bench != new.bench {
+        bail!(
+            "bench tag mismatch: old is '{}', new is '{}' — these are different trajectories",
+            old.bench,
+            new.bench
+        );
+    }
+    if !threshold.is_finite() || threshold <= 0.0 {
+        bail!("noise threshold must be a positive number, got {threshold}");
+    }
+    old.validate()?;
+    new.validate()?;
+    let mut host_note = None;
+    if old.host != new.host || old.quick != new.quick {
+        host_note = Some(format!(
+            "records were taken on different setups (old: {}/{} {}t{}, new: {}/{} {}t{}) — \
+             ratios include host noise",
+            old.host.os,
+            old.host.arch,
+            old.host.threads_available,
+            if old.quick { " quick" } else { "" },
+            new.host.os,
+            new.host.arch,
+            new.host.threads_available,
+            if new.quick { " quick" } else { "" },
+        ));
+    }
+    let mut rows = Vec::new();
+    let mut removed = Vec::new();
+    let mut added: Vec<String> = Vec::new();
+    for o in &old.rows {
+        match new.row(&o.name) {
+            Some(n) if n.unit == o.unit && n.higher_is_better == o.higher_is_better => {
+                // validate() guarantees both values are finite and > 0
+                let factor = if o.higher_is_better {
+                    o.value / n.value
+                } else {
+                    n.value / o.value
+                };
+                let verdict = if factor > 1.0 + threshold {
+                    Verdict::Regressed
+                } else if factor < 1.0 / (1.0 + threshold) {
+                    Verdict::Improved
+                } else {
+                    Verdict::WithinNoise
+                };
+                rows.push(DiffRow {
+                    name: o.name.clone(),
+                    old: o.value,
+                    new: n.value,
+                    unit: o.unit.clone(),
+                    factor,
+                    verdict,
+                });
+            }
+            Some(_) => {
+                // same name, different metric: not comparable
+                removed.push(o.name.clone());
+                added.push(o.name.clone());
+            }
+            None => removed.push(o.name.clone()),
+        }
+    }
+    for n in &new.rows {
+        if old.row(&n.name).is_none() {
+            added.push(n.name.clone());
+        }
+    }
+    Ok(Diff {
+        bench: old.bench.clone(),
+        threshold,
+        rows,
+        added,
+        removed,
+        host_note,
+    })
+}
+
+fn fmt_value(v: f64, unit: &str) -> String {
+    if unit == "ns" {
+        crate::bench_support::fmt_ns(v)
+    } else if v >= 100.0 {
+        format!("{v:.0} {unit}")
+    } else {
+        format!("{v:.2} {unit}")
+    }
+}
+
+impl Diff {
+    pub fn regressions(&self) -> impl Iterator<Item = &DiffRow> {
+        self.rows.iter().filter(|r| r.verdict == Verdict::Regressed)
+    }
+
+    pub fn has_regressions(&self) -> bool {
+        self.regressions().next().is_some()
+    }
+
+    /// Human-readable per-case ratio table (what `ocs bench diff`
+    /// prints).
+    pub fn table(&self) -> String {
+        let mut out = format!(
+            "bench diff [{}]: {} common case(s), {} added, {} removed, \
+             noise threshold {:.0}%\n",
+            self.bench,
+            self.rows.len(),
+            self.added.len(),
+            self.removed.len(),
+            self.threshold * 100.0
+        );
+        if let Some(note) = &self.host_note {
+            let _ = writeln!(out, "note: {note}");
+        }
+        let _ = writeln!(
+            out,
+            "  {:<52} {:>14} {:>14} {:>8}  {}",
+            "case", "old", "new", "factor", "verdict"
+        );
+        for r in &self.rows {
+            let _ = writeln!(
+                out,
+                "  {:<52} {:>14} {:>14} {:>7.2}x  {}",
+                r.name,
+                fmt_value(r.old, &r.unit),
+                fmt_value(r.new, &r.unit),
+                r.factor,
+                r.verdict.label()
+            );
+        }
+        for name in &self.added {
+            let _ = writeln!(out, "  + {name} (new case, no baseline)");
+        }
+        for name in &self.removed {
+            let _ = writeln!(out, "  - {name} (in baseline only)");
+        }
+        let n_reg = self.regressions().count();
+        if n_reg > 0 {
+            let _ = writeln!(
+                out,
+                "{n_reg} case(s) regressed past the {:.0}% threshold",
+                self.threshold * 100.0
+            );
+        } else {
+            let _ = writeln!(
+                out,
+                "no regression past the {:.0}% threshold",
+                self.threshold * 100.0
+            );
+        }
+        out
+    }
+
+    /// GitHub-flavored markdown ratio table (CI appends this to the job
+    /// summary).
+    pub fn markdown(&self) -> String {
+        let n_reg = self.regressions().count();
+        let mut out = format!(
+            "### bench diff: `{}` — {}\n\n",
+            self.bench,
+            if n_reg > 0 {
+                format!("**{n_reg} regression(s)** past {:.0}%", self.threshold * 100.0)
+            } else {
+                format!("no regression past {:.0}%", self.threshold * 100.0)
+            }
+        );
+        if let Some(note) = &self.host_note {
+            let _ = writeln!(out, "> ⚠ {note}\n");
+        }
+        out.push_str("| case | old | new | factor | verdict |\n|---|---:|---:|---:|---|\n");
+        for r in &self.rows {
+            let _ = writeln!(
+                out,
+                "| `{}` | {} | {} | {:.2}x | {} |",
+                r.name,
+                fmt_value(r.old, &r.unit),
+                fmt_value(r.new, &r.unit),
+                r.factor,
+                r.verdict.label()
+            );
+        }
+        for name in &self.added {
+            let _ = writeln!(out, "| `{name}` | — | added | — | no baseline |");
+        }
+        for name in &self.removed {
+            let _ = writeln!(out, "| `{name}` | removed | — | — | baseline only |");
+        }
+        out.push('\n');
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_record::{BenchRecord, Row};
+    use std::collections::BTreeMap;
+
+    fn rec(bench: &str, rows: &[(&str, f64, &str, bool)]) -> BenchRecord {
+        let mut r = BenchRecord::new(bench, "cpu", 4);
+        for (name, value, unit, hib) in rows {
+            r.rows.push(Row {
+                name: name.to_string(),
+                value: *value,
+                unit: unit.to_string(),
+                higher_is_better: *hib,
+                extra: BTreeMap::new(),
+            });
+        }
+        r
+    }
+
+    #[test]
+    fn verdicts_respect_direction_and_threshold() {
+        let old = rec(
+            "t",
+            &[
+                ("lat/a", 100.0, "ns", false),
+                ("lat/b", 100.0, "ns", false),
+                ("lat/c", 100.0, "ns", false),
+                ("thr/d", 100.0, "req/s", true),
+            ],
+        );
+        let new = rec(
+            "t",
+            &[
+                ("lat/a", 140.0, "ns", false),  // 1.40x worse → regressed
+                ("lat/b", 108.0, "ns", false),  // 1.08x → within noise
+                ("lat/c", 50.0, "ns", false),   // 0.50x → improved
+                ("thr/d", 60.0, "req/s", true), // throughput drop → 1.67x worse
+            ],
+        );
+        let d = diff(&old, &new, 0.25).unwrap();
+        assert_eq!(d.rows.len(), 4);
+        let by = |n: &str| d.rows.iter().find(|r| r.name == n).unwrap();
+        assert_eq!(by("lat/a").verdict, Verdict::Regressed);
+        assert_eq!(by("lat/b").verdict, Verdict::WithinNoise);
+        assert_eq!(by("lat/c").verdict, Verdict::Improved);
+        assert_eq!(by("thr/d").verdict, Verdict::Regressed);
+        assert!((by("thr/d").factor - 100.0 / 60.0).abs() < 1e-9);
+        assert!(d.has_regressions());
+        assert_eq!(d.regressions().count(), 2);
+    }
+
+    #[test]
+    fn added_and_removed_cases_do_not_fail() {
+        let old = rec("t", &[("a", 1.0, "ns", false), ("gone", 1.0, "ns", false)]);
+        let new = rec("t", &[("a", 1.0, "ns", false), ("fresh", 1.0, "ns", false)]);
+        let d = diff(&old, &new, 0.25).unwrap();
+        assert_eq!(d.rows.len(), 1);
+        assert_eq!(d.added, vec!["fresh".to_string()]);
+        assert_eq!(d.removed, vec!["gone".to_string()]);
+        assert!(!d.has_regressions());
+    }
+
+    #[test]
+    fn unit_change_is_not_comparable() {
+        let old = rec("t", &[("a", 100.0, "ns", false)]);
+        let new = rec("t", &[("a", 1.0, "req/s", true)]);
+        let d = diff(&old, &new, 0.25).unwrap();
+        assert!(d.rows.is_empty());
+        assert_eq!(d.added, vec!["a".to_string()]);
+        assert_eq!(d.removed, vec!["a".to_string()]);
+    }
+
+    #[test]
+    fn mismatched_bench_tags_error() {
+        let old = rec("quant", &[("a", 1.0, "ns", false)]);
+        let new = rec("native", &[("a", 1.0, "ns", false)]);
+        assert!(diff(&old, &new, 0.25).is_err());
+        assert!(diff(&old, &old, 0.0).is_err());
+        assert!(diff(&old, &old, f64::NAN).is_err());
+    }
+
+    #[test]
+    fn host_mismatch_warns_in_reports() {
+        let old = rec("t", &[("a", 100.0, "ns", false)]);
+        let mut new = rec("t", &[("a", 100.0, "ns", false)]);
+        new.host.threads_available = 16;
+        let d = diff(&old, &new, 0.25).unwrap();
+        assert!(d.host_note.is_some());
+        assert!(d.table().contains("host noise"));
+        assert!(d.markdown().contains("host noise"));
+    }
+
+    #[test]
+    fn reports_render_all_sections() {
+        let old = rec("t", &[("slow", 100.0, "ns", false), ("gone", 1.0, "ns", false)]);
+        let new = rec("t", &[("slow", 200.0, "ns", false), ("fresh", 1.0, "ns", false)]);
+        let d = diff(&old, &new, 0.25).unwrap();
+        let t = d.table();
+        assert!(t.contains("2.00x"), "{t}");
+        assert!(t.contains("REGRESSED"), "{t}");
+        assert!(t.contains("+ fresh"), "{t}");
+        assert!(t.contains("- gone"), "{t}");
+        let md = d.markdown();
+        assert!(md.contains("| `slow` |"), "{md}");
+        assert!(md.contains("**1 regression(s)**"), "{md}");
+    }
+}

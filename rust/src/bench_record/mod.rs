@@ -1,0 +1,502 @@
+//! Versioned benchmark records — the measurement format every harness
+//! emits and every perf gate reads.
+//!
+//! The repo tracks three perf trajectories (`BENCH_quant`,
+//! `BENCH_native`, `BENCH_serving`). Before this module each harness
+//! wrote its own ad-hoc JSON that CI uploaded and nothing ever read
+//! back; the records could not be compared run-over-run, so the paper's
+//! "negligible overhead" claim (§3.5/§5.4) and every kernel PR were
+//! optimized against nothing. Following rebar's methodology (captured
+//! measurements as committed data files, explicit noise handling,
+//! diff-based comparison), a [`BenchRecord`] is now:
+//!
+//! * **versioned** — [`SCHEMA_VERSION`] is embedded and checked on
+//!   parse, so a stale baseline fails loudly instead of diffing
+//!   garbage;
+//! * **self-describing** — a `bench` tag, backend label, host metadata
+//!   (OS, arch, thread count) and a quick-mode flag travel with the
+//!   measurements, so a diff can warn when it compares across hosts;
+//! * **flat** — one [`Row`] per measured case, each with a single
+//!   primary metric (`value` + `unit` + direction) that `bench diff`
+//!   gates on, plus free-form secondary metrics under `extra`.
+//!
+//! [`diff::diff`] compares two records case-by-case, applies a
+//! configurable noise threshold, and reports per-case ratios; the
+//! `ocs bench diff OLD NEW` subcommand exits nonzero on any regression
+//! past the threshold, and `ocs bench check FILE` validates a single
+//! record (CI runs both — see `.github/workflows/ci.yml` and
+//! `docs/BENCH_FORMAT.md`). Baselines live under `records/` and are
+//! regenerated with `make bench-record`.
+
+pub mod diff;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::bench_support::CaseRecord;
+use crate::serve::SweepPoint;
+use crate::util::json::{self, Value};
+
+/// Bump when the record shape changes incompatibly; `parse` rejects
+/// records written by any other version so stale committed baselines
+/// fail loudly instead of producing nonsense ratios.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// Machine metadata captured at emit time. A diff across differing
+/// hosts still runs — CI baselines and runners rarely match — but the
+/// report carries a noise warning.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HostMeta {
+    pub os: String,
+    pub arch: String,
+    pub threads_available: usize,
+}
+
+impl HostMeta {
+    /// The current process's host, `threads` from the kernel pool.
+    pub fn current(threads_available: usize) -> HostMeta {
+        HostMeta {
+            os: std::env::consts::OS.to_string(),
+            arch: std::env::consts::ARCH.to_string(),
+            threads_available,
+        }
+    }
+}
+
+/// One flat measurement: a unique case name, the primary metric the
+/// diff gates on, and any number of secondary metrics under `extra`
+/// (recorded for the trajectory, never gated).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Row {
+    /// Unique within the record, e.g. `i8_gemm/packed_t4/128x288x96`.
+    pub name: String,
+    /// Primary metric (what `bench diff` compares).
+    pub value: f64,
+    /// Unit of `value`, e.g. `ns` or `req/s`.
+    pub unit: String,
+    /// Direction of goodness: throughput rows set this, latency rows
+    /// don't. The diff's regression factor respects it.
+    pub higher_is_better: bool,
+    /// Secondary metrics (thread counts, percentiles, speedups, ...).
+    pub extra: BTreeMap<String, f64>,
+}
+
+/// A complete versioned benchmark record — see the module docs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchRecord {
+    pub schema: u32,
+    /// Trajectory tag: `quant`, `native`, or `serving`.
+    pub bench: String,
+    /// Backend label (`cpu`, `sim`, `native:...`).
+    pub backend: String,
+    /// True when the record was taken under `OCS_BENCH_QUICK` — quick
+    /// runs are noisier, and the diff warns when quick flags differ.
+    pub quick: bool,
+    pub host: HostMeta,
+    pub rows: Vec<Row>,
+}
+
+impl BenchRecord {
+    /// Fresh record for the current host; `quick` is read from the
+    /// environment so it always reflects how the harness actually ran.
+    pub fn new(bench: &str, backend: &str, threads_available: usize) -> BenchRecord {
+        BenchRecord {
+            schema: SCHEMA_VERSION,
+            bench: bench.to_string(),
+            backend: backend.to_string(),
+            quick: std::env::var("OCS_BENCH_QUICK").is_ok(),
+            host: HostMeta::current(threads_available),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Unify the kernel-harness case records (`BENCH_quant` /
+    /// `BENCH_native`): one row per case+shape, primary metric mean
+    /// wall time, throughput and speedup carried as secondaries.
+    pub fn from_cases(
+        bench: &str,
+        backend: &str,
+        threads_available: usize,
+        cases: &[CaseRecord],
+    ) -> BenchRecord {
+        let mut rec = BenchRecord::new(bench, backend, threads_available);
+        for c in cases {
+            let mut extra = BTreeMap::new();
+            extra.insert("threads".to_string(), c.threads as f64);
+            extra.insert("melems_per_s".to_string(), c.melems_per_s);
+            extra.insert("speedup_vs_serial".to_string(), c.speedup_vs_serial);
+            rec.rows.push(Row {
+                name: format!("{}/{}", c.name, c.shape),
+                value: c.mean_ns,
+                unit: "ns".to_string(),
+                higher_is_better: false,
+                extra,
+            });
+        }
+        rec
+    }
+
+    /// Unify the serving worker sweep (`BENCH_serving`): one row per
+    /// swept worker count, primary metric sustained throughput,
+    /// latency percentiles and admission counters as secondaries.
+    pub fn from_sweep(backend: &str, points: &[SweepPoint]) -> BenchRecord {
+        let mut rec = BenchRecord::new("serving", backend, crate::kernels::pool::available());
+        for p in points {
+            let base = format!("serve/w{}", p.workers);
+            // a sweep may legitimately revisit a worker count; keep
+            // names unique so validate() and diff() stay well-defined
+            let mut name = base.clone();
+            let mut k = 2usize;
+            while rec.rows.iter().any(|r| r.name == name) {
+                name = format!("{base}#{k}");
+                k += 1;
+            }
+            let mut extra = BTreeMap::new();
+            extra.insert("workers".to_string(), p.workers as f64);
+            extra.insert("requests".to_string(), p.requests as f64);
+            extra.insert("ok".to_string(), p.ok as f64);
+            extra.insert("errors".to_string(), p.errors as f64);
+            extra.insert("secs".to_string(), p.secs);
+            extra.insert("mean_latency_ms".to_string(), p.mean_latency_ms);
+            extra.insert("p50_ms".to_string(), p.p50_ms);
+            extra.insert("p99_ms".to_string(), p.p99_ms);
+            extra.insert("mean_batch".to_string(), p.mean_batch);
+            extra.insert("rejected".to_string(), p.rejected as f64);
+            extra.insert("deadline_exceeded".to_string(), p.deadline_exceeded as f64);
+            rec.rows.push(Row {
+                name,
+                value: p.rps,
+                unit: "req/s".to_string(),
+                higher_is_better: true,
+                extra,
+            });
+        }
+        rec
+    }
+
+    pub fn row(&self, name: &str) -> Option<&Row> {
+        self.rows.iter().find(|r| r.name == name)
+    }
+
+    // ---- serialization ----------------------------------------------------
+
+    pub fn to_json(&self) -> String {
+        json::obj(vec![
+            ("schema", json::num(self.schema as f64)),
+            ("bench", json::s(&self.bench)),
+            ("backend", json::s(&self.backend)),
+            ("quick", Value::Bool(self.quick)),
+            (
+                "host",
+                json::obj(vec![
+                    ("os", json::s(&self.host.os)),
+                    ("arch", json::s(&self.host.arch)),
+                    (
+                        "threads_available",
+                        json::num(self.host.threads_available as f64),
+                    ),
+                ]),
+            ),
+            (
+                "rows",
+                json::arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            json::obj(vec![
+                                ("name", json::s(&r.name)),
+                                ("value", json::num(r.value)),
+                                ("unit", json::s(&r.unit)),
+                                ("higher_is_better", Value::Bool(r.higher_is_better)),
+                                (
+                                    "extra",
+                                    Value::Obj(
+                                        r.extra
+                                            .iter()
+                                            .map(|(k, v)| (k.clone(), json::num(*v)))
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+        .to_string()
+    }
+
+    /// Parse a record, rejecting missing fields and foreign schema
+    /// versions. Structural only — run [`BenchRecord::validate`] for
+    /// the sanity gates (`ocs bench check` does both).
+    pub fn parse(text: &str) -> Result<BenchRecord> {
+        let v = Value::parse(text).context("bench record is not valid JSON")?;
+        let schema = v
+            .get_opt("schema")
+            .and_then(|s| s.as_f64().ok())
+            .map(|s| s as u32)
+            .context("bench record has no 'schema' field (pre-versioning record? regenerate with `make bench-record`)")?;
+        if schema != SCHEMA_VERSION {
+            bail!(
+                "bench record schema v{schema} but this build reads v{SCHEMA_VERSION} — \
+                 regenerate the record with `make bench-record`"
+            );
+        }
+        let host = v.get("host")?;
+        let mut rows = Vec::new();
+        for rv in v.get("rows")?.as_arr()? {
+            let mut extra = BTreeMap::new();
+            if let Some(ev) = rv.get_opt("extra") {
+                for (k, x) in ev.as_obj()? {
+                    extra.insert(k.clone(), x.as_f64()?);
+                }
+            }
+            rows.push(Row {
+                name: rv.get("name")?.as_str()?.to_string(),
+                value: rv.get("value")?.as_f64()?,
+                unit: rv.get("unit")?.as_str()?.to_string(),
+                higher_is_better: rv.get("higher_is_better")?.as_bool()?,
+                extra,
+            });
+        }
+        Ok(BenchRecord {
+            schema,
+            bench: v.get("bench")?.as_str()?.to_string(),
+            backend: v.get("backend")?.as_str()?.to_string(),
+            quick: v.get("quick")?.as_bool()?,
+            host: HostMeta {
+                os: host.get("os")?.as_str()?.to_string(),
+                arch: host.get("arch")?.as_str()?.to_string(),
+                threads_available: host.get("threads_available")?.as_usize()?,
+            },
+            rows,
+        })
+    }
+
+    /// Sanity gates beyond structure: at least one row, unique names,
+    /// finite positive primary metrics, finite secondaries, a sane
+    /// thread count. This is what `ocs bench check` enforces on every
+    /// fresh record before CI will diff it.
+    pub fn validate(&self) -> Result<()> {
+        if self.bench.is_empty() {
+            bail!("empty bench tag");
+        }
+        if self.host.threads_available == 0 {
+            bail!("host.threads_available must be >= 1");
+        }
+        if self.rows.is_empty() {
+            bail!("record has no measurement rows");
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for r in &self.rows {
+            if r.name.is_empty() {
+                bail!("row with an empty name");
+            }
+            if !seen.insert(&r.name) {
+                bail!("duplicate row name '{}'", r.name);
+            }
+            if r.unit.is_empty() {
+                bail!("row '{}': empty unit", r.name);
+            }
+            if !r.value.is_finite() || r.value <= 0.0 {
+                bail!("row '{}': non-positive or non-finite value {}", r.name, r.value);
+            }
+            for (k, x) in &r.extra {
+                if !x.is_finite() {
+                    bail!("row '{}': non-finite extra metric '{k}'", r.name);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Read + parse (no sanity validation; see [`BenchRecord::validate`]).
+    pub fn load(path: &Path) -> Result<BenchRecord> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read bench record {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parse bench record {}", path.display()))
+    }
+
+    /// Serialize and write to `path`.
+    pub fn write(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json())
+            .with_context(|| format!("write bench record {}", path.display()))
+    }
+
+    /// Max `speedup_vs_serial` over rows whose name starts with
+    /// `prefix` and that ran with more than one thread — the
+    /// machine-relative gate CI applies to the kernel harnesses
+    /// (`ocs bench check --speedup-prefix P --min-speedup X`).
+    pub fn best_parallel_speedup(&self, prefix: &str) -> Option<f64> {
+        self.rows
+            .iter()
+            .filter(|r| {
+                r.name.starts_with(prefix) && r.extra.get("threads").copied().unwrap_or(1.0) > 1.0
+            })
+            .filter_map(|r| r.extra.get("speedup_vs_serial").copied())
+            .max_by(|a, b| a.total_cmp(b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn case(name: &str, shape: &str, threads: usize, mean_ns: f64, speedup: f64) -> CaseRecord {
+        CaseRecord {
+            name: name.to_string(),
+            shape: shape.to_string(),
+            threads,
+            mean_ns,
+            melems_per_s: 100.0,
+            speedup_vs_serial: speedup,
+        }
+    }
+
+    #[test]
+    fn roundtrip_from_cases() {
+        let cases = vec![
+            case("perchan_quant/old_serial", "256x256", 1, 2.0e6, 1.0),
+            case("perchan_quant/fused_t4", "256x256", 4, 0.5e6, 4.0),
+        ];
+        let rec = BenchRecord::from_cases("quant", "cpu", 8, &cases);
+        rec.validate().unwrap();
+        let back = BenchRecord::parse(&rec.to_json()).unwrap();
+        assert_eq!(rec, back);
+        assert_eq!(back.schema, SCHEMA_VERSION);
+        assert_eq!(back.bench, "quant");
+        assert_eq!(back.host.threads_available, 8);
+        let row = back.row("perchan_quant/fused_t4/256x256").unwrap();
+        assert_eq!(row.value, 0.5e6);
+        assert_eq!(row.unit, "ns");
+        assert!(!row.higher_is_better);
+        assert_eq!(row.extra["threads"], 4.0);
+        assert_eq!(row.extra["speedup_vs_serial"], 4.0);
+    }
+
+    #[test]
+    fn roundtrip_from_sweep() {
+        let points = vec![
+            SweepPoint {
+                workers: 1,
+                requests: 128,
+                ok: 128,
+                errors: 0,
+                secs: 0.5,
+                rps: 256.0,
+                mean_latency_ms: 1.5,
+                p50_ms: 1.0,
+                p99_ms: 4.0,
+                mean_batch: 2.0,
+                rejected: 0,
+                deadline_exceeded: 0,
+            },
+            SweepPoint {
+                workers: 2,
+                requests: 128,
+                ok: 128,
+                errors: 0,
+                secs: 0.25,
+                rps: 512.0,
+                mean_latency_ms: 0.9,
+                p50_ms: 0.7,
+                p99_ms: 2.0,
+                mean_batch: 1.5,
+                rejected: 0,
+                deadline_exceeded: 0,
+            },
+        ];
+        let rec = BenchRecord::from_sweep("sim", &points);
+        rec.validate().unwrap();
+        let back = BenchRecord::parse(&rec.to_json()).unwrap();
+        assert_eq!(rec, back);
+        assert_eq!(back.bench, "serving");
+        let w2 = back.row("serve/w2").unwrap();
+        assert!(w2.higher_is_better);
+        assert_eq!(w2.value, 512.0);
+        assert_eq!(w2.extra["p99_ms"], 2.0);
+    }
+
+    #[test]
+    fn sweep_revisit_keeps_names_unique() {
+        let p = SweepPoint {
+            workers: 2,
+            requests: 64,
+            ok: 64,
+            errors: 0,
+            secs: 0.1,
+            rps: 640.0,
+            mean_latency_ms: 1.0,
+            p50_ms: 1.0,
+            p99_ms: 2.0,
+            mean_batch: 1.0,
+            rejected: 0,
+            deadline_exceeded: 0,
+        };
+        let rec = BenchRecord::from_sweep("sim", &[p.clone(), p.clone(), p]);
+        rec.validate().unwrap();
+        assert!(rec.row("serve/w2").is_some());
+        assert!(rec.row("serve/w2#2").is_some());
+        assert!(rec.row("serve/w2#3").is_some());
+    }
+
+    #[test]
+    fn stale_schema_is_rejected() {
+        let rec = BenchRecord::from_cases("quant", "cpu", 4, &[case("a", "s", 1, 1.0, 1.0)]);
+        let stale = rec.to_json().replacen("\"schema\":1", "\"schema\":0", 1);
+        let err = BenchRecord::parse(&stale).unwrap_err().to_string();
+        assert!(err.contains("schema v0"), "{err}");
+        // keys serialize sorted, so "schema" is last: strip ",\"schema\":1"
+        let missing = rec.to_json().replacen(",\"schema\":1", "", 1);
+        assert!(missing.len() < rec.to_json().len(), "strip failed");
+        assert!(BenchRecord::parse(&missing).is_err());
+    }
+
+    #[test]
+    fn malformed_records_are_rejected() {
+        assert!(BenchRecord::parse("not json").is_err());
+        assert!(BenchRecord::parse("{}").is_err());
+        // structurally fine, semantically empty → validate refuses
+        let empty = BenchRecord::new("quant", "cpu", 4);
+        assert!(BenchRecord::parse(&empty.to_json()).is_ok());
+        assert!(empty.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_bad_rows() {
+        let mut rec = BenchRecord::from_cases("quant", "cpu", 4, &[case("a", "s", 1, 1.0, 1.0)]);
+        rec.rows[0].value = 0.0;
+        assert!(rec.validate().is_err());
+        rec.rows[0].value = f64::NAN;
+        assert!(rec.validate().is_err());
+        rec.rows[0].value = 1.0;
+        rec.validate().unwrap();
+        // duplicate names
+        let dup = rec.rows[0].clone();
+        rec.rows.push(dup);
+        assert!(rec.validate().is_err());
+        // non-finite secondary
+        rec.rows.pop();
+        rec.rows[0].extra.insert("x".into(), f64::INFINITY);
+        assert!(rec.validate().is_err());
+    }
+
+    #[test]
+    fn best_parallel_speedup_ignores_serial_rows() {
+        let rec = BenchRecord::from_cases(
+            "native",
+            "cpu",
+            4,
+            &[
+                case("i8_gemm/packed_t1", "s", 1, 4.0, 9.9),
+                case("i8_gemm/packed_t2", "s", 2, 2.0, 2.0),
+                case("i8_gemm/packed_t4", "s", 4, 1.0, 3.5),
+                case("other/fused", "s", 4, 1.0, 50.0),
+            ],
+        );
+        assert_eq!(rec.best_parallel_speedup("i8_gemm/packed_t"), Some(3.5));
+        assert_eq!(rec.best_parallel_speedup("nope"), None);
+    }
+}

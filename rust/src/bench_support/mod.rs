@@ -27,7 +27,8 @@ impl BenchStats {
     }
 }
 
-fn fmt_ns(ns: f64) -> String {
+/// Human time formatting, shared with `bench_record`'s diff tables.
+pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
         format!("{ns:.1} ns")
     } else if ns < 1e6 {
@@ -37,6 +38,23 @@ fn fmt_ns(ns: f64) -> String {
     } else {
         format!("{:.3} s", ns / 1e9)
     }
+}
+
+/// Sample floor: at 20 samples the ceil-rank p95 is the 19th sorted
+/// sample, not the max — below ~20 a "p95" is just the worst
+/// observation dressed up, which poisoned small-iter records.
+const MIN_ITERS: usize = 20;
+
+/// Ceil-rank (nearest-rank) percentile over ascending-sorted samples:
+/// the smallest sample with at least fraction `p` of the mass at or
+/// below it. The previous index `(len * p) as usize % len` silently
+/// returned the max sample at the minimum iteration count and at any
+/// length where `len * p` was exact — the modulo only masked an
+/// off-by-one, it never implemented a percentile.
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    debug_assert!(!sorted.is_empty());
+    let rank = (p.clamp(0.0, 1.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
 }
 
 /// Runner with cargo-bench-style substring filtering.
@@ -95,19 +113,25 @@ impl Runner {
         if !self.enabled(name) {
             return None;
         }
-        // warmup + calibration
+        // warmup + calibration: every probe during the warmup window is
+        // kept, and the iteration count derives from their *median* —
+        // calibrating off the last probe alone let one slow outlier
+        // (page fault, scheduler hiccup) collapse the sample count for
+        // the whole measurement
         let cal_start = Instant::now();
         let mut one = || {
             let t = Instant::now();
             f();
             t.elapsed()
         };
-        let mut probe = one();
+        let mut probes_ns = vec![one().as_nanos().max(1) as f64];
         while cal_start.elapsed() < self.warmup {
-            probe = one();
+            probes_ns.push(one().as_nanos().max(1) as f64);
         }
-        let per_iter = probe.as_nanos().max(1) as f64;
-        let iters = ((self.target_time.as_nanos() as f64 / per_iter) as usize).clamp(5, 10_000);
+        probes_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let per_iter = probes_ns[probes_ns.len() / 2];
+        let iters =
+            ((self.target_time.as_nanos() as f64 / per_iter) as usize).clamp(MIN_ITERS, 10_000);
 
         let mut samples = Vec::with_capacity(iters);
         for _ in 0..iters {
@@ -119,8 +143,8 @@ impl Runner {
             name: name.to_string(),
             iters,
             mean_ns: mean,
-            p50_ns: samples[samples.len() / 2],
-            p95_ns: samples[(samples.len() as f64 * 0.95) as usize % samples.len()],
+            p50_ns: percentile(&samples, 0.50),
+            p95_ns: percentile(&samples, 0.95),
             min_ns: samples[0],
             max_ns: *samples.last().unwrap(),
         };
@@ -157,10 +181,10 @@ impl Runner {
     }
 }
 
-/// One row of `BENCH_quant.json` — the quant-side counterpart of a
-/// `BENCH_serving.json` sweep point (same record style: a top-level
-/// `bench` tag plus an array of flat measurement objects, so the same
-/// tooling can track both trajectories run-over-run).
+/// One measured case of a kernel harness (`BENCH_quant` /
+/// `BENCH_native`). Harnesses collect these and serialize through
+/// [`crate::bench_record::BenchRecord::from_cases`] — the versioned
+/// record format `ocs bench diff`/`check` read back.
 #[derive(Debug, Clone)]
 pub struct CaseRecord {
     /// `group/variant`, e.g. `perchan_quant/fused_t4`.
@@ -175,53 +199,6 @@ pub struct CaseRecord {
     /// mean_ns(serial baseline of the group) / mean_ns(this variant);
     /// 1.0 for the baseline row itself.
     pub speedup_vs_serial: f64,
-}
-
-/// Serialize hot-path cases in the repo's BENCH json shape under an
-/// arbitrary `bench` tag (`"quant"` → `BENCH_quant.json`, `"native"` →
-/// `BENCH_native.json`, ...).
-pub fn cases_json(
-    bench: &str,
-    backend: &str,
-    threads_available: usize,
-    cases: &[CaseRecord],
-) -> String {
-    use crate::util::json;
-    json::obj(vec![
-        ("bench", json::s(bench)),
-        ("backend", json::s(backend)),
-        ("threads_available", json::num(threads_available as f64)),
-        (
-            "cases",
-            json::arr(
-                cases
-                    .iter()
-                    .map(|c| {
-                        json::obj(vec![
-                            ("name", json::s(&c.name)),
-                            ("shape", json::s(&c.shape)),
-                            ("threads", json::num(c.threads as f64)),
-                            ("mean_ns", json::num(c.mean_ns)),
-                            ("melems_per_s", json::num(c.melems_per_s)),
-                            ("speedup_vs_serial", json::num(c.speedup_vs_serial)),
-                        ])
-                    })
-                    .collect(),
-            ),
-        ),
-    ])
-    .to_string()
-}
-
-/// [`cases_json`] under the `"quant"` tag (`BENCH_quant.json`).
-pub fn quant_json(backend: &str, threads_available: usize, cases: &[CaseRecord]) -> String {
-    cases_json("quant", backend, threads_available, cases)
-}
-
-/// [`cases_json`] under the `"native"` tag (`BENCH_native.json`,
-/// emitted by `benches/gemm.rs`).
-pub fn native_json(backend: &str, threads_available: usize, cases: &[CaseRecord]) -> String {
-    cases_json("native", backend, threads_available, cases)
 }
 
 #[cfg(test)]
@@ -245,9 +222,38 @@ mod tests {
             })
             .unwrap();
         assert!(stats.min_ns <= stats.p50_ns);
-        assert!(stats.p50_ns <= stats.max_ns);
-        assert!(stats.iters >= 5);
+        assert!(stats.p50_ns <= stats.p95_ns);
+        assert!(stats.p95_ns <= stats.max_ns);
+        assert!(stats.iters >= MIN_ITERS);
         assert!(acc > 0 || acc == 0); // keep the accumulator alive
+    }
+
+    #[test]
+    fn percentile_is_ceil_rank_not_max() {
+        // regression: at the old minimum iteration count (5) the p95
+        // index was `(5*0.95) as usize % 5 == 4` — always the max; and
+        // at any length where len*p was exact (e.g. 20*0.95) the
+        // truncation overshot by one rank
+        let v: Vec<f64> = (1..=20).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.95), 19.0); // ceil(19.0)=19 → idx 18, not the max
+        assert_eq!(percentile(&v, 0.50), 10.0);
+        assert_eq!(percentile(&v, 1.0), 20.0);
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        let w = vec![1.0, 2.0, 3.0, 4.0, 100.0];
+        // 5 samples genuinely cannot resolve a p95 below the max — the
+        // honest ceil-rank answer; MIN_ITERS keeps real runs past this
+        assert_eq!(percentile(&w, 0.95), 100.0);
+        assert_eq!(percentile(&w, 0.50), 3.0);
+        assert_eq!(percentile(&w, 0.75), 4.0);
+    }
+
+    #[test]
+    fn small_iter_p95_below_max_at_floor() {
+        // at the MIN_ITERS floor the p95 must be able to sit below the
+        // max sample (the old code structurally never could)
+        let mut v: Vec<f64> = vec![1.0; MIN_ITERS - 1];
+        v.push(1000.0);
+        assert_eq!(percentile(&v, 0.95), 1.0);
     }
 
     #[test]
@@ -260,48 +266,6 @@ mod tests {
         };
         assert!(r.bench("other", || {}).is_none());
         assert!(r.bench("has_xyz_inside", || {}).is_some());
-    }
-
-    #[test]
-    fn quant_json_roundtrips() {
-        let cases = vec![
-            CaseRecord {
-                name: "perchan_quant/old_serial".into(),
-                shape: "256x1024".into(),
-                threads: 1,
-                mean_ns: 2.0e6,
-                melems_per_s: 131.0,
-                speedup_vs_serial: 1.0,
-            },
-            CaseRecord {
-                name: "perchan_quant/fused_t4".into(),
-                shape: "256x1024".into(),
-                threads: 4,
-                mean_ns: 0.5e6,
-                melems_per_s: 524.0,
-                speedup_vs_serial: 4.0,
-            },
-        ];
-        let text = quant_json("cpu", 4, &cases);
-        let v = crate::util::json::Value::parse(&text).unwrap();
-        assert_eq!(v.get("bench").unwrap().as_str().unwrap(), "quant");
-        assert_eq!(v.get("threads_available").unwrap().as_usize().unwrap(), 4);
-        let arr = v.get("cases").unwrap().as_arr().unwrap();
-        assert_eq!(arr.len(), 2);
-        assert_eq!(
-            arr[1].get("name").unwrap().as_str().unwrap(),
-            "perchan_quant/fused_t4"
-        );
-        assert_eq!(arr[1].get("threads").unwrap().as_usize().unwrap(), 4);
-        assert!(arr[1].get("speedup_vs_serial").unwrap().as_f64().unwrap() > 3.9);
-    }
-
-    #[test]
-    fn cases_json_tags() {
-        let text = native_json("cpu", 2, &[]);
-        let v = crate::util::json::Value::parse(&text).unwrap();
-        assert_eq!(v.get("bench").unwrap().as_str().unwrap(), "native");
-        assert!(v.get("cases").unwrap().as_arr().unwrap().is_empty());
     }
 
     #[test]

@@ -72,6 +72,18 @@
 //! checkout), and `benches/gemm.rs` tracks the kernel per PR
 //! (`BENCH_native.json`).
 //!
+//! ## Benchmark records and regression gating
+//!
+//! Every perf harness emits a versioned [`bench_record::BenchRecord`]
+//! (schema version, bench tag, host metadata, flat measurement rows):
+//! `benches/hotpath.rs` → `BENCH_quant.json`, `benches/gemm.rs` →
+//! `BENCH_native.json`, the serve worker sweep → `BENCH_serving.json`.
+//! Per-PR baselines are committed under `records/` (refresh with
+//! `make bench-record`); `ocs bench diff OLD NEW` reports per-case
+//! ratios under a noise threshold and exits nonzero on regression,
+//! `ocs bench check FILE` validates a record, and CI gates every fresh
+//! record against the committed baseline (see `docs/BENCH_FORMAT.md`).
+//!
 //! ## Build modes
 //!
 //! The default build has **no PJRT dependency**: [`runtime`] compiles
@@ -109,6 +121,7 @@
     clippy::manual_memcpy
 )]
 
+pub mod bench_record;
 pub mod bench_support;
 pub mod calib;
 pub mod cli;

@@ -7,12 +7,14 @@
 //! ocs eval  --model <name> [...]    evaluate one quantization config
 //! ocs table --id all|1|2|3|4|5|6|fig1   regenerate paper tables/figures
 //! ocs serve --model <name>          dynamic-batching serving self-test
+//! ocs bench check|diff              validate / regression-gate benchmark records
 //! ```
 
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use ocs::bench_record::BenchRecord;
 use ocs::cli::Args;
 use ocs::clip::ClipMethod;
 use ocs::eval;
@@ -44,6 +46,10 @@ USAGE:
             [--max-batch N] [--max-wait-us US]
             [--sweep 1,2,4] [--json PATH]
             [--backend pjrt|sim|native] [--sim] [--sim-free]
+  ocs bench check FILE [--bench TAG] [--require P1,P2,...]
+            [--speedup-prefix P] [--min-speedup X]
+  ocs bench diff OLD NEW [--threshold R] [--summary PATH]
+            [--allow-regression]
 
 FLAGS:
   --artifacts DIR   artifact root (default: artifacts)
@@ -82,6 +88,20 @@ EVAL FLAGS:
   --backend B       pjrt (artifacts, default) or native: evaluate on the
                     native integer backend — real quantized arithmetic,
                     works on the stub build (CNN models only)
+
+BENCH FLAGS (records are versioned JSON — see docs/BENCH_FORMAT.md;
+baselines live under records/, regenerate with `make bench-record`):
+  --bench TAG       check: require the record's bench tag to equal TAG
+  --require LIST    check: comma-separated case-name prefixes; each must
+                    match at least one measurement row
+  --speedup-prefix P  check: rows matching P must include a parallel
+                    (threads > 1) run ...
+  --min-speedup X   ...whose best speedup_vs_serial exceeds X (default 1)
+  --threshold R     diff: relative noise threshold (default 0.25; CI's
+                    cross-host gate uses a far more generous tripwire)
+  --summary PATH    diff: append the markdown ratio table to PATH
+                    (CI points this at $GITHUB_STEP_SUMMARY)
+  --allow-regression  diff: print the table but always exit 0
 ";
 
 fn main() {
@@ -115,6 +135,7 @@ fn run(args: &Args) -> Result<()> {
             )
         }
         Some("serve") => cmd_serve(args, &artifacts),
+        Some("bench") => cmd_bench(args),
         Some(other) => bail!("unknown command '{other}'\n{USAGE}"),
         None => {
             print!("{USAGE}");
@@ -320,6 +341,107 @@ fn serve_recipe(args: &Args, default_a_bits: u32) -> Result<QuantRecipe> {
         recipe = recipe.with_cli_overrides(flag).context("bad --layer")?;
     }
     Ok(recipe)
+}
+
+/// `ocs bench check|diff` over versioned records (`bench_record`) —
+/// the regression gate CI runs against the baselines under `records/`.
+fn cmd_bench(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("check") => bench_check(args),
+        Some("diff") => bench_diff(args),
+        Some(other) => bail!("unknown bench subcommand '{other}' (check|diff)\n{USAGE}"),
+        None => bail!("usage: ocs bench check FILE | ocs bench diff OLD NEW\n{USAGE}"),
+    }
+}
+
+fn bench_check(args: &Args) -> Result<()> {
+    let path = std::path::Path::new(
+        args.positional
+            .get(1)
+            .map(String::as_str)
+            .context("usage: ocs bench check FILE [--bench TAG] [--require P1,P2] [--speedup-prefix P --min-speedup X]")?,
+    );
+    let rec = BenchRecord::load(path)?;
+    rec.validate()
+        .with_context(|| format!("invalid bench record {}", path.display()))?;
+    if let Some(tag) = args.str("bench") {
+        if rec.bench != tag {
+            bail!(
+                "{}: bench tag '{}' but expected '{tag}'",
+                path.display(),
+                rec.bench
+            );
+        }
+    }
+    for prefix in args.list("require") {
+        if !rec.rows.iter().any(|r| r.name.starts_with(prefix.as_str())) {
+            bail!(
+                "{}: no case matches required prefix '{prefix}'",
+                path.display()
+            );
+        }
+    }
+    let mut speedup_note = String::new();
+    if let Some(prefix) = args.str("speedup-prefix") {
+        let min: f64 = args.parse_or("min-speedup", 1.0)?;
+        let best = rec.best_parallel_speedup(prefix).with_context(|| {
+            format!(
+                "{}: no parallel (threads > 1) case matches '{prefix}'",
+                path.display()
+            )
+        })?;
+        if best <= min {
+            bail!(
+                "{}: best parallel speedup for '{prefix}' is {best:.2}x (need > {min:.2}x)",
+                path.display()
+            );
+        }
+        speedup_note = format!(", best '{prefix}' parallel speedup {best:.2}x");
+    }
+    println!(
+        "{}: ok — bench '{}', {} row(s), {}/{} {}t{}{}",
+        path.display(),
+        rec.bench,
+        rec.rows.len(),
+        rec.host.os,
+        rec.host.arch,
+        rec.host.threads_available,
+        if rec.quick { " quick" } else { "" },
+        speedup_note
+    );
+    Ok(())
+}
+
+fn bench_diff(args: &Args) -> Result<()> {
+    const SUBUSAGE: &str =
+        "usage: ocs bench diff OLD NEW [--threshold R] [--summary PATH] [--allow-regression]";
+    let old_path =
+        std::path::Path::new(args.positional.get(1).map(String::as_str).context(SUBUSAGE)?);
+    let new_path =
+        std::path::Path::new(args.positional.get(2).map(String::as_str).context(SUBUSAGE)?);
+    let old = BenchRecord::load(old_path)?;
+    let new = BenchRecord::load(new_path)?;
+    let threshold: f64 = args.parse_or("threshold", 0.25)?;
+    let d = ocs::bench_record::diff::diff(&old, &new, threshold)?;
+    print!("{}", d.table());
+    if let Some(summary) = args.str("summary") {
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(summary)
+            .with_context(|| format!("open summary file {summary}"))?;
+        f.write_all(d.markdown().as_bytes())
+            .with_context(|| format!("append to summary file {summary}"))?;
+    }
+    if d.has_regressions() && !args.bool_or("allow-regression", false) {
+        bail!(
+            "{} case(s) regressed past the {:.0}% noise threshold",
+            d.regressions().count(),
+            threshold * 100.0
+        );
+    }
+    Ok(())
 }
 
 fn cmd_serve(args: &Args, artifacts: &str) -> Result<()> {

@@ -178,19 +178,27 @@ impl Snapshot {
         self.latency_us_total as f64 / self.requests as f64
     }
 
-    /// Approximate percentile from the exponential buckets (upper edge).
+    /// Approximate percentile from the exponential buckets (upper edge
+    /// of the bucket holding the rank-`ceil(p*total)` sample).
     pub fn latency_percentile_us(&self, p: f64) -> u64 {
         let total: u64 = self.latency_buckets.iter().sum();
         if total == 0 {
             return 0;
         }
-        let target = (p.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        // clamp the rank to >= 1: p = 0.0 used to yield target 0, which
+        // the first (possibly empty) bucket trivially satisfied — the
+        // function reported 64 µs regardless of the data. Empty buckets
+        // are skipped outright so an answer always names a bucket that
+        // actually holds samples.
+        let target = ((p.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
         let mut acc = 0u64;
         let mut edge = BASE_US;
         for b in &self.latency_buckets {
-            acc += b;
-            if acc >= target {
-                return edge;
+            if *b > 0 {
+                acc += b;
+                if acc >= target {
+                    return edge;
+                }
             }
             edge *= 2;
         }
@@ -370,6 +378,21 @@ mod tests {
         assert!(p99 >= p50);
         assert!(s.mean_latency_us() > 4_000.0);
         assert_eq!(s.latency_us_max, 10_000);
+    }
+
+    #[test]
+    fn percentile_skips_empty_buckets_and_clamps_rank() {
+        // regression: one slow request at 10 ms. p=0.0 used to produce
+        // target 0, which the empty first bucket satisfied (acc 0 >= 0)
+        // — every percentile of this snapshot reported 64 µs.
+        let m = Metrics::default();
+        m.record_request(Duration::from_micros(10_000));
+        let s = m.snapshot();
+        // 10_000 µs lands in the (8192, 16384] bucket; its upper edge is
+        // the only honest answer at every p.
+        assert_eq!(s.latency_percentile_us(0.0), 16_384);
+        assert_eq!(s.latency_percentile_us(0.5), 16_384);
+        assert_eq!(s.latency_percentile_us(1.0), 16_384);
     }
 
     #[test]

@@ -71,7 +71,6 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::pipeline::QuantRecipe;
 use crate::tensor::TensorF;
-use crate::util::json;
 
 use backend::{EngineFactory, PjrtFactory, SimFactory, WorkerEngine};
 
@@ -628,37 +627,13 @@ pub fn run_point(
     Ok(point)
 }
 
-/// Serialize sweep results in the repo's BENCH json shape.
+/// Serialize sweep results as a versioned [`BenchRecord`] (`serving`
+/// tag) — the format `ocs bench diff`/`check` read back; one row per
+/// swept worker count with throughput as the gated metric.
+///
+/// [`BenchRecord`]: crate::bench_record::BenchRecord
 pub fn sweep_json(backend_label: &str, points: &[SweepPoint]) -> String {
-    json::obj(vec![
-        ("bench", json::s("serving")),
-        ("backend", json::s(backend_label)),
-        (
-            "sweep",
-            json::arr(
-                points
-                    .iter()
-                    .map(|p| {
-                        json::obj(vec![
-                            ("workers", json::num(p.workers as f64)),
-                            ("requests", json::num(p.requests as f64)),
-                            ("ok", json::num(p.ok as f64)),
-                            ("errors", json::num(p.errors as f64)),
-                            ("secs", json::num(p.secs)),
-                            ("rps", json::num(p.rps)),
-                            ("mean_latency_ms", json::num(p.mean_latency_ms)),
-                            ("p50_ms", json::num(p.p50_ms)),
-                            ("p99_ms", json::num(p.p99_ms)),
-                            ("mean_batch", json::num(p.mean_batch)),
-                            ("rejected", json::num(p.rejected as f64)),
-                            ("deadline_exceeded", json::num(p.deadline_exceeded as f64)),
-                        ])
-                    })
-                    .collect(),
-            ),
-        ),
-    ])
-    .to_string()
+    crate::bench_record::BenchRecord::from_sweep(backend_label, points).to_json()
 }
 
 /// Drive a worker sweep over any backend; prints one line per point and

@@ -165,6 +165,13 @@ impl Histogram {
     /// re-binning (error <= the other's bin width) is the correct move.
     pub fn merge(&mut self, other: &Histogram) {
         assert_eq!(self.bins(), other.bins(), "merge: bin count mismatch");
+        if other.n == 0 {
+            // an empty partial carries no mass but may carry a large
+            // `range_hint` — growing to cover it would halve the
+            // receiver's resolution for nothing (the batch-parallel
+            // calibration path hands out empty tail partials routinely)
+            return;
+        }
         while self.max < other.max {
             self.double_range();
         }
@@ -255,6 +262,29 @@ mod tests {
         assert_eq!(a.count(), an + b.count());
         assert_eq!(a.counts().iter().sum::<u64>(), 100);
         assert!(a.range() >= 4.9);
+    }
+
+    #[test]
+    fn merging_empty_partial_keeps_resolution() {
+        // regression: merging an empty partial whose range_hint exceeded
+        // the receiver's range doubled the receiver until it covered the
+        // hint — zero new samples, resolution halved six times here.
+        let data: Vec<f32> = (0..64).map(|i| i as f32 / 64.0).collect();
+        let mut h = Histogram::from_slice(&data, 32);
+        let range = h.range();
+        let width = h.bin_width();
+        let counts = h.counts().to_vec();
+        h.merge(&Histogram::new(32, 64.0)); // empty, big hint
+        assert_eq!(h.range(), range);
+        assert_eq!(h.bin_width(), width);
+        assert_eq!(h.counts(), counts.as_slice());
+        assert_eq!(h.count(), 64);
+        // a *non-empty* partial with a larger range must still grow it
+        let mut tail = Histogram::new(32, 64.0);
+        tail.observe(48.0);
+        h.merge(&tail);
+        assert!(h.range() >= 48.0);
+        assert_eq!(h.count(), 65);
     }
 
     #[test]

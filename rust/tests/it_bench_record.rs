@@ -1,0 +1,245 @@
+//! End-to-end tests for the versioned benchmark records: the committed
+//! baselines under `records/` must parse and pass `ocs bench check`
+//! with exactly the gates CI applies, and `ocs bench diff` over the
+//! golden fixture pairs must render per-case ratios and exit nonzero on
+//! the injected regression (the gate CI relies on, exercised through
+//! the real binary).
+
+use std::path::PathBuf;
+use std::process::{Command, Output};
+
+use ocs::bench_record::diff::{diff, Verdict};
+use ocs::bench_record::BenchRecord;
+
+fn records_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../records")
+}
+
+fn run_ocs(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_ocs"))
+        .args(args)
+        .current_dir(records_dir())
+        .output()
+        .expect("spawn ocs")
+}
+
+fn stdout(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+fn stderr(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+// ---- committed baselines -------------------------------------------------
+
+#[test]
+fn committed_baselines_parse_and_validate() {
+    for name in ["BENCH_quant.json", "BENCH_native.json", "BENCH_serving.json"] {
+        let rec = BenchRecord::load(&records_dir().join(name)).unwrap();
+        rec.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+    }
+}
+
+#[test]
+fn baselines_pass_the_ci_check_gates() {
+    // the exact flags .github/workflows/ci.yml runs after each harness
+    let quant = run_ocs(&[
+        "bench",
+        "check",
+        "BENCH_quant.json",
+        "--bench",
+        "quant",
+        "--require",
+        "perchan_quant,calib_stats,kl_sweep,ocs_transform",
+        "--speedup-prefix",
+        "perchan_quant/fused",
+        "--min-speedup",
+        "1.0",
+    ]);
+    assert!(quant.status.success(), "{}", stderr(&quant));
+    assert!(stdout(&quant).contains("ok"), "{}", stdout(&quant));
+
+    let native = run_ocs(&[
+        "bench",
+        "check",
+        "BENCH_native.json",
+        "--bench",
+        "native",
+        "--require",
+        "i8_gemm/naive_serial,i8_gemm/packed_t,native_infer",
+        "--speedup-prefix",
+        "i8_gemm/packed_t",
+        "--min-speedup",
+        "1.0",
+    ]);
+    assert!(native.status.success(), "{}", stderr(&native));
+
+    let serving = run_ocs(&["bench", "check", "BENCH_serving.json", "--bench", "serving"]);
+    assert!(serving.status.success(), "{}", stderr(&serving));
+}
+
+#[test]
+fn check_rejects_wrong_tag_missing_prefix_and_weak_speedup() {
+    let wrong_tag = run_ocs(&["bench", "check", "BENCH_quant.json", "--bench", "native"]);
+    assert!(!wrong_tag.status.success());
+    assert!(stderr(&wrong_tag).contains("bench tag"), "{}", stderr(&wrong_tag));
+
+    let missing = run_ocs(&["bench", "check", "BENCH_quant.json", "--require", "no_such_case"]);
+    assert!(!missing.status.success());
+    assert!(stderr(&missing).contains("no_such_case"), "{}", stderr(&missing));
+
+    let weak = run_ocs(&[
+        "bench",
+        "check",
+        "BENCH_quant.json",
+        "--speedup-prefix",
+        "perchan_quant/fused",
+        "--min-speedup",
+        "1000",
+    ]);
+    assert!(!weak.status.success());
+    assert!(stderr(&weak).contains("speedup"), "{}", stderr(&weak));
+}
+
+#[test]
+fn check_rejects_stale_schema_and_bad_values() {
+    let stale = run_ocs(&["bench", "check", "fixtures/quant_stale_schema.json"]);
+    assert!(!stale.status.success());
+    assert!(stderr(&stale).contains("schema v0"), "{}", stderr(&stale));
+
+    let bad = run_ocs(&["bench", "check", "fixtures/quant_bad_value.json"]);
+    assert!(!bad.status.success());
+    assert!(stderr(&bad).contains("non-positive"), "{}", stderr(&bad));
+
+    let gone = run_ocs(&["bench", "check", "fixtures/does_not_exist.json"]);
+    assert!(!gone.status.success());
+}
+
+// ---- golden diff pairs through the real binary ---------------------------
+
+#[test]
+fn diff_exits_nonzero_on_injected_regression() {
+    let out = run_ocs(&[
+        "bench",
+        "diff",
+        "fixtures/quant_base.json",
+        "fixtures/quant_regressed.json",
+    ]);
+    assert!(!out.status.success(), "regression must gate");
+    let table = stdout(&out);
+    assert!(table.contains("REGRESSED"), "{table}");
+    assert!(table.contains("1.75x"), "{table}");
+    assert!(stderr(&out).contains("regressed past"), "{}", stderr(&out));
+}
+
+#[test]
+fn diff_allow_regression_reports_but_passes() {
+    let out = run_ocs(&[
+        "bench",
+        "diff",
+        "fixtures/quant_base.json",
+        "fixtures/quant_regressed.json",
+        "--allow-regression",
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert!(stdout(&out).contains("REGRESSED"));
+}
+
+#[test]
+fn diff_passes_on_improvement_and_noise() {
+    let improved = run_ocs(&[
+        "bench",
+        "diff",
+        "fixtures/quant_base.json",
+        "fixtures/quant_improved.json",
+    ]);
+    assert!(improved.status.success(), "{}", stderr(&improved));
+    assert!(stdout(&improved).contains("improved"));
+
+    let noise = run_ocs(&[
+        "bench",
+        "diff",
+        "fixtures/quant_base.json",
+        "fixtures/quant_noise.json",
+    ]);
+    assert!(noise.status.success(), "{}", stderr(&noise));
+    assert!(stdout(&noise).contains("within noise"));
+    assert!(!stdout(&noise).contains("REGRESSED"));
+}
+
+#[test]
+fn diff_reports_added_and_removed_without_failing() {
+    let out = run_ocs(&[
+        "bench",
+        "diff",
+        "fixtures/quant_base.json",
+        "fixtures/quant_churn.json",
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let table = stdout(&out);
+    assert!(table.contains("+ new_path/fused/64x64"), "{table}");
+    assert!(table.contains("- ocs_transform/fused/256x256+32"), "{table}");
+}
+
+#[test]
+fn diff_threshold_flag_moves_the_gate() {
+    // the 1.75x injected regression passes under a generous cross-host
+    // tripwire (what CI's bench-gate job uses)
+    let out = run_ocs(&[
+        "bench",
+        "diff",
+        "fixtures/quant_base.json",
+        "fixtures/quant_regressed.json",
+        "--threshold",
+        "9.0",
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    // and the within-noise pair fails under a hair-trigger threshold
+    let strict = run_ocs(&[
+        "bench",
+        "diff",
+        "fixtures/quant_base.json",
+        "fixtures/quant_noise.json",
+        "--threshold",
+        "0.01",
+    ]);
+    assert!(!strict.status.success());
+}
+
+#[test]
+fn diff_summary_appends_markdown() {
+    let dir = std::env::temp_dir().join(format!("ocs_bench_summary_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let summary = dir.join("summary.md");
+    let out = run_ocs(&[
+        "bench",
+        "diff",
+        "fixtures/quant_base.json",
+        "fixtures/quant_regressed.json",
+        "--allow-regression",
+        "--summary",
+        summary.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let md = std::fs::read_to_string(&summary).unwrap();
+    assert!(md.contains("### bench diff: `quant`"), "{md}");
+    assert!(md.contains("| `perchan_quant/fused_t4/256x256` |"), "{md}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---- library-level agreement with the fixtures ---------------------------
+
+#[test]
+fn fixture_verdicts_match_the_library_diff() {
+    let base = BenchRecord::load(&records_dir().join("fixtures/quant_base.json")).unwrap();
+    let reg = BenchRecord::load(&records_dir().join("fixtures/quant_regressed.json")).unwrap();
+    let d = diff(&base, &reg, 0.25).unwrap();
+    assert!(d.has_regressions());
+    assert_eq!(d.regressions().count(), 1);
+    let r = d.regressions().next().unwrap();
+    assert_eq!(r.name, "perchan_quant/fused_t4/256x256");
+    assert!((r.factor - 1.75).abs() < 1e-9);
+    let within = d.rows.iter().filter(|r| r.verdict == Verdict::WithinNoise);
+    assert_eq!(within.count(), 2);
+}
