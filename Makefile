@@ -3,7 +3,7 @@
 
 CARGO_DIR := rust
 
-.PHONY: verify build test fmt lint artifacts serve-smoke bench-record clean
+.PHONY: verify build test fmt lint artifacts serve-smoke loadtest bench-record clean
 
 # Tier-1 gate: the exact command CI runs on every push.
 verify:
@@ -31,6 +31,15 @@ serve-smoke:
 	cd $(CARGO_DIR) && cargo run --release -- serve --sim \
 		--workers 2 --requests 128 --sweep 1,2 --json ../BENCH_serving.json
 
+# Closed-loop load harness over a two-tenant mix on the native integer
+# datapath — the canonical invocation CI's loadtest-smoke job runs.
+# Needs no artifacts. Emits BENCH_loadtest.json (CI gates on it).
+loadtest:
+	cd $(CARGO_DIR) && cargo run --release -- serve --loadtest \
+		--backend native --sim-free --workers 2 --clients 1,2 \
+		--requests 64 --tenants gold:1:8,bulk:3 \
+		--json ../BENCH_loadtest.json
+
 # Refresh the committed perf baselines under records/ (quick mode, small
 # shapes — the same settings CI's smoke jobs run, so `ocs bench diff`
 # compares like against like). Each record is then schema-checked.
@@ -42,9 +51,15 @@ bench-record:
 		--shapes small --no-assert --json ../records/BENCH_native.json
 	cd $(CARGO_DIR) && OCS_BENCH_QUICK=1 cargo run --release -- serve --sim \
 		--workers 2 --requests 128 --sweep 1,2 --json ../records/BENCH_serving.json
+	cd $(CARGO_DIR) && OCS_BENCH_QUICK=1 cargo run --release -- serve --loadtest \
+		--backend native --sim-free --workers 2 --clients 1,2 \
+		--requests 64 --tenants gold:1:8,bulk:3 \
+		--json ../records/BENCH_loadtest.json
 	cd $(CARGO_DIR) && cargo run --release -- bench check ../records/BENCH_quant.json --bench quant
 	cd $(CARGO_DIR) && cargo run --release -- bench check ../records/BENCH_native.json --bench native
 	cd $(CARGO_DIR) && cargo run --release -- bench check ../records/BENCH_serving.json --bench serving
+	cd $(CARGO_DIR) && cargo run --release -- bench check ../records/BENCH_loadtest.json --bench loadtest
+	cd $(CARGO_DIR) && cargo run --release -- bench history ../records
 
 clean:
 	cd $(CARGO_DIR) && cargo clean

@@ -23,7 +23,7 @@
 use std::path::PathBuf;
 
 use ocs::bench_record::BenchRecord;
-use ocs::bench_support::{CaseRecord, Runner};
+use ocs::bench_support::{BenchStats, CaseRecord, Runner};
 use ocs::clip::ClipMethod;
 use ocs::kernels::gemm::{self, PackedB};
 use ocs::kernels::pool;
@@ -126,23 +126,23 @@ fn record(
     name: &str,
     shape: String,
     threads: usize,
-    mean_ns: f64,
+    stats: &BenchStats,
     items: f64,
     serial_mean_ns: f64,
 ) {
-    let speedup = if mean_ns > 0.0 {
-        serial_mean_ns / mean_ns
+    let speedup = if stats.mean_ns > 0.0 {
+        serial_mean_ns / stats.mean_ns
     } else {
         0.0
     };
-    cases.push(CaseRecord {
-        name: name.to_string(),
-        shape,
+    cases.push(CaseRecord::from_stats(
+        name,
+        &shape,
         threads,
-        mean_ns,
-        melems_per_s: items / (mean_ns / 1e9) / 1e6,
-        speedup_vs_serial: speedup,
-    });
+        items / (stats.mean_ns / 1e9) / 1e6,
+        speedup,
+        stats,
+    ));
 }
 
 fn rand_i8(rng: &mut Rng, n: usize) -> Vec<i8> {
@@ -202,7 +202,7 @@ fn main() {
                 "i8_gemm/naive_serial",
                 shape.clone(),
                 1,
-                s.mean_ns,
+                &s,
                 macs,
                 s.mean_ns,
             );
@@ -219,7 +219,7 @@ fn main() {
                     &format!("i8_gemm/packed_t{t}"),
                     shape.clone(),
                     t,
-                    s.mean_ns,
+                    &s,
                     macs,
                     naive_ns,
                 );
@@ -248,7 +248,7 @@ fn main() {
                 "i8_gemm/pack_b",
                 shape.clone(),
                 1,
-                s.mean_ns,
+                &s,
                 (k * n) as f64,
                 s.mean_ns,
             );
@@ -287,7 +287,7 @@ fn main() {
                 "native_infer/float_b32",
                 shape.clone(),
                 1,
-                s.mean_ns,
+                &s,
                 32.0,
                 s.mean_ns,
             );
@@ -297,7 +297,7 @@ fn main() {
             std::hint::black_box(y.len());
         });
         if let (Some(s), Some(f_ns)) = (&istats, f_ns) {
-            record(&mut cases, "native_infer/int_b32", shape, 1, s.mean_ns, 32.0, f_ns);
+            record(&mut cases, "native_infer/int_b32", shape, 1, &s, 32.0, f_ns);
         }
     }
 

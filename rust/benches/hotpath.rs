@@ -28,7 +28,7 @@
 use std::path::PathBuf;
 
 use ocs::bench_record::BenchRecord;
-use ocs::bench_support::{CaseRecord, Runner};
+use ocs::bench_support::{BenchStats, CaseRecord, Runner};
 use ocs::clip::ClipMethod;
 use ocs::kernels::pool;
 use ocs::kernels::stats as kstats;
@@ -212,23 +212,23 @@ fn record(
     name: &str,
     shape: String,
     threads: usize,
-    mean_ns: f64,
+    stats: &BenchStats,
     items: f64,
     serial_mean_ns: f64,
 ) {
-    let speedup = if mean_ns > 0.0 {
-        serial_mean_ns / mean_ns
+    let speedup = if stats.mean_ns > 0.0 {
+        serial_mean_ns / stats.mean_ns
     } else {
         0.0
     };
-    cases.push(CaseRecord {
-        name: name.to_string(),
-        shape,
+    cases.push(CaseRecord::from_stats(
+        name,
+        &shape,
         threads,
-        mean_ns,
-        melems_per_s: items / (mean_ns / 1e9) / 1e6,
-        speedup_vs_serial: speedup,
-    });
+        items / (stats.mean_ns / 1e9) / 1e6,
+        speedup,
+        stats,
+    ));
 }
 
 fn main() {
@@ -287,7 +287,7 @@ fn main() {
                 "perchan_quant/old_serial",
                 shape.clone(),
                 1,
-                s.mean_ns,
+                &s,
                 items,
                 s.mean_ns,
             );
@@ -304,7 +304,7 @@ fn main() {
                     &format!("perchan_quant/fused_t{t}"),
                     shape.clone(),
                     t,
-                    s.mean_ns,
+                    &s,
                     items,
                     old_ns,
                 );
@@ -352,7 +352,7 @@ fn main() {
                 "calib_stats/old_serial",
                 shape.clone(),
                 1,
-                s.mean_ns,
+                &s,
                 items,
                 s.mean_ns,
             );
@@ -368,7 +368,7 @@ fn main() {
                     &format!("calib_stats/fused_t{t}"),
                     shape.clone(),
                     t,
-                    s.mean_ns,
+                    &s,
                     items,
                     old_ns,
                 );
@@ -393,7 +393,7 @@ fn main() {
                 "kl_sweep/stride1",
                 shape.clone(),
                 1,
-                s.mean_ns,
+                &s,
                 2048.0,
                 s.mean_ns,
             );
@@ -407,7 +407,7 @@ fn main() {
                 "kl_sweep/stride4",
                 shape.clone(),
                 1,
-                s.mean_ns,
+                &s,
                 2048.0,
                 s1_ns,
             );
@@ -447,7 +447,7 @@ fn main() {
                 "ocs_transform/old_generic",
                 shape.clone(),
                 1,
-                s.mean_ns,
+                &s,
                 items,
                 s.mean_ns,
             );
@@ -462,7 +462,7 @@ fn main() {
                 "ocs_transform/fused",
                 shape.clone(),
                 1,
-                s.mean_ns,
+                &s,
                 items,
                 old_ns,
             );

@@ -10,6 +10,15 @@
 //! * `factor < 1 / (1 + t)`  → [`Verdict::Improved`]
 //! * otherwise               → [`Verdict::WithinNoise`]
 //!
+//! The threshold is **per-case** when the baseline row carries a `mad`
+//! secondary (the harnesses record the median absolute deviation of
+//! their samples, in the primary metric's unit): the effective
+//! threshold for that case is `max(t, MAD_SIGMAS · mad / old)`. A
+//! genuinely noisy case (high measured spread) therefore stops
+//! tripping the gate on wobble, while tight cases keep the global
+//! bound — MAD can only *widen* a case's band, never tighten it below
+//! the CLI threshold, so cross-host tripwires stay safe.
+//!
 //! Cases present on only one side are reported as added/removed, never
 //! failed — CI runners have varying core counts, so thread-sweep rows
 //! legitimately come and go. Host or quick-mode mismatches likewise
@@ -22,6 +31,12 @@ use std::fmt::Write as _;
 use anyhow::{bail, Result};
 
 use super::BenchRecord;
+
+/// How many baseline MADs of drift count as noise. For a symmetric
+/// distribution ±3 MADs covers roughly what ±2 standard deviations
+/// would; wider would start hiding real regressions behind one noisy
+/// baseline run.
+pub const MAD_SIGMAS: f64 = 3.0;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Verdict {
@@ -49,6 +64,10 @@ pub struct DiffRow {
     pub unit: String,
     /// Direction-normalized: `> 1` is worse, `< 1` is better.
     pub factor: f64,
+    /// Effective noise threshold applied to this case: the global one,
+    /// widened to `MAD_SIGMAS · mad / old` when the baseline row
+    /// recorded a `mad` secondary larger than that.
+    pub threshold: f64,
     pub verdict: Verdict,
 }
 
@@ -112,9 +131,17 @@ pub fn diff(old: &BenchRecord, new: &BenchRecord, threshold: f64) -> Result<Diff
                 } else {
                     n.value / o.value
                 };
-                let verdict = if factor > 1.0 + threshold {
+                // per-case band: the baseline's own measured spread may
+                // widen (never tighten) the global threshold
+                let t_case = match o.extra.get("mad") {
+                    Some(m) if m.is_finite() && *m > 0.0 => {
+                        threshold.max(MAD_SIGMAS * m / o.value)
+                    }
+                    _ => threshold,
+                };
+                let verdict = if factor > 1.0 + t_case {
                     Verdict::Regressed
-                } else if factor < 1.0 / (1.0 + threshold) {
+                } else if factor < 1.0 / (1.0 + t_case) {
                     Verdict::Improved
                 } else {
                     Verdict::WithinNoise
@@ -125,6 +152,7 @@ pub fn diff(old: &BenchRecord, new: &BenchRecord, threshold: f64) -> Result<Diff
                     new: n.value,
                     unit: o.unit.clone(),
                     factor,
+                    threshold: t_case,
                     verdict,
                 });
             }
@@ -151,7 +179,7 @@ pub fn diff(old: &BenchRecord, new: &BenchRecord, threshold: f64) -> Result<Diff
     })
 }
 
-fn fmt_value(v: f64, unit: &str) -> String {
+pub(crate) fn fmt_value(v: f64, unit: &str) -> String {
     if unit == "ns" {
         crate::bench_support::fmt_ns(v)
     } else if v >= 100.0 {
@@ -193,12 +221,17 @@ impl Diff {
         for r in &self.rows {
             let _ = writeln!(
                 out,
-                "  {:<52} {:>14} {:>14} {:>7.2}x  {}",
+                "  {:<52} {:>14} {:>14} {:>7.2}x  {}{}",
                 r.name,
                 fmt_value(r.old, &r.unit),
                 fmt_value(r.new, &r.unit),
                 r.factor,
-                r.verdict.label()
+                r.verdict.label(),
+                if r.threshold > self.threshold {
+                    format!(" (mad band ±{:.0}%)", r.threshold * 100.0)
+                } else {
+                    String::new()
+                }
             );
         }
         for name in &self.added {
@@ -244,12 +277,17 @@ impl Diff {
         for r in &self.rows {
             let _ = writeln!(
                 out,
-                "| `{}` | {} | {} | {:.2}x | {} |",
+                "| `{}` | {} | {} | {:.2}x | {}{} |",
                 r.name,
                 fmt_value(r.old, &r.unit),
                 fmt_value(r.new, &r.unit),
                 r.factor,
-                r.verdict.label()
+                r.verdict.label(),
+                if r.threshold > self.threshold {
+                    format!(" (mad band ±{:.0}%)", r.threshold * 100.0)
+                } else {
+                    String::new()
+                }
             );
         }
         for name in &self.added {
@@ -313,6 +351,58 @@ mod tests {
         assert!((by("thr/d").factor - 100.0 / 60.0).abs() < 1e-9);
         assert!(d.has_regressions());
         assert_eq!(d.regressions().count(), 2);
+    }
+
+    #[test]
+    fn baseline_mad_widens_the_noise_band_per_case() {
+        let mut old = rec(
+            "t",
+            &[
+                ("wobbly", 100.0, "ns", false),
+                ("steady", 100.0, "ns", false),
+                ("thr/wobbly", 100.0, "req/s", true),
+            ],
+        );
+        // wobbly cases measured a wide spread: 3·20/100 = ±60% band
+        old.rows[0].extra.insert("mad".into(), 20.0);
+        old.rows[1].extra.insert("mad".into(), 0.5);
+        old.rows[2].extra.insert("mad".into(), 20.0);
+        let new = rec(
+            "t",
+            &[
+                ("wobbly", 135.0, "ns", false),     // 1.35x: past global, inside mad band
+                ("steady", 135.0, "ns", false),     // 1.35x: tight case still regresses
+                ("thr/wobbly", 70.0, "req/s", true), // 1.43x drop: inside mad band
+            ],
+        );
+        let d = diff(&old, &new, 0.25).unwrap();
+        let by = |n: &str| d.rows.iter().find(|r| r.name == n).unwrap();
+        assert_eq!(by("wobbly").verdict, Verdict::WithinNoise);
+        assert!((by("wobbly").threshold - 0.6).abs() < 1e-12);
+        assert_eq!(by("steady").verdict, Verdict::Regressed);
+        assert_eq!(by("steady").threshold, 0.25); // mad below global → global holds
+        assert_eq!(by("thr/wobbly").verdict, Verdict::WithinNoise);
+        assert_eq!(d.regressions().count(), 1);
+        // the widened band is visible in both reports
+        assert!(d.table().contains("mad band ±60%"), "{}", d.table());
+        assert!(d.markdown().contains("mad band ±60%"), "{}", d.markdown());
+    }
+
+    #[test]
+    fn mad_widens_improvement_band_too() {
+        // inside the widened band, a big apparent *improvement* is also
+        // just noise — the verdict must stay symmetric
+        let mut old = rec("t", &[("wobbly", 100.0, "ns", false)]);
+        old.rows[0].extra.insert("mad".into(), 20.0);
+        let new = rec("t", &[("wobbly", 65.0, "ns", false)]);
+        let d = diff(&old, &new, 0.25).unwrap();
+        assert_eq!(d.rows[0].verdict, Verdict::WithinNoise);
+        // and a bogus mad (non-finite / zero) falls back to the global
+        let mut bad = rec("t", &[("wobbly", 100.0, "ns", false)]);
+        bad.rows[0].extra.insert("mad".into(), 0.0);
+        let d2 = diff(&bad, &new, 0.25).unwrap();
+        assert_eq!(d2.rows[0].verdict, Verdict::Improved);
+        assert_eq!(d2.rows[0].threshold, 0.25);
     }
 
     #[test]

@@ -1,0 +1,265 @@
+//! Trajectory view over a directory of records — `ocs bench history DIR`.
+//!
+//! `bench diff` answers "did this PR regress?"; history answers "where
+//! has this metric been going?". Point it at a directory of record
+//! files (e.g. `records/`, or a `records/history/` folder of dated
+//! snapshots named `BENCH_quant_2026-08-01.json`) and it renders one
+//! table per bench tag: a row per case, a column per record file in
+//! filename order (date-stamped names therefore sort chronologically).
+//! Files that fail to parse — foreign schema versions, fixtures,
+//! stray JSON — are skipped and listed, never fatal: a history view
+//! over a mixed directory should show what it can.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::diff::fmt_value;
+use super::BenchRecord;
+
+/// One trajectory: every record in the directory sharing a bench tag.
+#[derive(Debug, Clone)]
+pub struct Group {
+    pub bench: String,
+    /// Column headers: file stems in filename order, `*` when quick.
+    pub columns: Vec<String>,
+    /// `(case name, unit, one cell per column)` — `None` where the
+    /// case is absent from that record.
+    pub rows: Vec<(String, String, Vec<Option<f64>>)>,
+}
+
+#[derive(Debug, Clone)]
+pub struct History {
+    pub groups: Vec<Group>,
+    /// Files in the directory that did not parse as bench records.
+    pub skipped: Vec<String>,
+}
+
+/// Load every `*.json` in `dir` (non-recursive) and group by bench tag.
+pub fn load_dir(dir: &Path) -> Result<History> {
+    let mut files: Vec<(String, BenchRecord)> = Vec::new();
+    let mut skipped = Vec::new();
+    let entries =
+        std::fs::read_dir(dir).with_context(|| format!("read directory {}", dir.display()))?;
+    let mut names: Vec<String> = entries
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().is_file())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.ends_with(".json"))
+        .collect();
+    names.sort();
+    for name in names {
+        match BenchRecord::load(&dir.join(&name)) {
+            Ok(rec) => files.push((name, rec)),
+            Err(_) => skipped.push(name),
+        }
+    }
+    if files.is_empty() {
+        bail!(
+            "no readable bench records in {} ({} file(s) skipped)",
+            dir.display(),
+            skipped.len()
+        );
+    }
+    // group by bench tag, preserving the per-tag filename order
+    let mut by_tag: BTreeMap<String, Vec<&(String, BenchRecord)>> = BTreeMap::new();
+    for f in &files {
+        by_tag.entry(f.1.bench.clone()).or_default().push(f);
+    }
+    let mut groups = Vec::new();
+    for (bench, recs) in by_tag {
+        let columns = recs
+            .iter()
+            .map(|(name, rec)| {
+                let stem = name.strip_suffix(".json").unwrap_or(name);
+                if rec.quick {
+                    format!("{stem}*")
+                } else {
+                    stem.to_string()
+                }
+            })
+            .collect();
+        // case order: first appearance across records in column order
+        let mut case_order: Vec<(String, String)> = Vec::new();
+        for (_, rec) in &recs {
+            for row in &rec.rows {
+                if !case_order.iter().any(|(n, _)| n == &row.name) {
+                    case_order.push((row.name.clone(), row.unit.clone()));
+                }
+            }
+        }
+        let rows = case_order
+            .into_iter()
+            .map(|(case, unit)| {
+                let cells = recs
+                    .iter()
+                    .map(|(_, rec)| rec.row(&case).map(|r| r.value))
+                    .collect();
+                (case, unit, cells)
+            })
+            .collect();
+        groups.push(Group {
+            bench,
+            columns,
+            rows,
+        });
+    }
+    Ok(History { groups, skipped })
+}
+
+impl History {
+    /// Plain-text tables, one per bench tag (what `ocs bench history`
+    /// prints).
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        for g in &self.groups {
+            let _ = writeln!(
+                out,
+                "bench history [{}]: {} record(s), {} case(s)",
+                g.bench,
+                g.columns.len(),
+                g.rows.len()
+            );
+            let _ = write!(out, "  {:<52}", "case");
+            for c in &g.columns {
+                let _ = write!(out, " {c:>20}");
+            }
+            out.push('\n');
+            for (case, unit, cells) in &g.rows {
+                let _ = write!(out, "  {case:<52}");
+                for cell in cells {
+                    match cell {
+                        Some(v) => {
+                            let _ = write!(out, " {:>20}", fmt_value(*v, unit));
+                        }
+                        None => {
+                            let _ = write!(out, " {:>20}", "—");
+                        }
+                    }
+                }
+                out.push('\n');
+            }
+        }
+        if self.groups.iter().any(|g| g.columns.iter().any(|c| c.ends_with('*'))) {
+            out.push_str("(* = record taken in quick mode)\n");
+        }
+        if !self.skipped.is_empty() {
+            let _ = writeln!(out, "skipped (not bench records): {}", self.skipped.join(", "));
+        }
+        out
+    }
+
+    /// GitHub-flavored markdown (CI appends this to the `bench-gate`
+    /// job summary next to the diff ratio tables).
+    pub fn markdown(&self) -> String {
+        let mut out = String::new();
+        for g in &self.groups {
+            let _ = writeln!(
+                out,
+                "### bench history: `{}` — {} record(s)\n",
+                g.bench,
+                g.columns.len()
+            );
+            let _ = write!(out, "| case |");
+            for c in &g.columns {
+                let _ = write!(out, " {c} |");
+            }
+            out.push('\n');
+            out.push_str("|---|");
+            out.push_str(&"---:|".repeat(g.columns.len()));
+            out.push('\n');
+            for (case, unit, cells) in &g.rows {
+                let _ = write!(out, "| `{case}` |");
+                for cell in cells {
+                    match cell {
+                        Some(v) => {
+                            let _ = write!(out, " {} |", fmt_value(*v, unit));
+                        }
+                        None => {
+                            let _ = write!(out, " — |");
+                        }
+                    }
+                }
+                out.push('\n');
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_record::Row;
+
+    fn rec(bench: &str, rows: &[(&str, f64)]) -> BenchRecord {
+        let mut r = BenchRecord::new(bench, "cpu", 4);
+        for (name, value) in rows {
+            r.rows.push(Row {
+                name: name.to_string(),
+                value: *value,
+                unit: "ns".to_string(),
+                higher_is_better: false,
+                extra: Default::default(),
+            });
+        }
+        r
+    }
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("ocs_hist_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn directory_renders_grouped_trajectories() {
+        let d = tmpdir("grouped");
+        rec("quant", &[("a", 100.0), ("b", 2.0e6)])
+            .write(&d.join("BENCH_quant_2026-01.json"))
+            .unwrap();
+        rec("quant", &[("a", 120.0), ("c", 5.0)])
+            .write(&d.join("BENCH_quant_2026-02.json"))
+            .unwrap();
+        rec("native", &[("g", 1.0)])
+            .write(&d.join("BENCH_native.json"))
+            .unwrap();
+        std::fs::write(d.join("junk.json"), "not a record").unwrap();
+        let h = load_dir(&d).unwrap();
+        assert_eq!(h.groups.len(), 2); // native, quant (tag-sorted)
+        assert_eq!(h.skipped, vec!["junk.json".to_string()]);
+        let quant = h.groups.iter().find(|g| g.bench == "quant").unwrap();
+        assert_eq!(
+            quant.columns,
+            vec!["BENCH_quant_2026-01", "BENCH_quant_2026-02"]
+        );
+        // case "a" in both columns, "b" only first, "c" only second
+        let a = quant.rows.iter().find(|r| r.0 == "a").unwrap();
+        assert_eq!(a.2, vec![Some(100.0), Some(120.0)]);
+        let b = quant.rows.iter().find(|r| r.0 == "b").unwrap();
+        assert_eq!(b.2, vec![Some(2.0e6), None]);
+        let t = h.table();
+        assert!(t.contains("bench history [quant]"), "{t}");
+        assert!(t.contains("2.000 ms"), "{t}");
+        assert!(t.contains("junk.json"), "{t}");
+        let md = h.markdown();
+        assert!(md.contains("### bench history: `native`"), "{md}");
+        assert!(md.contains("| `a` | 100.0 ns | 120.0 ns |"), "{md}");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn empty_or_missing_directory_errors() {
+        let d = tmpdir("empty");
+        assert!(load_dir(&d).is_err());
+        std::fs::write(d.join("junk.json"), "{}").unwrap();
+        let err = load_dir(&d).unwrap_err().to_string();
+        assert!(err.contains("no readable bench records"), "{err}");
+        assert!(load_dir(&d.join("does_not_exist")).is_err());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+}

@@ -1,8 +1,9 @@
 //! Versioned benchmark records — the measurement format every harness
 //! emits and every perf gate reads.
 //!
-//! The repo tracks three perf trajectories (`BENCH_quant`,
-//! `BENCH_native`, `BENCH_serving`). Before this module each harness
+//! The repo tracks four perf trajectories (`BENCH_quant`,
+//! `BENCH_native`, `BENCH_serving`, `BENCH_loadtest`). Before this
+//! module each harness
 //! wrote its own ad-hoc JSON that CI uploaded and nothing ever read
 //! back; the records could not be compared run-over-run, so the paper's
 //! "negligible overhead" claim (§3.5/§5.4) and every kernel PR were
@@ -29,6 +30,7 @@
 //! regenerated with `make bench-record`.
 
 pub mod diff;
+pub mod history;
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -36,7 +38,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::bench_support::CaseRecord;
-use crate::serve::SweepPoint;
+use crate::serve::{LoadPoint, SweepPoint};
 use crate::util::json::{self, Value};
 
 /// Bump when the record shape changes incompatibly; `parse` rejects
@@ -127,6 +129,12 @@ impl BenchRecord {
             extra.insert("threads".to_string(), c.threads as f64);
             extra.insert("melems_per_s".to_string(), c.melems_per_s);
             extra.insert("speedup_vs_serial".to_string(), c.speedup_vs_serial);
+            // dispersion secondaries in the primary metric's unit —
+            // `mad` is reserved: diff() derives a per-case noise
+            // threshold from the *baseline* row's measured spread
+            extra.insert("mad".to_string(), c.mad_ns);
+            extra.insert("min".to_string(), c.min_ns);
+            extra.insert("max".to_string(), c.max_ns);
             rec.rows.push(Row {
                 name: format!("{}/{}", c.name, c.shape),
                 value: c.mean_ns,
@@ -168,6 +176,61 @@ impl BenchRecord {
             rec.rows.push(Row {
                 name,
                 value: p.rps,
+                unit: "req/s".to_string(),
+                higher_is_better: true,
+                extra,
+            });
+        }
+        rec
+    }
+
+    /// Unify the closed-loop load harness (`BENCH_loadtest`): one row
+    /// per offered-load step (client concurrency), primary metric
+    /// sustained throughput, client-side latency percentiles and
+    /// per-tenant traffic split as secondaries, plus a final
+    /// `loadtest/saturation` row carrying the peak-throughput step.
+    pub fn from_loadtest(backend: &str, points: &[LoadPoint]) -> BenchRecord {
+        let mut rec = BenchRecord::new("loadtest", backend, crate::kernels::pool::available());
+        for p in points {
+            let base = format!("loadtest/c{}", p.clients);
+            // a sweep may legitimately revisit a client count; keep
+            // names unique so validate() and diff() stay well-defined
+            let mut name = base.clone();
+            let mut k = 2usize;
+            while rec.rows.iter().any(|r| r.name == name) {
+                name = format!("{base}#{k}");
+                k += 1;
+            }
+            let mut extra = BTreeMap::new();
+            extra.insert("clients".to_string(), p.clients as f64);
+            extra.insert("requests".to_string(), p.requests as f64);
+            extra.insert("ok".to_string(), p.ok as f64);
+            extra.insert("errors".to_string(), p.errors as f64);
+            extra.insert("secs".to_string(), p.secs);
+            extra.insert("mean_ms".to_string(), p.mean_ms);
+            extra.insert("p50_ms".to_string(), p.p50_ms);
+            extra.insert("p95_ms".to_string(), p.p95_ms);
+            extra.insert("p99_ms".to_string(), p.p99_ms);
+            extra.insert("rejected".to_string(), p.rejected as f64);
+            extra.insert("deadline_exceeded".to_string(), p.deadline_exceeded as f64);
+            for (tenant, ok, rejected) in &p.tenants {
+                extra.insert(format!("tenant_{tenant}_ok"), *ok as f64);
+                extra.insert(format!("tenant_{tenant}_rejected"), *rejected as f64);
+            }
+            rec.rows.push(Row {
+                name,
+                value: p.rps,
+                unit: "req/s".to_string(),
+                higher_is_better: true,
+                extra,
+            });
+        }
+        if let Some(sat) = points.iter().max_by(|a, b| a.rps.total_cmp(&b.rps)) {
+            let mut extra = BTreeMap::new();
+            extra.insert("clients".to_string(), sat.clients as f64);
+            rec.rows.push(Row {
+                name: "loadtest/saturation".to_string(),
+                value: sat.rps,
                 unit: "req/s".to_string(),
                 higher_is_better: true,
                 extra,
@@ -352,6 +415,9 @@ mod tests {
             mean_ns,
             melems_per_s: 100.0,
             speedup_vs_serial: speedup,
+            mad_ns: mean_ns * 0.05,
+            min_ns: mean_ns * 0.9,
+            max_ns: mean_ns * 1.3,
         }
     }
 
@@ -374,6 +440,9 @@ mod tests {
         assert!(!row.higher_is_better);
         assert_eq!(row.extra["threads"], 4.0);
         assert_eq!(row.extra["speedup_vs_serial"], 4.0);
+        assert_eq!(row.extra["mad"], 0.5e6 * 0.05);
+        assert_eq!(row.extra["min"], 0.5e6 * 0.9);
+        assert_eq!(row.extra["max"], 0.5e6 * 1.3);
     }
 
     #[test]
@@ -417,6 +486,48 @@ mod tests {
         assert!(w2.higher_is_better);
         assert_eq!(w2.value, 512.0);
         assert_eq!(w2.extra["p99_ms"], 2.0);
+    }
+
+    #[test]
+    fn roundtrip_from_loadtest() {
+        let point = |clients: usize, rps: f64| LoadPoint {
+            clients,
+            requests: 256,
+            ok: 250,
+            errors: 6,
+            secs: 1.0,
+            rps,
+            mean_ms: 2.0,
+            p50_ms: 1.5,
+            p95_ms: 4.0,
+            p99_ms: 8.0,
+            rejected: 6,
+            deadline_exceeded: 0,
+            tenants: vec![
+                ("default".to_string(), 120, 2),
+                ("gold".to_string(), 130, 4),
+            ],
+        };
+        let rec = BenchRecord::from_loadtest("sim", &[point(1, 100.0), point(4, 320.0)]);
+        rec.validate().unwrap();
+        let back = BenchRecord::parse(&rec.to_json()).unwrap();
+        assert_eq!(rec, back);
+        assert_eq!(back.bench, "loadtest");
+        let c4 = back.row("loadtest/c4").unwrap();
+        assert!(c4.higher_is_better);
+        assert_eq!(c4.value, 320.0);
+        assert_eq!(c4.unit, "req/s");
+        assert_eq!(c4.extra["p95_ms"], 4.0);
+        assert_eq!(c4.extra["tenant_gold_ok"], 130.0);
+        assert_eq!(c4.extra["tenant_default_rejected"], 2.0);
+        let sat = back.row("loadtest/saturation").unwrap();
+        assert_eq!(sat.value, 320.0);
+        assert_eq!(sat.extra["clients"], 4.0);
+        // revisited client counts stay unique
+        let rec = BenchRecord::from_loadtest("sim", &[point(2, 100.0), point(2, 101.0)]);
+        rec.validate().unwrap();
+        assert!(rec.row("loadtest/c2").is_some());
+        assert!(rec.row("loadtest/c2#2").is_some());
     }
 
     #[test]

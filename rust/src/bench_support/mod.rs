@@ -15,6 +15,11 @@ pub struct BenchStats {
     pub p95_ns: f64,
     pub min_ns: f64,
     pub max_ns: f64,
+    /// Median absolute deviation from the p50 — a robust per-case
+    /// noise width that one outlier sample cannot inflate (unlike
+    /// stddev). Records carry it so `bench diff` can widen its noise
+    /// threshold per case instead of applying one global number.
+    pub mad_ns: f64,
 }
 
 impl BenchStats {
@@ -139,14 +144,18 @@ impl Runner {
         }
         samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let p50 = percentile(&samples, 0.50);
+        let mut dev: Vec<f64> = samples.iter().map(|x| (x - p50).abs()).collect();
+        dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let stats = BenchStats {
             name: name.to_string(),
             iters,
             mean_ns: mean,
-            p50_ns: percentile(&samples, 0.50),
+            p50_ns: p50,
             p95_ns: percentile(&samples, 0.95),
             min_ns: samples[0],
             max_ns: *samples.last().unwrap(),
+            mad_ns: percentile(&dev, 0.50),
         };
         println!(
             "{:<44} {:>12} (p50 {:>12}, p95 {:>12}, min {:>12}, {} iters)",
@@ -199,6 +208,36 @@ pub struct CaseRecord {
     /// mean_ns(serial baseline of the group) / mean_ns(this variant);
     /// 1.0 for the baseline row itself.
     pub speedup_vs_serial: f64,
+    /// Dispersion secondaries (see [`BenchStats::mad_ns`]): the
+    /// record row carries these so `bench diff` can derive a per-case
+    /// noise threshold from the baseline's own measured spread.
+    pub mad_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl CaseRecord {
+    /// Fill name/shape/threads/speedup around measured stats.
+    pub fn from_stats(
+        name: &str,
+        shape: &str,
+        threads: usize,
+        melems_per_s: f64,
+        speedup_vs_serial: f64,
+        stats: &BenchStats,
+    ) -> CaseRecord {
+        CaseRecord {
+            name: name.to_string(),
+            shape: shape.to_string(),
+            threads,
+            mean_ns: stats.mean_ns,
+            melems_per_s,
+            speedup_vs_serial,
+            mad_ns: stats.mad_ns,
+            min_ns: stats.min_ns,
+            max_ns: stats.max_ns,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -224,6 +263,8 @@ mod tests {
         assert!(stats.min_ns <= stats.p50_ns);
         assert!(stats.p50_ns <= stats.p95_ns);
         assert!(stats.p95_ns <= stats.max_ns);
+        assert!(stats.mad_ns >= 0.0);
+        assert!(stats.mad_ns <= stats.max_ns - stats.min_ns);
         assert!(stats.iters >= MIN_ITERS);
         assert!(acc > 0 || acc == 0); // keep the accumulator alive
     }

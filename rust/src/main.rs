@@ -7,7 +7,8 @@
 //! ocs eval  --model <name> [...]    evaluate one quantization config
 //! ocs table --id all|1|2|3|4|5|6|fig1   regenerate paper tables/figures
 //! ocs serve --model <name>          dynamic-batching serving self-test
-//! ocs bench check|diff              validate / regression-gate benchmark records
+//! ocs serve --loadtest              closed-loop per-tenant load harness
+//! ocs bench check|diff|history      validate / gate / track benchmark records
 //! ```
 
 use std::sync::Arc;
@@ -22,10 +23,11 @@ use ocs::info;
 use ocs::model::store::WeightStore;
 use ocs::model::ModelSpec;
 use ocs::ocs::{OcsTarget, SplitMode};
-use ocs::pipeline::{self, PreparedCache, QuantConfig, QuantRecipe, ServeBackend};
+use ocs::pipeline::{self, PreparedCache, QuantConfig, QuantRecipe, ServeBackend, TenantSpec};
 use ocs::runtime::native::{native_calibrate, NativeEngine};
 use ocs::runtime::Engine;
-use ocs::serve::backend::NativeFactory;
+use ocs::serve::backend::{NativeFactory, PjrtFactory, SimFactory};
+use ocs::serve::TenantInit;
 use ocs::tables::TableCtx;
 use ocs::train::{self, data};
 
@@ -46,10 +48,13 @@ USAGE:
             [--max-batch N] [--max-wait-us US]
             [--sweep 1,2,4] [--json PATH]
             [--backend pjrt|sim|native] [--sim] [--sim-free]
+  ocs serve --loadtest [--tenants SPECS] [--clients 1,2,4,8]
+            [--requests N] [--json PATH] [--backend pjrt|sim|native]
   ocs bench check FILE [--bench TAG] [--require P1,P2,...]
             [--speedup-prefix P] [--min-speedup X]
   ocs bench diff OLD NEW [--threshold R] [--summary PATH]
             [--allow-regression]
+  ocs bench history DIR [--summary PATH]
 
 FLAGS:
   --artifacts DIR   artifact root (default: artifacts)
@@ -84,6 +89,18 @@ SERVE FLAGS:
   --prep-cache-cap N  bound the prepared-model LRU cache (default 64,
                     0 = unbounded; evictions are counted in the report)
 
+LOADTEST FLAGS (ocs serve --loadtest — closed-loop offered-load sweep
+over a tenant mix at a fixed --workers count; saturation = the peak-
+throughput step):
+  --tenants SPECS   extra tenants, comma-separated name[:weight[:wbits]]
+                    (e.g. 'gold:1:8,bulk:3'); the implicit 'default'
+                    tenant (weight 1, the pool recipe) always serves.
+                    TOML files: [[serve.tenant]] tables with name /
+                    weight / w_bits / a_bits / ocs_ratio keys
+  --clients LIST    offered-load sweep as client counts (default 1,2,4,8)
+  --requests N      total requests per step, split across the clients
+  --json PATH       BenchRecord output (default BENCH_loadtest.json)
+
 EVAL FLAGS:
   --backend B       pjrt (artifacts, default) or native: evaluate on the
                     native integer backend — real quantized arithmetic,
@@ -99,9 +116,13 @@ baselines live under records/, regenerate with `make bench-record`):
   --min-speedup X   ...whose best speedup_vs_serial exceeds X (default 1)
   --threshold R     diff: relative noise threshold (default 0.25; CI's
                     cross-host gate uses a far more generous tripwire)
-  --summary PATH    diff: append the markdown ratio table to PATH
+  --summary PATH    diff/history: append the markdown table to PATH
                     (CI points this at $GITHUB_STEP_SUMMARY)
   --allow-regression  diff: print the table but always exit 0
+
+  history DIR renders one trajectory table per bench tag over every
+  record in DIR (filename order; date-stamped snapshots sort
+  chronologically). Unreadable files are listed and skipped.
 ";
 
 fn main() {
@@ -349,9 +370,39 @@ fn cmd_bench(args: &Args) -> Result<()> {
     match args.positional.first().map(String::as_str) {
         Some("check") => bench_check(args),
         Some("diff") => bench_diff(args),
-        Some(other) => bail!("unknown bench subcommand '{other}' (check|diff)\n{USAGE}"),
-        None => bail!("usage: ocs bench check FILE | ocs bench diff OLD NEW\n{USAGE}"),
+        Some("history") => bench_history(args),
+        Some(other) => bail!("unknown bench subcommand '{other}' (check|diff|history)\n{USAGE}"),
+        None => bail!(
+            "usage: ocs bench check FILE | ocs bench diff OLD NEW | ocs bench history DIR\n{USAGE}"
+        ),
     }
+}
+
+/// `ocs bench history DIR`: the trajectory view — one table per bench
+/// tag over every record in DIR, optionally appended (as markdown) to
+/// a summary file. CI points --summary at $GITHUB_STEP_SUMMARY so the
+/// bench-gate job shows where each metric has been going, not just
+/// whether this PR moved it.
+fn bench_history(args: &Args) -> Result<()> {
+    let dir = std::path::Path::new(
+        args.positional
+            .get(1)
+            .map(String::as_str)
+            .context("usage: ocs bench history DIR [--summary PATH]")?,
+    );
+    let h = ocs::bench_record::history::load_dir(dir)?;
+    print!("{}", h.table());
+    if let Some(summary) = args.str("summary") {
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(summary)
+            .with_context(|| format!("open summary file {summary}"))?;
+        f.write_all(h.markdown().as_bytes())
+            .with_context(|| format!("append to summary file {summary}"))?;
+    }
+    Ok(())
 }
 
 fn bench_check(args: &Args) -> Result<()> {
@@ -447,6 +498,9 @@ fn bench_diff(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args, artifacts: &str) -> Result<()> {
     let requests: usize = args.parse_or("requests", 512)?;
     let serve_cfg = ocs::pipeline::ServeConfig::from_args(args)?;
+    if args.bool_or("loadtest", false) {
+        return cmd_loadtest(args, artifacts, &serve_cfg, requests);
+    }
     let mut sweep = Vec::new();
     for s in args.list("sweep") {
         match s.parse::<usize>() {
@@ -491,4 +545,84 @@ fn cmd_serve(args: &Args, artifacts: &str) -> Result<()> {
             json_out.as_deref(),
         ),
     }
+}
+
+/// `ocs serve --loadtest`: closed-loop offered-load sweep over a tenant
+/// mix. Fixed worker count (from --workers), client concurrency swept
+/// via --clients; every step emits client-side latency percentiles and
+/// the run ends with the saturation point plus a versioned
+/// BENCH_loadtest.json record (CI's loadtest-smoke job gates on it).
+fn cmd_loadtest(
+    args: &Args,
+    artifacts: &str,
+    serve_cfg: &ocs::pipeline::ServeConfig,
+    requests: usize,
+) -> Result<()> {
+    let mut clients = Vec::new();
+    for s in args.list("clients") {
+        match s.parse::<usize>() {
+            Ok(c) if c > 0 => clients.push(c),
+            _ => bail!("--clients: cannot parse '{s}' as a client count (need >= 1)"),
+        }
+    }
+    let json_out = std::path::PathBuf::from(args.str_or("json", "BENCH_loadtest.json"));
+    let backend = ServeBackend::from_args(args)?;
+    // tenant recipes lower with the backend's activation default, like
+    // the pool recipe itself
+    let default_a_bits = if backend == ServeBackend::Native { 8 } else { 0 };
+    let tenants: Vec<TenantInit> = TenantSpec::from_args(args)?
+        .iter()
+        .map(|t| TenantInit {
+            name: t.name.clone(),
+            weight: t.weight,
+            recipe: Some(t.to_recipe(default_a_bits)),
+        })
+        .collect();
+    match backend {
+        ServeBackend::Sim => {
+            ocs::serve::loadtest(
+                Arc::new(SimFactory::default()),
+                serve_cfg,
+                &tenants,
+                &clients,
+                requests,
+                Some(&json_out),
+            )?;
+        }
+        ServeBackend::Native => {
+            let recipe = serve_recipe(args, 8)?;
+            let factory = if args.bool_or("sim-free", false) {
+                NativeFactory::synthetic(recipe)?
+            } else {
+                NativeFactory::from_artifacts(artifacts, args.req("model")?, recipe)?
+            };
+            let cache = factory.cache.clone();
+            ocs::serve::loadtest(
+                Arc::new(factory),
+                serve_cfg,
+                &tenants,
+                &clients,
+                requests,
+                Some(&json_out),
+            )?;
+            println!("{}", cache.stats_line());
+        }
+        ServeBackend::Pjrt => {
+            let factory = Arc::new(PjrtFactory {
+                artifacts_dir: artifacts.to_string(),
+                model: args.req("model")?.to_string(),
+                recipe: serve_recipe(args, 0)?,
+                max_batch: serve_cfg.max_batch,
+            });
+            ocs::serve::loadtest(
+                factory,
+                serve_cfg,
+                &tenants,
+                &clients,
+                requests,
+                Some(&json_out),
+            )?;
+        }
+    }
+    Ok(())
 }

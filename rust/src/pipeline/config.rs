@@ -383,6 +383,136 @@ impl ServeConfig {
     }
 }
 
+/// One serving tenant: a named traffic class with its own quantization
+/// policy and a share of the synthetic load-test mix. The pool always
+/// has an implicit tenant 0 named `default` (the `--w-bits`/`--a-bits`
+/// serve recipe); these specs describe the *additional* tenants.
+///
+/// Parsed from `--tenants name[:weight[:wbits]]` (comma-separated) or
+/// TOML `[[serve.tenant]]` tables with keys `name`, `weight`, `w_bits`,
+/// `a_bits`, `ocs_ratio`. Absent overrides inherit the serve defaults.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    pub name: String,
+    /// Relative share of the load-test traffic mix (default 1.0).
+    pub weight: f64,
+    /// Weight bits override (None = the serve default, 5).
+    pub w_bits: Option<u32>,
+    /// Activation bits override (None = the backend's serve default;
+    /// 0 = force float activations).
+    pub a_bits: Option<u32>,
+    /// OCS expansion-ratio override (None = the serve default, 0.02).
+    pub ocs_ratio: Option<f64>,
+}
+
+impl TenantSpec {
+    fn validate(tenants: &[TenantSpec]) -> Result<()> {
+        for (i, t) in tenants.iter().enumerate() {
+            if t.name.is_empty() {
+                bail!("tenant {i}: name must be non-empty");
+            }
+            if t.name == "default" {
+                bail!("tenant name 'default' is reserved for the implicit tenant 0");
+            }
+            if !(t.weight > 0.0 && t.weight.is_finite()) {
+                bail!("tenant '{}': weight must be finite and > 0, got {}", t.name, t.weight);
+            }
+            if tenants[..i].iter().any(|o| o.name == t.name) {
+                bail!("duplicate tenant name '{}'", t.name);
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse `--tenants a,b:2,c:1:4` — per entry `name[:weight[:wbits]]`.
+    pub fn from_args(args: &Args) -> Result<Vec<TenantSpec>> {
+        let mut out = Vec::new();
+        for entry in args.list("tenants") {
+            let mut parts = entry.split(':');
+            let name = parts.next().unwrap_or("").to_string();
+            let weight = match parts.next() {
+                None | Some("") => 1.0,
+                Some(w) => w
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--tenants '{entry}': bad weight '{w}'"))?,
+            };
+            let w_bits = match parts.next() {
+                None | Some("") => None,
+                Some(b) => Some(b.parse().map_err(|_| {
+                    anyhow::anyhow!("--tenants '{entry}': bad w_bits '{b}'")
+                })?),
+            };
+            if parts.next().is_some() {
+                bail!("--tenants '{entry}': expected name[:weight[:wbits]]");
+            }
+            out.push(TenantSpec {
+                name,
+                weight,
+                w_bits,
+                a_bits: None,
+                ocs_ratio: None,
+            });
+        }
+        Self::validate(&out)?;
+        Ok(out)
+    }
+
+    /// Parse `[[serve.tenant]]` tables from a TOML config.
+    pub fn from_toml(c: &Config, section: &str) -> Result<Vec<TenantSpec>> {
+        let base = if section.is_empty() {
+            "tenant".to_string()
+        } else {
+            format!("{section}.tenant")
+        };
+        let mut out = Vec::new();
+        for i in 0..c.array_len(&base) {
+            let key = |k: &str| format!("{base}.{i}.{k}");
+            let name = match c.get(&key("name")) {
+                Some(_) => c.str(&key("name"))?.to_string(),
+                None => bail!("[[{base}]] #{i}: missing required key 'name'"),
+            };
+            let opt_bits = |k: &str| -> Result<Option<u32>> {
+                match c.get(&key(k)) {
+                    None => Ok(None),
+                    Some(_) => {
+                        let v = c.int(&key(k))?;
+                        if !(0..=32).contains(&v) {
+                            bail!("tenant '{name}': {k} must be in 0..=32, got {v}");
+                        }
+                        Ok(Some(v as u32))
+                    }
+                }
+            };
+            out.push(TenantSpec {
+                weight: c.float_or(&key("weight"), 1.0),
+                w_bits: opt_bits("w_bits")?,
+                a_bits: opt_bits("a_bits")?,
+                ocs_ratio: c.get(&key("ocs_ratio")).map(|_| c.float(&key("ocs_ratio"))).transpose()?,
+                name,
+            });
+        }
+        Self::validate(&out)?;
+        Ok(out)
+    }
+
+    /// Lower to this tenant's serving recipe. The baseline matches the
+    /// default serve recipe (5-bit MSE-clipped weights, OCS r=0.02);
+    /// `default_a_bits` is the backend's activation default (8 for
+    /// native, 0 for PJRT) — see `serve_recipe` in the binary.
+    pub fn to_recipe(&self, default_a_bits: u32) -> super::QuantRecipe {
+        let mut cfg = QuantConfig::weights_only(
+            self.w_bits.unwrap_or(5),
+            ClipMethod::Mse,
+            self.ocs_ratio.unwrap_or(0.02),
+        );
+        let ab = self.a_bits.unwrap_or(default_a_bits);
+        if ab > 0 {
+            cfg.a_bits = Some(ab);
+        }
+        cfg.to_recipe()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -519,6 +649,82 @@ deadline_ms = 100
             "serve"
         )
         .is_err());
+    }
+
+    #[test]
+    fn tenants_from_args() {
+        assert!(TenantSpec::from_args(&args("serve")).unwrap().is_empty());
+        let ts = TenantSpec::from_args(&args("serve --tenants gold,bulk:3,edge:1:4")).unwrap();
+        assert_eq!(ts.len(), 3);
+        assert_eq!(ts[0], TenantSpec {
+            name: "gold".into(),
+            weight: 1.0,
+            w_bits: None,
+            a_bits: None,
+            ocs_ratio: None,
+        });
+        assert_eq!((ts[1].name.as_str(), ts[1].weight), ("bulk", 3.0));
+        assert_eq!((ts[2].weight, ts[2].w_bits), (1.0, Some(4)));
+        // malformed entries and reserved/duplicate names are rejected
+        assert!(TenantSpec::from_args(&args("serve --tenants a:fast")).is_err());
+        assert!(TenantSpec::from_args(&args("serve --tenants a:1:4:9")).is_err());
+        assert!(TenantSpec::from_args(&args("serve --tenants a,a")).is_err());
+        assert!(TenantSpec::from_args(&args("serve --tenants default")).is_err());
+        assert!(TenantSpec::from_args(&args("serve --tenants a:0")).is_err());
+        assert!(TenantSpec::from_args(&args("serve --tenants a:-1")).is_err());
+    }
+
+    #[test]
+    fn tenants_from_toml() {
+        let c = Config::parse(
+            r#"
+[serve]
+workers = 2
+
+[[serve.tenant]]
+name = "gold"
+w_bits = 8
+ocs_ratio = 0.05
+
+[[serve.tenant]]
+name = "bulk"
+weight = 3.0
+w_bits = 4
+a_bits = 0
+"#,
+        )
+        .unwrap();
+        let ts = TenantSpec::from_toml(&c, "serve").unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!((ts[0].name.as_str(), ts[0].w_bits, ts[0].ocs_ratio), ("gold", Some(8), Some(0.05)));
+        assert_eq!((ts[1].weight, ts[1].w_bits, ts[1].a_bits), (3.0, Some(4), Some(0)));
+        // no tables at all -> empty
+        assert!(TenantSpec::from_toml(&Config::parse("").unwrap(), "serve").unwrap().is_empty());
+        // a table without a name is rejected
+        let bad = Config::parse("[[serve.tenant]]\nweight = 2.0\n").unwrap();
+        assert!(TenantSpec::from_toml(&bad, "serve").is_err());
+        let oob = Config::parse("[[serve.tenant]]\nname = \"x\"\nw_bits = 99\n").unwrap();
+        assert!(TenantSpec::from_toml(&oob, "serve").is_err());
+    }
+
+    #[test]
+    fn tenant_recipe_lowering() {
+        let t = TenantSpec {
+            name: "gold".into(),
+            weight: 1.0,
+            w_bits: Some(8),
+            a_bits: None,
+            ocs_ratio: None,
+        };
+        // native default a8; label carries the override
+        let l = t.to_recipe(8).label();
+        assert!(l.contains("w8:mse") && l.contains("a8"), "{l}");
+        // pjrt default: float activations
+        let l = t.to_recipe(0).label();
+        assert!(l.contains("af"), "{l}");
+        // explicit a_bits = 0 forces float even on native
+        let t0 = TenantSpec { a_bits: Some(0), ..t };
+        assert!(t0.to_recipe(8).label().contains("af"));
     }
 
     #[test]

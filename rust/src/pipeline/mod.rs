@@ -56,7 +56,7 @@ pub mod config;
 pub mod recipe;
 
 pub use cache::PreparedCache;
-pub use config::{PerfConfig, QuantConfig, ServeBackend, ServeConfig};
+pub use config::{PerfConfig, QuantConfig, ServeBackend, ServeConfig, TenantSpec};
 pub use recipe::{LayerMatch, LayerOverride, LayerPolicy, LayerPos, LayerRecipe, QuantRecipe};
 
 use std::sync::Arc;

@@ -36,7 +36,7 @@ pub mod native;
 pub(crate) mod stub;
 
 pub use hlo_cache::HloTextCache;
-pub use native::{NativeEngine, NativeExecutable};
+pub use native::{NativeEngine, NativeExecutable, Scratch};
 
 #[cfg(not(feature = "pjrt"))]
 use self::stub as xla;

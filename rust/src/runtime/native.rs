@@ -276,8 +276,19 @@ impl NativeExecutable {
 
     /// Forward pass: `(B, ...)` input → `(B, classes)` logits. Any
     /// batch size — the native path has no artifact batch grid.
+    /// Allocates fresh scratch buffers; hot loops should hold a
+    /// [`Scratch`] and call [`NativeExecutable::infer_with`] instead.
     pub fn infer(&self, x: &TensorF) -> Result<TensorF> {
-        self.run(x, None)
+        self.run(x, None, &mut Scratch::default())
+    }
+
+    /// Forward pass reusing caller-owned [`Scratch`] arenas for the
+    /// per-layer temporaries (channel expansion, activation quant,
+    /// im2col patches). Bit-identical to [`NativeExecutable::infer`];
+    /// the buffers grow to the model's high-water mark and stay, so
+    /// steady-state serving stops allocating them per request.
+    pub fn infer_with(&self, x: &TensorF, scratch: &mut Scratch) -> Result<TensorF> {
+        self.run(x, None, scratch)
     }
 
     /// Forward pass that also records each hooked layer's *input*
@@ -286,7 +297,7 @@ impl NativeExecutable {
     /// executable, where hooks are identity.
     pub fn infer_probe(&self, x: &TensorF) -> Result<(TensorF, BTreeMap<String, TensorF>)> {
         let mut probe = BTreeMap::new();
-        let out = self.run(x, Some(&mut probe))?;
+        let out = self.run(x, Some(&mut probe), &mut Scratch::default())?;
         Ok((out, probe))
     }
 
@@ -294,6 +305,7 @@ impl NativeExecutable {
         &self,
         x: &TensorF,
         mut probe: Option<&mut BTreeMap<String, TensorF>>,
+        scratch: &mut Scratch,
     ) -> Result<TensorF> {
         if x.rank() < 2 || x.shape()[0] == 0 {
             bail!("native infer: batch input required, got shape {:?}", x.shape());
@@ -311,7 +323,7 @@ impl NativeExecutable {
                             p.insert(name.clone(), xin.clone());
                         }
                     }
-                    self.apply_layer(pl, xin)
+                    self.apply_layer(pl, xin, scratch)
                         .with_context(|| format!("layer {name}"))?
                 }
                 Node::Relu { src } => node_val(&vals, *src)?.map(|v| v.max(0.0)),
@@ -354,32 +366,33 @@ impl NativeExecutable {
     }
 
     /// One parametric layer: channel_dup → activation quant → GEMM
-    /// (integer or f32 body), conv via im2col.
-    fn apply_layer(&self, pl: &PackedLayer, x: &TensorF) -> Result<TensorF> {
+    /// (integer or f32 body), conv via im2col. All temporaries live in
+    /// `scratch`.
+    fn apply_layer(&self, pl: &PackedLayer, x: &TensorF, scratch: &mut Scratch) -> Result<TensorF> {
         match pl.kind {
-            LayerKind::Fc => self.fc(pl, x),
-            LayerKind::Conv => self.conv(pl, x),
+            LayerKind::Fc => self.fc(pl, x, scratch),
+            LayerKind::Conv => self.conv(pl, x, scratch),
             LayerKind::Embed => bail!("embed layers are artifact-only"),
         }
     }
 
-    fn fc(&self, pl: &PackedLayer, x: &TensorF) -> Result<TensorF> {
+    fn fc(&self, pl: &PackedLayer, x: &TensorF, s: &mut Scratch) -> Result<TensorF> {
         if x.rank() != 2 {
             bail!("fc expects (B, cin), got {:?}", x.shape());
         }
         let b = x.shape()[0];
-        let xe = expand_channels(x, pl)?;
+        let (xe, _) = expand_channels_into(x, pl, &mut s.expand)?;
         let out = match &pl.body {
             LayerBody::Int {
                 wq, dequant, bias, ..
             } => {
-                let q = quantize_acts(xe.data(), pl.adelta, pl.aqmax);
-                gemm::gemm_i8_dequant(&q, wq, b, dequant, bias, self.threads)
+                quantize_acts_into(xe, pl.adelta, pl.aqmax, &mut s.qacts);
+                gemm::gemm_i8_dequant(&s.qacts, wq, b, dequant, bias, self.threads)
             }
             LayerBody::Float { w, bias } => {
-                let a = fake_quant_acts(xe, pl.adelta, pl.aqmax);
+                fake_quant_into(xe, pl.adelta, pl.aqmax, &mut s.facts);
                 gemm::gemm_f32(
-                    a.data(),
+                    &s.facts,
                     w,
                     b,
                     pl.gemm_k(),
@@ -392,32 +405,31 @@ impl NativeExecutable {
         Ok(TensorF::from_vec(&[b, pl.cout], out)?)
     }
 
-    fn conv(&self, pl: &PackedLayer, x: &TensorF) -> Result<TensorF> {
+    fn conv(&self, pl: &PackedLayer, x: &TensorF, s: &mut Scratch) -> Result<TensorF> {
         if x.rank() != 4 {
             bail!("conv expects (B, H, W, C), got {:?}", x.shape());
         }
-        let xe = expand_channels(x, pl)?;
-        let (bsz, h, w) = (xe.shape()[0], xe.shape()[1], xe.shape()[2]);
-        let c = xe.shape()[3];
-        let (k, s) = (pl.ksize, pl.stride);
-        let (oh, ow) = (h.div_ceil(s), w.div_ceil(s));
-        let pad_h = ((oh - 1) * s + k).saturating_sub(h);
-        let pad_w = ((ow - 1) * s + k).saturating_sub(w);
+        let (bsz, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+        let (xe, c) = expand_channels_into(x, pl, &mut s.expand)?;
+        let (k, st) = (pl.ksize, pl.stride);
+        let (oh, ow) = (h.div_ceil(st), w.div_ceil(st));
+        let pad_h = ((oh - 1) * st + k).saturating_sub(h);
+        let pad_w = ((ow - 1) * st + k).saturating_sub(w);
         let (pt, plft) = (pad_h / 2, pad_w / 2);
         let m = bsz * oh * ow;
         let out = match &pl.body {
             LayerBody::Int {
                 wq, dequant, bias, ..
             } => {
-                let q = quantize_acts(xe.data(), pl.adelta, pl.aqmax);
-                let cols = im2col(&q, bsz, h, w, c, k, s, pt, plft, oh, ow);
-                gemm::gemm_i8_dequant(&cols, wq, m, dequant, bias, self.threads)
+                quantize_acts_into(xe, pl.adelta, pl.aqmax, &mut s.qacts);
+                im2col_into(&s.qacts, bsz, h, w, c, k, st, pt, plft, oh, ow, &mut s.icols);
+                gemm::gemm_i8_dequant(&s.icols, wq, m, dequant, bias, self.threads)
             }
             LayerBody::Float { w: wt, bias } => {
-                let a = fake_quant_acts(xe, pl.adelta, pl.aqmax);
-                let cols = im2col(a.data(), bsz, h, w, c, k, s, pt, plft, oh, ow);
+                fake_quant_into(xe, pl.adelta, pl.aqmax, &mut s.facts);
+                im2col_into(&s.facts, bsz, h, w, c, k, st, pt, plft, oh, ow, &mut s.fcols);
                 gemm::gemm_f32(
-                    &cols,
+                    &s.fcols,
                     wt,
                     m,
                     pl.gemm_k(),
@@ -431,15 +443,48 @@ impl NativeExecutable {
     }
 }
 
+/// Reusable per-worker scratch arenas for the native forward pass.
+///
+/// A forward needs several large temporaries — the `channel_dup`
+/// expansion, the quantized activation grid, the im2col patch matrix —
+/// that used to be allocated fresh per layer per request. A serve
+/// worker owns one `Scratch` and threads it through
+/// [`NativeExecutable::infer_with`], so steady-state serving does not
+/// allocate these buffers at all: they grow to the model's high-water
+/// mark on the first pass and are reused after that. Every `_into`
+/// fill clears and fully (re)initializes the region it uses, so
+/// results are bit-identical to the allocating
+/// [`NativeExecutable::infer`] path (asserted in tests; stale contents
+/// can never leak into a later forward).
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// `channel_dup` expanded activations.
+    expand: Vec<f32>,
+    /// Integer-grid activations feeding the packed i8 GEMM.
+    qacts: Vec<i8>,
+    /// Fake-quantized f32 activations (float-body layers).
+    facts: Vec<f32>,
+    /// im2col patch matrix, integer body.
+    icols: Vec<i8>,
+    /// im2col patch matrix, f32 body.
+    fcols: Vec<f32>,
+}
+
 fn node_val(vals: &[Option<TensorF>], i: usize) -> Result<&TensorF> {
     vals.get(i)
         .and_then(|v| v.as_ref())
         .context("graph node referenced before evaluation")
 }
 
-/// `channel_dup` on the trailing axis: `(… , cin)` → `(… , cin_eff)`.
-/// Pass-through clone for unhooked layers.
-fn expand_channels(x: &TensorF, pl: &PackedLayer) -> Result<TensorF> {
+/// `channel_dup` on the trailing axis into a reusable arena:
+/// `(… , cin)` → `(… , cin_eff)`. Returns the activation slice and its
+/// trailing channel count; unhooked layers borrow straight from `x`
+/// (no copy at all, where the allocating path used to clone).
+fn expand_channels_into<'a>(
+    x: &'a TensorF,
+    pl: &PackedLayer,
+    buf: &'a mut Vec<f32>,
+) -> Result<(&'a [f32], usize)> {
     let c = *x.shape().last().context("rank >= 1")?;
     if c != pl.cin {
         bail!(
@@ -449,49 +494,62 @@ fn expand_channels(x: &TensorF, pl: &PackedLayer) -> Result<TensorF> {
         );
     }
     if !pl.hooked {
-        return Ok(x.clone());
+        return Ok((x.data(), c));
     }
     let ce = pl.cin_eff;
     let rows = x.len() / c.max(1);
-    let mut out = vec![0.0f32; rows * ce];
+    buf.clear();
+    buf.resize(rows * ce, 0.0);
     for r in 0..rows {
         let xr = &x.data()[r * c..(r + 1) * c];
-        let or = &mut out[r * ce..(r + 1) * ce];
+        let or = &mut buf[r * ce..(r + 1) * ce];
         for j in 0..ce {
             or[j] = xr[pl.idx[j] as usize] * pl.dscale[j] + pl.dbias[j];
         }
     }
-    let mut shape = x.shape().to_vec();
-    *shape.last_mut().unwrap() = ce;
-    Ok(TensorF::from_vec(&shape, out)?)
+    Ok((buf.as_slice(), ce))
 }
 
 /// Quantize activations straight to their grid integers (the values
 /// Eq. 1 fake-quant would dequantize back): `clamp(Q(x/Δ), ±aqmax)`.
-fn quantize_acts(xs: &[f32], adelta: f32, aqmax: f32) -> Vec<i8> {
+fn quantize_acts_into(xs: &[f32], adelta: f32, aqmax: f32, out: &mut Vec<i8>) {
+    out.clear();
     if adelta <= 0.0 {
-        return vec![0i8; xs.len()];
+        out.resize(xs.len(), 0);
+        return;
     }
-    xs.iter()
-        .map(|&x| round_half_up(x / adelta).clamp(-aqmax, aqmax) as i8)
-        .collect()
+    out.extend(
+        xs.iter()
+            .map(|&x| round_half_up(x / adelta).clamp(-aqmax, aqmax) as i8),
+    );
+}
+
+/// Allocating wrapper around [`quantize_acts_into`] (tests).
+#[cfg(test)]
+fn quantize_acts(xs: &[f32], adelta: f32, aqmax: f32) -> Vec<i8> {
+    let mut out = Vec::new();
+    quantize_acts_into(xs, adelta, aqmax, &mut out);
+    out
 }
 
 /// Artifact-exact f32 fake-quant for the f32 body (`aqmax <= 0`
-/// bypasses, as in the Pallas kernel).
-fn fake_quant_acts(mut x: TensorF, adelta: f32, aqmax: f32) -> TensorF {
+/// bypasses, as in the Pallas kernel), copied into a reusable arena.
+fn fake_quant_into(xs: &[f32], adelta: f32, aqmax: f32, out: &mut Vec<f32>) {
+    out.clear();
+    out.extend_from_slice(xs);
     if aqmax > 0.0 {
-        crate::quant::fake_quant_slice(x.data_mut(), adelta, aqmax);
+        crate::quant::fake_quant_slice(out, adelta, aqmax);
     }
-    x
 }
 
-/// im2col for SAME-padded NHWC conv: row `(b, oy, ox)` holds the
-/// `k*k*c` patch in `(ky, kx, c)` order — exactly the HWIO weight
-/// layout, so the conv is one GEMM. Out-of-image taps stay `T::default()`
-/// (zero — identical in integer and f32 space).
+/// im2col for SAME-padded NHWC conv into a reusable arena: row
+/// `(b, oy, ox)` holds the `k*k*c` patch in `(ky, kx, c)` order —
+/// exactly the HWIO weight layout, so the conv is one GEMM.
+/// Out-of-image taps stay `T::default()` (zero — identical in integer
+/// and f32 space); the clear + resize below re-zeroes the whole
+/// buffer, so padding taps from a previous forward can never leak in.
 #[allow(clippy::too_many_arguments)]
-fn im2col<T: Copy + Default>(
+fn im2col_into<T: Copy + Default>(
     x: &[T],
     bsz: usize,
     h: usize,
@@ -503,9 +561,11 @@ fn im2col<T: Copy + Default>(
     pad_left: usize,
     oh: usize,
     ow: usize,
-) -> Vec<T> {
+    out: &mut Vec<T>,
+) {
     let kk = k * k * c;
-    let mut out = vec![T::default(); bsz * oh * ow * kk];
+    out.clear();
+    out.resize(bsz * oh * ow * kk, T::default());
     let mut row = 0usize;
     for b in 0..bsz {
         for oy in 0..oh {
@@ -529,7 +589,6 @@ fn im2col<T: Copy + Default>(
             }
         }
     }
-    out
 }
 
 /// SAME-padded max-pool over `(B, H, W, C)`; padding taps are -inf
@@ -855,6 +914,80 @@ mod tests {
     }
 
     #[test]
+    fn scratch_reuse_bit_identical_to_allocating_path() {
+        let (spec, ws) = synthetic_mlp(6);
+        let images = small_images(16, 7);
+        let calib = native_calibrate(&spec, &ws, &images, 8).unwrap();
+        let cfg = QuantConfig {
+            w_bits: Some(4),
+            a_bits: Some(8),
+            ocs_ratio: 0.1,
+            ..QuantConfig::float()
+        };
+        let prep =
+            pipeline::prepare_recipe(&spec, &ws, Some(&calib), &cfg.to_recipe()).unwrap();
+        let exe = NativeExecutable::build(&spec, &prep).unwrap();
+        // one arena reused across growing AND shrinking batches: stale
+        // high-water contents must never show through
+        let mut s = Scratch::default();
+        for (i, b) in [3usize, 1, 9, 2].into_iter().enumerate() {
+            let x = small_images(b, 20 + i as u64);
+            let fresh = exe.infer(&x).unwrap();
+            let reused = exe.infer_with(&x, &mut s).unwrap();
+            let fb: Vec<u32> = fresh.data().iter().map(|v| v.to_bits()).collect();
+            let rb: Vec<u32> = reused.data().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(fb, rb, "batch {b}");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_rezeroes_im2col_padding() {
+        // a conv whose SAME padding taps must be zero: run a forward
+        // with large-magnitude activations to dirty the arena, then a
+        // second forward and demand bitwise equality with a fresh one
+        let mut rng = Rng::new(31);
+        let (h, w, cin, cout, k, s) = (5usize, 5usize, 2usize, 3usize, 3usize, 1usize);
+        let wt = rng.normal_vec(k * k * cin * cout);
+        let bias = rng.normal_vec(cout);
+        let pl = PackedLayer {
+            name: "c".into(),
+            kind: LayerKind::Conv,
+            ksize: k,
+            stride: s,
+            cin,
+            cin_eff: cin,
+            cout,
+            hooked: false,
+            idx: vec![],
+            dscale: vec![],
+            dbias: vec![],
+            adelta: 1.0,
+            aqmax: -1.0,
+            body: LayerBody::Float { w: wt, bias },
+        };
+        let exe = NativeExecutable {
+            graph: NativeGraph::new(),
+            packed: PackedModel {
+                model: "conv-test".into(),
+                layers: BTreeMap::new(),
+                int_layers: 0,
+                float_layers: 1,
+            },
+            threads: 1,
+        };
+        let hot: Vec<f32> = rng.normal_vec(2 * h * w * cin).iter().map(|v| v * 1e6).collect();
+        let dirty = TensorF::from_vec(&[2, h, w, cin], hot).unwrap();
+        let x = TensorF::from_vec(&[1, h, w, cin], rng.normal_vec(h * w * cin)).unwrap();
+        let mut arena = Scratch::default();
+        exe.conv(&pl, &dirty, &mut arena).unwrap();
+        let reused = exe.conv(&pl, &x, &mut arena).unwrap();
+        let fresh = exe.conv(&pl, &x, &mut Scratch::default()).unwrap();
+        let fb: Vec<u32> = fresh.data().iter().map(|v| v.to_bits()).collect();
+        let rb: Vec<u32> = reused.data().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(fb, rb);
+    }
+
+    #[test]
     fn engine_caches_by_fingerprint() {
         let (spec, ws) = synthetic_mlp(9);
         let engine = NativeEngine::new(spec.clone());
@@ -934,7 +1067,7 @@ mod tests {
             },
             threads: 1,
         };
-        let got = exe.conv(&pl, &x).unwrap();
+        let got = exe.conv(&pl, &x, &mut Scratch::default()).unwrap();
         // direct SAME conv reference
         let (oh, ow) = (h.div_ceil(s), w.div_ceil(s));
         assert_eq!(got.shape(), &[2, oh, ow, cout]);

@@ -34,7 +34,17 @@
 //! down. The default implementation refuses (backends that hold no
 //! prep have nothing to swap); `PjrtWorker` and `QuantSimWorker`
 //! rebuild their prepared inputs through the cache.
+//!
+//! Tenant routing: the worker loop partitions every pull into
+//! single-tenant batches and executes them through
+//! [`WorkerEngine::infer_tenant`] with a [`TenantCtx`] naming the
+//! tenant and its current recipe. Recipe-aware backends
+//! (`QuantSimWorker`, `NativeWorker`) keep one prep per tenant, built
+//! lazily on the tenant's first request through the shared
+//! [`PreparedCache`]; [`WorkerEngine::swap_tenant`] rebuilds exactly
+//! one tenant's prep, leaving every other tenant undisturbed.
 
+use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -48,6 +58,19 @@ use crate::pipeline::{self, PreparedCache, PreparedModel, QuantRecipe};
 use crate::runtime::{Engine, Input, Inputs};
 use crate::tensor::TensorF;
 
+/// Per-tenant view the worker loop hands to engines: the tenant's
+/// stable id (its index in the pool's tenant table), its name (logs
+/// only), and its *current* recipe. `recipe` is `None` for tenant 0 —
+/// the default tenant serves whatever the factory built (including any
+/// pool-wide hot-swap applied through [`WorkerEngine::swap`]) — and for
+/// backends that carry no per-tenant recipes.
+#[derive(Debug)]
+pub struct TenantCtx<'a> {
+    pub id: usize,
+    pub name: &'a str,
+    pub recipe: Option<&'a QuantRecipe>,
+}
+
 /// One worker's engine. Built and used on that worker's thread only; the
 /// trait object never crosses threads, so it need not be `Send`.
 pub trait WorkerEngine {
@@ -55,6 +78,18 @@ pub trait WorkerEngine {
     /// logits of shape `(m, classes)` with `m >= n`; callers ignore the
     /// padding rows beyond `n`.
     fn infer(&mut self, batch: &TensorF) -> Result<TensorF>;
+
+    /// Run one forward pass for tenant `t` (batches are always
+    /// single-tenant — the worker loop partitions mixed pulls). The
+    /// default ignores the tenant and serves the pool recipe: backends
+    /// without per-tenant state still route, meter, and admission-control
+    /// per tenant, they just execute everything on one prep. Recipe-aware
+    /// backends ([`QuantSimWorker`], [`NativeWorker`]) build and cache a
+    /// prep per tenant lazily, on that tenant's first request.
+    fn infer_tenant(&mut self, t: &TenantCtx, batch: &TensorF) -> Result<TensorF> {
+        let _ = t;
+        self.infer(batch)
+    }
 
     /// Re-prepare this worker's quantization pipeline under `recipe`
     /// without rebuilding the engine. Called by the worker loop between
@@ -65,6 +100,20 @@ pub trait WorkerEngine {
     fn swap(&mut self, recipe: &QuantRecipe) -> Result<()> {
         let _ = recipe;
         bail!("this backend does not support recipe hot-swap")
+    }
+
+    /// Apply a published per-tenant recipe swap. Tenant 0 is the
+    /// pool-wide swap ([`WorkerEngine::swap`]); for other tenants the
+    /// default succeeds as a no-op — a backend with no per-tenant state
+    /// has nothing to rebuild, and one with *lazy* per-tenant state
+    /// picks the new recipe up from the [`TenantCtx`] on the tenant's
+    /// next request. Only eager rebuilds of existing state can fail; on
+    /// error the worker keeps the tenant's old prep.
+    fn swap_tenant(&mut self, t: &TenantCtx, recipe: &QuantRecipe) -> Result<()> {
+        if t.id == 0 {
+            return self.swap(recipe);
+        }
+        Ok(())
     }
 }
 
@@ -307,6 +356,7 @@ impl EngineFactory for QuantSimFactory {
             cache: self.cache.clone(),
             classes: self.spec.num_classes,
             wsig: weight_signature(prep.as_ref()),
+            tenant_wsigs: BTreeMap::new(),
         }))
     }
 
@@ -322,10 +372,13 @@ struct QuantSimWorker {
     cache: Arc<PreparedCache>,
     classes: usize,
     wsig: f32,
+    /// Per-tenant signatures, built lazily on a tenant's first request
+    /// (tenant id -> signature of its prepared weights).
+    tenant_wsigs: BTreeMap<usize, f32>,
 }
 
-impl WorkerEngine for QuantSimWorker {
-    fn infer(&mut self, batch: &TensorF) -> Result<TensorF> {
+impl QuantSimWorker {
+    fn logits(&self, batch: &TensorF, wsig: f32) -> Result<TensorF> {
         let n = batch.shape().first().copied().unwrap_or(0);
         if n == 0 || batch.len() % n != 0 {
             bail!("quant-sim backend: bad batch shape {:?}", batch.shape());
@@ -335,17 +388,57 @@ impl WorkerEngine for QuantSimWorker {
         for i in 0..n {
             let s: f32 = batch.data()[i * row..(i + 1) * row].iter().sum();
             for c in 0..self.classes {
-                data.push(s + self.wsig + c as f32);
+                data.push(s + wsig + c as f32);
             }
         }
         Ok(TensorF::from_vec(&[n, self.classes], data)?)
     }
 
-    fn swap(&mut self, recipe: &QuantRecipe) -> Result<()> {
+    fn prepare_sig(&self, recipe: &QuantRecipe) -> Result<f32> {
         let prep = self
             .cache
             .get_or_prepare(&self.spec, &self.ws, self.calib.as_deref(), recipe)?;
-        self.wsig = weight_signature(prep.as_ref());
+        Ok(weight_signature(prep.as_ref()))
+    }
+}
+
+impl WorkerEngine for QuantSimWorker {
+    fn infer(&mut self, batch: &TensorF) -> Result<TensorF> {
+        self.logits(batch, self.wsig)
+    }
+
+    fn infer_tenant(&mut self, t: &TenantCtx, batch: &TensorF) -> Result<TensorF> {
+        let recipe = match (t.id, t.recipe) {
+            (0, _) | (_, None) => return self.infer(batch),
+            (_, Some(r)) => r,
+        };
+        let wsig = match self.tenant_wsigs.get(&t.id) {
+            Some(w) => *w,
+            None => {
+                let w = self.prepare_sig(recipe)?;
+                self.tenant_wsigs.insert(t.id, w);
+                crate::debugln!("quant-sim prep for tenant {} built on first request", t.name);
+                w
+            }
+        };
+        self.logits(batch, wsig)
+    }
+
+    fn swap(&mut self, recipe: &QuantRecipe) -> Result<()> {
+        self.wsig = self.prepare_sig(recipe)?;
+        Ok(())
+    }
+
+    fn swap_tenant(&mut self, t: &TenantCtx, recipe: &QuantRecipe) -> Result<()> {
+        if t.id == 0 {
+            return self.swap(recipe);
+        }
+        // eager rebuild only where state exists; a failure keeps the
+        // tenant's old prep, and untouched tenants build lazily later
+        if self.tenant_wsigs.contains_key(&t.id) {
+            let w = self.prepare_sig(recipe)?;
+            self.tenant_wsigs.insert(t.id, w);
+        }
         Ok(())
     }
 }
@@ -467,6 +560,8 @@ impl EngineFactory for NativeFactory {
             cache: self.cache.clone(),
             gemm_threads: self.gemm_threads,
             exe,
+            tenant_exes: BTreeMap::new(),
+            scratch: crate::runtime::Scratch::default(),
         }))
     }
 
@@ -483,15 +578,23 @@ struct NativeWorker {
     calib: Arc<Mutex<Option<Arc<Calibration>>>>,
     cache: Arc<PreparedCache>,
     gemm_threads: usize,
+    /// Tenant 0's executable (the pool recipe).
     exe: crate::runtime::native::NativeExecutable,
+    /// Per-tenant executables, built lazily on a tenant's first request
+    /// so cold tenants cost nothing; the *prepared models* behind them
+    /// still come from the shared [`PreparedCache`], so N workers pay
+    /// one prepare per tenant recipe (each worker re-lowers the packed
+    /// weights, which is the cheap half).
+    tenant_exes: BTreeMap<usize, crate::runtime::native::NativeExecutable>,
+    /// Worker-owned im2col / activation-quant / packing arenas, shared
+    /// by every executable this worker runs (tenant 0 and all tenant
+    /// overrides serve the same model shapes, so one high-water mark
+    /// covers them all). Bit-identical to the allocating path.
+    scratch: crate::runtime::Scratch,
 }
 
-impl WorkerEngine for NativeWorker {
-    fn infer(&mut self, batch: &TensorF) -> Result<TensorF> {
-        self.exe.infer(batch)
-    }
-
-    fn swap(&mut self, recipe: &QuantRecipe) -> Result<()> {
+impl NativeWorker {
+    fn build_exe(&self, recipe: &QuantRecipe) -> Result<crate::runtime::native::NativeExecutable> {
         let calib = if recipe.needs_calibration(&self.spec) {
             Some(native_calibration(&self.calib, &self.spec, &self.ws)?)
         } else {
@@ -500,8 +603,44 @@ impl WorkerEngine for NativeWorker {
         let prep = self
             .cache
             .get_or_prepare(&self.spec, &self.ws, calib.as_deref(), recipe)?;
-        self.exe = crate::runtime::native::NativeExecutable::build(&self.spec, &prep)?
-            .with_threads(self.gemm_threads);
+        Ok(crate::runtime::native::NativeExecutable::build(&self.spec, &prep)?
+            .with_threads(self.gemm_threads))
+    }
+}
+
+impl WorkerEngine for NativeWorker {
+    fn infer(&mut self, batch: &TensorF) -> Result<TensorF> {
+        self.exe.infer_with(batch, &mut self.scratch)
+    }
+
+    fn infer_tenant(&mut self, t: &TenantCtx, batch: &TensorF) -> Result<TensorF> {
+        let recipe = match (t.id, t.recipe) {
+            (0, _) | (_, None) => return self.infer(batch),
+            (_, Some(r)) => r,
+        };
+        if !self.tenant_exes.contains_key(&t.id) {
+            let exe = self.build_exe(recipe)?;
+            crate::debugln!("native prep for tenant {} built on first request", t.name);
+            self.tenant_exes.insert(t.id, exe);
+        }
+        self.tenant_exes[&t.id].infer_with(batch, &mut self.scratch)
+    }
+
+    fn swap(&mut self, recipe: &QuantRecipe) -> Result<()> {
+        self.exe = self.build_exe(recipe)?;
+        Ok(())
+    }
+
+    fn swap_tenant(&mut self, t: &TenantCtx, recipe: &QuantRecipe) -> Result<()> {
+        if t.id == 0 {
+            return self.swap(recipe);
+        }
+        // rebuild eagerly only if this worker already serves the tenant;
+        // on failure the old executable keeps serving
+        if self.tenant_exes.contains_key(&t.id) {
+            let exe = self.build_exe(recipe)?;
+            self.tenant_exes.insert(t.id, exe);
+        }
         Ok(())
     }
 }
@@ -626,6 +765,54 @@ mod tests {
         assert_eq!(w.infer(&x).unwrap().data(), a.data());
         assert_eq!(f.cache.misses(), 2, "swap-back re-lowers from the cache");
         assert!(f.cache.hits() >= 1);
+    }
+
+    #[test]
+    fn tenants_get_their_own_preps_lazily() {
+        let cache = Arc::new(PreparedCache::new());
+        let r4 = QuantConfig::weights_only(4, ClipMethod::None, 0.0).to_recipe();
+        let r8 = QuantConfig::weights_only(8, ClipMethod::Mse, 0.1).to_recipe();
+        let f = qsim(r4.clone(), cache.clone());
+        let mut w = f.build(0).unwrap();
+        let x = TensorF::from_vec(&[1, 3], vec![0.5, 0.25, 0.25]).unwrap();
+        let base = w.infer(&x).unwrap();
+        // a recipe-less tenant ctx serves the default prep, no extra prepare
+        let t_none = TenantCtx { id: 3, name: "plain", recipe: None };
+        assert_eq!(w.infer_tenant(&t_none, &x).unwrap().data(), base.data());
+        assert_eq!(cache.misses(), 1);
+        // a recipe-carrying tenant builds its prep on first request only
+        let t8 = TenantCtx { id: 1, name: "gold", recipe: Some(&r8) };
+        let gold = w.infer_tenant(&t8, &x).unwrap();
+        assert_ne!(gold.data(), base.data(), "tenant prep must be observable");
+        assert_eq!(cache.misses(), 2);
+        assert_eq!(w.infer_tenant(&t8, &x).unwrap().data(), gold.data());
+        assert_eq!(cache.misses(), 2, "second request reuses the tenant prep");
+        // swapping a tenant this worker never served is free (lazy pickup)
+        let cold = TenantCtx { id: 2, name: "cold", recipe: Some(&r4) };
+        w.swap_tenant(&cold, &r4).unwrap();
+        assert_eq!(cache.misses(), 2);
+        // swapping the served tenant rebuilds it; tenant 0 is untouched
+        w.swap_tenant(&t8, &r4).unwrap();
+        assert_eq!(w.infer_tenant(&t8, &x).unwrap().data(), base.data());
+        assert_eq!(w.infer(&x).unwrap().data(), base.data());
+        assert_eq!(cache.misses(), 2, "swap to an already-prepared recipe hits");
+    }
+
+    #[test]
+    fn native_worker_serves_per_tenant_executables() {
+        let r5 = QuantConfig::weights_only(5, ClipMethod::Mse, 0.05).to_recipe();
+        let f = NativeFactory::synthetic(r5).unwrap();
+        let mut w = f.build(0).unwrap();
+        let x = crate::train::data::synth_images(2, 5).x;
+        let a = w.infer(&x).unwrap();
+        let rf = QuantRecipe::float();
+        let t = TenantCtx { id: 1, name: "gold", recipe: Some(&rf) };
+        let g = w.infer_tenant(&t, &x).unwrap();
+        assert_ne!(a.data(), g.data(), "tenant recipe must be observable");
+        // tenant 0 keeps serving the pool recipe, bit-identical
+        let t0 = TenantCtx { id: 0, name: "default", recipe: None };
+        assert_eq!(w.infer_tenant(&t0, &x).unwrap().data(), a.data());
+        assert_eq!(f.cache.misses(), 2, "one prepare per distinct tenant recipe");
     }
 
     #[test]

@@ -23,7 +23,10 @@ const BASE_US: u64 = 64;
 /// Exponential batch-size buckets: <=1, <=2, <=4, ..., <=2048.
 const BATCH_BUCKETS: usize = 12;
 
-/// One worker's counters. Written by exactly one thread, read by any.
+/// One shard's counters. Worker shards are written by exactly one
+/// thread; the per-tenant shards in [`PoolMetrics`] reuse this struct
+/// with multiple writers — every counter is a plain atomic, so that is
+/// merely contended, never racy. Read by any thread.
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub requests: AtomicU64,
@@ -265,7 +268,9 @@ impl Snapshot {
     }
 }
 
-/// Pool-level metrics: one [`Metrics`] shard per worker, router-side
+/// Pool-level metrics: one [`Metrics`] shard per worker, one per
+/// tenant (an orthogonal cut of the same traffic — worker shards sum to
+/// the pool aggregate, tenant shards attribute it), router-side
 /// admission counters, and shared queue-depth gauges.
 #[derive(Debug)]
 pub struct PoolMetrics {
@@ -274,15 +279,38 @@ pub struct PoolMetrics {
     /// dispatch, the worker decrements on response. Doubles as the
     /// least-outstanding-work dispatch key.
     outstanding: Vec<Arc<AtomicUsize>>,
+    /// Per-tenant request/latency/deadline shards (index = tenant id;
+    /// 0 = the default tenant). Written by every worker.
+    tenants: Vec<Arc<Metrics>>,
+    tenant_names: Vec<String>,
+    /// Router-side per-tenant rejection counters.
+    tenant_rejected: Vec<AtomicU64>,
+    /// Requests that named a tenant the pool does not know (served on
+    /// the default recipe, counted under tenant 0).
+    pub unknown_tenant: AtomicU64,
     pub dispatched: AtomicU64,
     pub rejected: AtomicU64,
 }
 
 impl PoolMetrics {
     pub fn new(n: usize) -> PoolMetrics {
+        Self::with_tenants(n, vec!["default".to_string()])
+    }
+
+    /// `tenant_names[0]` is the default tenant every request without an
+    /// explicit (or with an unknown) tenant key lands on.
+    pub fn with_tenants(n: usize, tenant_names: Vec<String>) -> PoolMetrics {
+        assert!(!tenant_names.is_empty(), "tenant 0 (default) is required");
         PoolMetrics {
             workers: (0..n).map(|_| Arc::new(Metrics::default())).collect(),
             outstanding: (0..n).map(|_| Arc::new(AtomicUsize::new(0))).collect(),
+            tenants: tenant_names
+                .iter()
+                .map(|_| Arc::new(Metrics::default()))
+                .collect(),
+            tenant_rejected: tenant_names.iter().map(|_| AtomicU64::new(0)).collect(),
+            tenant_names,
+            unknown_tenant: AtomicU64::new(0),
             dispatched: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
         }
@@ -290,6 +318,34 @@ impl PoolMetrics {
 
     pub fn worker_count(&self) -> usize {
         self.workers.len()
+    }
+
+    pub fn tenant_count(&self) -> usize {
+        self.tenants.len()
+    }
+
+    pub fn tenant(&self, id: usize) -> &Arc<Metrics> {
+        &self.tenants[id]
+    }
+
+    pub fn tenant_name(&self, id: usize) -> &str {
+        &self.tenant_names[id]
+    }
+
+    pub fn record_tenant_rejected(&self, id: usize) {
+        self.tenant_rejected[id].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn tenant_rejected_count(&self, id: usize) -> u64 {
+        self.tenant_rejected[id].load(Ordering::Relaxed)
+    }
+
+    pub fn record_unknown_tenant(&self) {
+        self.unknown_tenant.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn unknown_tenant_count(&self) -> u64 {
+        self.unknown_tenant.load(Ordering::Relaxed)
     }
 
     pub fn worker(&self, id: usize) -> &Arc<Metrics> {
@@ -348,6 +404,22 @@ impl PoolMetrics {
         if self.workers.len() > 1 {
             for (i, w) in self.workers.iter().enumerate() {
                 out.push_str(&format!("\n  worker {i}: {}", w.snapshot().report_line()));
+            }
+        }
+        if self.tenants.len() > 1 {
+            for (id, t) in self.tenants.iter().enumerate() {
+                out.push_str(&format!(
+                    "\n  tenant {}: {} | rejected {}",
+                    self.tenant_names[id],
+                    t.snapshot().report_line(),
+                    self.tenant_rejected_count(id),
+                ));
+            }
+            if self.unknown_tenant_count() > 0 {
+                out.push_str(&format!(
+                    "\n  unknown tenants -> default: {}",
+                    self.unknown_tenant_count()
+                ));
             }
         }
         out
@@ -448,6 +520,40 @@ mod tests {
         assert!(agg.report_line().contains("recipe swaps 2 (1 failed)"));
         // silent when no swap ever happened
         assert!(!Metrics::default().snapshot().report_line().contains("recipe swaps"));
+    }
+
+    #[test]
+    fn tenant_shards_attribute_traffic() {
+        let pool =
+            PoolMetrics::with_tenants(2, vec!["default".into(), "gold".into(), "bulk".into()]);
+        assert_eq!(pool.tenant_count(), 3);
+        assert_eq!(pool.tenant_name(1), "gold");
+        // worker 0 serves one default and one gold request; worker 1
+        // serves a bulk request — tenant shards cut across workers
+        pool.worker(0).record_request(Duration::from_micros(100));
+        pool.tenant(0).record_request(Duration::from_micros(100));
+        pool.worker(0).record_request(Duration::from_micros(200));
+        pool.tenant(1).record_request(Duration::from_micros(200));
+        pool.worker(1).record_request(Duration::from_micros(900));
+        pool.tenant(2).record_request(Duration::from_micros(900));
+        pool.tenant(2).record_deadline_exceeded();
+        pool.record_tenant_rejected(2);
+        pool.record_unknown_tenant();
+        // the pool aggregate (worker shards) is unchanged by tenant shards
+        assert_eq!(pool.aggregate().requests, 3);
+        assert_eq!(pool.tenant(1).snapshot().requests, 1);
+        assert_eq!(pool.tenant(2).snapshot().deadline_exceeded, 1);
+        assert_eq!(pool.tenant_rejected_count(2), 1);
+        assert_eq!(pool.tenant_rejected_count(0), 0);
+        assert_eq!(pool.unknown_tenant_count(), 1);
+        let r = pool.report();
+        assert!(r.contains("tenant gold:"), "{r}");
+        assert!(r.contains("tenant bulk:"), "{r}");
+        assert!(r.contains("unknown tenants -> default: 1"), "{r}");
+        // a single-tenant pool keeps the old report shape
+        let plain = PoolMetrics::new(1);
+        assert_eq!(plain.tenant_count(), 1);
+        assert!(!plain.report().contains("tenant "), "{}", plain.report());
     }
 
     #[test]

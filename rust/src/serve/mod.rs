@@ -51,11 +51,33 @@
 //! fails keeps serving the old prep and counts a `swap_error`. Poll
 //! [`Server::swaps_applied`] to observe roll-out across the pool.
 //!
+//! ## Tenants
+//!
+//! Requests may carry a tenant key ([`Client::infer_tenant`]). The
+//! pool's [`TenantTable`] maps each name to a tenant id whose recipe
+//! the engines serve: recipe-aware backends build one prep per tenant
+//! (lazily, through the shared [`crate::pipeline::PreparedCache`]),
+//! workers partition every pull into single-tenant batches, and every
+//! tenant gets its own request/reject/deadline counters and latency
+//! histogram in [`PoolMetrics`] alongside the pool aggregates. Unknown
+//! tenant keys fall back to the default recipe (tenant 0, counted);
+//! [`Server::swap_tenant_recipe`] hot-swaps one tenant without
+//! disturbing the others.
+//!
 //! ## Shutdown
 //!
 //! [`Server::shutdown`] flips the stop flag: the router rejects new
 //! work, each worker drains everything already queued (every admitted
 //! job gets a response), then exits; `shutdown` joins them all.
+//!
+//! ## Load testing
+//!
+//! [`loadtest`] drives a *closed-loop* offered-load sweep over a tenant
+//! mix: each step pins the worker count and raises the client
+//! concurrency, clients measure their own end-to-end latencies, and the
+//! sweep reports saturation throughput plus per-step latency
+//! percentiles as a versioned `BENCH_loadtest.json` record
+//! (`ocs serve --loadtest`).
 
 pub mod backend;
 pub mod metrics;
@@ -77,19 +99,128 @@ use backend::{EngineFactory, PjrtFactory, SimFactory, WorkerEngine};
 pub use crate::pipeline::ServeConfig;
 pub use metrics::{Metrics, PoolMetrics, Snapshot};
 
-/// The published-recipe slot workers poll between batches. The epoch
-/// counter tells a worker *that* something changed without holding the
-/// lock; the recipe itself is read under it.
-#[derive(Default)]
-struct SwapSlot {
+/// Initial description of one additional tenant for
+/// [`TenantTable::new`]: its routing key, its share of the load-test
+/// traffic mix, and (on recipe-carrying backends) its own
+/// [`QuantRecipe`].
+#[derive(Debug, Clone)]
+pub struct TenantInit {
+    pub name: String,
+    pub weight: f64,
+    pub recipe: Option<QuantRecipe>,
+}
+
+/// One tenant's slot: identity plus the published-recipe cell its
+/// workers poll between batches. The epoch counter tells a worker
+/// *that* something changed without holding the lock; the recipe
+/// itself is read under it.
+struct TenantSlot {
+    name: String,
+    weight: f64,
     epoch: AtomicU64,
+    /// The tenant's *current* recipe. Tenant 0 keeps `None` until a
+    /// pool-wide swap is published — the default tenant serves whatever
+    /// the factory built.
     recipe: Mutex<Option<QuantRecipe>>,
+}
+
+/// The pool's tenant registry. Tenant 0 is always `default` — the
+/// recipe the factory was built with, and the fallback for requests
+/// naming an unknown tenant; additional tenants carry their own recipe
+/// and a weight used by the load-test traffic mix. Each entry doubles
+/// as a per-tenant hot-swap slot, so swapping one tenant never
+/// disturbs the others.
+pub struct TenantTable {
+    slots: Vec<TenantSlot>,
+}
+
+impl TenantTable {
+    /// The single-tenant table every non-tenant entry point uses.
+    pub fn default_only() -> TenantTable {
+        Self::new(&[]).expect("the empty tenant list is always valid")
+    }
+
+    /// `default` plus one slot per entry of `extra` (tenant ids follow
+    /// the given order, starting at 1).
+    pub fn new(extra: &[TenantInit]) -> Result<TenantTable> {
+        let mut slots = vec![TenantSlot {
+            name: "default".to_string(),
+            weight: 1.0,
+            epoch: AtomicU64::new(0),
+            recipe: Mutex::new(None),
+        }];
+        for (i, t) in extra.iter().enumerate() {
+            if t.name.is_empty() {
+                bail!("tenant {i}: name must be non-empty");
+            }
+            if !(t.weight > 0.0 && t.weight.is_finite()) {
+                bail!("tenant '{}': weight must be finite and > 0", t.name);
+            }
+            if slots.iter().any(|s| s.name == t.name) {
+                bail!("duplicate tenant name '{}'", t.name);
+            }
+            slots.push(TenantSlot {
+                name: t.name.clone(),
+                weight: t.weight,
+                epoch: AtomicU64::new(0),
+                recipe: Mutex::new(t.recipe.clone()),
+            });
+        }
+        Ok(TenantTable { slots })
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // tenant 0 always exists
+    }
+
+    pub fn name(&self, id: usize) -> &str {
+        &self.slots[id].name
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.slots.iter().map(|s| s.name.clone()).collect()
+    }
+
+    pub fn weight(&self, id: usize) -> f64 {
+        self.slots[id].weight
+    }
+
+    pub fn id_of(&self, name: &str) -> Option<usize> {
+        self.slots.iter().position(|s| s.name == name)
+    }
+
+    /// Publish a new recipe to tenant `id`'s slot (the epoch bump
+    /// happens under the lock, so a worker that sees the new epoch
+    /// always reads at least this recipe).
+    fn publish(&self, id: usize, recipe: QuantRecipe) {
+        let slot = &self.slots[id];
+        let mut guard = slot.recipe.lock().expect("tenant slot poisoned");
+        *guard = Some(recipe);
+        slot.epoch.fetch_add(1, Ordering::Release);
+    }
+
+    fn epoch(&self, id: usize) -> u64 {
+        self.slots[id].epoch.load(Ordering::Acquire)
+    }
+
+    /// Consistent `(epoch, recipe)` snapshot, read under the lock.
+    fn read(&self, id: usize) -> (u64, Option<QuantRecipe>) {
+        let slot = &self.slots[id];
+        let guard = slot.recipe.lock().expect("tenant slot poisoned");
+        (slot.epoch.load(Ordering::Acquire), guard.clone())
+    }
 }
 
 /// One queued inference request.
 struct Job {
     /// (1, H, W, C) image.
     x: TensorF,
+    /// Tenant id (index into the pool's [`TenantTable`]).
+    tenant: usize,
     enqueued: Instant,
     deadline: Option<Instant>,
     resp: SyncSender<Result<Vec<f32>>>,
@@ -109,13 +240,14 @@ struct Router {
     deadline: Option<Duration>,
     stop: Arc<AtomicBool>,
     metrics: Arc<PoolMetrics>,
+    tenants: Arc<TenantTable>,
 }
 
 impl Router {
     /// Admit a request: pick the least-loaded shard with queue room and
     /// hand back the response channel. Errors instead of blocking when
     /// the pool is stopping or every queue is full.
-    fn dispatch(&self, x: TensorF) -> Result<Receiver<Result<Vec<f32>>>> {
+    fn dispatch(&self, x: TensorF, tenant: usize) -> Result<Receiver<Result<Vec<f32>>>> {
         if self.stop.load(Ordering::SeqCst) {
             bail!("server is shutting down");
         }
@@ -123,6 +255,7 @@ impl Router {
         let now = Instant::now();
         let mut job = Job {
             x,
+            tenant,
             enqueued: now,
             deadline: self.deadline.map(|d| now + d),
             resp: tx,
@@ -158,6 +291,7 @@ impl Router {
             }
         }
         self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+        self.metrics.record_tenant_rejected(tenant);
         bail!(
             "server overloaded: all {} worker queues full (cap {} each)",
             self.shards.len(),
@@ -174,10 +308,36 @@ pub struct Client {
 }
 
 impl Client {
-    /// Synchronous single-image inference; returns the logits row.
+    /// Synchronous single-image inference as the default tenant;
+    /// returns the logits row.
     pub fn infer(&self, x: TensorF) -> Result<Vec<f32>> {
-        let rx = self.router.dispatch(x)?;
+        self.infer_id(0, x)
+    }
+
+    /// Tenant-keyed inference: the request is metered, admission-
+    /// controlled, and executed under `tenant`'s recipe. A name the
+    /// pool does not know falls back to the default tenant's recipe
+    /// (counted in [`PoolMetrics::unknown_tenant`]) — clients are never
+    /// rejected for a typo'd key, they just get the default policy.
+    pub fn infer_tenant(&self, tenant: &str, x: TensorF) -> Result<Vec<f32>> {
+        let id = match self.router.tenants.id_of(tenant) {
+            Some(id) => id,
+            None => {
+                self.metrics.record_unknown_tenant();
+                0
+            }
+        };
+        self.infer_id(id, x)
+    }
+
+    fn infer_id(&self, tenant: usize, x: TensorF) -> Result<Vec<f32>> {
+        let rx = self.router.dispatch(x, tenant)?;
         rx.recv().context("server dropped the request")?
+    }
+
+    /// Resolve a tenant name (`None` = unknown, would fall back).
+    pub fn tenant_id(&self, tenant: &str) -> Option<usize> {
+        self.router.tenants.id_of(tenant)
     }
 
     pub fn metrics(&self) -> &PoolMetrics {
@@ -191,7 +351,7 @@ pub struct Server {
     handles: Vec<JoinHandle<()>>,
     metrics: Arc<PoolMetrics>,
     stop: Arc<AtomicBool>,
-    swap: Arc<SwapSlot>,
+    tenants: Arc<TenantTable>,
 }
 
 impl Server {
@@ -213,15 +373,28 @@ impl Server {
         Server::start_with(factory, cfg)
     }
 
-    /// Start the pool over any backend (tests/CI use [`SimFactory`]).
+    /// Start the pool over any backend (tests/CI use [`SimFactory`])
+    /// with the single implicit `default` tenant.
+    pub fn start_with(factory: Arc<dyn EngineFactory>, cfg: ServeConfig) -> Result<Server> {
+        Self::start_tenants(factory, cfg, TenantTable::default_only())
+    }
+
+    /// Start the pool with a tenant table: requests carry a tenant key,
+    /// each tenant serves its own recipe (on recipe-aware backends) and
+    /// is metered separately, and per-tenant hot-swap never disturbs
+    /// the other tenants.
     ///
     /// All workers build their engines concurrently; startup fails as a
     /// whole (with every thread joined) if any worker fails to come up.
-    pub fn start_with(factory: Arc<dyn EngineFactory>, cfg: ServeConfig) -> Result<Server> {
+    pub fn start_tenants(
+        factory: Arc<dyn EngineFactory>,
+        cfg: ServeConfig,
+        tenants: TenantTable,
+    ) -> Result<Server> {
         cfg.validate()?;
-        let metrics = Arc::new(PoolMetrics::new(cfg.workers));
+        let tenants = Arc::new(tenants);
+        let metrics = Arc::new(PoolMetrics::with_tenants(cfg.workers, tenants.names()));
         let stop = Arc::new(AtomicBool::new(false));
-        let swap = Arc::new(SwapSlot::default());
         let mut shards = Vec::with_capacity(cfg.workers);
         let mut handles = Vec::with_capacity(cfg.workers);
         let mut readies = Vec::with_capacity(cfg.workers);
@@ -230,10 +403,11 @@ impl Server {
             let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
             let outstanding = metrics.outstanding_handle(id);
             let worker_metrics = metrics.worker(id).clone();
+            let worker_pool_metrics = metrics.clone();
             let worker_outstanding = outstanding.clone();
             let worker_factory = factory.clone();
             let worker_stop = stop.clone();
-            let worker_swap = swap.clone();
+            let worker_tenants = tenants.clone();
             let worker_cfg = cfg.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("ocs-worker-{id}"))
@@ -244,9 +418,10 @@ impl Server {
                         worker_cfg,
                         rx,
                         worker_metrics,
+                        worker_pool_metrics,
                         worker_outstanding,
                         worker_stop,
-                        worker_swap,
+                        worker_tenants,
                         ready_tx,
                     )
                 })
@@ -278,12 +453,17 @@ impl Server {
             return Err(e);
         }
         crate::info!(
-            "engine pool up: {} × {} (queue cap {}/worker, max batch {}, deadline {:?})",
+            "engine pool up: {} × {} (queue cap {}/worker, max batch {}, deadline {:?}{})",
             cfg.workers,
             factory.label(),
             cfg.queue_cap,
             cfg.max_batch,
-            cfg.deadline
+            cfg.deadline,
+            if tenants.len() > 1 {
+                format!(", tenants {:?}", tenants.names())
+            } else {
+                String::new()
+            }
         );
         let router = Arc::new(Router {
             shards,
@@ -291,13 +471,14 @@ impl Server {
             deadline: cfg.deadline,
             stop: stop.clone(),
             metrics: metrics.clone(),
+            tenants: tenants.clone(),
         });
         Ok(Server {
             router,
             handles,
             metrics,
             stop,
-            swap,
+            tenants,
         })
     }
 
@@ -320,11 +501,27 @@ impl Server {
     /// preps stay alive through their `Arc`s.
     pub fn swap_recipe(&self, recipe: QuantRecipe) {
         crate::info!("publishing recipe swap: {}", recipe.label());
-        let mut slot = self.swap.recipe.lock().expect("swap slot poisoned");
-        *slot = Some(recipe);
-        // bump after the recipe is in place: a worker that sees the new
-        // epoch always reads the new recipe (it locks to read)
-        self.swap.epoch.fetch_add(1, Ordering::Release);
+        self.tenants.publish(0, recipe);
+    }
+
+    /// Publish a new recipe to *one* tenant's slot. Workers rebuild
+    /// exactly that tenant's prep (between batches, lazily for workers
+    /// that never served it); every other tenant keeps serving its
+    /// current prep undisturbed. Unknown tenant names are an error —
+    /// unlike request routing, a swap has no sensible fallback.
+    pub fn swap_tenant_recipe(&self, tenant: &str, recipe: QuantRecipe) -> Result<()> {
+        let id = self
+            .tenants
+            .id_of(tenant)
+            .with_context(|| format!("unknown tenant '{tenant}'"))?;
+        crate::info!("publishing recipe swap for tenant {tenant}: {}", recipe.label());
+        self.tenants.publish(id, recipe);
+        Ok(())
+    }
+
+    /// The pool's tenant registry.
+    pub fn tenants(&self) -> &TenantTable {
+        &self.tenants
     }
 
     /// Total recipe swaps applied across all workers (each successful
@@ -375,6 +572,89 @@ impl Drop for Server {
     }
 }
 
+/// Worker-local tenant state: last-seen epoch and a local clone of the
+/// current recipe per tenant, so the batch hot path builds
+/// [`TenantCtx`]s without ever touching the table's locks.
+struct TenantView {
+    table: Arc<TenantTable>,
+    epochs: Vec<u64>,
+    recipes: Vec<Option<QuantRecipe>>,
+}
+
+impl TenantView {
+    /// Snapshot the table's construction-time recipes. Epochs are read
+    /// *before* the recipes (under each slot's lock), so a swap racing
+    /// this snapshot is re-applied by the first [`TenantView::sync`] —
+    /// possibly redundantly, never missed.
+    fn new(table: Arc<TenantTable>) -> TenantView {
+        let mut epochs = Vec::with_capacity(table.len());
+        let mut recipes = Vec::with_capacity(table.len());
+        for id in 0..table.len() {
+            let (epoch, recipe) = table.read(id);
+            epochs.push(epoch);
+            recipes.push(recipe);
+        }
+        TenantView {
+            table,
+            epochs,
+            recipes,
+        }
+    }
+
+    /// Apply every recipe published since the last sync, strictly
+    /// between batches. Tenant 0 is the pool-wide swap of old; other
+    /// tenants rebuild through [`WorkerEngine::swap_tenant`], which
+    /// touches only that tenant's prep. A failed swap keeps the old
+    /// prep and counts a swap error.
+    fn sync(&mut self, worker_id: usize, engine: &mut dyn WorkerEngine, metrics: &Metrics) {
+        for id in 0..self.epochs.len() {
+            if self.table.epoch(id) == self.epochs[id] {
+                continue;
+            }
+            // re-read under the lock: the recipe a worker acts on is
+            // always at least as new as the epoch it records
+            let (epoch, recipe) = self.table.read(id);
+            self.epochs[id] = epoch;
+            self.recipes[id] = recipe.clone();
+            if let Some(recipe) = recipe {
+                let ctx = self.ctx(id);
+                match engine.swap_tenant(&ctx, &recipe) {
+                    Ok(()) => {
+                        metrics.record_recipe_swap();
+                        crate::debugln!(
+                            "worker {worker_id}: tenant {} swapped to {}",
+                            self.table.name(id),
+                            recipe.label()
+                        );
+                    }
+                    Err(e) => {
+                        metrics.record_swap_error();
+                        crate::warnln!(
+                            "worker {worker_id}: tenant {} swap failed, keeping the old prep: {e:#}",
+                            self.table.name(id)
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// The per-tenant view engines receive. Tenant 0's recipe is always
+    /// `None`: the default tenant serves the factory build (plus any
+    /// pool-wide swap already applied through [`WorkerEngine::swap`]).
+    fn ctx(&self, id: usize) -> backend::TenantCtx<'_> {
+        backend::TenantCtx {
+            id,
+            name: self.table.name(id),
+            recipe: if id == 0 {
+                None
+            } else {
+                self.recipes[id].as_ref()
+            },
+        }
+    }
+}
+
 /// One worker: build the engine on this thread, then batch-and-serve
 /// until stopped (draining the queue first) or disconnected.
 #[allow(clippy::too_many_arguments)]
@@ -384,9 +664,10 @@ fn worker_loop(
     cfg: ServeConfig,
     rx: Receiver<Job>,
     metrics: Arc<Metrics>,
+    pool: Arc<PoolMetrics>,
     outstanding: Arc<AtomicUsize>,
     stop: Arc<AtomicBool>,
-    swap: Arc<SwapSlot>,
+    tenants: Arc<TenantTable>,
     ready: SyncSender<Result<()>>,
 ) {
     let mut engine = match factory.build(id) {
@@ -399,37 +680,14 @@ fn worker_loop(
             return;
         }
     };
-    // epoch 0 = "no recipe ever published": starting from 0 (not the
-    // current value) means a swap published while this worker was still
-    // building is applied on its first loop iteration, not missed
-    let mut swap_epoch = 0u64;
+    // the view starts from the table's construction-time recipes; a
+    // swap published while this worker was still building is applied on
+    // its first loop iteration, not missed
+    let mut view = TenantView::new(tenants);
     loop {
-        // apply any published recipe swap strictly between batches, so
+        // apply any published recipe swaps strictly between batches, so
         // in-flight work always completes on the prep it started with
-        let epoch = swap.epoch.load(Ordering::Acquire);
-        if epoch != swap_epoch {
-            let (epoch, recipe) = {
-                let slot = swap.recipe.lock().expect("swap slot poisoned");
-                // re-read under the lock: the slot a worker acts on is
-                // always at least as new as the epoch it records
-                (swap.epoch.load(Ordering::Acquire), slot.clone())
-            };
-            swap_epoch = epoch;
-            if let Some(recipe) = recipe {
-                match engine.swap(&recipe) {
-                    Ok(()) => {
-                        metrics.record_recipe_swap();
-                        crate::debugln!("worker {id}: recipe swapped to {}", recipe.label());
-                    }
-                    Err(e) => {
-                        metrics.record_swap_error();
-                        crate::warnln!(
-                            "worker {id}: recipe swap failed, keeping the old prep: {e:#}"
-                        );
-                    }
-                }
-            }
-        }
+        view.sync(id, engine.as_mut(), &metrics);
         // wait for the first job of a batch; wake periodically to honour
         // the stop flag (and recipe swaps) even while clients keep the
         // channel open. Jobs still queued at stop are returned by
@@ -457,7 +715,7 @@ fn worker_loop(
                 Err(_) => break,
             }
         }
-        run_batch(engine.as_mut(), jobs, &metrics, &outstanding);
+        run_batch(engine.as_mut(), &view, jobs, &metrics, &pool, &outstanding);
     }
     // Final sweep: a dispatch that passed its stop check can still land
     // a job between our last empty recv and the channel teardown below;
@@ -469,12 +727,15 @@ fn worker_loop(
     crate::debugln!("worker {id}: drained, exiting");
 }
 
-/// Answer expired jobs, execute the rest as one fused batch, respond to
-/// every job, and keep the outstanding gauge exact.
+/// Answer expired jobs, partition the rest into single-tenant batches
+/// (batches never mix recipes), execute each, respond to every job, and
+/// keep the outstanding gauge exact.
 fn run_batch(
     engine: &mut dyn WorkerEngine,
+    view: &TenantView,
     jobs: Vec<Job>,
     metrics: &Metrics,
+    pool: &PoolMetrics,
     outstanding: &AtomicUsize,
 ) {
     let now = Instant::now();
@@ -483,6 +744,7 @@ fn run_batch(
         match job.deadline {
             Some(d) if now >= d => {
                 metrics.record_deadline_exceeded();
+                pool.tenant(job.tenant).record_deadline_exceeded();
                 let waited_ms = job.enqueued.elapsed().as_millis();
                 let err = anyhow!("deadline exceeded after {waited_ms} ms in queue");
                 // gauge drops before the send: the client unblocks on
@@ -496,6 +758,33 @@ fn run_batch(
     if live.is_empty() {
         return;
     }
+    // partition by tenant, order-stable; the single-tenant pool is one
+    // group and pays nothing beyond this scan
+    let mut groups: Vec<(usize, Vec<Job>)> = Vec::new();
+    for job in live {
+        match groups.iter_mut().find(|(t, _)| *t == job.tenant) {
+            Some((_, g)) => g.push(job),
+            None => {
+                let t = job.tenant;
+                groups.push((t, vec![job]));
+            }
+        }
+    }
+    for (tenant, group) in groups {
+        run_tenant_batch(engine, view, tenant, group, metrics, pool, outstanding);
+    }
+}
+
+/// Execute one single-tenant group as a fused forward pass.
+fn run_tenant_batch(
+    engine: &mut dyn WorkerEngine,
+    view: &TenantView,
+    tenant: usize,
+    live: Vec<Job>,
+    metrics: &Metrics,
+    pool: &PoolMetrics,
+    outstanding: &AtomicUsize,
+) {
     let n = live.len();
     let result = (|| -> Result<TensorF> {
         for j in &live[1..] {
@@ -514,8 +803,9 @@ fn run_batch(
         let mut shape = live[0].x.shape().to_vec();
         shape[0] = n;
         let xb = TensorF::from_vec(&shape, data)?;
+        let ctx = view.ctx(tenant);
         let t0 = Instant::now();
-        let out = engine.infer(&xb)?;
+        let out = engine.infer_tenant(&ctx, &xb)?;
         metrics.record_batch(n, t0.elapsed().as_micros() as u64);
         Ok(out)
     })();
@@ -529,7 +819,9 @@ fn run_batch(
                     Ok(logits.data()[row * classes..(row + 1) * classes].to_vec())
                 };
                 if resp.is_ok() {
-                    metrics.record_request(job.enqueued.elapsed());
+                    let latency = job.enqueued.elapsed();
+                    metrics.record_request(latency);
+                    pool.tenant(tenant).record_request(latency);
                 }
                 outstanding.fetch_sub(1, Ordering::Relaxed);
                 let _ = job.resp.send(resp);
@@ -537,6 +829,7 @@ fn run_batch(
         }
         Err(e) => {
             metrics.record_exec_error();
+            pool.tenant(tenant).record_exec_error();
             let msg = format!("{e:#}");
             for job in live {
                 outstanding.fetch_sub(1, Ordering::Relaxed);
@@ -698,4 +991,287 @@ pub fn self_test_sim(
 ) -> Result<()> {
     let factory = Arc::new(SimFactory::default());
     self_test_with(factory, cfg, requests, sweep, json_out).map(|_| ())
+}
+
+/// One offered-load step of the closed-loop load test: `clients`
+/// concurrent closed-loop client threads over the weighted tenant mix,
+/// with latencies measured *client-side* (send → response, queueing
+/// included) and percentiles taken over the merged exact samples — not
+/// the pool's bucketed histogram.
+#[derive(Debug, Clone)]
+pub struct LoadPoint {
+    pub clients: usize,
+    pub requests: usize,
+    pub ok: usize,
+    pub errors: usize,
+    pub secs: f64,
+    pub rps: f64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub rejected: u64,
+    pub deadline_exceeded: u64,
+    /// Per-tenant `(name, requests served, rejected)` for this step.
+    pub tenants: Vec<(String, u64, u64)>,
+}
+
+/// Ceil-rank percentile over an ascending sample (the convention
+/// `bench_support` uses).
+fn percentile_ms(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((p * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+/// Deterministic weighted tenant pick for global request index `k`: a
+/// golden-ratio low-discrepancy walk over the cumulative weights, so
+/// every prefix of the request stream carries (approximately) the
+/// configured mix and every run offers the identical schedule.
+fn pick_tenant(table: &TenantTable, k: usize) -> usize {
+    let total: f64 = (0..table.len()).map(|id| table.weight(id)).sum();
+    let u = ((k as f64 + 1.0) * 0.618_033_988_749_895).fract() * total;
+    let mut acc = 0.0;
+    for id in 0..table.len() {
+        acc += table.weight(id);
+        if u < acc {
+            return id;
+        }
+    }
+    table.len() - 1
+}
+
+/// Run one offered-load step: start a fresh pool (fresh metrics, fixed
+/// worker count from `cfg`), drive ~`requests` requests through
+/// `clients` closed-loop threads over the weighted tenant mix, and
+/// collect the measurements. Rejections and deadline misses count as
+/// client errors — a closed-loop client immediately offers its next
+/// request, which is what pushes the pool to saturation.
+pub fn run_load_point(
+    factory: Arc<dyn EngineFactory>,
+    cfg: &ServeConfig,
+    tenants: &[TenantInit],
+    clients: usize,
+    requests: usize,
+) -> Result<LoadPoint> {
+    if clients == 0 {
+        bail!("loadtest: client counts must be >= 1");
+    }
+    let server = Server::start_tenants(factory, cfg.clone(), TenantTable::new(tenants)?)?;
+    let dataset = crate::train::data::synth_images(256, 411);
+    let row = dataset.x.len() / dataset.len();
+    let mut req_shape = dataset.x.shape().to_vec();
+    req_shape[0] = 1;
+    let xdata = Arc::new(dataset.x.data().to_vec());
+    let names = Arc::new(server.tenants().names());
+    let per = (requests / clients).max(1);
+    // the deterministic tenant schedule, one id per global request index
+    let schedule: Arc<Vec<usize>> = Arc::new(
+        (0..clients * per)
+            .map(|k| pick_tenant(server.tenants(), k))
+            .collect(),
+    );
+    let t0 = Instant::now();
+    let mut threads = Vec::new();
+    for c in 0..clients {
+        let client = server.client();
+        let xdata = xdata.clone();
+        let shape = req_shape.clone();
+        let names = names.clone();
+        let schedule = schedule.clone();
+        threads.push(std::thread::spawn(move || -> (usize, usize, Vec<f64>) {
+            let mut ok = 0usize;
+            let mut errors = 0usize;
+            let mut lat = Vec::with_capacity(per);
+            for i in 0..per {
+                let k = c * per + i;
+                let idx = k % 256;
+                let tenant = names[schedule[k]].as_str();
+                let x = TensorF::from_vec(&shape, xdata[idx * row..(idx + 1) * row].to_vec());
+                let sent = Instant::now();
+                match x
+                    .map_err(anyhow::Error::from)
+                    .and_then(|x| client.infer_tenant(tenant, x))
+                {
+                    Ok(logits) if !logits.is_empty() => {
+                        ok += 1;
+                        lat.push(sent.elapsed().as_secs_f64() * 1e3);
+                    }
+                    _ => errors += 1,
+                }
+            }
+            (ok, errors, lat)
+        }));
+    }
+    let mut ok = 0usize;
+    let mut errors = 0usize;
+    let mut lat: Vec<f64> = Vec::new();
+    for h in threads {
+        let (o, e, l) = h.join().map_err(|_| anyhow!("load client panicked"))?;
+        ok += o;
+        errors += e;
+        lat.extend(l);
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    lat.sort_by(|a, b| a.total_cmp(b));
+    let mean_ms = if lat.is_empty() {
+        0.0
+    } else {
+        lat.iter().sum::<f64>() / lat.len() as f64
+    };
+    let agg = server.metrics().aggregate();
+    let point = LoadPoint {
+        clients,
+        requests: clients * per,
+        ok,
+        errors,
+        secs,
+        rps: ok as f64 / secs.max(1e-9),
+        mean_ms,
+        p50_ms: percentile_ms(&lat, 0.50),
+        p95_ms: percentile_ms(&lat, 0.95),
+        p99_ms: percentile_ms(&lat, 0.99),
+        rejected: server.metrics().rejected_count(),
+        deadline_exceeded: agg.deadline_exceeded,
+        tenants: (0..server.tenants().len())
+            .map(|id| {
+                (
+                    server.tenants().name(id).to_string(),
+                    server.metrics().tenant(id).snapshot().requests,
+                    server.metrics().tenant_rejected_count(id),
+                )
+            })
+            .collect(),
+    };
+    println!("{}", server.metrics().report());
+    server.shutdown()?;
+    Ok(point)
+}
+
+/// The closed-loop load harness behind `ocs serve --loadtest`: sweep
+/// offered load (client concurrency) at a fixed worker count over a
+/// tenant mix, print one line per step, report the saturation point
+/// (the step with peak throughput), and optionally write a versioned
+/// `BENCH_loadtest.json` record for `ocs bench check`/`diff`.
+pub fn loadtest(
+    factory: Arc<dyn EngineFactory>,
+    cfg: &ServeConfig,
+    tenants: &[TenantInit],
+    clients_sweep: &[usize],
+    requests: usize,
+    json_out: Option<&Path>,
+) -> Result<Vec<LoadPoint>> {
+    let sweep: Vec<usize> = if clients_sweep.is_empty() {
+        vec![1, 2, 4, 8]
+    } else {
+        clients_sweep.to_vec()
+    };
+    let label = factory.label();
+    let mut points = Vec::with_capacity(sweep.len());
+    for &clients in &sweep {
+        let p = run_load_point(factory.clone(), cfg, tenants, clients, requests)?;
+        println!(
+            "loadtest[clients={clients}]: {}/{} ok in {:.2}s = {:.0} req/s \
+             (p50 {:.2} ms, p95 {:.2} ms, p99 {:.2} ms, rejected {}, deadline-exceeded {})",
+            p.ok,
+            p.requests,
+            p.secs,
+            p.rps,
+            p.p50_ms,
+            p.p95_ms,
+            p.p99_ms,
+            p.rejected,
+            p.deadline_exceeded
+        );
+        points.push(p);
+    }
+    if let Some(sat) = points.iter().max_by(|a, b| a.rps.total_cmp(&b.rps)) {
+        println!(
+            "loadtest: saturation ~{:.0} req/s at {} client(s) \
+             ({} worker(s), {} tenant(s) in the mix)",
+            sat.rps,
+            sat.clients,
+            cfg.workers,
+            tenants.len() + 1
+        );
+    }
+    if let Some(path) = json_out {
+        crate::bench_record::BenchRecord::from_loadtest(&label, &points)
+            .write(path)
+            .with_context(|| format!("write {}", path.display()))?;
+        println!("wrote {}", path.display());
+    }
+    Ok(points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn init(name: &str, weight: f64) -> TenantInit {
+        TenantInit {
+            name: name.into(),
+            weight,
+            recipe: None,
+        }
+    }
+
+    #[test]
+    fn tenant_table_basics() {
+        let t = TenantTable::default_only();
+        assert_eq!(t.len(), 1);
+        assert!(!t.is_empty());
+        assert_eq!(t.id_of("default"), Some(0));
+        let t = TenantTable::new(&[init("gold", 1.0), init("bulk", 3.0)]).unwrap();
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.id_of("bulk"), Some(2));
+        assert_eq!(t.id_of("nope"), None);
+        assert_eq!(t.name(1), "gold");
+        assert_eq!(t.weight(2), 3.0);
+        assert!(TenantTable::new(&[init("default", 1.0)]).is_err(), "reserved name");
+        assert!(TenantTable::new(&[init("a", 1.0), init("a", 1.0)]).is_err());
+        assert!(TenantTable::new(&[init("", 1.0)]).is_err());
+        assert!(TenantTable::new(&[init("a", 0.0)]).is_err());
+        assert!(TenantTable::new(&[init("a", f64::NAN)]).is_err());
+    }
+
+    #[test]
+    fn tenant_slots_publish_per_tenant() {
+        let t = TenantTable::new(&[init("a", 1.0)]).unwrap();
+        let (e, r) = t.read(1);
+        assert_eq!(e, 0);
+        assert!(r.is_none());
+        t.publish(1, QuantRecipe::float());
+        let (e, r) = t.read(1);
+        assert_eq!(e, 1);
+        assert!(r.is_some());
+        assert_eq!(t.epoch(0), 0, "other slots stay untouched");
+    }
+
+    #[test]
+    fn tenant_schedule_is_deterministic_and_proportional() {
+        let t = TenantTable::new(&[init("gold", 1.0), init("bulk", 2.0)]).unwrap();
+        // weights: default 1, gold 1, bulk 2 -> shares 25% / 25% / 50%
+        let mut counts = [0usize; 3];
+        for k in 0..1000 {
+            let a = pick_tenant(&t, k);
+            assert_eq!(a, pick_tenant(&t, k), "schedule must be deterministic");
+            counts[a] += 1;
+        }
+        assert!((200..300).contains(&counts[0]), "{counts:?}");
+        assert!((200..300).contains(&counts[1]), "{counts:?}");
+        assert!((450..550).contains(&counts[2]), "{counts:?}");
+    }
+
+    #[test]
+    fn percentile_ms_is_ceil_rank() {
+        assert_eq!(percentile_ms(&[], 0.5), 0.0);
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile_ms(&v, 0.0), 1.0);
+        assert_eq!(percentile_ms(&v, 0.5), 2.0);
+        assert_eq!(percentile_ms(&v, 0.95), 4.0);
+        assert_eq!(percentile_ms(&v, 1.0), 4.0);
+    }
 }

@@ -35,7 +35,12 @@ fn stderr(out: &Output) -> String {
 
 #[test]
 fn committed_baselines_parse_and_validate() {
-    for name in ["BENCH_quant.json", "BENCH_native.json", "BENCH_serving.json"] {
+    for name in [
+        "BENCH_quant.json",
+        "BENCH_native.json",
+        "BENCH_serving.json",
+        "BENCH_loadtest.json",
+    ] {
         let rec = BenchRecord::load(&records_dir().join(name)).unwrap();
         rec.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
     }
@@ -77,6 +82,18 @@ fn baselines_pass_the_ci_check_gates() {
 
     let serving = run_ocs(&["bench", "check", "BENCH_serving.json", "--bench", "serving"]);
     assert!(serving.status.success(), "{}", stderr(&serving));
+
+    // the gate loadtest-smoke applies to its freshly generated record
+    let loadtest = run_ocs(&[
+        "bench",
+        "check",
+        "BENCH_loadtest.json",
+        "--bench",
+        "loadtest",
+        "--require",
+        "loadtest/c1,loadtest/saturation",
+    ]);
+    assert!(loadtest.status.success(), "{}", stderr(&loadtest));
 }
 
 #[test]
@@ -169,6 +186,42 @@ fn diff_passes_on_improvement_and_noise() {
 }
 
 #[test]
+fn diff_mad_band_gates_tight_cases_but_forgives_wobbly_ones() {
+    // both cases drift 1.35x past the 25% global threshold, but the
+    // baseline recorded wobbly's spread (mad 20µs on 100µs → ±60% band):
+    // only the steady case may gate
+    let out = run_ocs(&[
+        "bench",
+        "diff",
+        "fixtures/quant_mad_base.json",
+        "fixtures/quant_mad_noise.json",
+    ]);
+    assert!(!out.status.success(), "the tight case must still gate");
+    let table = stdout(&out);
+    assert!(table.contains("mad band ±60%"), "{table}");
+    assert!(
+        table.contains("1 case(s) regressed past the 25% threshold"),
+        "{table}"
+    );
+}
+
+#[test]
+fn mad_fixture_verdicts_match_the_library_diff() {
+    let base = BenchRecord::load(&records_dir().join("fixtures/quant_mad_base.json")).unwrap();
+    let noise = BenchRecord::load(&records_dir().join("fixtures/quant_mad_noise.json")).unwrap();
+    let d = diff(&base, &noise, 0.25).unwrap();
+    assert_eq!(d.regressions().count(), 1);
+    assert_eq!(d.regressions().next().unwrap().name, "perchan_quant/steady/256x256");
+    let wobbly = d
+        .rows
+        .iter()
+        .find(|r| r.name == "perchan_quant/wobbly/256x256")
+        .unwrap();
+    assert_eq!(wobbly.verdict, Verdict::WithinNoise);
+    assert!((wobbly.threshold - 0.6).abs() < 1e-12, "mad widens the band");
+}
+
+#[test]
 fn diff_reports_added_and_removed_without_failing() {
     let out = run_ocs(&[
         "bench",
@@ -225,6 +278,25 @@ fn diff_summary_appends_markdown() {
     let md = std::fs::read_to_string(&summary).unwrap();
     assert!(md.contains("### bench diff: `quant`"), "{md}");
     assert!(md.contains("| `perchan_quant/fused_t4/256x256` |"), "{md}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn history_renders_the_committed_records() {
+    // what bench-gate appends to the job summary: a trajectory table
+    // over records/ (fixtures/ is a subdirectory, so never included)
+    let dir = std::env::temp_dir().join(format!("ocs_bench_history_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let summary = dir.join("summary.md");
+    let out = run_ocs(&["bench", "history", ".", "--summary", summary.to_str().unwrap()]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let t = stdout(&out);
+    assert!(t.contains("bench history [quant]"), "{t}");
+    assert!(t.contains("bench history [loadtest]"), "{t}");
+    assert!(!t.contains("quant_mad_base"), "fixtures must not leak in: {t}");
+    let md = std::fs::read_to_string(&summary).unwrap();
+    assert!(md.contains("### bench history: `loadtest`"), "{md}");
+    assert!(md.contains("| `loadtest/saturation` |"), "{md}");
     std::fs::remove_dir_all(&dir).ok();
 }
 

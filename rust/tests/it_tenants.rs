@@ -1,0 +1,223 @@
+//! Integration tests for per-tenant serving: routing + fallback,
+//! per-tenant hot-swap isolation under concurrent load, cold-tenant
+//! cache eviction while hot tenants keep serving, and the closed-loop
+//! load harness emitting a gated bench record — all artifact-free
+//! (native synthetic MLP and the sim backend), so they run in CI.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use ocs::bench_record::BenchRecord;
+use ocs::clip::ClipMethod;
+use ocs::pipeline::{QuantConfig, QuantRecipe, ServeConfig};
+use ocs::serve::backend::{NativeFactory, SimFactory};
+use ocs::serve::{loadtest, Server, TenantInit, TenantTable};
+use ocs::tensor::TensorF;
+
+/// Same discipline as `it_serve_pool`: these tests run pools and burn
+/// CPU; serialize them so they don't corrupt each other's timing.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn cfg(workers: usize) -> ServeConfig {
+    ServeConfig {
+        workers,
+        max_batch: 4,
+        max_wait: Duration::from_micros(200),
+        queue_cap: 256,
+        deadline: None,
+    }
+}
+
+/// A serving recipe with observable quantization (logits move with
+/// `w_bits`, so tests can see *which* prep served a request).
+fn recipe(w_bits: u32) -> QuantRecipe {
+    let mut c = QuantConfig::weights_only(w_bits, ClipMethod::Mse, 0.02);
+    c.a_bits = Some(8);
+    c.to_recipe()
+}
+
+fn native() -> Arc<NativeFactory> {
+    Arc::new(NativeFactory::synthetic(recipe(5)).unwrap())
+}
+
+fn tenant(name: &str, weight: f64, r: Option<QuantRecipe>) -> TenantInit {
+    TenantInit {
+        name: name.into(),
+        weight,
+        recipe: r,
+    }
+}
+
+/// One fixed `(1, 16, 16, 3)` image for the synthetic MLP.
+fn image() -> TensorF {
+    let ds = ocs::train::data::synth_images(4, 77);
+    ocs::calib::slice_rows(&ds.x, 0, 1).unwrap()
+}
+
+#[test]
+fn unknown_tenant_falls_back_to_default() {
+    let _guard = serial();
+    let tenants = [tenant("gold", 1.0, Some(QuantConfig::float().to_recipe()))];
+    let server =
+        Server::start_tenants(native(), cfg(1), TenantTable::new(&tenants).unwrap()).unwrap();
+    let client = server.client();
+    let x = image();
+    let default = client.infer(x.clone()).unwrap();
+    let gold = client.infer_tenant("gold", x.clone()).unwrap();
+    assert_ne!(default, gold, "tenant recipes must be observable");
+    // a tenant nobody configured serves the default recipe, not an error
+    let ghost = client.infer_tenant("ghost", x.clone()).unwrap();
+    assert_eq!(ghost, default, "unknown tenant must serve the default prep");
+    assert_eq!(server.metrics().unknown_tenant_count(), 1);
+    // ...and the traffic is attributed to tenant 0, not lost
+    assert_eq!(server.metrics().tenant(0).snapshot().requests, 2);
+    assert_eq!(server.metrics().tenant(1).snapshot().requests, 1);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn tenant_hot_swap_is_isolated_under_concurrent_load() {
+    let _guard = serial();
+    let tenants = [
+        tenant("gold", 1.0, Some(QuantConfig::float().to_recipe())),
+        tenant("bulk", 1.0, Some(recipe(3))),
+    ];
+    let server =
+        Server::start_tenants(native(), cfg(2), TenantTable::new(&tenants).unwrap()).unwrap();
+    let x = image();
+    let client = server.client();
+    let default_expect = client.infer(x.clone()).unwrap();
+    let gold_expect = client.infer_tenant("gold", x.clone()).unwrap();
+    let bulk_before = client.infer_tenant("bulk", x.clone()).unwrap();
+    assert_ne!(gold_expect, bulk_before);
+    assert_ne!(gold_expect, default_expect);
+    assert_ne!(bulk_before, default_expect);
+    // hammer gold + default from client threads while bulk is swapped:
+    // their logits must never move
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut handles = Vec::new();
+    for (name, expect) in [("gold", gold_expect.clone()), ("default", default_expect.clone())] {
+        let client = server.client();
+        let x = x.clone();
+        let stop = stop.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut served = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                let got = client.infer_tenant(name, x.clone()).unwrap();
+                assert_eq!(got, expect, "tenant {name} drifted during a sibling's swap");
+                served += 1;
+            }
+            served
+        }));
+    }
+    // swap bulk to the float recipe mid-load; float == gold's recipe,
+    // so post-swap bulk logits must match gold's bitwise
+    server
+        .swap_tenant_recipe("bulk", QuantConfig::float().to_recipe())
+        .unwrap();
+    let t0 = Instant::now();
+    loop {
+        let got = client.infer_tenant("bulk", x.clone()).unwrap();
+        if got == gold_expect {
+            break;
+        }
+        assert_eq!(got, bulk_before, "mid-swap bulk must serve old or new, nothing else");
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "swap never became visible"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    stop.store(true, Ordering::Relaxed);
+    for h in handles {
+        assert!(h.join().unwrap() > 0, "load threads must actually serve");
+    }
+    // swaps have no unknown-tenant fallback: a typo must fail loudly
+    let err = server
+        .swap_tenant_recipe("ghost", QuantConfig::float().to_recipe())
+        .unwrap_err();
+    assert!(err.to_string().contains("unknown tenant"), "{err:#}");
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn cold_tenant_eviction_keeps_hot_tenants_serving() {
+    let _guard = serial();
+    let factory = native();
+    // capacity-1 prepared cache: every new tenant prep evicts the
+    // previous one, but workers hold their lowered executables, so
+    // serving never goes back to the cache
+    factory.cache.set_capacity(1);
+    let cache = factory.cache.clone();
+    let tenants = [
+        tenant("gold", 1.0, Some(QuantConfig::float().to_recipe())),
+        tenant("bulk", 1.0, Some(recipe(3))),
+    ];
+    let server =
+        Server::start_tenants(factory, cfg(1), TenantTable::new(&tenants).unwrap()).unwrap();
+    let client = server.client();
+    let x = image();
+    let d0 = client.infer(x.clone()).unwrap();
+    let g0 = client.infer_tenant("gold", x.clone()).unwrap();
+    let b0 = client.infer_tenant("bulk", x.clone()).unwrap();
+    assert_eq!(cache.misses(), 3, "one prepare per distinct recipe");
+    assert_eq!(cache.len(), 1, "capacity 1 keeps only the newest prep");
+    for round in 0..10 {
+        assert_eq!(client.infer(x.clone()).unwrap(), d0, "round {round}");
+        assert_eq!(client.infer_tenant("gold", x.clone()).unwrap(), g0, "round {round}");
+        assert_eq!(client.infer_tenant("bulk", x.clone()).unwrap(), b0, "round {round}");
+    }
+    assert_eq!(
+        cache.misses(),
+        3,
+        "steady-state serving must not re-prepare evicted tenants"
+    );
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn loadtest_emits_a_valid_gated_record() {
+    let _guard = serial();
+    let dir = std::env::temp_dir().join(format!("ocs_loadtest_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("BENCH_loadtest.json");
+    let factory = Arc::new(SimFactory {
+        classes: 10,
+        cost_per_batch: Duration::from_micros(50),
+        cost_per_item: Duration::from_micros(50),
+    });
+    let tenants = [tenant("gold", 2.0, None)];
+    let points = loadtest(factory, &cfg(2), &tenants, &[1, 2], 60, Some(&path)).unwrap();
+    assert_eq!(points.len(), 2);
+    for p in &points {
+        assert_eq!(p.ok, p.requests, "no deadline + bounded clients: all succeed");
+        assert!(p.rps > 0.0);
+        assert!(p.p50_ms <= p.p95_ms && p.p95_ms <= p.p99_ms);
+        assert!(p.mean_ms > 0.0);
+        let attributed: u64 = p.tenants.iter().map(|(_, ok, _)| ok).sum();
+        assert_eq!(attributed, p.ok as u64, "per-tenant counts cover the pool total");
+        assert!(
+            p.tenants.iter().any(|(n, ok, _)| n == "gold" && *ok > 0),
+            "weight-2 tenant must see traffic: {:?}",
+            p.tenants
+        );
+    }
+    let rec = BenchRecord::load(&path).unwrap();
+    rec.validate().unwrap();
+    assert_eq!(rec.bench, "loadtest");
+    let c1 = rec.row("loadtest/c1").unwrap();
+    assert!(c1.higher_is_better);
+    assert_eq!(c1.unit, "req/s");
+    for key in ["p50_ms", "p95_ms", "p99_ms", "tenant_gold_ok", "tenant_default_ok"] {
+        assert!(c1.extra.contains_key(key), "missing extra '{key}'");
+    }
+    let sat = rec.row("loadtest/saturation").unwrap();
+    let best = points.iter().map(|p| p.rps).fold(0.0f64, f64::max);
+    assert_eq!(sat.value, best, "saturation row carries the peak step");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
