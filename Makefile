@@ -3,7 +3,7 @@
 
 CARGO_DIR := rust
 
-.PHONY: verify build test fmt lint artifacts serve-smoke loadtest bench-record clean
+.PHONY: verify build test fmt lint artifacts serve-smoke loadtest chaos bench-record clean
 
 # Tier-1 gate: the exact command CI runs on every push.
 verify:
@@ -40,6 +40,14 @@ loadtest:
 		--requests 64 --tenants gold:1:8,bulk:3 \
 		--json ../BENCH_loadtest.json
 
+# Chaos drill: kill 1 of 4 sim workers mid-sweep and require contained
+# failure + recovery — the canonical invocation CI's chaos-smoke job
+# runs. Needs no artifacts. Emits BENCH_chaos.json (CI gates on it).
+chaos:
+	cd $(CARGO_DIR) && cargo run --release -- serve --loadtest --chaos \
+		--sim --workers 4 --clients 8 --requests 96 --backoff-ms 5 \
+		--json ../BENCH_chaos.json
+
 # Refresh the committed perf baselines under records/ (quick mode, small
 # shapes — the same settings CI's smoke jobs run, so `ocs bench diff`
 # compares like against like). Each record is then schema-checked.
@@ -55,10 +63,14 @@ bench-record:
 		--backend native --sim-free --workers 2 --clients 1,2 \
 		--requests 64 --tenants gold:1:8,bulk:3 \
 		--json ../records/BENCH_loadtest.json
+	cd $(CARGO_DIR) && OCS_BENCH_QUICK=1 cargo run --release -- serve --loadtest \
+		--chaos --sim --workers 4 --clients 8 --requests 96 --backoff-ms 5 \
+		--json ../records/BENCH_chaos.json
 	cd $(CARGO_DIR) && cargo run --release -- bench check ../records/BENCH_quant.json --bench quant
 	cd $(CARGO_DIR) && cargo run --release -- bench check ../records/BENCH_native.json --bench native
 	cd $(CARGO_DIR) && cargo run --release -- bench check ../records/BENCH_serving.json --bench serving
 	cd $(CARGO_DIR) && cargo run --release -- bench check ../records/BENCH_loadtest.json --bench loadtest
+	cd $(CARGO_DIR) && cargo run --release -- bench check ../records/BENCH_chaos.json --bench chaos
 	cd $(CARGO_DIR) && cargo run --release -- bench history ../records
 
 clean:

@@ -59,6 +59,7 @@ fn main() -> anyhow::Result<()> {
         max_wait: Duration::from_micros(500),
         queue_cap: 4096,
         deadline: None,
+        ..ServeConfig::default()
     };
     let sim_points = pool_sweep(
         &mut r,
@@ -145,6 +146,7 @@ fn main() -> anyhow::Result<()> {
         max_wait: Duration::from_millis(2),
         queue_cap: 2048,
         deadline: None,
+        ..ServeConfig::default()
     };
     let pjrt_points = pool_sweep(
         &mut r,

@@ -38,7 +38,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::bench_support::CaseRecord;
-use crate::serve::{LoadPoint, SweepPoint};
+use crate::serve::{ChaosReport, LoadPoint, SweepPoint};
 use crate::util::json::{self, Value};
 
 /// Bump when the record shape changes incompatibly; `parse` rejects
@@ -173,6 +173,10 @@ impl BenchRecord {
             extra.insert("mean_batch".to_string(), p.mean_batch);
             extra.insert("rejected".to_string(), p.rejected as f64);
             extra.insert("deadline_exceeded".to_string(), p.deadline_exceeded as f64);
+            extra.insert("panics".to_string(), p.panics as f64);
+            extra.insert("restarts".to_string(), p.restarts as f64);
+            extra.insert("jobs_failed".to_string(), p.jobs_failed as f64);
+            extra.insert("dead_workers".to_string(), p.dead_workers as f64);
             rec.rows.push(Row {
                 name,
                 value: p.rps,
@@ -213,6 +217,10 @@ impl BenchRecord {
             extra.insert("p99_ms".to_string(), p.p99_ms);
             extra.insert("rejected".to_string(), p.rejected as f64);
             extra.insert("deadline_exceeded".to_string(), p.deadline_exceeded as f64);
+            extra.insert("panics".to_string(), p.panics as f64);
+            extra.insert("restarts".to_string(), p.restarts as f64);
+            extra.insert("jobs_failed".to_string(), p.jobs_failed as f64);
+            extra.insert("dead_workers".to_string(), p.dead_workers as f64);
             for (tenant, ok, rejected) in &p.tenants {
                 extra.insert(format!("tenant_{tenant}_ok"), *ok as f64);
                 extra.insert(format!("tenant_{tenant}_rejected"), *rejected as f64);
@@ -231,6 +239,50 @@ impl BenchRecord {
             rec.rows.push(Row {
                 name: "loadtest/saturation".to_string(),
                 value: sat.rps,
+                unit: "req/s".to_string(),
+                higher_is_better: true,
+                extra,
+            });
+        }
+        rec
+    }
+
+    /// Unify the chaos gate (`BENCH_chaos`): one row per phase
+    /// (healthy / degraded / recovered), primary metric throughput, with
+    /// the fault bookkeeping as secondaries — `chaos/recovered` is the
+    /// row regression gates should pin.
+    pub fn from_chaos(backend: &str, report: &ChaosReport) -> BenchRecord {
+        let mut rec = BenchRecord::new("chaos", backend, crate::kernels::pool::available());
+        let phases: [(&str, &LoadPoint); 3] = [
+            ("chaos/healthy", &report.healthy),
+            ("chaos/degraded", &report.degraded),
+            ("chaos/recovered", &report.recovered),
+        ];
+        for (name, p) in phases {
+            let mut extra = BTreeMap::new();
+            extra.insert("clients".to_string(), p.clients as f64);
+            extra.insert("requests".to_string(), p.requests as f64);
+            extra.insert("ok".to_string(), p.ok as f64);
+            extra.insert("errors".to_string(), p.errors as f64);
+            extra.insert("secs".to_string(), p.secs);
+            extra.insert("p50_ms".to_string(), p.p50_ms);
+            extra.insert("p99_ms".to_string(), p.p99_ms);
+            extra.insert("rejected".to_string(), p.rejected as f64);
+            if name == "chaos/degraded" {
+                extra.insert("panics".to_string(), p.panics as f64);
+                extra.insert("jobs_failed".to_string(), p.jobs_failed as f64);
+                extra.insert("killed_worker".to_string(), report.killed_worker as f64);
+            }
+            if name == "chaos/recovered" {
+                extra.insert("restarts".to_string(), report.restarts as f64);
+                extra.insert(
+                    "recovery_ratio".to_string(),
+                    p.rps / report.healthy.rps.max(1e-9),
+                );
+            }
+            rec.rows.push(Row {
+                name: name.to_string(),
+                value: p.rps,
                 unit: "req/s".to_string(),
                 higher_is_better: true,
                 extra,
@@ -461,6 +513,10 @@ mod tests {
                 mean_batch: 2.0,
                 rejected: 0,
                 deadline_exceeded: 0,
+                panics: 0,
+                restarts: 0,
+                jobs_failed: 0,
+                dead_workers: 0,
             },
             SweepPoint {
                 workers: 2,
@@ -475,6 +531,10 @@ mod tests {
                 mean_batch: 1.5,
                 rejected: 0,
                 deadline_exceeded: 0,
+                panics: 0,
+                restarts: 0,
+                jobs_failed: 0,
+                dead_workers: 0,
             },
         ];
         let rec = BenchRecord::from_sweep("sim", &points);
@@ -503,6 +563,10 @@ mod tests {
             p99_ms: 8.0,
             rejected: 6,
             deadline_exceeded: 0,
+            panics: 0,
+            restarts: 0,
+            jobs_failed: 0,
+            dead_workers: 0,
             tenants: vec![
                 ("default".to_string(), 120, 2),
                 ("gold".to_string(), 130, 4),
@@ -531,6 +595,51 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_from_chaos() {
+        let phase = |rps: f64, panics: u64, jobs_failed: u64| LoadPoint {
+            clients: 8,
+            requests: 256,
+            ok: 250,
+            errors: 6,
+            secs: 1.0,
+            rps,
+            mean_ms: 2.0,
+            p50_ms: 1.5,
+            p95_ms: 4.0,
+            p99_ms: 8.0,
+            rejected: 6,
+            deadline_exceeded: 0,
+            panics,
+            restarts: 0,
+            jobs_failed,
+            dead_workers: 0,
+            tenants: vec![],
+        };
+        let report = ChaosReport {
+            healthy: phase(400.0, 0, 0),
+            degraded: phase(300.0, 1, 5),
+            recovered: phase(380.0, 0, 0),
+            killed_worker: 3,
+            panics: 1,
+            restarts: 1,
+            jobs_failed: 5,
+        };
+        let rec = BenchRecord::from_chaos("sim+fault", &report);
+        rec.validate().unwrap();
+        let back = BenchRecord::parse(&rec.to_json()).unwrap();
+        assert_eq!(rec, back);
+        assert_eq!(back.bench, "chaos");
+        let degraded = back.row("chaos/degraded").unwrap();
+        assert_eq!(degraded.value, 300.0);
+        assert_eq!(degraded.extra["panics"], 1.0);
+        assert_eq!(degraded.extra["killed_worker"], 3.0);
+        let recovered = back.row("chaos/recovered").unwrap();
+        assert_eq!(recovered.extra["restarts"], 1.0);
+        assert_eq!(recovered.extra["recovery_ratio"], 380.0 / 400.0);
+        assert!(back.row("chaos/healthy").is_some());
+    }
+
+    #[test]
     fn sweep_revisit_keeps_names_unique() {
         let p = SweepPoint {
             workers: 2,
@@ -545,6 +654,10 @@ mod tests {
             mean_batch: 1.0,
             rejected: 0,
             deadline_exceeded: 0,
+            panics: 0,
+            restarts: 0,
+            jobs_failed: 0,
+            dead_workers: 0,
         };
         let rec = BenchRecord::from_sweep("sim", &[p.clone(), p.clone(), p]);
         rec.validate().unwrap();

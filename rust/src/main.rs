@@ -88,6 +88,21 @@ SERVE FLAGS:
                     MLP instead of an artifacts-dir model (no --model)
   --prep-cache-cap N  bound the prepared-model LRU cache (default 64,
                     0 = unbounded; evictions are counted in the report)
+  --tenant-quota F  cap each tenant at F (0,1] of the pool's queue slots;
+                    over-quota submits are rejected and counted per
+                    tenant (TOML: serve.tenant_quota)
+  --restart-max N   respawns the supervisor grants a crashing worker
+                    before opening its breaker (default 3, 0 = never
+                    respawn; TOML: serve.restart_max)
+  --backoff-ms MS   base respawn backoff, doubled per attempt and capped
+                    at 64x (default 25; TOML: serve.backoff_ms)
+  --fault SPECS     deterministic fault injection, comma-separated:
+                    build-fail:W[@N] (worker W's Nth engine build fails,
+                    default first), panic:W@N (worker W panics on its
+                    Nth batch), slow:US (every batch sleeps US extra
+                    microseconds), error-tenant:NAME (that tenant's
+                    batches error; siblings unaffected). Build/panic
+                    faults fire once. TOML: serve.fault = "..."
 
 LOADTEST FLAGS (ocs serve --loadtest — closed-loop offered-load sweep
 over a tenant mix at a fixed --workers count; saturation = the peak-
@@ -100,6 +115,12 @@ throughput step):
   --clients LIST    offered-load sweep as client counts (default 1,2,4,8)
   --requests N      total requests per step, split across the clients
   --json PATH       BenchRecord output (default BENCH_loadtest.json)
+  --chaos           chaos gate instead of the sweep: measure a healthy
+                    baseline, kill 1 of N workers mid-load (injected
+                    panic), and assert no client hangs, a bounded error
+                    burst, and post-respawn recovery; writes a
+                    BENCH_chaos.json record (first --clients entry is
+                    the concurrency, default 2x workers)
 
 EVAL FLAGS:
   --backend B       pjrt (artifacts, default) or native: evaluate on the
@@ -509,10 +530,30 @@ fn cmd_serve(args: &Args, artifacts: &str) -> Result<()> {
         }
     }
     let json_out = args.str("json").map(std::path::PathBuf::from);
-    match ServeBackend::from_args(args)? {
-        ServeBackend::Sim => {
-            ocs::serve::self_test_sim(requests, &serve_cfg, &sweep, json_out.as_deref())
-        }
+    let (factory, cache) = serve_factory(args, artifacts, serve_cfg.max_batch)?;
+    // --fault wraps whatever backend was picked in the deterministic
+    // failure schedule (a no-op when no --fault is given)
+    let factory = ocs::serve::faults::FaultPlan::from_args(args)?.wrap(factory);
+    ocs::serve::self_test_with(factory, &serve_cfg, requests, &sweep, json_out.as_deref())?;
+    if let Some(cache) = cache {
+        println!("{}", cache.stats_line());
+    }
+    Ok(())
+}
+
+/// Build the worker-engine factory `ocs serve` was asked for. The
+/// native backend also hands back its prepared-model cache so callers
+/// can print its stats line after the run.
+fn serve_factory(
+    args: &Args,
+    artifacts: &str,
+    max_batch: usize,
+) -> Result<(
+    Arc<dyn ocs::serve::backend::EngineFactory>,
+    Option<Arc<ocs::pipeline::PreparedCache>>,
+)> {
+    Ok(match ServeBackend::from_args(args)? {
+        ServeBackend::Sim => (Arc::new(SimFactory::default()) as _, None),
         ServeBackend::Native => {
             // a8 default: float activations would demote every layer to
             // the f32 body — the int datapath is the point of `native`
@@ -525,26 +566,18 @@ fn cmd_serve(args: &Args, artifacts: &str) -> Result<()> {
             // the factory cache inherits the global capacity (set from
             // --prep-cache-cap in run()) at construction
             let cache = factory.cache.clone();
-            ocs::serve::self_test_with(
-                Arc::new(factory),
-                &serve_cfg,
-                requests,
-                &sweep,
-                json_out.as_deref(),
-            )?;
-            println!("{}", cache.stats_line());
-            Ok(())
+            (Arc::new(factory) as _, Some(cache))
         }
-        ServeBackend::Pjrt => ocs::serve::self_test(
-            artifacts,
-            args.req("model")?,
-            serve_recipe(args, 0)?,
-            requests,
-            &serve_cfg,
-            &sweep,
-            json_out.as_deref(),
+        ServeBackend::Pjrt => (
+            Arc::new(PjrtFactory {
+                artifacts_dir: artifacts.to_string(),
+                model: args.req("model")?.to_string(),
+                recipe: serve_recipe(args, 0)?,
+                max_batch,
+            }) as _,
+            None,
         ),
-    }
+    })
 }
 
 /// `ocs serve --loadtest`: closed-loop offered-load sweep over a tenant
@@ -565,7 +598,7 @@ fn cmd_loadtest(
             _ => bail!("--clients: cannot parse '{s}' as a client count (need >= 1)"),
         }
     }
-    let json_out = std::path::PathBuf::from(args.str_or("json", "BENCH_loadtest.json"));
+    let chaos = args.bool_or("chaos", false);
     let backend = ServeBackend::from_args(args)?;
     // tenant recipes lower with the backend's activation default, like
     // the pool recipe itself
@@ -578,51 +611,37 @@ fn cmd_loadtest(
             recipe: Some(t.to_recipe(default_a_bits)),
         })
         .collect();
-    match backend {
-        ServeBackend::Sim => {
-            ocs::serve::loadtest(
-                Arc::new(SimFactory::default()),
-                serve_cfg,
-                &tenants,
-                &clients,
-                requests,
-                Some(&json_out),
-            )?;
-        }
-        ServeBackend::Native => {
-            let recipe = serve_recipe(args, 8)?;
-            let factory = if args.bool_or("sim-free", false) {
-                NativeFactory::synthetic(recipe)?
-            } else {
-                NativeFactory::from_artifacts(artifacts, args.req("model")?, recipe)?
-            };
-            let cache = factory.cache.clone();
-            ocs::serve::loadtest(
-                Arc::new(factory),
-                serve_cfg,
-                &tenants,
-                &clients,
-                requests,
-                Some(&json_out),
-            )?;
-            println!("{}", cache.stats_line());
-        }
-        ServeBackend::Pjrt => {
-            let factory = Arc::new(PjrtFactory {
-                artifacts_dir: artifacts.to_string(),
-                model: args.req("model")?.to_string(),
-                recipe: serve_recipe(args, 0)?,
-                max_batch: serve_cfg.max_batch,
-            });
-            ocs::serve::loadtest(
-                factory,
-                serve_cfg,
-                &tenants,
-                &clients,
-                requests,
-                Some(&json_out),
-            )?;
-        }
+    let (factory, cache) = serve_factory(args, artifacts, serve_cfg.max_batch)?;
+    if chaos {
+        // the chaos gate schedules its own worker kill; --fault is for
+        // the plain sweep
+        let json_out = std::path::PathBuf::from(args.str_or("json", "BENCH_chaos.json"));
+        let concurrency = clients
+            .first()
+            .copied()
+            .unwrap_or((serve_cfg.workers * 2).max(4));
+        ocs::serve::chaos_loadtest(
+            factory,
+            serve_cfg,
+            &tenants,
+            concurrency,
+            requests,
+            Some(&json_out),
+        )?;
+    } else {
+        let json_out = std::path::PathBuf::from(args.str_or("json", "BENCH_loadtest.json"));
+        let factory = ocs::serve::faults::FaultPlan::from_args(args)?.wrap(factory);
+        ocs::serve::loadtest(
+            factory,
+            serve_cfg,
+            &tenants,
+            &clients,
+            requests,
+            Some(&json_out),
+        )?;
+    }
+    if let Some(cache) = cache {
+        println!("{}", cache.stats_line());
     }
     Ok(())
 }

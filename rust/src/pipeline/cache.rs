@@ -113,7 +113,9 @@ impl PreparedCache {
             recipe.fingerprint(),
             inputs_token(spec, ws, calib),
         );
-        let mut map = self.map.lock().expect("prepared cache poisoned");
+        // poison-tolerant: the cache outlives any one panicked worker; the
+        // map itself is always left consistent (inserts are atomic)
+        let mut map = self.map.lock().unwrap_or_else(|e| e.into_inner());
         let now = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
         if let Some(e) = map.get_mut(&key) {
             e.last_used = now;
@@ -156,7 +158,7 @@ impl PreparedCache {
     }
 
     pub fn len(&self) -> usize {
-        self.map.lock().expect("prepared cache poisoned").len()
+        self.map.lock().unwrap_or_else(|e| e.into_inner()).len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -190,7 +192,7 @@ impl PreparedCache {
     /// Drop every cached prep (tests; long-lived processes that retire
     /// weight sets can reclaim memory here).
     pub fn clear(&self) {
-        self.map.lock().expect("prepared cache poisoned").clear();
+        self.map.lock().unwrap_or_else(|e| e.into_inner()).clear();
     }
 }
 

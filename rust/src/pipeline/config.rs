@@ -286,6 +286,17 @@ pub struct ServeConfig {
     pub queue_cap: usize,
     /// Per-request deadline, measured from enqueue (`None` = unbounded).
     pub deadline: Option<Duration>,
+    /// Per-tenant admission quota as a fraction of the pool's total
+    /// admission bound (`workers × queue_cap`), in `(0, 1]`. A tenant
+    /// with more than `ceil(quota × workers × queue_cap)` jobs queued
+    /// or in flight has further submits rejected, so one bulk tenant
+    /// cannot starve the others' queue slots. `None` = no quota.
+    pub tenant_quota: Option<f64>,
+    /// Supervisor respawn attempts per worker before giving up and
+    /// opening that worker's breaker (0 = never respawn).
+    pub restart_max: u32,
+    /// Base respawn backoff; doubles per attempt, capped at 64×.
+    pub backoff: Duration,
 }
 
 impl Default for ServeConfig {
@@ -296,6 +307,9 @@ impl Default for ServeConfig {
             max_wait: Duration::from_millis(2),
             queue_cap: 1024,
             deadline: None,
+            tenant_quota: None,
+            restart_max: 3,
+            backoff: Duration::from_millis(25),
         }
     }
 }
@@ -314,6 +328,11 @@ impl ServeConfig {
         if self.deadline.is_some_and(|d| d.is_zero()) {
             bail!("serve config: deadline must be positive");
         }
+        if let Some(q) = self.tenant_quota {
+            if !(q > 0.0 && q <= 1.0) {
+                bail!("serve config: tenant_quota must be in (0, 1], got {q}");
+            }
+        }
         Ok(())
     }
 
@@ -324,7 +343,8 @@ impl ServeConfig {
     }
 
     /// Parse `--workers`, `--max-batch`, `--max-wait-us`, `--queue-cap`,
-    /// `--deadline-ms`; anything absent keeps its default.
+    /// `--deadline-ms`, `--tenant-quota`, `--restart-max`,
+    /// `--backoff-ms`; anything absent keeps its default.
     pub fn from_args(args: &Args) -> Result<ServeConfig> {
         let d = ServeConfig::default();
         let cfg = ServeConfig {
@@ -338,13 +358,20 @@ impl ServeConfig {
             deadline: args
                 .parse_opt::<u64>("deadline-ms")?
                 .map(Duration::from_millis),
+            tenant_quota: args.parse_opt::<f64>("tenant-quota")?,
+            restart_max: args.parse_or("restart-max", d.restart_max)?,
+            backoff: match args.parse_opt::<u64>("backoff-ms")? {
+                Some(ms) => Duration::from_millis(ms),
+                None => d.backoff,
+            },
         };
         cfg.validate()?;
         Ok(cfg)
     }
 
     /// Parse from a TOML config section (`workers`, `max_batch`,
-    /// `max_wait_us`, `queue_cap`, `deadline_ms`).
+    /// `max_wait_us`, `queue_cap`, `deadline_ms`, `tenant_quota`,
+    /// `restart_max`, `backoff_ms`).
     pub fn from_toml(c: &Config, section: &str) -> Result<ServeConfig> {
         let key = |k: &str| {
             if section.is_empty() {
@@ -377,6 +404,18 @@ impl ServeConfig {
                 )?)),
                 None => None,
             },
+            tenant_quota: c
+                .get(&key("tenant_quota"))
+                .map(|_| c.float(&key("tenant_quota")))
+                .transpose()?,
+            restart_max: nonneg(
+                "restart_max",
+                c.int_or(&key("restart_max"), d.restart_max as i64),
+            )? as u32,
+            backoff: Duration::from_millis(nonneg(
+                "backoff_ms",
+                c.int_or(&key("backoff_ms"), d.backoff.as_millis() as i64),
+            )?),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -613,7 +652,8 @@ mod tests {
     #[test]
     fn serve_from_args_knobs() {
         let cfg = ServeConfig::from_args(&args(
-            "serve --workers 4 --queue-cap 8 --deadline-ms 250 --max-batch 16 --max-wait-us 500",
+            "serve --workers 4 --queue-cap 8 --deadline-ms 250 --max-batch 16 --max-wait-us 500 \
+             --tenant-quota 0.25 --restart-max 5 --backoff-ms 10",
         ))
         .unwrap();
         assert_eq!(cfg.workers, 4);
@@ -621,7 +661,17 @@ mod tests {
         assert_eq!(cfg.max_batch, 16);
         assert_eq!(cfg.max_wait, Duration::from_micros(500));
         assert_eq!(cfg.deadline, Some(Duration::from_millis(250)));
+        assert_eq!(cfg.tenant_quota, Some(0.25));
+        assert_eq!(cfg.restart_max, 5);
+        assert_eq!(cfg.backoff, Duration::from_millis(10));
         assert_eq!(cfg.with_workers(2).workers, 2);
+        // fault knobs default off
+        let d = ServeConfig::from_args(&args("serve")).unwrap();
+        assert!(d.tenant_quota.is_none());
+        assert_eq!(d.restart_max, 3);
+        // quota outside (0, 1] is rejected
+        assert!(ServeConfig::from_args(&args("serve --tenant-quota 0")).is_err());
+        assert!(ServeConfig::from_args(&args("serve --tenant-quota 1.5")).is_err());
     }
 
     #[test]
@@ -633,6 +683,9 @@ workers = 3
 max_batch = 8
 queue_cap = 64
 deadline_ms = 100
+tenant_quota = 0.5
+restart_max = 1
+backoff_ms = 2
 "#,
         )
         .unwrap();
@@ -641,6 +694,9 @@ deadline_ms = 100
         assert_eq!(cfg.max_batch, 8);
         assert_eq!(cfg.queue_cap, 64);
         assert_eq!(cfg.deadline, Some(Duration::from_millis(100)));
+        assert_eq!(cfg.tenant_quota, Some(0.5));
+        assert_eq!(cfg.restart_max, 1);
+        assert_eq!(cfg.backoff, Duration::from_millis(2));
         // absent section -> defaults
         let d = ServeConfig::from_toml(&Config::parse("").unwrap(), "serve").unwrap();
         assert!(d.deadline.is_none());

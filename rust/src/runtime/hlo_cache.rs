@@ -38,7 +38,8 @@ impl HloTextCache {
     /// Fetch the HLO text for `path`, reading and validating it on the
     /// first request only.
     pub fn get(&self, path: &Path) -> Result<Arc<str>> {
-        let mut map = self.map.lock().expect("hlo cache poisoned");
+        // poison-tolerant: a panicked worker must not wedge artifact reads
+        let mut map = self.map.lock().unwrap_or_else(|e| e.into_inner());
         if let Some(text) = map.get(path) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(text.clone());
@@ -61,7 +62,7 @@ impl HloTextCache {
     }
 
     pub fn len(&self) -> usize {
-        self.map.lock().expect("hlo cache poisoned").len()
+        self.map.lock().unwrap_or_else(|e| e.into_inner()).len()
     }
 
     pub fn is_empty(&self) -> bool {

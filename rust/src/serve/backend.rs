@@ -477,7 +477,9 @@ fn native_calibration(
     spec: &ModelSpec,
     ws: &WeightStore,
 ) -> Result<Arc<Calibration>> {
-    let mut guard = slot.lock().expect("native calib slot poisoned");
+    // poison-tolerant: a worker that panicked mid-build must not wedge
+    // every other worker's calibration
+    let mut guard = slot.lock().unwrap_or_else(|e| e.into_inner());
     if let Some(c) = guard.as_ref() {
         return Ok(c.clone());
     }

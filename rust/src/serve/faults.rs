@@ -1,0 +1,395 @@
+//! Deterministic fault injection for the serving pool.
+//!
+//! A [`FaultPlan`] is a small schedule of failures — build failures,
+//! panics, slowdowns, per-tenant errors — that wraps any
+//! [`EngineFactory`] ([`FaultPlan::wrap`]) so the *same* supervision
+//! and containment machinery can be exercised on every backend (sim,
+//! quant-sim, native, PJRT) without teaching the backends anything
+//! about failure. The schedule is fully deterministic: a directive
+//! names the worker/batch/tenant it strikes, and one-shot directives
+//! fire exactly once pool-wide (shared across respawns of the same
+//! worker), so a killed worker's replacement serves cleanly — which is
+//! what lets the chaos loadtest assert *recovery*, not just failure.
+//!
+//! Plans parse from `--fault` (comma-separated directives) or the TOML
+//! `[serve] fault = "..."` key:
+//!
+//! ```text
+//! build-fail:W[@N]   worker W's Nth engine build fails (default N=1,
+//!                    i.e. startup; N=2 is the first respawn rebuild)
+//! panic:W@N          worker W panics on its Nth forward batch
+//! slow:US            every forward batch sleeps US microseconds first
+//! error-tenant:NAME  every batch for tenant NAME returns an error
+//! ```
+//!
+//! An empty plan wraps to the inner factory unchanged, so the
+//! fault-free serving path is bit-identical to a build without this
+//! module in the loop.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cli::Args;
+use crate::pipeline::QuantRecipe;
+use crate::tensor::TensorF;
+use crate::util::toml::Config;
+
+use super::backend::{EngineFactory, TenantCtx, WorkerEngine};
+
+/// One scheduled failure. `worker` indexes the pool's shards; `nth`
+/// counts from 1 on the directive's own clock (builds for
+/// [`FaultDirective::BuildFail`], forward batches for
+/// [`FaultDirective::PanicOnBatch`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FaultDirective {
+    /// Worker `worker`'s `nth` engine build fails (fires once).
+    BuildFail { worker: usize, nth: u64 },
+    /// Worker `worker` panics on its `nth` forward batch (fires once,
+    /// pool-wide: the respawned worker serves cleanly).
+    PanicOnBatch { worker: usize, nth: u64 },
+    /// Every forward batch sleeps this long before executing.
+    SlowInfer { micros: u64 },
+    /// Every batch for this tenant returns an error (siblings
+    /// untouched).
+    ErrorOnTenant { tenant: String },
+}
+
+impl FaultDirective {
+    fn parse(entry: &str) -> Result<FaultDirective> {
+        let (kind, rest) = entry
+            .split_once(':')
+            .with_context(|| format!("fault '{entry}': expected KIND:ARGS"))?;
+        match kind {
+            "build-fail" => {
+                let (worker, nth) = parse_worker_at(rest, 1)
+                    .with_context(|| format!("fault '{entry}': expected build-fail:W[@N]"))?;
+                Ok(FaultDirective::BuildFail { worker, nth })
+            }
+            "panic" => {
+                let (worker, nth) = parse_worker_at(rest, 0)
+                    .with_context(|| format!("fault '{entry}': expected panic:W@N"))?;
+                if nth == 0 {
+                    bail!("fault '{entry}': panic needs an explicit batch, panic:W@N with N >= 1");
+                }
+                Ok(FaultDirective::PanicOnBatch { worker, nth })
+            }
+            "slow" => {
+                let micros: u64 = rest
+                    .parse()
+                    .with_context(|| format!("fault '{entry}': expected slow:MICROS"))?;
+                Ok(FaultDirective::SlowInfer { micros })
+            }
+            "error-tenant" => {
+                if rest.is_empty() {
+                    bail!("fault '{entry}': expected error-tenant:NAME");
+                }
+                Ok(FaultDirective::ErrorOnTenant {
+                    tenant: rest.to_string(),
+                })
+            }
+            other => bail!(
+                "unknown fault kind '{other}' \
+                 (build-fail:W[@N] | panic:W@N | slow:US | error-tenant:NAME)"
+            ),
+        }
+    }
+
+    fn label(&self) -> String {
+        match self {
+            FaultDirective::BuildFail { worker, nth } => format!("build-fail:{worker}@{nth}"),
+            FaultDirective::PanicOnBatch { worker, nth } => format!("panic:{worker}@{nth}"),
+            FaultDirective::SlowInfer { micros } => format!("slow:{micros}"),
+            FaultDirective::ErrorOnTenant { tenant } => format!("error-tenant:{tenant}"),
+        }
+    }
+}
+
+/// `W` or `W@N`; `default_nth` of 0 means `@N` is required.
+fn parse_worker_at(s: &str, default_nth: u64) -> Result<(usize, u64)> {
+    match s.split_once('@') {
+        Some((w, n)) => Ok((w.parse()?, n.parse()?)),
+        None => Ok((s.parse()?, default_nth)),
+    }
+}
+
+/// A deterministic failure schedule for one pool run.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    directives: Vec<FaultDirective>,
+}
+
+impl FaultPlan {
+    pub fn new(directives: Vec<FaultDirective>) -> FaultPlan {
+        FaultPlan { directives }
+    }
+
+    /// Parse a comma-separated directive list (see the module docs).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut directives = Vec::new();
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            directives.push(FaultDirective::parse(entry)?);
+        }
+        Ok(FaultPlan { directives })
+    }
+
+    /// The `--fault SPECS` CLI knob (absent = empty plan).
+    pub fn from_args(args: &Args) -> Result<FaultPlan> {
+        match args.str("fault") {
+            Some(spec) => FaultPlan::parse(spec).context("bad --fault"),
+            None => Ok(FaultPlan::default()),
+        }
+    }
+
+    /// The TOML `fault = "..."` key of a `[serve]`-style section.
+    pub fn from_toml(c: &Config, section: &str) -> Result<FaultPlan> {
+        let key = if section.is_empty() {
+            "fault".to_string()
+        } else {
+            format!("{section}.fault")
+        };
+        match c.get(&key) {
+            Some(_) => FaultPlan::parse(c.str(&key)?).with_context(|| format!("bad {key}")),
+            None => Ok(FaultPlan::default()),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.directives.is_empty()
+    }
+
+    pub fn label(&self) -> String {
+        self.directives
+            .iter()
+            .map(FaultDirective::label)
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Wrap a factory so its engines fail on this schedule. An empty
+    /// plan returns the inner factory untouched — the fault-free path
+    /// never pays for (or risks) the wrapper.
+    pub fn wrap(self, inner: Arc<dyn EngineFactory>) -> Arc<dyn EngineFactory> {
+        if self.is_empty() {
+            return inner;
+        }
+        let fired = Arc::new(FaultState {
+            fired: (0..self.directives.len()).map(|_| AtomicBool::new(false)).collect(),
+            builds: Mutex::new(HashMap::new()),
+        });
+        Arc::new(FaultFactory {
+            inner,
+            plan: self,
+            state: fired,
+        })
+    }
+}
+
+/// Pool-wide firing state shared by every worker (and every respawn):
+/// one-shot directives consult `fired`, build-count directives consult
+/// the per-worker `builds` clock.
+struct FaultState {
+    fired: Vec<AtomicBool>,
+    builds: Mutex<HashMap<usize, u64>>,
+}
+
+impl FaultState {
+    /// True exactly once per directive index.
+    fn fire_once(&self, i: usize) -> bool {
+        !self.fired[i].swap(true, Ordering::SeqCst)
+    }
+}
+
+/// [`EngineFactory`] wrapper that injects the plan's build failures and
+/// hands out [`FaultWorker`]s for the rest.
+struct FaultFactory {
+    inner: Arc<dyn EngineFactory>,
+    plan: FaultPlan,
+    state: Arc<FaultState>,
+}
+
+impl EngineFactory for FaultFactory {
+    fn build(&self, worker_id: usize) -> Result<Box<dyn WorkerEngine>> {
+        let build_no = {
+            let mut builds = self.state.builds.lock().unwrap_or_else(|e| e.into_inner());
+            let n = builds.entry(worker_id).or_insert(0);
+            *n += 1;
+            *n
+        };
+        for (i, d) in self.plan.directives.iter().enumerate() {
+            if let FaultDirective::BuildFail { worker, nth } = d {
+                if *worker == worker_id && build_no == *nth && self.state.fire_once(i) {
+                    bail!("fault injection: worker {worker_id} build #{build_no} fails");
+                }
+            }
+        }
+        let inner = self.inner.build(worker_id)?;
+        Ok(Box::new(FaultWorker {
+            inner,
+            worker_id,
+            batches: 0,
+            plan: self.plan.clone(),
+            state: self.state.clone(),
+        }))
+    }
+
+    fn label(&self) -> String {
+        format!("{}+fault[{}]", self.inner.label(), self.plan.label())
+    }
+}
+
+/// [`WorkerEngine`] wrapper executing the plan's runtime directives.
+/// `batches` is this *engine instance*'s forward count — a respawned
+/// worker starts a fresh clock, but one-shot panics are spent
+/// pool-wide, so it serves cleanly.
+struct FaultWorker {
+    inner: Box<dyn WorkerEngine>,
+    worker_id: usize,
+    batches: u64,
+    plan: FaultPlan,
+    state: Arc<FaultState>,
+}
+
+impl FaultWorker {
+    fn before_batch(&mut self, tenant: Option<&TenantCtx>) -> Result<()> {
+        self.batches += 1;
+        for (i, d) in self.plan.directives.iter().enumerate() {
+            match d {
+                FaultDirective::PanicOnBatch { worker, nth }
+                    if *worker == self.worker_id
+                        && self.batches >= *nth
+                        && self.state.fire_once(i) =>
+                {
+                    panic!(
+                        "fault injection: worker {} panics on batch {}",
+                        self.worker_id, self.batches
+                    );
+                }
+                FaultDirective::SlowInfer { micros } => {
+                    std::thread::sleep(Duration::from_micros(*micros));
+                }
+                FaultDirective::ErrorOnTenant { tenant: name } => {
+                    if tenant.is_some_and(|t| t.name == name.as_str()) {
+                        bail!("fault injection: tenant '{name}' errors");
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+impl WorkerEngine for FaultWorker {
+    fn infer(&mut self, batch: &TensorF) -> Result<TensorF> {
+        self.before_batch(None)?;
+        self.inner.infer(batch)
+    }
+
+    fn infer_tenant(&mut self, t: &TenantCtx, batch: &TensorF) -> Result<TensorF> {
+        self.before_batch(Some(t))?;
+        self.inner.infer_tenant(t, batch)
+    }
+
+    fn swap(&mut self, recipe: &QuantRecipe) -> Result<()> {
+        self.inner.swap(recipe)
+    }
+
+    fn swap_tenant(&mut self, t: &TenantCtx, recipe: &QuantRecipe) -> Result<()> {
+        self.inner.swap_tenant(t, recipe)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::backend::SimFactory;
+
+    #[test]
+    fn parse_round_trips() {
+        let p = FaultPlan::parse("build-fail:0, panic:2@5, slow:300, error-tenant:gold").unwrap();
+        assert_eq!(
+            p,
+            FaultPlan::new(vec![
+                FaultDirective::BuildFail { worker: 0, nth: 1 },
+                FaultDirective::PanicOnBatch { worker: 2, nth: 5 },
+                FaultDirective::SlowInfer { micros: 300 },
+                FaultDirective::ErrorOnTenant { tenant: "gold".into() },
+            ])
+        );
+        assert_eq!(p.label(), "build-fail:0@1,panic:2@5,slow:300,error-tenant:gold");
+        // label parses back to the same plan
+        assert_eq!(FaultPlan::parse(&p.label()).unwrap(), p);
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert_eq!(
+            FaultPlan::parse("build-fail:3@2").unwrap(),
+            FaultPlan::new(vec![FaultDirective::BuildFail { worker: 3, nth: 2 }])
+        );
+    }
+
+    #[test]
+    fn parse_rejects_malformed_entries() {
+        for bad in [
+            "panic:1",        // panic needs @N
+            "panic:x@1",      // bad worker
+            "slow:abc",       // bad micros
+            "error-tenant:",  // empty name
+            "explode:1",      // unknown kind
+            "panic",          // no args
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "'{bad}' should not parse");
+        }
+    }
+
+    #[test]
+    fn empty_plan_wraps_to_inner() {
+        let inner: Arc<dyn EngineFactory> = Arc::new(SimFactory::default());
+        let label = inner.label();
+        let wrapped = FaultPlan::default().wrap(inner);
+        assert_eq!(wrapped.label(), label, "no wrapper on the fault-free path");
+        let faulty = FaultPlan::parse("slow:10").unwrap().wrap(wrapped);
+        assert!(faulty.label().contains("+fault[slow:10]"), "{}", faulty.label());
+    }
+
+    #[test]
+    fn build_fail_hits_the_named_build_once() {
+        let plan = FaultPlan::parse("build-fail:1@2").unwrap();
+        let f = plan.wrap(Arc::new(SimFactory::default()));
+        assert!(f.build(0).is_ok(), "other workers untouched");
+        assert!(f.build(1).is_ok(), "build #1 is clean");
+        let err = f.build(1).unwrap_err().to_string();
+        assert!(err.contains("fault injection"), "{err}");
+        assert!(f.build(1).is_ok(), "fires once: build #3 is clean");
+    }
+
+    #[test]
+    fn error_on_tenant_spares_siblings() {
+        let plan = FaultPlan::parse("error-tenant:gold").unwrap();
+        let f = plan.wrap(Arc::new(SimFactory::default()));
+        let mut e = f.build(0).unwrap();
+        let x = TensorF::zeros(&[1, 4]);
+        let gold = TenantCtx { id: 1, name: "gold", recipe: None };
+        let bulk = TenantCtx { id: 2, name: "bulk", recipe: None };
+        assert!(e.infer_tenant(&gold, &x).is_err());
+        assert!(e.infer_tenant(&bulk, &x).is_ok());
+        assert!(e.infer_tenant(&gold, &x).is_err(), "persistent, not one-shot");
+    }
+
+    #[test]
+    fn panic_on_batch_fires_once_pool_wide() {
+        let plan = FaultPlan::parse("panic:0@2").unwrap();
+        let f = plan.wrap(Arc::new(SimFactory::default()));
+        let mut e = f.build(0).unwrap();
+        let x = TensorF::zeros(&[1, 4]);
+        assert!(e.infer(&x).is_ok(), "batch 1 clean");
+        let p = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| e.infer(&x)));
+        assert!(p.is_err(), "batch 2 panics");
+        // the respawned engine shares the spent one-shot state
+        let mut e2 = f.build(0).unwrap();
+        assert!(e2.infer(&x).is_ok());
+        assert!(e2.infer(&x).is_ok(), "replacement never re-fires");
+    }
+}

@@ -13,7 +13,7 @@
 //! [`Snapshot::mean_batch_weighted`] (what a random *request* saw) —
 //! which the previous single-counter scheme conflated.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -44,6 +44,13 @@ pub struct Metrics {
     pub recipe_swaps: AtomicU64,
     /// Hot-swaps this worker failed to apply (kept serving the old prep).
     pub swap_errors: AtomicU64,
+    /// Engine panics contained on this worker (build or infer).
+    pub panics: AtomicU64,
+    /// Supervisor respawn attempts for this worker.
+    pub restarts: AtomicU64,
+    /// Jobs answered with an error because this worker died (in-flight
+    /// at the panic, queued behind it, or drained at give-up).
+    pub jobs_failed: AtomicU64,
     latency_buckets: [AtomicU64; BUCKETS],
     batch_buckets: [AtomicU64; BATCH_BUCKETS],
 }
@@ -104,6 +111,18 @@ impl Metrics {
         self.swap_errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn record_panic(&self) {
+        self.panics.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_restart(&self) {
+        self.restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_job_failed(&self) {
+        self.jobs_failed.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn request_count(&self) -> u64 {
         self.requests.load(Ordering::Relaxed)
     }
@@ -122,6 +141,9 @@ impl Metrics {
             exec_errors: self.exec_errors.load(Ordering::Relaxed),
             recipe_swaps: self.recipe_swaps.load(Ordering::Relaxed),
             swap_errors: self.swap_errors.load(Ordering::Relaxed),
+            panics: self.panics.load(Ordering::Relaxed),
+            restarts: self.restarts.load(Ordering::Relaxed),
+            jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
             ..Snapshot::default()
         };
         for (dst, src) in s.latency_buckets.iter_mut().zip(&self.latency_buckets) {
@@ -149,6 +171,9 @@ pub struct Snapshot {
     pub exec_errors: u64,
     pub recipe_swaps: u64,
     pub swap_errors: u64,
+    pub panics: u64,
+    pub restarts: u64,
+    pub jobs_failed: u64,
     latency_buckets: [u64; BUCKETS],
     batch_buckets: [u64; BATCH_BUCKETS],
 }
@@ -166,6 +191,9 @@ impl Snapshot {
         self.exec_errors += other.exec_errors;
         self.recipe_swaps += other.recipe_swaps;
         self.swap_errors += other.swap_errors;
+        self.panics += other.panics;
+        self.restarts += other.restarts;
+        self.jobs_failed += other.jobs_failed;
         for (dst, src) in self.latency_buckets.iter_mut().zip(&other.latency_buckets) {
             *dst += src;
         }
@@ -264,6 +292,12 @@ impl Snapshot {
                 self.recipe_swaps, self.swap_errors
             ));
         }
+        if self.panics > 0 || self.restarts > 0 || self.jobs_failed > 0 {
+            line.push_str(&format!(
+                " | faults: {} panic(s), {} restart(s), {} job(s) failed",
+                self.panics, self.restarts, self.jobs_failed
+            ));
+        }
         line
     }
 }
@@ -279,12 +313,21 @@ pub struct PoolMetrics {
     /// dispatch, the worker decrements on response. Doubles as the
     /// least-outstanding-work dispatch key.
     outstanding: Vec<Arc<AtomicUsize>>,
+    /// Breaker state per worker: set by the supervisor when it gives up
+    /// respawning a worker; the router skips dead shards.
+    dead: Vec<Arc<AtomicBool>>,
     /// Per-tenant request/latency/deadline shards (index = tenant id;
     /// 0 = the default tenant). Written by every worker.
     tenants: Vec<Arc<Metrics>>,
     tenant_names: Vec<String>,
     /// Router-side per-tenant rejection counters.
     tenant_rejected: Vec<AtomicU64>,
+    /// Queued + in-flight jobs per tenant (the quota admission gauge —
+    /// an orthogonal cut of the same jobs the worker gauges count).
+    tenant_outstanding: Vec<Arc<AtomicUsize>>,
+    /// Rejections caused specifically by the per-tenant admission quota
+    /// (a subset of `tenant_rejected`).
+    tenant_quota_rejected: Vec<AtomicU64>,
     /// Requests that named a tenant the pool does not know (served on
     /// the default recipe, counted under tenant 0).
     pub unknown_tenant: AtomicU64,
@@ -304,11 +347,17 @@ impl PoolMetrics {
         PoolMetrics {
             workers: (0..n).map(|_| Arc::new(Metrics::default())).collect(),
             outstanding: (0..n).map(|_| Arc::new(AtomicUsize::new(0))).collect(),
+            dead: (0..n).map(|_| Arc::new(AtomicBool::new(false))).collect(),
             tenants: tenant_names
                 .iter()
                 .map(|_| Arc::new(Metrics::default()))
                 .collect(),
             tenant_rejected: tenant_names.iter().map(|_| AtomicU64::new(0)).collect(),
+            tenant_outstanding: tenant_names
+                .iter()
+                .map(|_| Arc::new(AtomicUsize::new(0)))
+                .collect(),
+            tenant_quota_rejected: tenant_names.iter().map(|_| AtomicU64::new(0)).collect(),
             tenant_names,
             unknown_tenant: AtomicU64::new(0),
             dispatched: AtomicU64::new(0),
@@ -338,6 +387,46 @@ impl PoolMetrics {
 
     pub fn tenant_rejected_count(&self, id: usize) -> u64 {
         self.tenant_rejected[id].load(Ordering::Relaxed)
+    }
+
+    /// Count a rejection caused by the per-tenant admission quota (also
+    /// counted in the tenant's plain rejection counter).
+    pub fn record_tenant_quota_rejected(&self, id: usize) {
+        self.tenant_quota_rejected[id].fetch_add(1, Ordering::Relaxed);
+        self.record_tenant_rejected(id);
+    }
+
+    pub fn tenant_quota_rejected_count(&self, id: usize) -> u64 {
+        self.tenant_quota_rejected[id].load(Ordering::Relaxed)
+    }
+
+    /// Shared per-tenant queued+in-flight gauge (quota admission).
+    pub fn tenant_outstanding_handle(&self, id: usize) -> Arc<AtomicUsize> {
+        self.tenant_outstanding[id].clone()
+    }
+
+    /// Borrowed view of the same gauge (hot paths that already hold the
+    /// pool metrics skip the `Arc` bump).
+    pub fn tenant_outstanding_gauge(&self, id: usize) -> &AtomicUsize {
+        &self.tenant_outstanding[id]
+    }
+
+    pub fn tenant_outstanding_count(&self, id: usize) -> usize {
+        self.tenant_outstanding[id].load(Ordering::Relaxed)
+    }
+
+    /// Shared breaker flag for worker `id` (set at supervisor give-up).
+    pub fn dead_handle(&self, id: usize) -> Arc<AtomicBool> {
+        self.dead[id].clone()
+    }
+
+    pub fn is_dead(&self, id: usize) -> bool {
+        self.dead[id].load(Ordering::SeqCst)
+    }
+
+    /// Workers whose breaker is open (given up on, no longer dispatched).
+    pub fn dead_workers(&self) -> usize {
+        self.dead.iter().filter(|d| d.load(Ordering::SeqCst)).count()
     }
 
     pub fn record_unknown_tenant(&self) {
@@ -401,9 +490,16 @@ impl PoolMetrics {
             self.dispatched_count(),
             self.rejected_count(),
         );
+        if self.dead_workers() > 0 {
+            out.push_str(&format!(" | dead workers {}", self.dead_workers()));
+        }
         if self.workers.len() > 1 {
             for (i, w) in self.workers.iter().enumerate() {
-                out.push_str(&format!("\n  worker {i}: {}", w.snapshot().report_line()));
+                out.push_str(&format!(
+                    "\n  worker {i}{}: {}",
+                    if self.is_dead(i) { " [dead]" } else { "" },
+                    w.snapshot().report_line()
+                ));
             }
         }
         if self.tenants.len() > 1 {
@@ -414,6 +510,12 @@ impl PoolMetrics {
                     t.snapshot().report_line(),
                     self.tenant_rejected_count(id),
                 ));
+                if self.tenant_quota_rejected_count(id) > 0 {
+                    out.push_str(&format!(
+                        " ({} over quota)",
+                        self.tenant_quota_rejected_count(id)
+                    ));
+                }
             }
             if self.unknown_tenant_count() > 0 {
                 out.push_str(&format!(
@@ -520,6 +622,48 @@ mod tests {
         assert!(agg.report_line().contains("recipe swaps 2 (1 failed)"));
         // silent when no swap ever happened
         assert!(!Metrics::default().snapshot().report_line().contains("recipe swaps"));
+    }
+
+    #[test]
+    fn fault_counters_aggregate_and_report() {
+        let pool = PoolMetrics::new(2);
+        pool.worker(0).record_panic();
+        pool.worker(0).record_restart();
+        pool.worker(0).record_job_failed();
+        pool.worker(0).record_job_failed();
+        let agg = pool.aggregate();
+        assert_eq!(agg.panics, 1);
+        assert_eq!(agg.restarts, 1);
+        assert_eq!(agg.jobs_failed, 2);
+        assert!(
+            agg.report_line().contains("faults: 1 panic(s), 1 restart(s), 2 job(s) failed"),
+            "{}",
+            agg.report_line()
+        );
+        // silent on a healthy pool
+        assert!(!Metrics::default().snapshot().report_line().contains("faults:"));
+        // breaker state is per worker and reflected in the report
+        assert_eq!(pool.dead_workers(), 0);
+        pool.dead_handle(1).store(true, Ordering::SeqCst);
+        assert!(pool.is_dead(1) && !pool.is_dead(0));
+        assert_eq!(pool.dead_workers(), 1);
+        let r = pool.report();
+        assert!(r.contains("dead workers 1"), "{r}");
+        assert!(r.contains("worker 1 [dead]"), "{r}");
+    }
+
+    #[test]
+    fn quota_counters_are_a_subset_of_rejections() {
+        let pool = PoolMetrics::with_tenants(1, vec!["default".into(), "bulk".into()]);
+        pool.record_tenant_quota_rejected(1);
+        pool.record_tenant_rejected(1);
+        assert_eq!(pool.tenant_quota_rejected_count(1), 1);
+        assert_eq!(pool.tenant_rejected_count(1), 2, "quota rejects count in both");
+        assert_eq!(pool.tenant_quota_rejected_count(0), 0);
+        let h = pool.tenant_outstanding_handle(1);
+        h.fetch_add(3, Ordering::Relaxed);
+        assert_eq!(pool.tenant_outstanding_count(1), 3);
+        assert!(pool.report().contains("(1 over quota)"), "{}", pool.report());
     }
 
     #[test]

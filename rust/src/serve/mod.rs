@@ -64,11 +64,36 @@
 //! [`Server::swap_tenant_recipe`] hot-swaps one tenant without
 //! disturbing the others.
 //!
+//! ## Fault tolerance
+//!
+//! A worker whose engine panics (build or infer) does not strand its
+//! shard: the panic is contained with `catch_unwind`, every in-flight
+//! and queued job is answered with an explicit error, and a
+//! [`DeathEvent`] hands the shard's still-connected queue to the pool
+//! supervisor. The supervisor respawns the worker (fresh engine via the
+//! same [`EngineFactory`]; the prep comes back cheap through the shared
+//! [`crate::pipeline::PreparedCache`]) with capped exponential backoff
+//! ([`ServeConfig::backoff`]), re-applying every published recipe so
+//! the replacement serves current policy. After
+//! [`ServeConfig::restart_max`] respawns it gives up: the worker's
+//! breaker opens ([`PoolMetrics::dead_workers`]), its queue drains as
+//! errors, and the router stops dispatching to it. Per-worker
+//! panic/restart/failed-job counters live in [`Metrics`]. Deterministic
+//! failure schedules for testing all of this live in [`faults`].
+//!
+//! ## Per-tenant admission quotas
+//!
+//! With [`ServeConfig::tenant_quota`] set, each tenant's queued+
+//! in-flight jobs are capped at that fraction of the pool's total
+//! admission bound — a bulk tenant saturating its share is rejected
+//! (counted per tenant) while its siblings' slots stay admittable.
+//!
 //! ## Shutdown
 //!
 //! [`Server::shutdown`] flips the stop flag: the router rejects new
 //! work, each worker drains everything already queued (every admitted
-//! job gets a response), then exits; `shutdown` joins them all.
+//! job gets a response), then exits; `shutdown` joins them all (and the
+//! supervisor).
 //!
 //! ## Load testing
 //!
@@ -80,8 +105,11 @@
 //! (`ocs serve --loadtest`).
 
 pub mod backend;
+pub mod faults;
 pub mod metrics;
 
+use std::any::Any;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
@@ -198,7 +226,10 @@ impl TenantTable {
     /// always reads at least this recipe).
     fn publish(&self, id: usize, recipe: QuantRecipe) {
         let slot = &self.slots[id];
-        let mut guard = slot.recipe.lock().expect("tenant slot poisoned");
+        // poison-tolerant: a worker that panicked mid-publish can only
+        // have left a fully written recipe or the old one, both valid —
+        // swaps must keep working after a contained engine panic
+        let mut guard = slot.recipe.lock().unwrap_or_else(|e| e.into_inner());
         *guard = Some(recipe);
         slot.epoch.fetch_add(1, Ordering::Release);
     }
@@ -210,7 +241,7 @@ impl TenantTable {
     /// Consistent `(epoch, recipe)` snapshot, read under the lock.
     fn read(&self, id: usize) -> (u64, Option<QuantRecipe>) {
         let slot = &self.slots[id];
-        let guard = slot.recipe.lock().expect("tenant slot poisoned");
+        let guard = slot.recipe.lock().unwrap_or_else(|e| e.into_inner());
         (slot.epoch.load(Ordering::Acquire), guard.clone())
     }
 }
@@ -231,6 +262,9 @@ struct Shard {
     tx: SyncSender<Job>,
     /// Queued + in-flight gauge (shared with [`PoolMetrics`]).
     outstanding: Arc<AtomicUsize>,
+    /// Breaker (shared with [`PoolMetrics`]): set when the supervisor
+    /// gives up on this worker; the router stops dispatching to it.
+    dead: Arc<AtomicBool>,
 }
 
 /// Shared dispatch state: admission control + shard selection.
@@ -238,18 +272,39 @@ struct Router {
     shards: Vec<Shard>,
     queue_cap: usize,
     deadline: Option<Duration>,
+    /// Per-tenant cap on queued+in-flight jobs (from
+    /// [`ServeConfig::tenant_quota`]); `None` = no quota.
+    tenant_cap: Option<usize>,
     stop: Arc<AtomicBool>,
     metrics: Arc<PoolMetrics>,
     tenants: Arc<TenantTable>,
 }
 
 impl Router {
-    /// Admit a request: pick the least-loaded shard with queue room and
-    /// hand back the response channel. Errors instead of blocking when
-    /// the pool is stopping or every queue is full.
+    /// Admit a request: pick the least-loaded live shard with queue
+    /// room and hand back the response channel. Errors instead of
+    /// blocking when the pool is stopping, the tenant is over quota, or
+    /// every queue is full.
     fn dispatch(&self, x: TensorF, tenant: usize) -> Result<Receiver<Result<Vec<f32>>>> {
         if self.stop.load(Ordering::SeqCst) {
             bail!("server is shutting down");
+        }
+        // per-tenant quota gate: increment-then-check, so two racing
+        // submits can never both slip under the cap. The gauge is
+        // always maintained (workers decrement it when answering);
+        // only the cap check is conditional.
+        let tenant_gauge = self.metrics.tenant_outstanding_gauge(tenant);
+        let held = tenant_gauge.fetch_add(1, Ordering::Relaxed);
+        if let Some(cap) = self.tenant_cap {
+            if held >= cap {
+                tenant_gauge.fetch_sub(1, Ordering::Relaxed);
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                self.metrics.record_tenant_quota_rejected(tenant);
+                bail!(
+                    "tenant '{}' over admission quota ({held} outstanding, cap {cap})",
+                    self.tenants.name(tenant)
+                );
+            }
         }
         let (tx, rx) = sync_channel(1);
         let now = Instant::now();
@@ -261,21 +316,38 @@ impl Router {
             resp: tx,
         };
         // least-outstanding-work dispatch, allocation-free on the hot
-        // path: start at the least-loaded shard, walk the rest as
+        // path: start at the least-loaded live shard, walk the rest as
         // fallback when its queue is full
         let n = self.shards.len();
         let mut start = 0usize;
         let mut least = usize::MAX;
+        let mut live = 0usize;
         for (i, shard) in self.shards.iter().enumerate() {
+            if shard.dead.load(Ordering::SeqCst) {
+                continue;
+            }
+            live += 1;
             let o = shard.outstanding.load(Ordering::Relaxed);
             if o < least {
                 least = o;
                 start = i;
             }
         }
+        if live == 0 {
+            tenant_gauge.fetch_sub(1, Ordering::Relaxed);
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            self.metrics.record_tenant_rejected(tenant);
+            bail!(
+                "no live workers: all {} worker(s) gave up after repeated failures",
+                self.shards.len()
+            );
+        }
         for offset in 0..n {
             let i = (start + offset) % n;
             let shard = &self.shards[i];
+            if shard.dead.load(Ordering::SeqCst) {
+                continue;
+            }
             // count before send: the worker may answer (and decrement)
             // before try_send even returns
             shard.outstanding.fetch_add(1, Ordering::Relaxed);
@@ -284,12 +356,16 @@ impl Router {
                     self.metrics.dispatched.fetch_add(1, Ordering::Relaxed);
                     return Ok(rx);
                 }
+                // Disconnected = the supervisor dropped a dead worker's
+                // queue (or shutdown teardown won a race): fall through
+                // to the next shard — a clean rejection, never an unwrap
                 Err(TrySendError::Full(j)) | Err(TrySendError::Disconnected(j)) => {
                     shard.outstanding.fetch_sub(1, Ordering::Relaxed);
                     job = j;
                 }
             }
         }
+        tenant_gauge.fetch_sub(1, Ordering::Relaxed);
         self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
         self.metrics.record_tenant_rejected(tenant);
         bail!(
@@ -298,6 +374,15 @@ impl Router {
             self.queue_cap
         )
     }
+}
+
+/// Answer one job and keep every gauge exact: the worker/tenant
+/// outstanding gauges drop *before* the send, so a client unblocked by
+/// the response never observes a stale depth.
+fn answer_job(pool: &PoolMetrics, outstanding: &AtomicUsize, job: Job, result: Result<Vec<f32>>) {
+    outstanding.fetch_sub(1, Ordering::Relaxed);
+    pool.tenant_outstanding_gauge(job.tenant).fetch_sub(1, Ordering::Relaxed);
+    let _ = job.resp.send(result);
 }
 
 /// Client handle (cheaply cloneable, shareable across threads).
@@ -345,10 +430,39 @@ impl Client {
     }
 }
 
-/// Running pool: N worker threads + router + client factory.
+/// A worker's death notice to the supervisor. The shard's queue
+/// receiver rides along, still connected, so jobs admitted while the
+/// worker is down wait (bounded by `queue_cap`, still deadline-checked)
+/// for the replacement instead of being dropped.
+struct DeathEvent {
+    id: usize,
+    rx: Receiver<Job>,
+    reason: String,
+}
+
+/// Everything one worker thread needs, cloneable so the supervisor can
+/// stamp out replacement workers from the same context.
+#[derive(Clone)]
+struct WorkerCtx {
+    id: usize,
+    factory: Arc<dyn EngineFactory>,
+    cfg: ServeConfig,
+    /// This worker's own metrics shard.
+    metrics: Arc<Metrics>,
+    pool: Arc<PoolMetrics>,
+    outstanding: Arc<AtomicUsize>,
+    stop: Arc<AtomicBool>,
+    tenants: Arc<TenantTable>,
+    sup_tx: SyncSender<DeathEvent>,
+}
+
+/// Running pool: N worker threads + supervisor + router + client
+/// factory. Worker handles live behind a shared mutex so the
+/// supervisor can join dead workers and install their replacements.
 pub struct Server {
     router: Arc<Router>,
-    handles: Vec<JoinHandle<()>>,
+    handles: Arc<Mutex<Vec<Option<JoinHandle<()>>>>>,
+    supervisor: Option<JoinHandle<()>>,
     metrics: Arc<PoolMetrics>,
     stop: Arc<AtomicBool>,
     tenants: Arc<TenantTable>,
@@ -395,41 +509,39 @@ impl Server {
         let tenants = Arc::new(tenants);
         let metrics = Arc::new(PoolMetrics::with_tenants(cfg.workers, tenants.names()));
         let stop = Arc::new(AtomicBool::new(false));
+        // Buffered to hold one death notice per worker so a dying
+        // worker never blocks on its own obituary.
+        let (sup_tx, sup_rx) = sync_channel::<DeathEvent>(cfg.workers.max(1));
         let mut shards = Vec::with_capacity(cfg.workers);
-        let mut handles = Vec::with_capacity(cfg.workers);
+        let mut handle_slots = Vec::with_capacity(cfg.workers);
         let mut readies = Vec::with_capacity(cfg.workers);
+        let mut ctxs = Vec::with_capacity(cfg.workers);
         for id in 0..cfg.workers {
             let (tx, rx) = sync_channel::<Job>(cfg.queue_cap);
             let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
             let outstanding = metrics.outstanding_handle(id);
-            let worker_metrics = metrics.worker(id).clone();
-            let worker_pool_metrics = metrics.clone();
-            let worker_outstanding = outstanding.clone();
-            let worker_factory = factory.clone();
-            let worker_stop = stop.clone();
-            let worker_tenants = tenants.clone();
-            let worker_cfg = cfg.clone();
-            let handle = std::thread::Builder::new()
-                .name(format!("ocs-worker-{id}"))
-                .spawn(move || {
-                    worker_loop(
-                        id,
-                        worker_factory,
-                        worker_cfg,
-                        rx,
-                        worker_metrics,
-                        worker_pool_metrics,
-                        worker_outstanding,
-                        worker_stop,
-                        worker_tenants,
-                        ready_tx,
-                    )
-                })
-                .context("spawn worker thread")?;
-            shards.push(Shard { tx, outstanding });
-            handles.push(handle);
+            let ctx = WorkerCtx {
+                id,
+                factory: factory.clone(),
+                cfg: cfg.clone(),
+                metrics: metrics.worker(id).clone(),
+                pool: metrics.clone(),
+                outstanding: outstanding.clone(),
+                stop: stop.clone(),
+                tenants: tenants.clone(),
+                sup_tx: sup_tx.clone(),
+            };
+            let handle = spawn_worker(ctx.clone(), rx, Some(ready_tx))?;
+            shards.push(Shard {
+                tx,
+                outstanding,
+                dead: metrics.dead_handle(id),
+            });
+            handle_slots.push(Some(handle));
             readies.push(ready_rx);
+            ctxs.push(ctx);
         }
+        drop(sup_tx); // supervisor's receiver is fed only by worker clones
         // readiness gate: surface any worker's setup error to the caller
         let mut first_err: Option<anyhow::Error> = None;
         for (id, ready) in readies.into_iter().enumerate() {
@@ -447,7 +559,8 @@ impl Server {
         if let Some(e) = first_err {
             stop.store(true, Ordering::SeqCst);
             drop(shards); // disconnect every queue
-            for h in handles {
+            drop(sup_rx); // no supervisor was spawned; nothing to respawn
+            for h in handle_slots.into_iter().flatten() {
                 let _ = h.join();
             }
             return Err(e);
@@ -465,17 +578,36 @@ impl Server {
                 String::new()
             }
         );
+        // A tenant's admission cap is its share of the pool's total
+        // queue slots, rounded up, never below one slot.
+        let tenant_cap = cfg.tenant_quota.map(|q| {
+            let slots = (cfg.workers * cfg.queue_cap) as f64;
+            ((slots * q).ceil() as usize).max(1)
+        });
         let router = Arc::new(Router {
             shards,
             queue_cap: cfg.queue_cap,
             deadline: cfg.deadline,
+            tenant_cap,
             stop: stop.clone(),
             metrics: metrics.clone(),
             tenants: tenants.clone(),
         });
+        let handles = Arc::new(Mutex::new(handle_slots));
+        let supervisor = {
+            let handles = handles.clone();
+            let stop = stop.clone();
+            Some(
+                std::thread::Builder::new()
+                    .name("ocs-supervisor".into())
+                    .spawn(move || supervisor_loop(sup_rx, ctxs, handles, stop))
+                    .context("spawn supervisor thread")?,
+            )
+        };
         Ok(Server {
             router,
             handles,
+            supervisor,
             metrics,
             stop,
             tenants,
@@ -550,24 +682,184 @@ impl Server {
     /// workers watch the stop flag, not just channel disconnection.
     pub fn shutdown(mut self) -> Result<()> {
         self.stop.store(true, Ordering::SeqCst);
+        // Supervisor first: it drains the queues of any worker that died
+        // right at shutdown, then stops touching the handle slots.
+        if let Some(s) = self.supervisor.take() {
+            let _ = s.join();
+        }
         let mut panicked = 0usize;
-        for h in self.handles.drain(..) {
-            if h.join().is_err() {
-                panicked += 1;
+        let mut handles = self.handles.lock().unwrap_or_else(|e| e.into_inner());
+        for slot in handles.iter_mut() {
+            if let Some(h) = slot.take() {
+                if h.join().is_err() {
+                    panicked += 1;
+                }
             }
         }
+        drop(handles);
         if panicked > 0 {
+            // Contained panics exit the thread cleanly; a join error here
+            // means a panic escaped containment entirely.
             bail!("{panicked} worker(s) panicked");
         }
         Ok(())
+    }
+
+    /// Workers the supervisor has given up on (breaker open).
+    pub fn dead_workers(&self) -> usize {
+        self.metrics.dead_workers()
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        for h in self.handles.drain(..) {
+        if let Some(s) = self.supervisor.take() {
+            let _ = s.join();
+        }
+        let mut handles = self.handles.lock().unwrap_or_else(|e| e.into_inner());
+        for slot in handles.iter_mut() {
+            if let Some(h) = slot.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Spawn one worker thread (startup passes a readiness channel; the
+/// supervisor's respawns pass `None` and learn of failures via
+/// [`DeathEvent`]s instead).
+fn spawn_worker(
+    ctx: WorkerCtx,
+    rx: Receiver<Job>,
+    ready: Option<SyncSender<Result<()>>>,
+) -> Result<JoinHandle<()>> {
+    let id = ctx.id;
+    std::thread::Builder::new()
+        .name(format!("ocs-worker-{id}"))
+        .spawn(move || worker_loop(ctx, rx, ready))
+        .context("spawn worker thread")
+}
+
+/// Best-effort panic payload → string. Payloads are `&str` or `String`
+/// in practice; anything else gets a generic tag.
+fn panic_msg(p: &(dyn Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Fail (or shutdown-answer) every job still sitting in a dead worker's
+/// queue. `count_failed` distinguishes fault collateral (counted in
+/// `jobs_failed`) from ordinary shutdown drains.
+fn drain_queue(ctx: &WorkerCtx, rx: &Receiver<Job>, msg: &str, count_failed: bool) {
+    while let Ok(job) = rx.try_recv() {
+        if count_failed {
+            ctx.metrics.record_job_failed();
+        }
+        let err = anyhow!(msg.to_string());
+        answer_job(&ctx.pool, &ctx.outstanding, job, Err(err));
+    }
+}
+
+/// Supervisor: joins dead workers, respawns them with capped
+/// exponential backoff, and opens the per-worker breaker once
+/// `restart_max` respawns have been burned. Holding `ctxs` (each with a
+/// `sup_tx` clone) keeps the death channel connected for its lifetime.
+fn supervisor_loop(
+    sup_rx: Receiver<DeathEvent>,
+    ctxs: Vec<WorkerCtx>,
+    handles: Arc<Mutex<Vec<Option<JoinHandle<()>>>>>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut restarts = vec![0u32; ctxs.len()];
+    loop {
+        match sup_rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(ev) => handle_death(ev, &ctxs, &handles, &stop, &mut restarts),
+            Err(RecvTimeoutError::Timeout) => {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    // Shutdown sweep: a death notice still queued carries a shard queue
+    // whose jobs must be answered before the channel tears down.
+    while let Ok(ev) = sup_rx.try_recv() {
+        if let Some(h) = handles.lock().unwrap_or_else(|e| e.into_inner())[ev.id].take() {
             let _ = h.join();
+        }
+        drain_queue(&ctxs[ev.id], &ev.rx, "server is shutting down", false);
+    }
+}
+
+fn handle_death(
+    ev: DeathEvent,
+    ctxs: &[WorkerCtx],
+    handles: &Mutex<Vec<Option<JoinHandle<()>>>>,
+    stop: &AtomicBool,
+    restarts: &mut [u32],
+) {
+    let id = ev.id;
+    let ctx = &ctxs[id];
+    let (restart_max, backoff) = (ctx.cfg.restart_max, ctx.cfg.backoff);
+    // The dying thread sent this notice on its way out; join it so the
+    // slot is free for the replacement.
+    if let Some(h) = handles.lock().unwrap_or_else(|e| e.into_inner())[id].take() {
+        let _ = h.join();
+    }
+    if stop.load(Ordering::SeqCst) {
+        drain_queue(ctx, &ev.rx, "server is shutting down", false);
+        return;
+    }
+    if restarts[id] >= restart_max {
+        // Give up: open the breaker, fail everything still queued, drop
+        // the queue so the router sees a dead shard from here on.
+        ctx.pool.dead_handle(id).store(true, Ordering::SeqCst);
+        crate::warnln!(
+            "worker {id}: giving up after {} restart(s) ({}); breaker open",
+            restarts[id],
+            ev.reason
+        );
+        let msg = format!(
+            "worker {id} is dead (gave up after {} restart(s))",
+            restarts[id]
+        );
+        drain_queue(ctx, &ev.rx, &msg, true);
+        return;
+    }
+    restarts[id] += 1;
+    ctx.metrics.record_restart();
+    // Capped exponential backoff (base × 2^(n-1), capped at 64×), slept
+    // in small slices so shutdown is never held hostage by a long delay.
+    let delay = backoff.saturating_mul(1u32 << (restarts[id] - 1).min(6));
+    crate::warnln!(
+        "worker {id} died ({}); respawn {}/{restart_max} in {delay:?}",
+        ev.reason,
+        restarts[id]
+    );
+    let t0 = Instant::now();
+    while t0.elapsed() < delay {
+        if stop.load(Ordering::SeqCst) {
+            drain_queue(ctx, &ev.rx, "server is shutting down", false);
+            return;
+        }
+        let left = delay.saturating_sub(t0.elapsed());
+        std::thread::sleep(left.min(Duration::from_millis(10)));
+    }
+    match spawn_worker(ctx.clone(), ev.rx, None) {
+        Ok(h) => handles.lock().unwrap_or_else(|e| e.into_inner())[id] = Some(h),
+        Err(e) => {
+            // The OS refused the thread itself; the queue receiver died
+            // with the failed spawn, so open the breaker — the router
+            // turns the disconnect into clean rejections either way.
+            ctx.pool.dead_handle(id).store(true, Ordering::SeqCst);
+            crate::warnln!("worker {id}: respawn failed ({e:#}); breaker open");
         }
     }
 }
@@ -639,6 +931,17 @@ impl TenantView {
         }
     }
 
+    /// Force the next [`TenantView::sync`] to re-examine every slot.
+    /// Used after a respawn: a fresh engine serves factory state, not
+    /// the swaps its predecessor applied, so every *published* recipe
+    /// must be re-applied (never-published slots stay untouched —
+    /// `sync` only acts on `Some` recipes).
+    fn mark_all_stale(&mut self) {
+        for e in &mut self.epochs {
+            *e = e.wrapping_sub(1);
+        }
+    }
+
     /// The per-tenant view engines receive. Tenant 0's recipe is always
     /// `None`: the default tenant serves the factory build (plus any
     /// pool-wide swap already applied through [`WorkerEngine::swap`]).
@@ -655,39 +958,75 @@ impl TenantView {
     }
 }
 
+/// Contained-death exit path: fail everything already queued (the
+/// fault's collateral), then hand the still-connected queue to the
+/// supervisor as a [`DeathEvent`].
+fn die(ctx: WorkerCtx, rx: Receiver<Job>, reason: String) {
+    let id = ctx.id;
+    crate::warnln!("worker {id}: {reason}");
+    let msg = format!("worker {id} died: {reason}; queued job failed");
+    drain_queue(&ctx, &rx, &msg, true);
+    let _ = ctx.sup_tx.send(DeathEvent { id, rx, reason });
+}
+
 /// One worker: build the engine on this thread, then batch-and-serve
-/// until stopped (draining the queue first) or disconnected.
-#[allow(clippy::too_many_arguments)]
-fn worker_loop(
-    id: usize,
-    factory: Arc<dyn EngineFactory>,
-    cfg: ServeConfig,
-    rx: Receiver<Job>,
-    metrics: Arc<Metrics>,
-    pool: Arc<PoolMetrics>,
-    outstanding: Arc<AtomicUsize>,
-    stop: Arc<AtomicBool>,
-    tenants: Arc<TenantTable>,
-    ready: SyncSender<Result<()>>,
-) {
-    let mut engine = match factory.build(id) {
-        Ok(e) => {
-            let _ = ready.send(Ok(()));
+/// until stopped (draining the queue first) or disconnected. Engine
+/// build and every batch run under `catch_unwind`: a panicking engine
+/// kills this worker *cleanly* — queued jobs answered, supervisor
+/// notified — never the process, and never a hung client.
+fn worker_loop(ctx: WorkerCtx, rx: Receiver<Job>, ready: Option<SyncSender<Result<()>>>) {
+    let respawn = ready.is_none();
+    let id = ctx.id;
+    // At startup a build failure feeds the readiness gate (the pool
+    // fails as a whole); on respawn it becomes another death event for
+    // the supervisor to back off on.
+    let mut engine = match catch_unwind(AssertUnwindSafe(|| ctx.factory.build(id))) {
+        Ok(Ok(e)) => {
+            if let Some(r) = &ready {
+                let _ = r.send(Ok(()));
+            }
             e
         }
-        Err(e) => {
-            let _ = ready.send(Err(e));
+        Ok(Err(e)) => {
+            match &ready {
+                Some(r) => {
+                    let _ = r.send(Err(e));
+                }
+                None => die(ctx, rx, format!("engine rebuild failed: {e:#}")),
+            }
+            return;
+        }
+        Err(p) => {
+            ctx.metrics.record_panic();
+            let reason = format!("engine build panicked: {}", panic_msg(p.as_ref()));
+            match &ready {
+                Some(r) => {
+                    let _ = r.send(Err(anyhow!(reason.clone())));
+                }
+                None => die(ctx, rx, reason),
+            }
             return;
         }
     };
     // the view starts from the table's construction-time recipes; a
     // swap published while this worker was still building is applied on
     // its first loop iteration, not missed
-    let mut view = TenantView::new(tenants);
+    let mut view = TenantView::new(ctx.tenants.clone());
+    if respawn {
+        view.mark_all_stale();
+    }
     loop {
         // apply any published recipe swaps strictly between batches, so
-        // in-flight work always completes on the prep it started with
-        view.sync(id, engine.as_mut(), &metrics);
+        // in-flight work always completes on the prep it started with.
+        // A panicking swap kills this worker like a panicking batch.
+        if let Err(p) = catch_unwind(AssertUnwindSafe(|| {
+            view.sync(id, engine.as_mut(), &ctx.metrics)
+        })) {
+            ctx.metrics.record_panic();
+            let reason = format!("recipe swap panicked: {}", panic_msg(p.as_ref()));
+            die(ctx, rx, reason);
+            return;
+        }
         // wait for the first job of a batch; wake periodically to honour
         // the stop flag (and recipe swaps) even while clients keep the
         // channel open. Jobs still queued at stop are returned by
@@ -696,7 +1035,7 @@ fn worker_loop(
         let first = match rx.recv_timeout(Duration::from_millis(50)) {
             Ok(j) => j,
             Err(RecvTimeoutError::Timeout) => {
-                if stop.load(Ordering::SeqCst) {
+                if ctx.stop.load(Ordering::SeqCst) {
                     break;
                 }
                 continue;
@@ -704,8 +1043,8 @@ fn worker_loop(
             Err(RecvTimeoutError::Disconnected) => break, // all clients gone
         };
         let mut jobs = vec![first];
-        let top_up_until = Instant::now() + cfg.max_wait;
-        while jobs.len() < cfg.max_batch {
+        let top_up_until = Instant::now() + ctx.cfg.max_wait;
+        while jobs.len() < ctx.cfg.max_batch {
             let now = Instant::now();
             if now >= top_up_until {
                 break;
@@ -715,16 +1054,34 @@ fn worker_loop(
                 Err(_) => break,
             }
         }
-        run_batch(engine.as_mut(), &view, jobs, &metrics, &pool, &outstanding);
+        match run_batch(engine.as_mut(), &view, jobs, &ctx) {
+            BatchOutcome::Ok => {}
+            BatchOutcome::Panicked(reason) => {
+                die(ctx, rx, reason);
+                return;
+            }
+        }
     }
     // Final sweep: a dispatch that passed its stop check can still land
     // a job between our last empty recv and the channel teardown below;
     // answer it rather than dropping it with the queue.
     while let Ok(job) = rx.try_recv() {
-        outstanding.fetch_sub(1, Ordering::Relaxed);
-        let _ = job.resp.send(Err(anyhow!("server is shutting down")));
+        answer_job(
+            &ctx.pool,
+            &ctx.outstanding,
+            job,
+            Err(anyhow!("server is shutting down")),
+        );
     }
     crate::debugln!("worker {id}: drained, exiting");
+}
+
+/// How a batch ended: normally (including engine *errors*, which are
+/// answered and survivable) or with a contained panic that must kill
+/// the worker.
+enum BatchOutcome {
+    Ok,
+    Panicked(String),
 }
 
 /// Answer expired jobs, partition the rest into single-tenant batches
@@ -734,29 +1091,24 @@ fn run_batch(
     engine: &mut dyn WorkerEngine,
     view: &TenantView,
     jobs: Vec<Job>,
-    metrics: &Metrics,
-    pool: &PoolMetrics,
-    outstanding: &AtomicUsize,
-) {
+    ctx: &WorkerCtx,
+) -> BatchOutcome {
     let now = Instant::now();
     let mut live = Vec::with_capacity(jobs.len());
     for job in jobs {
         match job.deadline {
             Some(d) if now >= d => {
-                metrics.record_deadline_exceeded();
-                pool.tenant(job.tenant).record_deadline_exceeded();
+                ctx.metrics.record_deadline_exceeded();
+                ctx.pool.tenant(job.tenant).record_deadline_exceeded();
                 let waited_ms = job.enqueued.elapsed().as_millis();
                 let err = anyhow!("deadline exceeded after {waited_ms} ms in queue");
-                // gauge drops before the send: the client unblocks on
-                // the send, and must never observe a stale depth
-                outstanding.fetch_sub(1, Ordering::Relaxed);
-                let _ = job.resp.send(Err(err));
+                answer_job(&ctx.pool, &ctx.outstanding, job, Err(err));
             }
             _ => live.push(job),
         }
     }
     if live.is_empty() {
-        return;
+        return BatchOutcome::Ok;
     }
     // partition by tenant, order-stable; the single-tenant pool is one
     // group and pays nothing beyond this scan
@@ -770,23 +1122,36 @@ fn run_batch(
             }
         }
     }
-    for (tenant, group) in groups {
-        run_tenant_batch(engine, view, tenant, group, metrics, pool, outstanding);
+    for gi in 0..groups.len() {
+        let (tenant, group) = std::mem::take(&mut groups[gi]);
+        if let Some(reason) = run_tenant_batch(engine, view, tenant, group, ctx) {
+            // the panic's blast radius includes the groups not yet run:
+            // the engine is gone, so their jobs fail here, explicitly
+            let msg = format!("worker engine panicked (contained): {reason}");
+            for (_, group) in groups.drain(gi + 1..) {
+                for job in group {
+                    ctx.metrics.record_job_failed();
+                    answer_job(&ctx.pool, &ctx.outstanding, job, Err(anyhow!(msg.clone())));
+                }
+            }
+            return BatchOutcome::Panicked(reason);
+        }
     }
+    BatchOutcome::Ok
 }
 
-/// Execute one single-tenant group as a fused forward pass.
+/// Execute one single-tenant group as a fused forward pass. Returns
+/// `Some(reason)` when the engine panicked (contained): every job in
+/// the group has been answered with an error and the worker must die.
 fn run_tenant_batch(
     engine: &mut dyn WorkerEngine,
     view: &TenantView,
     tenant: usize,
     live: Vec<Job>,
-    metrics: &Metrics,
-    pool: &PoolMetrics,
-    outstanding: &AtomicUsize,
-) {
+    ctx: &WorkerCtx,
+) -> Option<String> {
     let n = live.len();
-    let result = (|| -> Result<TensorF> {
+    let result = catch_unwind(AssertUnwindSafe(|| -> Result<TensorF> {
         for j in &live[1..] {
             if j.x.shape() != live[0].x.shape() {
                 bail!(
@@ -803,14 +1168,14 @@ fn run_tenant_batch(
         let mut shape = live[0].x.shape().to_vec();
         shape[0] = n;
         let xb = TensorF::from_vec(&shape, data)?;
-        let ctx = view.ctx(tenant);
+        let tctx = view.ctx(tenant);
         let t0 = Instant::now();
-        let out = engine.infer_tenant(&ctx, &xb)?;
-        metrics.record_batch(n, t0.elapsed().as_micros() as u64);
+        let out = engine.infer_tenant(&tctx, &xb)?;
+        ctx.metrics.record_batch(n, t0.elapsed().as_micros() as u64);
         Ok(out)
-    })();
+    }));
     match result {
-        Ok(logits) => {
+        Ok(Ok(logits)) => {
             let classes = logits.shape().get(1).copied().unwrap_or(0);
             for (row, job) in live.into_iter().enumerate() {
                 let resp = if classes == 0 || (row + 1) * classes > logits.len() {
@@ -820,21 +1185,34 @@ fn run_tenant_batch(
                 };
                 if resp.is_ok() {
                     let latency = job.enqueued.elapsed();
-                    metrics.record_request(latency);
-                    pool.tenant(tenant).record_request(latency);
+                    ctx.metrics.record_request(latency);
+                    ctx.pool.tenant(tenant).record_request(latency);
                 }
-                outstanding.fetch_sub(1, Ordering::Relaxed);
-                let _ = job.resp.send(resp);
+                answer_job(&ctx.pool, &ctx.outstanding, job, resp);
             }
+            None
         }
-        Err(e) => {
-            metrics.record_exec_error();
-            pool.tenant(tenant).record_exec_error();
+        Ok(Err(e)) => {
+            // engine *errors* are survivable: answered and counted, the
+            // worker keeps serving
+            ctx.metrics.record_exec_error();
+            ctx.pool.tenant(tenant).record_exec_error();
             let msg = format!("{e:#}");
             for job in live {
-                outstanding.fetch_sub(1, Ordering::Relaxed);
-                let _ = job.resp.send(Err(anyhow!(msg.clone())));
+                answer_job(&ctx.pool, &ctx.outstanding, job, Err(anyhow!(msg.clone())));
             }
+            None
+        }
+        Err(p) => {
+            let reason = panic_msg(p.as_ref());
+            ctx.metrics.record_panic();
+            ctx.pool.tenant(tenant).record_exec_error();
+            let msg = format!("worker engine panicked (contained): {reason}");
+            for job in live {
+                ctx.metrics.record_job_failed();
+                answer_job(&ctx.pool, &ctx.outstanding, job, Err(anyhow!(msg.clone())));
+            }
+            Some(reason)
         }
     }
 }
@@ -854,6 +1232,10 @@ pub struct SweepPoint {
     pub mean_batch: f64,
     pub rejected: u64,
     pub deadline_exceeded: u64,
+    pub panics: u64,
+    pub restarts: u64,
+    pub jobs_failed: u64,
+    pub dead_workers: u64,
 }
 
 /// Start a pool at `workers` shards, drive `requests` synthetic-image
@@ -914,6 +1296,10 @@ pub fn run_point(
         mean_batch: agg.mean_batch(),
         rejected: server.metrics().rejected_count(),
         deadline_exceeded: agg.deadline_exceeded,
+        panics: agg.panics,
+        restarts: agg.restarts,
+        jobs_failed: agg.jobs_failed,
+        dead_workers: server.metrics().dead_workers() as u64,
     };
     println!("{}", server.metrics().report());
     server.shutdown()?;
@@ -1012,6 +1398,10 @@ pub struct LoadPoint {
     pub p99_ms: f64,
     pub rejected: u64,
     pub deadline_exceeded: u64,
+    pub panics: u64,
+    pub restarts: u64,
+    pub jobs_failed: u64,
+    pub dead_workers: u64,
     /// Per-tenant `(name, requests served, rejected)` for this step.
     pub tenants: Vec<(String, u64, u64)>,
 }
@@ -1056,10 +1446,57 @@ pub fn run_load_point(
     clients: usize,
     requests: usize,
 ) -> Result<LoadPoint> {
+    let server = Server::start_tenants(factory, cfg.clone(), TenantTable::new(tenants)?)?;
+    let point = drive_on(&server, clients, requests, None)?;
+    println!("{}", server.metrics().report());
+    server.shutdown()?;
+    Ok(point)
+}
+
+/// Server-side counters sampled before/after one [`drive_on`] phase, so
+/// consecutive phases against the *same* pool report exact deltas.
+struct CounterBase {
+    rejected: u64,
+    deadline_exceeded: u64,
+    panics: u64,
+    restarts: u64,
+    jobs_failed: u64,
+    tenants: Vec<(u64, u64)>,
+}
+
+fn counter_base(server: &Server) -> CounterBase {
+    let agg = server.metrics().aggregate();
+    CounterBase {
+        rejected: server.metrics().rejected_count(),
+        deadline_exceeded: agg.deadline_exceeded,
+        panics: agg.panics,
+        restarts: agg.restarts,
+        jobs_failed: agg.jobs_failed,
+        tenants: (0..server.tenants().len())
+            .map(|id| {
+                (
+                    server.metrics().tenant(id).snapshot().requests,
+                    server.metrics().tenant_rejected_count(id),
+                )
+            })
+            .collect(),
+    }
+}
+
+/// Drive one closed-loop phase against an already-running pool. With
+/// `watchdog: Some(d)`, a client thread that fails to report within `d`
+/// of the previous report is treated as hung and the phase errors out —
+/// this is the chaos harness's "zero client hangs" assertion.
+fn drive_on(
+    server: &Server,
+    clients: usize,
+    requests: usize,
+    watchdog: Option<Duration>,
+) -> Result<LoadPoint> {
     if clients == 0 {
         bail!("loadtest: client counts must be >= 1");
     }
-    let server = Server::start_tenants(factory, cfg.clone(), TenantTable::new(tenants)?)?;
+    let base = counter_base(server);
     let dataset = crate::train::data::synth_images(256, 411);
     let row = dataset.x.len() / dataset.len();
     let mut req_shape = dataset.x.shape().to_vec();
@@ -1073,6 +1510,7 @@ pub fn run_load_point(
             .map(|k| pick_tenant(server.tenants(), k))
             .collect(),
     );
+    let (done_tx, done_rx) = sync_channel::<(usize, usize, Vec<f64>)>(clients);
     let t0 = Instant::now();
     let mut threads = Vec::new();
     for c in 0..clients {
@@ -1081,7 +1519,8 @@ pub fn run_load_point(
         let shape = req_shape.clone();
         let names = names.clone();
         let schedule = schedule.clone();
-        threads.push(std::thread::spawn(move || -> (usize, usize, Vec<f64>) {
+        let done_tx = done_tx.clone();
+        threads.push(std::thread::spawn(move || {
             let mut ok = 0usize;
             let mut errors = 0usize;
             let mut lat = Vec::with_capacity(per);
@@ -1102,17 +1541,34 @@ pub fn run_load_point(
                     _ => errors += 1,
                 }
             }
-            (ok, errors, lat)
+            let _ = done_tx.send((ok, errors, lat));
         }));
     }
+    drop(done_tx);
     let mut ok = 0usize;
     let mut errors = 0usize;
     let mut lat: Vec<f64> = Vec::new();
-    for h in threads {
-        let (o, e, l) = h.join().map_err(|_| anyhow!("load client panicked"))?;
+    for _ in 0..clients {
+        let report = match watchdog {
+            Some(d) => match done_rx.recv_timeout(d) {
+                Ok(r) => Ok(r),
+                Err(RecvTimeoutError::Timeout) => {
+                    bail!(
+                        "chaos loadtest: client hang — no client finished within {d:?} \
+                         (a dead worker is stranding requests)"
+                    );
+                }
+                Err(RecvTimeoutError::Disconnected) => Err(()),
+            },
+            None => done_rx.recv().map_err(|_| ()),
+        };
+        let (o, e, l) = report.map_err(|_| anyhow!("load client panicked"))?;
         ok += o;
         errors += e;
         lat.extend(l);
+    }
+    for h in threads {
+        h.join().map_err(|_| anyhow!("load client panicked"))?;
     }
     let secs = t0.elapsed().as_secs_f64();
     lat.sort_by(|a, b| a.total_cmp(b));
@@ -1122,7 +1578,7 @@ pub fn run_load_point(
         lat.iter().sum::<f64>() / lat.len() as f64
     };
     let agg = server.metrics().aggregate();
-    let point = LoadPoint {
+    Ok(LoadPoint {
         clients,
         requests: clients * per,
         ok,
@@ -1133,21 +1589,22 @@ pub fn run_load_point(
         p50_ms: percentile_ms(&lat, 0.50),
         p95_ms: percentile_ms(&lat, 0.95),
         p99_ms: percentile_ms(&lat, 0.99),
-        rejected: server.metrics().rejected_count(),
-        deadline_exceeded: agg.deadline_exceeded,
+        rejected: server.metrics().rejected_count() - base.rejected,
+        deadline_exceeded: agg.deadline_exceeded - base.deadline_exceeded,
+        panics: agg.panics - base.panics,
+        restarts: agg.restarts - base.restarts,
+        jobs_failed: agg.jobs_failed - base.jobs_failed,
+        dead_workers: server.metrics().dead_workers() as u64,
         tenants: (0..server.tenants().len())
             .map(|id| {
                 (
                     server.tenants().name(id).to_string(),
-                    server.metrics().tenant(id).snapshot().requests,
-                    server.metrics().tenant_rejected_count(id),
+                    server.metrics().tenant(id).snapshot().requests - base.tenants[id].0,
+                    server.metrics().tenant_rejected_count(id) - base.tenants[id].1,
                 )
             })
             .collect(),
-    };
-    println!("{}", server.metrics().report());
-    server.shutdown()?;
-    Ok(point)
+    })
 }
 
 /// The closed-loop load harness behind `ocs serve --loadtest`: sweep
@@ -1204,6 +1661,141 @@ pub fn loadtest(
         println!("wrote {}", path.display());
     }
     Ok(points)
+}
+
+/// The chaos loadtest's three phases plus the fault bookkeeping the
+/// assertions (and `BENCH_chaos.json`) are built from.
+#[derive(Debug, Clone)]
+pub struct ChaosReport {
+    /// Baseline phase on a healthy pool (no faults armed).
+    pub healthy: LoadPoint,
+    /// The phase during which `killed_worker` panics and is respawned.
+    pub degraded: LoadPoint,
+    /// Same pool after the respawn settled.
+    pub recovered: LoadPoint,
+    pub killed_worker: usize,
+    pub panics: u64,
+    pub restarts: u64,
+    pub jobs_failed: u64,
+}
+
+/// The chaos gate behind `ocs serve --loadtest --chaos`: measure a
+/// healthy baseline, then run the same offered load against a pool
+/// where one worker is scheduled (via [`faults::FaultPlan`]) to panic
+/// mid-sweep, and assert graceful degradation — no client ever hangs
+/// (watchdogged), the error burst is bounded by the dead worker's
+/// admission share, and throughput after the supervisor's respawn
+/// recovers to at least half the healthy baseline.
+pub fn chaos_loadtest(
+    factory: Arc<dyn EngineFactory>,
+    cfg: &ServeConfig,
+    tenants: &[TenantInit],
+    clients: usize,
+    requests: usize,
+    json_out: Option<&Path>,
+) -> Result<ChaosReport> {
+    if cfg.workers < 2 {
+        bail!("chaos loadtest: need at least 2 workers (one dies mid-sweep)");
+    }
+    if cfg.restart_max == 0 {
+        bail!("chaos loadtest: restart_max must be >= 1 for the pool to recover");
+    }
+    let label = factory.label();
+    // Phase 1: healthy baseline on its own pool, no faults armed.
+    let healthy = run_load_point(factory.clone(), cfg, tenants, clients, requests)?;
+    println!(
+        "chaos[healthy]: {}/{} ok in {:.2}s = {:.0} req/s (p99 {:.2} ms)",
+        healthy.ok, healthy.requests, healthy.secs, healthy.rps, healthy.p99_ms
+    );
+    // Phases 2+3 share one pool: the highest-id worker panics on its
+    // 3rd batch (deep enough into the sweep that the pool is warm).
+    let killed = cfg.workers - 1;
+    let plan = faults::FaultPlan::new(vec![faults::FaultDirective::PanicOnBatch {
+        worker: killed,
+        nth: 3,
+    }]);
+    let server =
+        Server::start_tenants(plan.wrap(factory), cfg.clone(), TenantTable::new(tenants)?)?;
+    let degraded = drive_on(&server, clients, requests, Some(Duration::from_secs(60)))?;
+    println!(
+        "chaos[degraded]: {}/{} ok = {:.0} req/s \
+         ({} panic(s), {} job(s) failed, {} rejected)",
+        degraded.ok, degraded.requests, degraded.rps, degraded.panics, degraded.jobs_failed,
+        degraded.rejected
+    );
+    if degraded.panics == 0 {
+        bail!(
+            "chaos loadtest: the fault never fired — worker {killed} served fewer than 3 \
+             batches; raise --requests"
+        );
+    }
+    if degraded.ok == 0 {
+        bail!("chaos loadtest: no request survived the worker kill");
+    }
+    // Bounded blast radius: the kill can fail at most the dead worker's
+    // queue + one in-flight batch; anything above that (plus rejections,
+    // which closed-loop clients count as errors) means the failure leaked.
+    let blast_cap = cfg.queue_cap + cfg.max_batch + degraded.rejected as usize;
+    if degraded.errors > blast_cap {
+        bail!(
+            "chaos loadtest: {} errors exceed the blast-radius bound {} \
+             (queue_cap {} + max_batch {} + {} rejected)",
+            degraded.errors,
+            blast_cap,
+            cfg.queue_cap,
+            cfg.max_batch,
+            degraded.rejected
+        );
+    }
+    // Wait for the supervisor's respawn before measuring recovery.
+    let t0 = Instant::now();
+    while server.metrics().aggregate().restarts == 0 {
+        if t0.elapsed() > Duration::from_secs(10) {
+            bail!("chaos loadtest: supervisor never respawned worker {killed}");
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // Phase 3: same pool, fault already burned (one-shot), full strength.
+    let recovered = drive_on(&server, clients, requests, Some(Duration::from_secs(60)))?;
+    let report = server.metrics().report();
+    let agg = server.metrics().aggregate();
+    let out = ChaosReport {
+        killed_worker: killed,
+        panics: agg.panics,
+        restarts: agg.restarts,
+        jobs_failed: agg.jobs_failed,
+        healthy,
+        degraded,
+        recovered,
+    };
+    println!("{report}");
+    server.shutdown()?;
+    let ratio = out.recovered.rps / out.healthy.rps.max(1e-9);
+    println!(
+        "chaos: recovered {:.0} req/s vs healthy {:.0} req/s ({:.0}% — worker {} killed, \
+         {} restart(s), {} job(s) failed)",
+        out.recovered.rps,
+        out.healthy.rps,
+        ratio * 100.0,
+        out.killed_worker,
+        out.restarts,
+        out.jobs_failed
+    );
+    if ratio < 0.5 {
+        bail!(
+            "chaos loadtest: post-respawn throughput {:.0} req/s is below half the healthy \
+             baseline {:.0} req/s",
+            out.recovered.rps,
+            out.healthy.rps
+        );
+    }
+    if let Some(path) = json_out {
+        crate::bench_record::BenchRecord::from_chaos(&label, &out)
+            .write(path)
+            .with_context(|| format!("write {}", path.display()))?;
+        println!("wrote {}", path.display());
+    }
+    Ok(out)
 }
 
 #[cfg(test)]

@@ -1,0 +1,294 @@
+//! Integration tests for the fault-tolerance layer: panic containment
+//! (queued jobs fail, clients never hang), supervisor respawn with
+//! backoff, breaker give-up, dead-shard rejection at the router,
+//! per-tenant fault isolation (siblings stay bit-stable), per-tenant
+//! admission quotas, and the chaos loadtest gate — all driven through
+//! the deterministic [`FaultPlan`] schedules, so they run in CI on the
+//! sim and native backends with no artifacts.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use ocs::clip::ClipMethod;
+use ocs::pipeline::{QuantConfig, QuantRecipe, ServeConfig};
+use ocs::serve::backend::{NativeFactory, SimFactory};
+use ocs::serve::faults::FaultPlan;
+use ocs::serve::{chaos_loadtest, Server, TenantInit, TenantTable};
+use ocs::tensor::TensorF;
+
+/// Same discipline as `it_serve_pool`: these tests run pools and burn
+/// CPU; serialize them so they don't corrupt each other's timing.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Pool config with a fast supervisor (1 ms backoff base) so respawn
+/// tests finish quickly.
+fn cfg(workers: usize) -> ServeConfig {
+    ServeConfig {
+        workers,
+        max_batch: 4,
+        max_wait: Duration::from_micros(200),
+        queue_cap: 64,
+        deadline: None,
+        backoff: Duration::from_millis(1),
+        ..ServeConfig::default()
+    }
+}
+
+fn sim() -> Arc<SimFactory> {
+    Arc::new(SimFactory::default())
+}
+
+fn recipe(w_bits: u32) -> QuantRecipe {
+    let mut c = QuantConfig::weights_only(w_bits, ClipMethod::Mse, 0.02);
+    c.a_bits = Some(8);
+    c.to_recipe()
+}
+
+fn tenant(name: &str, weight: f64, r: Option<QuantRecipe>) -> TenantInit {
+    TenantInit {
+        name: name.into(),
+        weight,
+        recipe: r,
+    }
+}
+
+/// One fixed `(1, 16, 16, 3)` image for the synthetic MLP, and a
+/// second distinct one for batch variety.
+fn image() -> TensorF {
+    let ds = ocs::train::data::synth_images(4, 77);
+    ocs::calib::slice_rows(&ds.x, 0, 1).unwrap()
+}
+
+/// Retry an infer until the pool serves it (the respawn window rejects
+/// or fails requests); panics after `secs` seconds of failures.
+fn infer_until_ok(client: &ocs::serve::Client, x: &TensorF, secs: u64) -> Vec<f32> {
+    let t0 = Instant::now();
+    loop {
+        match client.infer(x.clone()) {
+            Ok(logits) => return logits,
+            Err(e) => {
+                if t0.elapsed() > Duration::from_secs(secs) {
+                    panic!("pool never recovered: last error: {e:#}");
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+    }
+}
+
+#[test]
+fn panic_mid_batch_is_contained_and_the_pool_recovers() {
+    let _guard = serial();
+    // single worker so the panic's blast radius is the whole pool: the
+    // strongest version of "no client hangs"
+    let plan = FaultPlan::parse("panic:0@2").unwrap();
+    let server = Server::start_with(plan.wrap(sim()), cfg(1)).unwrap();
+    let client = server.client();
+    let x = image();
+    assert!(client.infer(x.clone()).is_ok(), "batch 1 is clean");
+    // batch 2 panics: the in-flight job must get an explicit error (not
+    // a hang, not a process abort)
+    let err = client
+        .infer(x.clone())
+        .expect_err("the panicked batch's job must fail")
+        .to_string();
+    assert!(err.contains("panicked"), "{err}");
+    // the supervisor respawns worker 0; the one-shot fault is spent, so
+    // the replacement serves
+    let logits = infer_until_ok(&client, &x, 5);
+    assert!(!logits.is_empty());
+    let agg = server.metrics().aggregate();
+    assert!(agg.panics >= 1, "panic counted: {agg:?}");
+    assert!(agg.restarts >= 1, "restart counted: {agg:?}");
+    assert_eq!(server.dead_workers(), 0, "no breaker opened");
+    // containment means shutdown sees *cleanly exited* threads
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn give_up_opens_the_breaker_and_rejects_cleanly() {
+    let _guard = serial();
+    let mut c = cfg(1);
+    c.restart_max = 0; // never respawn: first death opens the breaker
+    let plan = FaultPlan::parse("panic:0@1").unwrap();
+    let server = Server::start_with(plan.wrap(sim()), c).unwrap();
+    let client = server.client();
+    let x = image();
+    let err = client
+        .infer(x.clone())
+        .expect_err("batch 1 panics")
+        .to_string();
+    assert!(err.contains("panicked"), "{err}");
+    // the supervisor gives up; poll until the breaker is visible
+    let t0 = Instant::now();
+    while server.dead_workers() == 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "breaker never opened"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    // Client::infer on the dead shard is a *clean rejection* — the
+    // send-to-disconnected-channel path must never unwrap or hang
+    let err = client
+        .infer(x.clone())
+        .expect_err("dead pool must reject")
+        .to_string();
+    assert!(err.contains("no live workers"), "{err}");
+    assert!(server.metrics().rejected_count() >= 1);
+    assert!(server.metrics().is_dead(0));
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn respawn_retries_through_a_failing_rebuild() {
+    let _guard = serial();
+    // death #1: panic on batch 1; the respawn's rebuild (build #2) also
+    // fails; the supervisor must burn a second restart and succeed on
+    // build #3
+    let plan = FaultPlan::parse("panic:0@1,build-fail:0@2").unwrap();
+    let server = Server::start_with(plan.wrap(sim()), cfg(1)).unwrap();
+    let client = server.client();
+    let x = image();
+    let _ = client.infer(x.clone()); // trips the panic
+    let logits = infer_until_ok(&client, &x, 5);
+    assert!(!logits.is_empty());
+    let agg = server.metrics().aggregate();
+    assert!(agg.restarts >= 2, "panic + rebuild failure: {agg:?}");
+    assert_eq!(server.dead_workers(), 0);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn startup_build_failure_still_fails_the_pool() {
+    let _guard = serial();
+    // fault injection must not weaken the readiness gate: a worker that
+    // cannot build at startup fails Server::start as a whole
+    let plan = FaultPlan::parse("build-fail:1@1").unwrap();
+    let err = match Server::start_with(plan.wrap(sim()), cfg(2)) {
+        Ok(_) => panic!("startup must fail"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(err.contains("worker 1 setup"), "{err}");
+    assert!(err.contains("fault injection"), "{err}");
+}
+
+#[test]
+fn tenant_fault_leaves_siblings_bit_stable() {
+    let _guard = serial();
+    let tenants = [
+        tenant("gold", 1.0, Some(QuantConfig::float().to_recipe())),
+        tenant("bulk", 1.0, Some(recipe(3))),
+    ];
+    let x = image();
+    // fault-free run: the reference logits
+    let clean = Arc::new(NativeFactory::synthetic(recipe(5)).unwrap());
+    let server =
+        Server::start_tenants(clean, cfg(1), TenantTable::new(&tenants).unwrap()).unwrap();
+    let client = server.client();
+    let default_ref = client.infer(x.clone()).unwrap();
+    let bulk_ref = client.infer_tenant("bulk", x.clone()).unwrap();
+    server.shutdown().unwrap();
+    // same pool with gold scheduled to error: siblings must be
+    // bit-identical to the fault-free run
+    let plan = FaultPlan::parse("error-tenant:gold").unwrap();
+    let faulty = plan.wrap(Arc::new(NativeFactory::synthetic(recipe(5)).unwrap()));
+    let server =
+        Server::start_tenants(faulty, cfg(1), TenantTable::new(&tenants).unwrap()).unwrap();
+    let client = server.client();
+    let err = client
+        .infer_tenant("gold", x.clone())
+        .expect_err("gold is scheduled to fail")
+        .to_string();
+    assert!(err.contains("fault injection"), "{err}");
+    assert_eq!(client.infer(x.clone()).unwrap(), default_ref);
+    assert_eq!(client.infer_tenant("bulk", x.clone()).unwrap(), bulk_ref);
+    // tenant errors are survivable: no panic, no restart, no breaker
+    let agg = server.metrics().aggregate();
+    assert_eq!(agg.panics, 0);
+    assert_eq!(agg.restarts, 0);
+    assert_eq!(server.dead_workers(), 0);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn tenant_quota_caps_admission_without_starving_siblings() {
+    let _guard = serial();
+    // 1 worker × queue_cap 4 × quota 0.5 → each tenant caps at 2
+    // queued+in-flight jobs; a slow engine keeps them queued
+    let slow = Arc::new(SimFactory {
+        classes: 10,
+        cost_per_batch: Duration::from_millis(200),
+        cost_per_item: Duration::from_millis(1),
+    });
+    let c = ServeConfig {
+        workers: 1,
+        max_batch: 1,
+        max_wait: Duration::from_micros(100),
+        queue_cap: 4,
+        deadline: None,
+        tenant_quota: Some(0.5),
+        ..ServeConfig::default()
+    };
+    let tenants = [tenant("bulk", 1.0, None)];
+    let server = Server::start_tenants(slow, c, TenantTable::new(&tenants).unwrap()).unwrap();
+    let bulk_id = server.client().tenant_id("bulk").unwrap();
+    let x = image();
+    // saturate bulk's share from background threads (each blocks on its
+    // response); poll the outstanding gauge until both are admitted
+    let mut held = Vec::new();
+    for _ in 0..2 {
+        let client = server.client();
+        let x = x.clone();
+        held.push(std::thread::spawn(move || client.infer_tenant("bulk", x)));
+    }
+    let t0 = Instant::now();
+    while server.metrics().tenant_outstanding_count(bulk_id) < 2 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "bulk jobs were never admitted"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    // third bulk submit: over quota, rejected immediately
+    let err = server
+        .client()
+        .infer_tenant("bulk", x.clone())
+        .expect_err("over-quota submit must be rejected")
+        .to_string();
+    assert!(err.contains("over admission quota"), "{err}");
+    assert_eq!(server.metrics().tenant_quota_rejected_count(bulk_id), 1);
+    // quota rejections are a subset of the tenant's rejections
+    assert_eq!(server.metrics().tenant_rejected_count(bulk_id), 1);
+    // ...but default's share is untouched: its submit is admitted and
+    // served even while bulk is saturated
+    let logits = server.client().infer(x.clone()).unwrap();
+    assert!(!logits.is_empty(), "sibling starved by bulk's backlog");
+    for h in held {
+        let _ = h.join().unwrap();
+    }
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn chaos_loadtest_survives_a_worker_kill() {
+    let _guard = serial();
+    // the acceptance gate, in-process: 4 workers, kill one mid-load,
+    // assert no hang / bounded errors / recovery (chaos_loadtest bails
+    // on any violated invariant)
+    let mut c = cfg(4);
+    c.queue_cap = 32;
+    let report = chaos_loadtest(sim(), &c, &[], 8, 160, None).unwrap();
+    assert_eq!(report.killed_worker, 3);
+    assert!(report.panics >= 1, "{report:?}");
+    assert!(report.restarts >= 1, "{report:?}");
+    assert!(report.degraded.ok > 0, "{report:?}");
+    assert!(
+        report.recovered.rps >= 0.5 * report.healthy.rps,
+        "{report:?}"
+    );
+}

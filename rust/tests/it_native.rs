@@ -280,6 +280,7 @@ fn native_pool_serves_quantized_logits_artifact_free() {
         max_wait: Duration::from_micros(200),
         queue_cap: 64,
         deadline: None,
+        ..ServeConfig::default()
     };
     let server = Server::start_with(Arc::new(factory), cfg).unwrap();
     // both workers shared one prepare through the pool cache
@@ -329,6 +330,7 @@ fn native_pool_batches_requests_correctly() {
         max_wait: Duration::from_millis(2),
         queue_cap: 64,
         deadline: None,
+        ..ServeConfig::default()
     };
     let server = Server::start_with(Arc::new(factory), cfg).unwrap();
     let images = ocs::train::data::synth_images(12, 44);

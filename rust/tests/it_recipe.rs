@@ -101,6 +101,7 @@ fn serve_cfg(workers: usize) -> ServeConfig {
         max_wait: Duration::from_micros(200),
         queue_cap: 64,
         deadline: None,
+        ..ServeConfig::default()
     }
 }
 

@@ -79,6 +79,7 @@ fn full_queue_rejects_instead_of_hanging() {
         max_wait: Duration::from_micros(100),
         queue_cap: 1,
         deadline: None,
+        ..ServeConfig::default()
     };
     let server = Server::start_with(sim(10, 100_000, 0), cfg).unwrap();
     let t0 = Instant::now();
@@ -123,6 +124,7 @@ fn deadline_exceeded_jobs_get_an_error_response() {
         max_wait: Duration::from_micros(100),
         queue_cap: 16,
         deadline: Some(Duration::from_millis(5)),
+        ..ServeConfig::default()
     };
     let server = Server::start_with(sim(10, 50_000, 0), cfg).unwrap();
     let mut handles = Vec::new();
@@ -156,6 +158,7 @@ fn shutdown_drains_admitted_jobs() {
         max_wait: Duration::from_micros(100),
         queue_cap: 16,
         deadline: None,
+        ..ServeConfig::default()
     };
     let server = Server::start_with(sim(10, 30_000, 0), cfg).unwrap();
     let mut handles = Vec::new();
@@ -188,6 +191,7 @@ fn responses_route_back_to_the_right_request() {
         max_wait: Duration::from_millis(2),
         queue_cap: 64,
         deadline: None,
+        ..ServeConfig::default()
     };
     let factory = sim(6, 500, 100);
     let server = Server::start_with(factory.clone(), cfg).unwrap();
@@ -216,6 +220,7 @@ fn pool_metrics_are_honest_after_load() {
         max_wait: Duration::from_millis(2),
         queue_cap: 256,
         deadline: None,
+        ..ServeConfig::default()
     };
     let server = Server::start_with(sim(10, 1_000, 0), cfg).unwrap();
     let mut handles = Vec::new();
@@ -260,6 +265,7 @@ fn four_workers_beat_one_on_synthetic_load() {
         max_wait: Duration::from_micros(100),
         queue_cap: 1024,
         deadline: None,
+        ..ServeConfig::default()
     };
     let p1 = run_point(factory.clone(), &cfg, 1, 48).unwrap();
     let p4 = run_point(factory, &cfg, 4, 48).unwrap();

@@ -224,6 +224,7 @@ fn serving_matches_direct_execution() {
             max_wait: std::time::Duration::from_millis(1),
             queue_cap: 16,
             deadline: None,
+            ..ServeConfig::default()
         },
     )
     .unwrap();

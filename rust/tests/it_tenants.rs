@@ -30,6 +30,7 @@ fn cfg(workers: usize) -> ServeConfig {
         max_wait: Duration::from_micros(200),
         queue_cap: 256,
         deadline: None,
+        ..ServeConfig::default()
     }
 }
 
