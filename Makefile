@@ -3,7 +3,8 @@
 
 CARGO_DIR := rust
 
-.PHONY: verify build test fmt lint artifacts serve-smoke loadtest chaos bench-record clean
+.PHONY: verify build test fmt lint artifacts serve-smoke loadtest chaos \
+	slow-drill autotune bench-record bench-snapshot clean
 
 # Tier-1 gate: the exact command CI runs on every push.
 verify:
@@ -48,6 +49,25 @@ chaos:
 		--sim --workers 4 --clients 8 --requests 96 --backoff-ms 5 \
 		--json ../BENCH_chaos.json
 
+# Slow-worker drill: healthy baseline, then every worker 10 ms slow with
+# no deadline (collapse), then the same fault with the deadline armed —
+# asserts the deadline path sheds load instead of queueing behind the
+# slow engine. --max-batch 1 keeps the per-request slowdown real.
+# Needs no artifacts. Emits BENCH_slow.json (CI gates on it).
+slow-drill:
+	cd $(CARGO_DIR) && cargo run --release -- serve --loadtest --slow-drill \
+		--backend native --sim-free --workers 2 --max-batch 1 \
+		--deadline-ms 15 --slow-us 10000 --requests 96 \
+		--json ../BENCH_slow.json
+
+# Budgeted mixed-precision recipe search on the built-in model — the
+# canonical invocation CI's autotune-smoke job runs. Needs no artifacts.
+# Emits the winning recipe TOML + a BENCH_autotune.json journal.
+autotune:
+	cd $(CARGO_DIR) && cargo run --release -- autotune --backend native \
+		--sim-free --ladder 8,4 --test 256 --acc-drop 0.05 --allow-skip \
+		--out ../recipe_autotuned.toml --json ../BENCH_autotune.json
+
 # Refresh the committed perf baselines under records/ (quick mode, small
 # shapes — the same settings CI's smoke jobs run, so `ocs bench diff`
 # compares like against like). Each record is then schema-checked.
@@ -70,8 +90,28 @@ bench-record:
 	cd $(CARGO_DIR) && cargo run --release -- bench check ../records/BENCH_native.json --bench native
 	cd $(CARGO_DIR) && cargo run --release -- bench check ../records/BENCH_serving.json --bench serving
 	cd $(CARGO_DIR) && cargo run --release -- bench check ../records/BENCH_loadtest.json --bench loadtest
+	cd $(CARGO_DIR) && OCS_BENCH_QUICK=1 cargo run --release -- serve --loadtest \
+		--slow-drill --backend native --sim-free --workers 2 --max-batch 1 \
+		--deadline-ms 15 --slow-us 10000 --requests 96 \
+		--json ../records/BENCH_slow.json
+	cd $(CARGO_DIR) && OCS_BENCH_QUICK=1 cargo run --release -- autotune \
+		--backend native --sim-free --ladder 8,4 --test 256 --acc-drop 0.05 \
+		--allow-skip --out ../recipe_autotuned.toml \
+		--json ../records/BENCH_autotune.json
 	cd $(CARGO_DIR) && cargo run --release -- bench check ../records/BENCH_chaos.json --bench chaos
+	cd $(CARGO_DIR) && cargo run --release -- bench check ../records/BENCH_slow.json --bench slow
+	cd $(CARGO_DIR) && cargo run --release -- bench check ../records/BENCH_autotune.json --bench autotune
 	cd $(CARGO_DIR) && cargo run --release -- bench history ../records
+
+# Archive the current committed baselines as a dated per-PR snapshot
+# folder; `ocs bench history records/` then renders the trajectory with
+# one column per snapshot. Usage: make bench-snapshot PR=9 [DATE=...]
+DATE ?= $(shell date +%Y-%m-%d)
+bench-snapshot:
+	@test -n "$(PR)" || { echo "usage: make bench-snapshot PR=<n> [DATE=YYYY-MM-DD]"; exit 1; }
+	mkdir -p records/history/$(DATE)-pr$(PR)
+	cp records/BENCH_*.json records/history/$(DATE)-pr$(PR)/
+	@echo "snapshot: records/history/$(DATE)-pr$(PR)"
 
 clean:
 	cd $(CARGO_DIR) && cargo clean

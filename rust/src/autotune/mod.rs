@@ -1,0 +1,34 @@
+//! `ocs autotune` — budgeted mixed-precision recipe search over the
+//! per-layer [`LayerRecipe`](crate::pipeline::LayerRecipe) space.
+//!
+//! The paper's central trade (OCS ratio vs clipping vs bit width,
+//! layer by layer) is a per-layer policy search. This module drives it
+//! end to end: a [`SearchSpace`] names the candidate lists and layer
+//! grouping, a [`Scorer`] prices each candidate (native-backend
+//! accuracy + logit agreement, packed wire footprint, measured GEMM
+//! latency) through a private [`PreparedCache`](crate::pipeline::PreparedCache)
+//! so revisits are free, and [`search::run`] descends the bit ladder —
+//! greedy by default, `--beam N` for a wider frontier — under an
+//! accuracy floor and optional footprint/latency budgets.
+//!
+//! The winner leaves as a `[[quant.layer]]` TOML
+//! ([`QuantRecipe::to_toml`](crate::pipeline::QuantRecipe::to_toml))
+//! that `ocs serve --recipe` and `ocs tables` consume unmodified, and
+//! the search itself is journaled as a versioned `BENCH_autotune.json`
+//! ([`BenchRecord::from_autotune`](crate::bench_record::BenchRecord::from_autotune))
+//! so CI regression-gates candidate counts, cache behavior, and the
+//! Pareto frontier like every other trajectory.
+//!
+//! Determinism contract: same seed + same model ⇒ identical winning
+//! fingerprint. Everything on the selection path (synthetic data,
+//! calibration, accuracy, footprint) is seed-deterministic; the one
+//! measured quantity (the latency model) only gates candidates when an
+//! explicit `--latency-budget-us` asks for it.
+
+pub mod score;
+pub mod search;
+pub mod space;
+
+pub use score::{Score, Scorer, ScorerCfg};
+pub use search::{run, Candidate, SearchCfg, SearchOutcome};
+pub use space::{GroupChoice, LayerGroup, SearchSpace};

@@ -1,0 +1,307 @@
+//! Candidate scoring for `ocs autotune`: accuracy on the native
+//! backend, packed-model footprint, and a measured per-layer GEMM
+//! latency model.
+//!
+//! One [`Scorer`] owns everything a search needs to evaluate a
+//! [`QuantRecipe`]: the model + weights, a held-out image set, a float
+//! reference executable (for logit agreement), a lazily-computed
+//! activation [`Calibration`], and a *private* [`PreparedCache`] — the
+//! search deliberately does not share [`PreparedCache::global`] so its
+//! hit/miss/eviction counters describe the search alone and capacity
+//! experiments cannot disturb a colocated server.
+//!
+//! Scores are memoized by recipe fingerprint, so drivers revisit states
+//! for free and the journal can report memo hits separately from prep
+//! cache hits.
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::calib::Calibration;
+use crate::eval::{accuracy_native, agreement_native};
+use crate::kernels::gemm::{gemm_f32, gemm_i8, PackedB};
+use crate::model::store::WeightStore;
+use crate::model::ModelSpec;
+use crate::pipeline::{PreparedCache, QuantRecipe};
+use crate::quant::pack::{pack_prepared, PackedModel};
+use crate::runtime::native::{native_calibrate, NativeEngine, NativeExecutable};
+use crate::tensor::TensorF;
+use crate::train::data::synth_images;
+
+/// Scorer knobs — sizes, seeds, and the prep-cache bound.
+#[derive(Debug, Clone)]
+pub struct ScorerCfg {
+    /// Calibration images (probed once, on demand).
+    pub calib_images: usize,
+    pub calib_batch: usize,
+    /// Held-out images every candidate is scored on.
+    pub test_images: usize,
+    pub eval_batch: usize,
+    /// Base seed: calibration and test sets derive from it, so equal
+    /// seeds make the whole search replayable.
+    pub seed: u64,
+    /// Prep-cache entry bound (0 = unbounded).
+    pub cache_cap: usize,
+    /// Threads for the latency-model GEMM probes.
+    pub gemm_threads: usize,
+}
+
+impl Default for ScorerCfg {
+    fn default() -> ScorerCfg {
+        ScorerCfg {
+            calib_images: 256,
+            calib_batch: 32,
+            test_images: 512,
+            eval_batch: 128,
+            seed: 29,
+            cache_cap: 0,
+            gemm_threads: 1,
+        }
+    }
+}
+
+/// What one candidate costs and buys.
+#[derive(Debug, Clone)]
+pub struct Score {
+    /// Top-1 accuracy on the held-out set.
+    pub accuracy: f64,
+    /// Top-1 agreement with the float reference on the same set.
+    pub agreement: f64,
+    /// Packed-model wire footprint in bytes.
+    pub footprint: usize,
+    /// Modeled per-sample GEMM latency (µs) — measured, so **not**
+    /// deterministic; drivers only use it against an explicit
+    /// `--latency-budget-us`, never for default winner selection.
+    pub est_latency_us: f64,
+    pub fingerprint: String,
+    pub label: String,
+}
+
+/// Measured per-shape GEMM cost, memoized by `(K, cout, int)`. The
+/// probe times the real kernels ([`gemm_i8`] / [`gemm_f32`]) on
+/// synthetic payloads and charges each packed layer one GEMM row per
+/// sample — an MLP-grade model (conv layers amortize over spatial
+/// positions, which this deliberately does not simulate).
+#[derive(Debug, Default)]
+struct LatencyModel {
+    per_row_us: BTreeMap<(usize, usize, bool), f64>,
+}
+
+const PROBE_ROWS: usize = 8;
+const PROBE_REPS: usize = 3;
+
+impl LatencyModel {
+    fn layer_us(&mut self, k: usize, n: usize, int: bool, threads: usize) -> f64 {
+        if let Some(&us) = self.per_row_us.get(&(k, n, int)) {
+            return us;
+        }
+        let us = if int {
+            let ints = vec![1i8; k * n];
+            let pb = PackedB::pack(&ints, k, n);
+            let a = vec![1i8; PROBE_ROWS * k];
+            let mut best = f64::INFINITY;
+            for _ in 0..PROBE_REPS {
+                let t = Instant::now();
+                let acc = gemm_i8(&a, &pb, PROBE_ROWS, threads);
+                let dt = t.elapsed().as_secs_f64();
+                assert_eq!(acc.len(), PROBE_ROWS * n);
+                best = best.min(dt);
+            }
+            best * 1e6 / PROBE_ROWS as f64
+        } else {
+            let w = vec![0.5f32; k * n];
+            let a = vec![0.5f32; PROBE_ROWS * k];
+            let mut best = f64::INFINITY;
+            for _ in 0..PROBE_REPS {
+                let t = Instant::now();
+                let out = gemm_f32(&a, &w, PROBE_ROWS, k, n, None, threads);
+                let dt = t.elapsed().as_secs_f64();
+                assert_eq!(out.len(), PROBE_ROWS * n);
+                best = best.min(dt);
+            }
+            best * 1e6 / PROBE_ROWS as f64
+        };
+        self.per_row_us.insert((k, n, int), us);
+        us
+    }
+
+    fn model_us(&mut self, packed: &PackedModel, threads: usize) -> f64 {
+        packed
+            .layers
+            .values()
+            .map(|l| self.layer_us(l.gemm_k(), l.cout, l.is_int(), threads))
+            .sum()
+    }
+}
+
+/// Evaluates candidate recipes against one model + dataset. See the
+/// module docs for what it owns and why the cache is private.
+pub struct Scorer {
+    spec: ModelSpec,
+    ws: WeightStore,
+    cfg: ScorerCfg,
+    cache: PreparedCache,
+    engine: NativeEngine,
+    calib: Option<Calibration>,
+    test_x: TensorF,
+    test_y: Vec<i32>,
+    float_exe: Rc<NativeExecutable>,
+    /// Float-reference accuracy — the ceiling `--acc-drop` floors are
+    /// relative to.
+    pub float_accuracy: f64,
+    latency: LatencyModel,
+    memo: BTreeMap<String, Score>,
+    evals: usize,
+    scored_total: usize,
+}
+
+impl Scorer {
+    pub fn new(spec: ModelSpec, ws: WeightStore, cfg: ScorerCfg) -> Result<Scorer> {
+        let test = synth_images(cfg.test_images, cfg.seed.wrapping_add(31));
+        let cache = PreparedCache::new();
+        cache.set_capacity(cfg.cache_cap);
+        let engine = NativeEngine::new(spec.clone());
+        let float_prep = cache.get_or_prepare(&spec, &ws, None, &QuantRecipe::float())?;
+        let float_exe = engine.load(&float_prep)?;
+        let float_accuracy = accuracy_native(&float_exe, &test.x, &test.y, cfg.eval_batch)?;
+        Ok(Scorer {
+            spec,
+            ws,
+            cache,
+            engine,
+            calib: None,
+            test_x: test.x,
+            test_y: test.y,
+            float_exe,
+            float_accuracy,
+            latency: LatencyModel::default(),
+            memo: BTreeMap::new(),
+            evals: 0,
+            scored_total: 0,
+            cfg,
+        })
+    }
+
+    /// Score one candidate (memoized by fingerprint).
+    pub fn score(&mut self, recipe: &QuantRecipe) -> Result<Score> {
+        self.scored_total += 1;
+        let fp = recipe.fingerprint();
+        if let Some(s) = self.memo.get(&fp) {
+            return Ok(s.clone());
+        }
+        self.evals += 1;
+        if recipe.needs_calibration(&self.spec) && self.calib.is_none() {
+            let images = synth_images(self.cfg.calib_images, self.cfg.seed.wrapping_add(29));
+            self.calib = Some(native_calibrate(
+                &self.spec,
+                &self.ws,
+                &images.x,
+                self.cfg.calib_batch,
+            )?);
+        }
+        let prep = self
+            .cache
+            .get_or_prepare(&self.spec, &self.ws, self.calib.as_ref(), recipe)?;
+        let exe = self.engine.load(&prep)?;
+        let accuracy = accuracy_native(&exe, &self.test_x, &self.test_y, self.cfg.eval_batch)?;
+        let agreement =
+            agreement_native(&exe, &self.float_exe, &self.test_x, self.cfg.eval_batch)?;
+        let packed = pack_prepared(&self.spec, &prep)?;
+        let est_latency_us = self.latency.model_us(&packed, self.cfg.gemm_threads);
+        let score = Score {
+            accuracy,
+            agreement,
+            footprint: packed.footprint_bytes(),
+            est_latency_us,
+            fingerprint: fp.clone(),
+            label: recipe.label(),
+        };
+        self.memo.insert(fp, score.clone());
+        Ok(score)
+    }
+
+    /// Distinct recipes actually prepared + evaluated (memo misses).
+    pub fn evals(&self) -> usize {
+        self.evals
+    }
+
+    /// Total `score` calls, memo hits included.
+    pub fn scored_total(&self) -> usize {
+        self.scored_total
+    }
+
+    /// The private prep cache (hit/miss/eviction counters).
+    pub fn cache(&self) -> &PreparedCache {
+        &self.cache
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clip::ClipMethod;
+    use crate::pipeline::QuantConfig;
+    use crate::runtime::native::synthetic_mlp;
+
+    fn small_cfg() -> ScorerCfg {
+        ScorerCfg {
+            calib_images: 64,
+            calib_batch: 32,
+            test_images: 96,
+            eval_batch: 32,
+            seed: 5,
+            cache_cap: 0,
+            gemm_threads: 1,
+        }
+    }
+
+    #[test]
+    fn scoring_memoizes_by_fingerprint() {
+        let (spec, ws) = synthetic_mlp(2027);
+        let mut scorer = Scorer::new(spec, ws, small_cfg()).unwrap();
+        let recipe = QuantConfig::weights_with_a8(5, ClipMethod::Mse, 0.02).to_recipe();
+        let a = scorer.score(&recipe).unwrap();
+        let b = scorer.score(&recipe).unwrap();
+        assert_eq!(a.fingerprint, b.fingerprint);
+        assert_eq!(a.accuracy, b.accuracy);
+        assert_eq!(scorer.evals(), 1, "second call must hit the memo");
+        assert_eq!(scorer.scored_total(), 2);
+        assert!(a.footprint > 0);
+        assert!(a.est_latency_us > 0.0);
+        assert!(a.agreement > 0.0 && a.agreement <= 1.0);
+        // w5a8+mse should track the float net closely on most samples
+        assert!(a.agreement > 0.5, "agreement {} too low", a.agreement);
+    }
+
+    #[test]
+    fn float_recipe_scores_at_reference() {
+        let (spec, ws) = synthetic_mlp(2027);
+        let mut scorer = Scorer::new(spec, ws, small_cfg()).unwrap();
+        let s = scorer.score(&QuantRecipe::float()).unwrap();
+        assert_eq!(s.accuracy, scorer.float_accuracy);
+        assert_eq!(s.agreement, 1.0, "float candidate IS the reference");
+    }
+
+    #[test]
+    fn lower_bits_shrink_footprint() {
+        let (spec, ws) = synthetic_mlp(2027);
+        let mut scorer = Scorer::new(spec, ws, small_cfg()).unwrap();
+        let w8 = QuantConfig::weights_with_a8(8, ClipMethod::None, 0.0).to_recipe();
+        let w4 = QuantConfig::weights_with_a8(4, ClipMethod::None, 0.0).to_recipe();
+        let s8 = scorer.score(&w8).unwrap();
+        let s4 = scorer.score(&w4).unwrap();
+        assert!(
+            s4.footprint < s8.footprint,
+            "4-bit {} must undercut 8-bit {}",
+            s4.footprint,
+            s8.footprint
+        );
+    }
+}

@@ -1,0 +1,429 @@
+//! Search drivers for `ocs autotune`: greedy bit-ladder descent
+//! (default) and width-`N` beam search, both over per-group
+//! [`GroupChoice`] assignments.
+//!
+//! Both drivers start at the uniform index-0 assignment — which **is**
+//! the uniform-bits baseline the acceptance criterion compares against
+//! — and repeatedly apply single-group moves:
+//!
+//! * *descend w*: drop one group to the next ladder rung, re-choosing
+//!   its clip and OCS ratio from the full candidate lists at the lower
+//!   width (the paper's trade: more OCS or a better clip can buy a bit
+//!   back);
+//! * *descend a*: drop one group to the next activation rung;
+//! * *skip*: keep one group float entirely (only with `--allow-skip`,
+//!   and only as an accuracy rescue — a float body is *larger*).
+//!
+//! A state is **feasible** when its accuracy meets the floor and, when
+//! set, its modeled latency meets `--latency-budget-us`. Greedy accepts
+//! the feasible move with the largest footprint reduction (ties: higher
+//! accuracy, then move order — fully deterministic); beam keeps the `N`
+//! best feasible frontier states each round. Search stops when the
+//! footprint budget is met, no feasible move remains, or the eval
+//! budget runs out. Every scored state feeds the Pareto frontier the
+//! journal reports.
+
+use anyhow::{bail, Result};
+
+use crate::autotune::score::{Score, Scorer};
+use crate::autotune::space::{GroupChoice, SearchSpace};
+use crate::pipeline::QuantRecipe;
+
+/// Budgets + driver knobs for one search run.
+#[derive(Debug, Clone)]
+pub struct SearchCfg {
+    /// Absolute accuracy floor (fraction). Build it from the float
+    /// reference minus `--acc-drop`.
+    pub acc_floor: f64,
+    /// Stop descending once the winner's packed footprint is at or
+    /// under this many bytes.
+    pub footprint_budget: Option<usize>,
+    /// Reject candidates whose modeled per-sample GEMM latency exceeds
+    /// this (µs). Measured, hence nondeterministic — leave unset for
+    /// replayable winners.
+    pub latency_budget_us: Option<f64>,
+    /// Beam width; 1 = greedy descent.
+    pub beam: usize,
+    /// Hard cap on distinct candidate evaluations.
+    pub max_evals: usize,
+}
+
+impl Default for SearchCfg {
+    fn default() -> SearchCfg {
+        SearchCfg {
+            acc_floor: 0.0,
+            footprint_budget: None,
+            latency_budget_us: None,
+            beam: 1,
+            max_evals: 512,
+        }
+    }
+}
+
+/// One scored assignment.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub choices: Vec<GroupChoice>,
+    pub recipe: QuantRecipe,
+    pub score: Score,
+}
+
+/// Everything a search run produced — winner, baseline, bookkeeping
+/// for the journal.
+#[derive(Debug)]
+pub struct SearchOutcome {
+    pub winner: Candidate,
+    /// The uniform start state (ladder\[0\] everywhere).
+    pub baseline: Candidate,
+    pub float_accuracy: f64,
+    pub acc_floor: f64,
+    /// Distinct candidates prepared + evaluated.
+    pub evaluated: usize,
+    /// Total score calls, memo hits included.
+    pub scored_total: usize,
+    /// `(footprint, accuracy)` of every non-dominated scored state,
+    /// footprint-ascending.
+    pub pareto: Vec<(usize, f64)>,
+    pub beam: usize,
+    pub groups: usize,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
+}
+
+impl SearchOutcome {
+    /// Fraction of prep lookups the cache answered (0 when none ran).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+}
+
+fn feasible(score: &Score, cfg: &SearchCfg) -> bool {
+    score.accuracy >= cfg.acc_floor
+        && cfg
+            .latency_budget_us
+            .map(|b| score.est_latency_us <= b)
+            .unwrap_or(true)
+}
+
+/// All single-group successors of `state`, in a fixed deterministic
+/// order (group-major, then move kind, then clip × ocs).
+fn moves(space: &SearchSpace, state: &[GroupChoice]) -> Vec<Vec<GroupChoice>> {
+    let mut out = Vec::new();
+    for (g, c) in state.iter().enumerate() {
+        if c.skipped {
+            continue;
+        }
+        if c.w_idx + 1 < space.ladder.len() {
+            for clip_idx in 0..space.clips.len() {
+                for ocs_idx in 0..space.ocs_ratios.len() {
+                    let mut next = state.to_vec();
+                    next[g] = GroupChoice {
+                        w_idx: c.w_idx + 1,
+                        clip_idx,
+                        ocs_idx,
+                        ..*c
+                    };
+                    out.push(next);
+                }
+            }
+        }
+        if c.a_idx + 1 < space.a_bits.len() {
+            let mut next = state.to_vec();
+            next[g].a_idx = c.a_idx + 1;
+            out.push(next);
+        }
+        if space.allow_skip {
+            let mut next = state.to_vec();
+            next[g] = GroupChoice {
+                skipped: true,
+                ..GroupChoice::start()
+            };
+            out.push(next);
+        }
+    }
+    out
+}
+
+/// Non-dominated `(footprint, accuracy)` rows, footprint-ascending.
+fn pareto_frontier(points: &[(usize, f64)]) -> Vec<(usize, f64)> {
+    let mut sorted: Vec<(usize, f64)> = points.to_vec();
+    sorted.sort_by(|a, b| a.0.cmp(&b.0).then(b.1.total_cmp(&a.1)));
+    let mut out: Vec<(usize, f64)> = Vec::new();
+    for p in sorted {
+        // sort order guarantees same-footprint points arrive accuracy-
+        // descending, so a strict accuracy improvement implies a strict
+        // footprint increase
+        if out.last().map(|l| p.1 > l.1).unwrap_or(true) {
+            out.push(p);
+        }
+    }
+    out
+}
+
+/// Run the search. `cfg.beam == 1` is greedy descent; larger beams keep
+/// the `N` lowest-footprint feasible states each round.
+pub fn run(space: &SearchSpace, scorer: &mut Scorer, cfg: &SearchCfg) -> Result<SearchOutcome> {
+    space.validate()?;
+    if cfg.beam == 0 {
+        bail!("beam width must be >= 1");
+    }
+    let mut all_points: Vec<(usize, f64)> = Vec::new();
+    let mut eval = |scorer: &mut Scorer,
+                    choices: &[GroupChoice],
+                    points: &mut Vec<(usize, f64)>|
+     -> Result<Candidate> {
+        let recipe = space.recipe_for(choices);
+        let score = scorer.score(&recipe)?;
+        points.push((score.footprint, score.accuracy));
+        Ok(Candidate {
+            choices: choices.to_vec(),
+            recipe,
+            score,
+        })
+    };
+
+    let start = vec![GroupChoice::start(); space.groups.len()];
+    let baseline = eval(scorer, &start, &mut all_points)?;
+    let mut current = baseline.clone();
+
+    // Rescue an infeasible start: greedily skip the group whose float
+    // fallback buys the most accuracy until the floor holds.
+    while !feasible(&current.score, cfg) {
+        if !space.allow_skip {
+            bail!(
+                "uniform start ({}) misses the accuracy floor {:.4} (got {:.4}); \
+                 lower the floor, raise the ladder start, or pass --allow-skip",
+                current.score.label,
+                cfg.acc_floor,
+                current.score.accuracy
+            );
+        }
+        let mut best: Option<Candidate> = None;
+        for (g, c) in current.choices.iter().enumerate() {
+            if c.skipped {
+                continue;
+            }
+            let mut next = current.choices.clone();
+            next[g] = GroupChoice {
+                skipped: true,
+                ..GroupChoice::start()
+            };
+            let cand = eval(scorer, &next, &mut all_points)?;
+            if best
+                .as_ref()
+                .map(|b| cand.score.accuracy > b.score.accuracy)
+                .unwrap_or(true)
+            {
+                best = Some(cand);
+            }
+        }
+        match best {
+            Some(b) => current = b,
+            None => bail!(
+                "accuracy floor {:.4} unreachable even with every group skipped",
+                cfg.acc_floor
+            ),
+        }
+        if scorer.evals() >= cfg.max_evals {
+            bail!("eval budget {} exhausted during rescue", cfg.max_evals);
+        }
+    }
+
+    // `current` is now feasible. Beam of feasible frontier states.
+    let mut frontier = vec![current.clone()];
+    let mut best = current;
+    let mut visited = std::collections::BTreeSet::new();
+    visited.insert(best.score.fingerprint.clone());
+    'search: loop {
+        if cfg
+            .footprint_budget
+            .map(|b| best.score.footprint <= b)
+            .unwrap_or(false)
+        {
+            break; // budget met — stop descending
+        }
+        let mut next_frontier: Vec<Candidate> = Vec::new();
+        for state in &frontier {
+            for mv in moves(space, &state.choices) {
+                let fp = space.recipe_for(&mv).fingerprint();
+                if !visited.insert(fp) {
+                    continue;
+                }
+                if scorer.evals() >= cfg.max_evals {
+                    break 'search;
+                }
+                let cand = eval(scorer, &mv, &mut all_points)?;
+                if feasible(&cand.score, cfg) {
+                    next_frontier.push(cand);
+                }
+            }
+        }
+        if next_frontier.is_empty() {
+            break; // no feasible descent left
+        }
+        // deterministic ranking: footprint up, accuracy down, then the
+        // canonical recipe string as the final tiebreak
+        next_frontier.sort_by(|a, b| {
+            a.score
+                .footprint
+                .cmp(&b.score.footprint)
+                .then(b.score.accuracy.total_cmp(&a.score.accuracy))
+                .then(a.recipe.canonical().cmp(&b.recipe.canonical()))
+        });
+        next_frontier.truncate(cfg.beam);
+        if next_frontier[0].score.footprint < best.score.footprint
+            || (next_frontier[0].score.footprint == best.score.footprint
+                && next_frontier[0].score.accuracy > best.score.accuracy)
+        {
+            best = next_frontier[0].clone();
+        } else if cfg.beam == 1 {
+            break; // greedy: no improving move
+        }
+        frontier = next_frontier;
+    }
+
+    Ok(SearchOutcome {
+        winner: best,
+        baseline,
+        float_accuracy: scorer.float_accuracy,
+        acc_floor: cfg.acc_floor,
+        evaluated: scorer.evals(),
+        scored_total: scorer.scored_total(),
+        pareto: pareto_frontier(&all_points),
+        beam: cfg.beam,
+        groups: space.groups.len(),
+        cache_hits: scorer.cache().hits(),
+        cache_misses: scorer.cache().misses(),
+        cache_evictions: scorer.cache().evictions(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotune::space::LayerGroup;
+    use crate::clip::ClipMethod;
+    use crate::runtime::native::synthetic_mlp;
+
+    fn tiny_scorer(seed: u64, cap: usize) -> Scorer {
+        let (spec, ws) = synthetic_mlp(2027);
+        let cfg = crate::autotune::score::ScorerCfg {
+            calib_images: 64,
+            calib_batch: 32,
+            test_images: 96,
+            eval_batch: 32,
+            seed,
+            cache_cap: cap,
+            gemm_threads: 1,
+        };
+        Scorer::new(spec, ws, cfg).unwrap()
+    }
+
+    fn tiny_space(groups: Vec<LayerGroup>) -> SearchSpace {
+        SearchSpace {
+            ladder: vec![8, 4],
+            a_bits: vec![8],
+            clips: vec![ClipMethod::None, ClipMethod::Mse],
+            a_clip: ClipMethod::Mse,
+            ocs_ratios: vec![0.0, 0.05],
+            allow_skip: true,
+            groups,
+        }
+    }
+
+    #[test]
+    fn greedy_descends_below_uniform_baseline() {
+        let mut scorer = tiny_scorer(5, 0);
+        let space = tiny_space(SearchSpace::per_layer(scorer.spec()));
+        let cfg = SearchCfg {
+            acc_floor: scorer.float_accuracy - 0.10,
+            ..SearchCfg::default()
+        };
+        let out = run(&space, &mut scorer, &cfg).unwrap();
+        assert!(out.winner.score.accuracy >= cfg.acc_floor);
+        assert!(
+            out.winner.score.footprint <= out.baseline.score.footprint,
+            "winner {} must not exceed baseline {}",
+            out.winner.score.footprint,
+            out.baseline.score.footprint
+        );
+        assert!(out.evaluated >= 2);
+        assert!(!out.pareto.is_empty());
+        // frontier is footprint-ascending and accuracy-ascending
+        for w in out.pareto.windows(2) {
+            assert!(w[0].0 < w[1].0);
+            assert!(w[0].1 < w[1].1);
+        }
+    }
+
+    #[test]
+    fn impossible_floor_without_skip_errors() {
+        let mut scorer = tiny_scorer(5, 0);
+        let mut space = tiny_space(SearchSpace::per_layer(scorer.spec()));
+        space.allow_skip = false;
+        let cfg = SearchCfg {
+            acc_floor: 1.01, // unreachable by construction
+            ..SearchCfg::default()
+        };
+        let err = run(&space, &mut scorer, &cfg).unwrap_err();
+        assert!(err.to_string().contains("accuracy floor"), "{err:#}");
+    }
+
+    #[test]
+    fn footprint_budget_stops_descent_early() {
+        let mut scorer = tiny_scorer(5, 0);
+        let space = tiny_space(SearchSpace::per_layer(scorer.spec()));
+        // a budget the uniform start already meets: no descent at all
+        let cfg = SearchCfg {
+            acc_floor: 0.0,
+            footprint_budget: Some(usize::MAX),
+            ..SearchCfg::default()
+        };
+        let out = run(&space, &mut scorer, &cfg).unwrap();
+        assert_eq!(
+            out.winner.score.fingerprint, out.baseline.score.fingerprint,
+            "budget met at start — winner is the baseline"
+        );
+    }
+
+    #[test]
+    fn pareto_frontier_drops_dominated_points() {
+        let pts = vec![(100, 0.9), (100, 0.8), (50, 0.7), (60, 0.65), (200, 0.95)];
+        let f = pareto_frontier(&pts);
+        assert_eq!(f, vec![(50, 0.7), (100, 0.9), (200, 0.95)]);
+    }
+
+    #[test]
+    fn beam_search_matches_or_beats_greedy() {
+        let mut g = tiny_scorer(5, 0);
+        let space = tiny_space(SearchSpace::per_layer(g.spec()));
+        let floor = g.float_accuracy - 0.10;
+        let greedy = run(
+            &space,
+            &mut g,
+            &SearchCfg {
+                acc_floor: floor,
+                ..SearchCfg::default()
+            },
+        )
+        .unwrap();
+        let mut b = tiny_scorer(5, 0);
+        let beam = run(
+            &space,
+            &mut b,
+            &SearchCfg {
+                acc_floor: floor,
+                beam: 3,
+                ..SearchCfg::default()
+            },
+        )
+        .unwrap();
+        assert!(beam.winner.score.footprint <= greedy.winner.score.footprint);
+    }
+}

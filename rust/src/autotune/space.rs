@@ -1,0 +1,308 @@
+//! The candidate space `ocs autotune` searches: per-dimension candidate
+//! lists plus a layer grouping, lowered into concrete [`QuantRecipe`]s.
+//!
+//! A [`SearchSpace`] is the cross product of a weight-bit ladder, an
+//! activation-bit ladder, a weight-clip list, and an OCS-ratio list,
+//! instantiated independently per [`LayerGroup`]. A group is a named
+//! [`LayerMatch`] — one per quantized layer by default, or one per
+//! layer kind with `--group-by kind` — and every group's current pick
+//! is a [`GroupChoice`] of indices into the candidate lists. Index 0 of
+//! each list is the *start* point: the uniform baseline the search
+//! descends from, and the recipe the winner is compared against.
+
+use anyhow::{bail, Result};
+
+use crate::clip::ClipMethod;
+use crate::model::{LayerKind, ModelSpec};
+use crate::pipeline::{LayerMatch, LayerOverride, LayerPolicy, QuantRecipe};
+
+/// One searchable unit: a display name plus the match that binds its
+/// policy to model layers.
+#[derive(Debug, Clone)]
+pub struct LayerGroup {
+    pub name: String,
+    pub matches: LayerMatch,
+}
+
+/// Per-dimension candidate lists. Every index-0 entry is the uniform
+/// starting point of the search.
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    /// Weight-bit candidates, strictly descending (e.g. `8,6,5,4,3`).
+    pub ladder: Vec<u32>,
+    /// Activation-bit candidates, descending; `0` = float activations
+    /// and is only meaningful as a single entry (there is no point
+    /// descending *to* float).
+    pub a_bits: Vec<u32>,
+    /// Weight-clip candidates re-chosen at every bit drop.
+    pub clips: Vec<ClipMethod>,
+    /// Activation clip, fixed across the search.
+    pub a_clip: ClipMethod,
+    /// OCS ratio candidates re-chosen at every bit drop, each in
+    /// `[0, 1)`.
+    pub ocs_ratios: Vec<f64>,
+    /// Whether the search may rescue an infeasible state by keeping a
+    /// group float entirely.
+    pub allow_skip: bool,
+    pub groups: Vec<LayerGroup>,
+}
+
+/// One group's current pick: indices into the [`SearchSpace`] lists.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct GroupChoice {
+    pub w_idx: usize,
+    pub a_idx: usize,
+    pub clip_idx: usize,
+    pub ocs_idx: usize,
+    pub skipped: bool,
+}
+
+impl GroupChoice {
+    /// The uniform start point: index 0 on every dimension.
+    pub fn start() -> GroupChoice {
+        GroupChoice {
+            w_idx: 0,
+            a_idx: 0,
+            clip_idx: 0,
+            ocs_idx: 0,
+            skipped: false,
+        }
+    }
+}
+
+impl SearchSpace {
+    /// One group per quantized layer, matched by exact name.
+    pub fn per_layer(spec: &ModelSpec) -> Vec<LayerGroup> {
+        spec.quantized_layers()
+            .map(|l| LayerGroup {
+                name: l.name.clone(),
+                matches: LayerMatch::name(l.name.clone()),
+            })
+            .collect()
+    }
+
+    /// One group per layer kind present among the quantized layers —
+    /// coarser, so deep models stay searchable.
+    pub fn by_kind(spec: &ModelSpec) -> Vec<LayerGroup> {
+        let mut kinds: Vec<LayerKind> = Vec::new();
+        for l in spec.quantized_layers() {
+            if !kinds.contains(&l.kind) {
+                kinds.push(l.kind);
+            }
+        }
+        kinds
+            .into_iter()
+            .map(|k| {
+                let name = match k {
+                    LayerKind::Conv => "conv",
+                    LayerKind::Fc => "fc",
+                    LayerKind::Embed => "embed",
+                };
+                LayerGroup {
+                    name: name.to_string(),
+                    matches: LayerMatch::kind(k),
+                }
+            })
+            .collect()
+    }
+
+    /// Reject malformed spaces before any candidate is prepared.
+    pub fn validate(&self) -> Result<()> {
+        if self.groups.is_empty() {
+            bail!("search space has no layer groups");
+        }
+        if self.ladder.is_empty() {
+            bail!("empty w_bits ladder");
+        }
+        for &b in &self.ladder {
+            if !(2..=16).contains(&b) {
+                bail!("ladder bit width {b} outside 2..=16");
+            }
+        }
+        if !self.ladder.windows(2).all(|w| w[0] > w[1]) {
+            bail!("w_bits ladder must be strictly descending: {:?}", self.ladder);
+        }
+        if self.a_bits.is_empty() {
+            bail!("empty a_bits list");
+        }
+        for &b in &self.a_bits {
+            if b != 0 && !(2..=16).contains(&b) {
+                bail!("a_bits candidate {b} outside {{0, 2..=16}}");
+            }
+        }
+        if self.a_bits.len() > 1 && self.a_bits.contains(&0) {
+            bail!("a_bits 0 (float) only makes sense as the sole candidate");
+        }
+        if !self.a_bits.windows(2).all(|w| w[0] > w[1]) {
+            bail!("a_bits ladder must be strictly descending: {:?}", self.a_bits);
+        }
+        if self.clips.is_empty() {
+            bail!("empty clip candidate list");
+        }
+        for r in &self.ocs_ratios {
+            if !(0.0..1.0).contains(r) {
+                bail!("ocs ratio {r} outside [0, 1)");
+            }
+        }
+        if self.ocs_ratios.is_empty() {
+            bail!("empty ocs ratio list");
+        }
+        Ok(())
+    }
+
+    /// Number of distinct assignments one group can take (the skip
+    /// option included when allowed) — the journal reports
+    /// `per_group ^ groups` as the nominal space size.
+    pub fn per_group_candidates(&self) -> usize {
+        let dense =
+            self.ladder.len() * self.a_bits.len() * self.clips.len() * self.ocs_ratios.len();
+        dense + usize::from(self.allow_skip)
+    }
+
+    /// Lower an assignment into the concrete [`QuantRecipe`] the
+    /// pipeline prepares. Defaults carry the index-0 start point, and
+    /// every group gets one explicit override, so the emitted TOML is
+    /// self-describing layer by layer.
+    pub fn recipe_for(&self, choices: &[GroupChoice]) -> QuantRecipe {
+        assert_eq!(choices.len(), self.groups.len(), "one choice per group");
+        let mut recipe = QuantRecipe::float();
+        recipe.w_bits = Some(self.ladder[0]);
+        recipe.a_bits = self.a_bits.first().copied().filter(|&b| b > 0);
+        recipe.w_clip = self.clips[0].into();
+        recipe.a_clip = self.a_clip.into();
+        recipe.ocs_ratio = self.ocs_ratios[0];
+        for (group, c) in self.groups.iter().zip(choices) {
+            let policy = if c.skipped {
+                LayerPolicy::skip()
+            } else {
+                LayerPolicy::w_bits(self.ladder[c.w_idx])
+                    .with_a_bits(self.a_bits[c.a_idx])
+                    .with_w_clip(self.clips[c.clip_idx])
+                    .with_a_clip(self.a_clip)
+                    .with_ocs_ratio(self.ocs_ratios[c.ocs_idx])
+            };
+            recipe.push_override(LayerOverride {
+                matches: group.matches.clone(),
+                policy,
+            });
+        }
+        recipe
+    }
+
+    /// Human tag for one assignment, e.g. `f1=w4/mse/ocs0.02 f2=skip`.
+    pub fn describe(&self, choices: &[GroupChoice]) -> String {
+        self.groups
+            .iter()
+            .zip(choices)
+            .map(|(g, c)| {
+                if c.skipped {
+                    format!("{}=skip", g.name)
+                } else {
+                    format!(
+                        "{}=w{}a{}/{}/ocs{}",
+                        g.name,
+                        self.ladder[c.w_idx],
+                        self.a_bits[c.a_idx],
+                        self.clips[c.clip_idx].name(),
+                        self.ocs_ratios[c.ocs_idx]
+                    )
+                }
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::synthetic_mlp;
+
+    fn space_for(spec: &ModelSpec) -> SearchSpace {
+        SearchSpace {
+            ladder: vec![8, 5, 4],
+            a_bits: vec![8],
+            clips: vec![ClipMethod::None, ClipMethod::Mse],
+            a_clip: ClipMethod::Mse,
+            ocs_ratios: vec![0.0, 0.05],
+            allow_skip: true,
+            groups: SearchSpace::per_layer(spec),
+        }
+    }
+
+    #[test]
+    fn per_layer_groups_cover_quantized_layers() {
+        let (spec, _) = synthetic_mlp(11);
+        let groups = SearchSpace::per_layer(&spec);
+        assert_eq!(groups.len(), spec.quantized_layers().count());
+        for (g, l) in groups.iter().zip(spec.quantized_layers()) {
+            assert!(g.matches.matches(l, false, false));
+        }
+    }
+
+    #[test]
+    fn by_kind_dedupes() {
+        let (spec, _) = synthetic_mlp(12);
+        let groups = SearchSpace::by_kind(&spec);
+        assert_eq!(groups.len(), 1, "synthetic mlp is all-fc");
+        assert_eq!(groups[0].name, "fc");
+    }
+
+    #[test]
+    fn validation_rejects_malformed_spaces() {
+        let (spec, _) = synthetic_mlp(13);
+        let good = space_for(&spec);
+        good.validate().unwrap();
+        let mut bad = good.clone();
+        bad.ladder = vec![8, 8];
+        assert!(bad.validate().is_err(), "non-descending ladder");
+        let mut bad = good.clone();
+        bad.ladder = vec![8, 1];
+        assert!(bad.validate().is_err(), "1-bit weights");
+        let mut bad = good.clone();
+        bad.ocs_ratios = vec![1.0];
+        assert!(bad.validate().is_err(), "ratio 1.0");
+        let mut bad = good.clone();
+        bad.a_bits = vec![8, 0];
+        assert!(bad.validate().is_err(), "float acts mixed into a ladder");
+        let mut bad = good;
+        bad.groups.clear();
+        assert!(bad.validate().is_err(), "no groups");
+    }
+
+    #[test]
+    fn start_assignment_is_uniform() {
+        let (spec, _) = synthetic_mlp(14);
+        let space = space_for(&spec);
+        let start = vec![GroupChoice::start(); space.groups.len()];
+        let recipe = space.recipe_for(&start);
+        // every override restates the defaults, so resolution matches
+        // the plain uniform recipe layer by layer
+        let mut uniform = QuantRecipe::float();
+        uniform.w_bits = Some(8);
+        uniform.a_bits = Some(8);
+        uniform.w_clip = ClipMethod::None.into();
+        uniform.a_clip = ClipMethod::Mse.into();
+        for l in spec.quantized_layers() {
+            let got = recipe.resolve(l, false, false);
+            let want = uniform.resolve(l, false, false);
+            assert_eq!(got.w_bits, want.w_bits);
+            assert_eq!(got.a_bits, want.a_bits);
+            assert_eq!(got.quantize, want.quantize);
+        }
+    }
+
+    #[test]
+    fn skip_choice_lowers_to_float_layer() {
+        let (spec, _) = synthetic_mlp(15);
+        let space = space_for(&spec);
+        let mut choices = vec![GroupChoice::start(); space.groups.len()];
+        choices[1].skipped = true;
+        let recipe = space.recipe_for(&choices);
+        let layers: Vec<_> = spec.quantized_layers().collect();
+        assert!(recipe.resolve(layers[0], false, false).quantize);
+        assert!(!recipe.resolve(layers[1], false, false).quantize);
+        assert_eq!(space.per_group_candidates(), 3 * 1 * 2 * 2 + 1);
+        assert!(space.describe(&choices).contains("=skip"));
+    }
+}

@@ -6,9 +6,16 @@
 //! snapshots named `BENCH_quant_2026-08-01.json`) and it renders one
 //! table per bench tag: a row per case, a column per record file in
 //! filename order (date-stamped names therefore sort chronologically).
-//! Files that fail to parse — foreign schema versions, fixtures,
-//! stray JSON — are skipped and listed, never fatal: a history view
-//! over a mixed directory should show what it can.
+//! Immediate subdirectories are scanned too (`fixtures/` and dot-dirs
+//! excepted) — `make bench-snapshot` archives one
+//! `records/history/<date>-pr<N>/` folder per PR, so
+//! `ocs bench history records/history` renders the per-PR trajectory
+//! with each snapshot's folder name as the column label (dated folder
+//! names sort before bare top-level records, so columns read oldest →
+//! current left to right). Files that
+//! fail to parse — foreign schema versions, fixtures, stray JSON — are
+//! skipped and listed, never fatal: a history view over a mixed
+//! directory should show what it can.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -37,18 +44,38 @@ pub struct History {
     pub skipped: Vec<String>,
 }
 
-/// Load every `*.json` in `dir` (non-recursive) and group by bench tag.
-pub fn load_dir(dir: &Path) -> Result<History> {
-    let mut files: Vec<(String, BenchRecord)> = Vec::new();
-    let mut skipped = Vec::new();
+/// `*.json` names directly inside `dir`, unsorted.
+fn json_names(dir: &Path) -> Result<Vec<String>> {
     let entries =
         std::fs::read_dir(dir).with_context(|| format!("read directory {}", dir.display()))?;
-    let mut names: Vec<String> = entries
+    Ok(entries
         .filter_map(|e| e.ok())
         .filter(|e| e.path().is_file())
         .map(|e| e.file_name().to_string_lossy().into_owned())
         .filter(|n| n.ends_with(".json"))
+        .collect())
+}
+
+/// Load every `*.json` in `dir` plus its immediate subdirectories
+/// (snapshot folders; one level, not recursive) and group by bench tag.
+pub fn load_dir(dir: &Path) -> Result<History> {
+    let mut files: Vec<(String, BenchRecord)> = Vec::new();
+    let mut skipped = Vec::new();
+    let mut names: Vec<String> = json_names(dir)?;
+    let subdirs: Vec<String> = std::fs::read_dir(dir)
+        .with_context(|| format!("read directory {}", dir.display()))?
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().is_dir())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        // `fixtures/` holds pinned test inputs, not trajectory data, and
+        // dot-dirs are never snapshots
+        .filter(|n| n != "fixtures" && !n.starts_with('.'))
         .collect();
+    for sub in subdirs {
+        for n in json_names(&dir.join(&sub)).unwrap_or_default() {
+            names.push(format!("{sub}/{n}"));
+        }
+    }
     names.sort();
     for name in names {
         match BenchRecord::load(&dir.join(&name)) {
@@ -74,6 +101,14 @@ pub fn load_dir(dir: &Path) -> Result<History> {
             .iter()
             .map(|(name, rec)| {
                 let stem = name.strip_suffix(".json").unwrap_or(name);
+                // a snapshot record named for its tag is fully described
+                // by its folder: `2026-08-08-pr9/BENCH_quant` → the
+                // folder IS the column
+                let tag_file = format!("BENCH_{}", rec.bench);
+                let stem = match stem.split_once('/') {
+                    Some((sub, file)) if file == tag_file => sub,
+                    _ => stem,
+                };
                 if rec.quick {
                     format!("{stem}*")
                 } else {
@@ -249,6 +284,37 @@ mod tests {
         let md = h.markdown();
         assert!(md.contains("### bench history: `native`"), "{md}");
         assert!(md.contains("| `a` | 100.0 ns | 120.0 ns |"), "{md}");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn snapshot_subfolders_join_the_trajectory() {
+        let d = tmpdir("snap");
+        rec("quant", &[("a", 120.0)])
+            .write(&d.join("BENCH_quant.json"))
+            .unwrap();
+        let snap = d.join("2026-08-01-pr8");
+        std::fs::create_dir_all(&snap).unwrap();
+        rec("quant", &[("a", 100.0)])
+            .write(&snap.join("BENCH_quant.json"))
+            .unwrap();
+        rec("quant", &[("a", 90.0)])
+            .write(&snap.join("BENCH_quant_quick.json"))
+            .unwrap();
+        let h = load_dir(&d).unwrap();
+        let quant = h.groups.iter().find(|g| g.bench == "quant").unwrap();
+        // dated folder sorts before the bare record; the tag-named
+        // snapshot collapses to its folder, others keep the full path
+        assert_eq!(
+            quant.columns,
+            vec![
+                "2026-08-01-pr8",
+                "2026-08-01-pr8/BENCH_quant_quick",
+                "BENCH_quant"
+            ]
+        );
+        let a = quant.rows.iter().find(|r| r.0 == "a").unwrap();
+        assert_eq!(a.2, vec![Some(100.0), Some(90.0), Some(120.0)]);
         std::fs::remove_dir_all(&d).unwrap();
     }
 

@@ -1,9 +1,9 @@
 //! Versioned benchmark records — the measurement format every harness
 //! emits and every perf gate reads.
 //!
-//! The repo tracks four perf trajectories (`BENCH_quant`,
-//! `BENCH_native`, `BENCH_serving`, `BENCH_loadtest`). Before this
-//! module each harness
+//! The repo tracks seven trajectories (`BENCH_quant`, `BENCH_native`,
+//! `BENCH_serving`, `BENCH_loadtest`, `BENCH_chaos`, `BENCH_slow`,
+//! `BENCH_autotune`). Before this module each harness
 //! wrote its own ad-hoc JSON that CI uploaded and nothing ever read
 //! back; the records could not be compared run-over-run, so the paper's
 //! "negligible overhead" claim (§3.5/§5.4) and every kernel PR were
@@ -38,7 +38,8 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::bench_support::CaseRecord;
-use crate::serve::{ChaosReport, LoadPoint, SweepPoint};
+use crate::autotune::SearchOutcome;
+use crate::serve::{ChaosReport, LoadPoint, SlowReport, SweepPoint};
 use crate::util::json::{self, Value};
 
 /// Bump when the record shape changes incompatibly; `parse` rejects
@@ -278,6 +279,129 @@ impl BenchRecord {
                 extra.insert(
                     "recovery_ratio".to_string(),
                     p.rps / report.healthy.rps.max(1e-9),
+                );
+            }
+            rec.rows.push(Row {
+                name: name.to_string(),
+                value: p.rps,
+                unit: "req/s".to_string(),
+                higher_is_better: true,
+                extra,
+            });
+        }
+        rec
+    }
+
+    /// Journal one autotune search (`BENCH_autotune`): what the search
+    /// found (winner vs uniform baseline on the accuracy/footprint
+    /// axes), what it cost (candidates evaluated, prep-cache behavior),
+    /// and the Pareto frontier it traced. `autotune/winner_footprint`
+    /// (lower is better) and `autotune/search` (evals, lower is better)
+    /// are the rows regression gates should pin; frontier rows are
+    /// indexed, so a frontier that changes shape appears as added /
+    /// removed rows rather than a gate failure.
+    pub fn from_autotune(backend: &str, out: &SearchOutcome) -> BenchRecord {
+        let mut rec = BenchRecord::new("autotune", backend, crate::kernels::pool::available());
+        let pct = |f: f64| (f * 100.0).max(0.01); // primaries must be > 0
+        let mut extra = BTreeMap::new();
+        extra.insert("float_accuracy_pct".to_string(), out.float_accuracy * 100.0);
+        extra.insert("acc_floor_pct".to_string(), out.acc_floor * 100.0);
+        rec.rows.push(Row {
+            name: "autotune/baseline_accuracy".to_string(),
+            value: pct(out.baseline.score.accuracy),
+            unit: "pct".to_string(),
+            higher_is_better: true,
+            extra,
+        });
+        let mut extra = BTreeMap::new();
+        extra.insert("agreement_pct".to_string(), out.winner.score.agreement * 100.0);
+        rec.rows.push(Row {
+            name: "autotune/winner_accuracy".to_string(),
+            value: pct(out.winner.score.accuracy),
+            unit: "pct".to_string(),
+            higher_is_better: true,
+            extra,
+        });
+        let mut extra = BTreeMap::new();
+        extra.insert(
+            "baseline_footprint_bytes".to_string(),
+            out.baseline.score.footprint as f64,
+        );
+        extra.insert(
+            "footprint_ratio".to_string(),
+            out.winner.score.footprint as f64 / (out.baseline.score.footprint as f64).max(1.0),
+        );
+        extra.insert(
+            "est_latency_us".to_string(),
+            out.winner.score.est_latency_us,
+        );
+        rec.rows.push(Row {
+            name: "autotune/winner_footprint".to_string(),
+            value: (out.winner.score.footprint as f64).max(1.0),
+            unit: "bytes".to_string(),
+            higher_is_better: false,
+            extra,
+        });
+        let mut extra = BTreeMap::new();
+        extra.insert("scored_total".to_string(), out.scored_total as f64);
+        extra.insert("cache_hits".to_string(), out.cache_hits as f64);
+        extra.insert("cache_misses".to_string(), out.cache_misses as f64);
+        extra.insert("cache_hit_rate".to_string(), out.cache_hit_rate());
+        extra.insert("cache_evictions".to_string(), out.cache_evictions as f64);
+        extra.insert("beam".to_string(), out.beam as f64);
+        extra.insert("groups".to_string(), out.groups as f64);
+        rec.rows.push(Row {
+            name: "autotune/search".to_string(),
+            value: (out.evaluated as f64).max(1.0),
+            unit: "evals".to_string(),
+            higher_is_better: false,
+            extra,
+        });
+        for (i, (footprint, accuracy)) in out.pareto.iter().enumerate() {
+            let mut extra = BTreeMap::new();
+            extra.insert("accuracy_pct".to_string(), accuracy * 100.0);
+            rec.rows.push(Row {
+                name: format!("autotune/pareto/{i}"),
+                value: (*footprint as f64).max(1.0),
+                unit: "bytes".to_string(),
+                higher_is_better: false,
+                extra,
+            });
+        }
+        rec
+    }
+
+    /// Journal the slow-worker drill (`BENCH_slow`): one row per phase
+    /// (healthy / slow with no deadline / slow with the deadline
+    /// shedding), primary metric throughput. `slow/shed` is the row to
+    /// pin — the deadline path must keep shedding work instead of
+    /// letting queueing collapse the pool.
+    pub fn from_slow(backend: &str, report: &SlowReport) -> BenchRecord {
+        let mut rec = BenchRecord::new("slow", backend, crate::kernels::pool::available());
+        let phases: [(&str, &LoadPoint); 3] = [
+            ("slow/healthy", &report.healthy),
+            ("slow/slow", &report.slow),
+            ("slow/shed", &report.shed),
+        ];
+        for (name, p) in phases {
+            let mut extra = BTreeMap::new();
+            extra.insert("clients".to_string(), p.clients as f64);
+            extra.insert("requests".to_string(), p.requests as f64);
+            extra.insert("ok".to_string(), p.ok as f64);
+            extra.insert("errors".to_string(), p.errors as f64);
+            extra.insert("secs".to_string(), p.secs);
+            extra.insert("p50_ms".to_string(), p.p50_ms);
+            extra.insert("p99_ms".to_string(), p.p99_ms);
+            extra.insert("rejected".to_string(), p.rejected as f64);
+            extra.insert("deadline_exceeded".to_string(), p.deadline_exceeded as f64);
+            if name == "slow/slow" {
+                extra.insert("slow_us".to_string(), report.slow_us as f64);
+            }
+            if name == "slow/shed" {
+                extra.insert("deadline_ms".to_string(), report.deadline_ms as f64);
+                extra.insert(
+                    "shed_ratio".to_string(),
+                    p.deadline_exceeded as f64 / (p.requests as f64).max(1.0),
                 );
             }
             rec.rows.push(Row {

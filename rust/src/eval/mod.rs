@@ -131,6 +131,50 @@ pub fn accuracy_native(
     )
 }
 
+/// Top-1 *agreement* between two backends over the same inputs: the
+/// fraction of rows where both argmax to the same class. Unlike
+/// accuracy this needs no labels, so it measures pure quantization
+/// fidelity against a float reference — the logit-agreement signal
+/// `ocs autotune` scores candidates with (a candidate can keep accuracy
+/// by luck while disagreeing everywhere; agreement catches that).
+pub fn agreement_with(
+    a: &mut dyn ForwardPass,
+    b: &mut dyn ForwardPass,
+    images: &TensorF,
+) -> Result<f64> {
+    let n = images.shape()[0];
+    if n == 0 {
+        bail!("no rows to compare");
+    }
+    let chunk = a.batch().min(b.batch()).max(1);
+    let mut same = 0usize;
+    let mut i = 0usize;
+    while i < n {
+        let take = (n - i).min(chunk);
+        let xb = slice_rows(images, i, take)?;
+        let pa = a.forward(&xb)?.argmax_rows();
+        let pb = b.forward(&xb)?.argmax_rows();
+        same += pa.iter().zip(pb.iter()).take(take).filter(|(x, y)| x == y).count();
+        i += take;
+    }
+    Ok(same as f64 / n as f64)
+}
+
+/// Top-1 agreement between two native executables (candidate vs float
+/// reference), chunked at `batch`.
+pub fn agreement_native(
+    cand: &NativeExecutable,
+    reference: &NativeExecutable,
+    images: &TensorF,
+    batch: usize,
+) -> Result<f64> {
+    agreement_with(
+        &mut NativeForward { exe: cand, batch },
+        &mut NativeForward { exe: reference, batch },
+        images,
+    )
+}
+
 /// Rows `[start, start + rows)` of `windows`, zero-padded to `b` rows.
 pub(crate) fn pad_chunk(windows: &TensorI, start: usize, rows: usize, b: usize) -> Result<TensorI> {
     let row: usize = windows.shape()[1..].iter().product();
@@ -225,6 +269,45 @@ mod tests {
         assert_eq!(e.data(), w.data());
         assert!(pad_chunk(&w, 2, 2, 4).is_err(), "out of range");
         assert!(pad_chunk(&w, 0, 3, 2).is_err(), "rows > batch");
+    }
+
+    #[test]
+    fn agreement_counts_matching_argmax() {
+        // backend whose prediction is (first feature + shift) mod 3
+        struct Shift {
+            shift: usize,
+        }
+        impl ForwardPass for Shift {
+            fn batch(&self) -> usize {
+                3
+            }
+            fn forward(&mut self, x: &TensorF) -> Result<TensorF> {
+                let rows = x.shape()[0];
+                let stride = x.len() / rows;
+                let mut data = Vec::new();
+                for r in 0..rows {
+                    let cls = (x.data()[r * stride] as usize + self.shift) % 3;
+                    for c in 0..3 {
+                        data.push(if c == cls { 1.0 } else { 0.0 });
+                    }
+                }
+                Ok(TensorF::from_vec(&[rows, 3], data)?)
+            }
+        }
+        let images =
+            TensorF::from_vec(&[4, 2], vec![0., 0., 1., 0., 2., 0., 0., 0.]).unwrap();
+        let same = agreement_with(&mut Shift { shift: 0 }, &mut Shift { shift: 0 }, &images)
+            .unwrap();
+        assert_eq!(same, 1.0, "identical backends agree everywhere");
+        let none = agreement_with(&mut Shift { shift: 0 }, &mut Shift { shift: 1 }, &images)
+            .unwrap();
+        assert_eq!(none, 0.0, "shifted predictions never agree");
+        assert!(agreement_with(
+            &mut Shift { shift: 0 },
+            &mut Shift { shift: 0 },
+            &TensorF::zeros(&[0, 2])
+        )
+        .is_err());
     }
 
     #[test]

@@ -121,6 +121,7 @@
     clippy::manual_memcpy
 )]
 
+pub mod autotune;
 pub mod bench_record;
 pub mod bench_support;
 pub mod calib;

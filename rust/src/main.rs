@@ -8,6 +8,7 @@
 //! ocs table --id all|1|2|3|4|5|6|fig1   regenerate paper tables/figures
 //! ocs serve --model <name>          dynamic-batching serving self-test
 //! ocs serve --loadtest              closed-loop per-tenant load harness
+//! ocs autotune                      budgeted mixed-precision recipe search
 //! ocs bench check|diff|history      validate / gate / track benchmark records
 //! ```
 
@@ -15,6 +16,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use ocs::autotune;
 use ocs::bench_record::BenchRecord;
 use ocs::cli::Args;
 use ocs::clip::ClipMethod;
@@ -41,6 +43,7 @@ USAGE:
             [--ocs-ratio R] [--ocs-target weights|activations] [--split naive|qa]
             [--layer OVERRIDES] [--backend pjrt|native]
   ocs table --id all|1|2|3|4|5|6|fig1 [--quick]
+  ocs table --recipe PATH [--model NAME]   (score one emitted recipe)
   ocs report --model NAME [--bits N] [--ocs-ratio R]
   ocs serve --model NAME [--requests N] [--w-bits N] [--a-bits N]
             [--layer OVERRIDES]
@@ -50,6 +53,11 @@ USAGE:
             [--backend pjrt|sim|native] [--sim] [--sim-free]
   ocs serve --loadtest [--tenants SPECS] [--clients 1,2,4,8]
             [--requests N] [--json PATH] [--backend pjrt|sim|native]
+  ocs autotune --backend native [--model NAME | --sim-free]
+            [--ladder 8,6,5,4] [--a-bits 8] [--clips none,mse]
+            [--ocs-ratios 0,0.02,0.05] [--acc-drop F] [--allow-skip]
+            [--footprint-budget BYTES] [--latency-budget-us US]
+            [--beam N] [--group-by layer|kind] [--out PATH] [--json PATH]
   ocs bench check FILE [--bench TAG] [--require P1,P2,...]
             [--speedup-prefix P] [--min-speedup X]
   ocs bench diff OLD NEW [--threshold R] [--summary PATH]
@@ -71,6 +79,12 @@ FLAGS:
                     e.g. --layer 'fc*:w_bits=4;%edge:w_bits=8'
                     (TOML files: [[quant.layer]] tables, same keys plus
                     match/kind/pos)
+  --recipe PATH     eval/serve/table: load the full recipe from a TOML
+                    file ([quant] defaults + [[quant.layer]] tables —
+                    the format `ocs autotune` emits) instead of the flag
+                    defaults; --layer overrides still append on top
+                    (eval/serve; `ocs table --recipe` scores the file
+                    against the float baseline)
 
 SERVE FLAGS:
   --workers N       engine shards, one thread+engine each (default: cores)
@@ -121,6 +135,41 @@ throughput step):
                     burst, and post-respawn recovery; writes a
                     BENCH_chaos.json record (first --clients entry is
                     the concurrency, default 2x workers)
+  --slow-drill      slow-worker gate instead of the sweep: healthy
+                    baseline, then every batch slowed by --slow-us with
+                    the deadline disarmed (collapse), then re-armed —
+                    asserts the deadline path sheds (fast expiry
+                    answers) instead of queueing behind the slow
+                    engine; needs --deadline-ms, writes BENCH_slow.json
+  --slow-us US      per-batch slowdown for --slow-drill (default 10000)
+
+AUTOTUNE FLAGS (ocs autotune — search per-layer {w_bits, a_bits, clip,
+ocs_ratio, skip} policies on the native backend under an accuracy
+floor; the winner is emitted as a [[quant.layer]] TOML that serve/eval
+load via --recipe, and the search journal as BENCH_autotune.json):
+  --ladder LIST     w_bits candidates, descending; LIST[0] is the
+                    uniform start + baseline (default 8,6,5,4)
+  --a-bits LIST     a_bits candidates, descending (default 8; 0 = float
+                    activations, only alone)
+  --clips LIST      weight-clip candidates re-chosen at each bit drop
+                    (default none,mse)
+  --a-clip M        fixed activation clip (default mse)
+  --ocs-ratios LIST OCS ratio candidates (default 0,0.02,0.05)
+  --acc-drop F      accuracy floor = float accuracy - F (default 0.02)
+  --footprint-budget BYTES  stop descending once the winner fits
+  --latency-budget-us US    reject candidates over the measured GEMM
+                    latency model (measured => winners stop being
+                    seed-reproducible)
+  --beam N          beam width (default 1 = greedy bit-ladder descent)
+  --max-evals N     hard cap on candidates prepared (default 512)
+  --allow-skip      let the search keep a group float to rescue the
+                    accuracy floor (a float body is larger, never
+                    smaller)
+  --group-by G      search unit: layer (default) or kind
+  --calib N / --test N / --seed S   calibration/held-out sizes + seed
+  --cache-cap N     bound the search's private prep cache (0 = unbounded)
+  --out PATH        winning recipe TOML (default recipe_autotuned.toml)
+  --json PATH       BENCH_autotune.json journal (default off)
 
 EVAL FLAGS:
   --backend B       pjrt (artifacts, default) or native: evaluate on the
@@ -177,6 +226,7 @@ fn run(args: &Args) -> Result<()> {
             )
         }
         Some("serve") => cmd_serve(args, &artifacts),
+        Some("autotune") => cmd_autotune(args, &artifacts),
         Some("bench") => cmd_bench(args),
         Some(other) => bail!("unknown command '{other}'\n{USAGE}"),
         None => {
@@ -281,10 +331,22 @@ fn parse_config(args: &Args) -> Result<QuantConfig> {
     Ok(cfg)
 }
 
-/// Full recipe from the CLI: uniform defaults (`parse_config`) plus any
-/// `--layer` per-layer overrides.
+/// Load a full recipe from a `--recipe` TOML file (`[quant]` defaults +
+/// `[[quant.layer]]` tables — the emit format of `ocs autotune`).
+fn recipe_from_file(path: &str) -> Result<QuantRecipe> {
+    let c = ocs::util::toml::Config::load(path)
+        .with_context(|| format!("read recipe file {path}"))?;
+    QuantRecipe::from_toml(&c, "quant").with_context(|| format!("bad recipe file {path}"))
+}
+
+/// Full recipe from the CLI: a `--recipe` TOML file when given,
+/// otherwise uniform defaults (`parse_config`); `--layer` per-layer
+/// overrides append either way.
 fn parse_recipe(args: &Args) -> Result<QuantRecipe> {
-    let recipe = parse_config(args)?.to_recipe();
+    let recipe = match args.str("recipe") {
+        Some(path) => recipe_from_file(path)?,
+        None => parse_config(args)?.to_recipe(),
+    };
     match args.str("layer") {
         Some(flag) => recipe.with_cli_overrides(flag).context("bad --layer"),
         None => Ok(recipe),
@@ -362,6 +424,12 @@ fn cmd_table(args: &Args, artifacts: &str) -> Result<()> {
         args.str_or("results", "results"),
         args.bool_or("quick", false),
     )?;
+    // `--recipe FILE` scores one emitted recipe (the autotune winner)
+    // instead of regenerating a paper table
+    if let Some(path) = args.str("recipe") {
+        let recipe = recipe_from_file(path)?;
+        return ctx.recipe_report(args.str_or("model", ocs::tables::T1_MODEL), &recipe, path);
+    }
     ctx.run(id)
 }
 
@@ -372,13 +440,20 @@ fn cmd_table(args: &Args, artifacts: &str) -> Result<()> {
 /// float activations every layer would fall back to the f32 body); the
 /// PJRT path keeps its historical weights-only default.
 fn serve_recipe(args: &Args, default_a_bits: u32) -> Result<QuantRecipe> {
-    let wb: u32 = args.parse_or("w-bits", 5)?;
-    let mut cfg = QuantConfig::weights_only(wb, ClipMethod::Mse, 0.02);
-    let ab: u32 = args.parse_or("a-bits", default_a_bits)?;
-    if ab > 0 {
-        cfg.a_bits = Some(ab);
-    }
-    let mut recipe = cfg.to_recipe();
+    let mut recipe = match args.str("recipe") {
+        // a --recipe TOML is the whole policy — autotune winners carry
+        // their own per-layer bits, so the flag defaults stay out
+        Some(path) => recipe_from_file(path)?,
+        None => {
+            let wb: u32 = args.parse_or("w-bits", 5)?;
+            let mut cfg = QuantConfig::weights_only(wb, ClipMethod::Mse, 0.02);
+            let ab: u32 = args.parse_or("a-bits", default_a_bits)?;
+            if ab > 0 {
+                cfg.a_bits = Some(ab);
+            }
+            cfg.to_recipe()
+        }
+    };
     if let Some(flag) = args.str("layer") {
         recipe = recipe.with_cli_overrides(flag).context("bad --layer")?;
     }
@@ -541,6 +616,154 @@ fn cmd_serve(args: &Args, artifacts: &str) -> Result<()> {
     Ok(())
 }
 
+/// Parse a comma-separated numeric flag, falling back to `default`
+/// when the flag is absent.
+fn parse_num_list<T: std::str::FromStr>(args: &Args, flag: &str, default: &[T]) -> Result<Vec<T>>
+where
+    T: Copy,
+{
+    let items = args.list(flag);
+    if items.is_empty() {
+        return Ok(default.to_vec());
+    }
+    items
+        .iter()
+        .map(|s| {
+            s.parse::<T>()
+                .map_err(|_| anyhow::anyhow!("--{flag}: cannot parse '{s}'"))
+        })
+        .collect()
+}
+
+/// `ocs autotune`: budgeted mixed-precision recipe search over the
+/// per-layer recipe space on the native backend. Emits the winning
+/// `[[quant.layer]]` TOML (`--out`, servable via `ocs serve --recipe`)
+/// and a versioned BENCH_autotune.json journal (`--json`).
+fn cmd_autotune(args: &Args, artifacts: &str) -> Result<()> {
+    match ServeBackend::from_args(args)? {
+        ServeBackend::Native => {}
+        _ => bail!("autotune scores candidates on the native integer backend (--backend native)"),
+    }
+    let (spec, ws) = if args.bool_or("sim-free", false) {
+        ocs::runtime::native::synthetic_mlp(2027)
+    } else {
+        let name = args.req("model")?;
+        let spec = ModelSpec::load_named(artifacts, name)?;
+        let (ws, trained) = WeightStore::load_best(&spec)?;
+        if !trained {
+            ocs::warnln!("no trained weights for {name}; tuning the init seed");
+        }
+        (spec, ws)
+    };
+    if spec.is_lm() {
+        bail!("autotune scores CNN models (the LSTM LM is artifact-only)");
+    }
+    let backend_label = format!("native:{}", spec.name);
+
+    let ladder = parse_num_list::<u32>(args, "ladder", &[8, 6, 5, 4])?;
+    let a_bits = parse_num_list::<u32>(args, "a-bits", &[8])?;
+    let mut clips = Vec::new();
+    for s in args.list("clips") {
+        clips.push(ClipMethod::parse(&s).with_context(|| format!("--clips: bad method '{s}'"))?);
+    }
+    if clips.is_empty() {
+        clips = vec![ClipMethod::None, ClipMethod::Mse];
+    }
+    let a_clip = ClipMethod::parse(args.str_or("a-clip", "mse")).context("bad --a-clip")?;
+    let ocs_ratios = parse_num_list::<f64>(args, "ocs-ratios", &[0.0, 0.02, 0.05])?;
+    let groups = match args.str_or("group-by", "layer") {
+        "layer" => autotune::SearchSpace::per_layer(&spec),
+        "kind" => autotune::SearchSpace::by_kind(&spec),
+        other => bail!("bad --group-by '{other}' (layer|kind)"),
+    };
+    let space = autotune::SearchSpace {
+        ladder,
+        a_bits,
+        clips,
+        a_clip,
+        ocs_ratios,
+        allow_skip: args.bool_or("allow-skip", false),
+        groups,
+    };
+    space.validate()?;
+
+    let scorer_cfg = autotune::ScorerCfg {
+        calib_images: args.parse_or("calib", 256)?,
+        calib_batch: 32,
+        test_images: args.parse_or("test", 512)?,
+        eval_batch: 128,
+        seed: args.parse_or("seed", 29u64)?,
+        cache_cap: args.parse_or("cache-cap", 0usize)?,
+        gemm_threads: 1,
+    };
+    let mut scorer = autotune::Scorer::new(spec, ws, scorer_cfg)?;
+    let acc_drop: f64 = args.parse_or("acc-drop", 0.02)?;
+    let search_cfg = autotune::SearchCfg {
+        acc_floor: scorer.float_accuracy - acc_drop,
+        footprint_budget: args.parse_opt("footprint-budget")?,
+        latency_budget_us: args.parse_opt("latency-budget-us")?,
+        beam: args.parse_or("beam", 1usize)?,
+        max_evals: args.parse_or("max-evals", 512usize)?,
+    };
+    println!(
+        "autotune: {} group(s) × {} candidate(s)/group, float accuracy {:.2}%, \
+         floor {:.2}%, beam {}",
+        space.groups.len(),
+        space.per_group_candidates(),
+        scorer.float_accuracy * 100.0,
+        search_cfg.acc_floor * 100.0,
+        search_cfg.beam
+    );
+    let out = autotune::run(&space, &mut scorer, &search_cfg)?;
+    println!(
+        "autotune: baseline [{}] {:.2}% @ {} B",
+        out.baseline.score.label,
+        out.baseline.score.accuracy * 100.0,
+        out.baseline.score.footprint
+    );
+    println!(
+        "autotune: winner   [{}] {:.2}% @ {} B ({:.0}% of baseline, agreement {:.2}%, \
+         ~{:.1} µs/sample modeled)",
+        out.winner.score.label,
+        out.winner.score.accuracy * 100.0,
+        out.winner.score.footprint,
+        out.winner.score.footprint as f64 / (out.baseline.score.footprint as f64).max(1.0) * 100.0,
+        out.winner.score.agreement * 100.0,
+        out.winner.score.est_latency_us
+    );
+    println!("autotune: {}", space.describe(&out.winner.choices));
+    println!(
+        "autotune: {} candidate(s) evaluated ({} scored), prep cache {} hit(s) / {} miss(es) \
+         / {} eviction(s), {} Pareto point(s)",
+        out.evaluated,
+        out.scored_total,
+        out.cache_hits,
+        out.cache_misses,
+        out.cache_evictions,
+        out.pareto.len()
+    );
+
+    let out_path = args.str_or("out", "recipe_autotuned.toml");
+    let toml = format!(
+        "# emitted by `ocs autotune` — fingerprint {}\n{}",
+        out.winner.score.fingerprint,
+        out.winner.recipe.to_toml("quant")
+    );
+    std::fs::write(out_path, &toml).with_context(|| format!("write {out_path}"))?;
+    println!(
+        "wrote {out_path} (fingerprint {}) — serve it with \
+         `ocs serve --backend native --recipe {out_path}`",
+        out.winner.score.fingerprint
+    );
+    if let Some(json) = args.str("json") {
+        BenchRecord::from_autotune(&backend_label, &out)
+            .write(std::path::Path::new(json))
+            .with_context(|| format!("write {json}"))?;
+        println!("wrote {json}");
+    }
+    Ok(())
+}
+
 /// Build the worker-engine factory `ocs serve` was asked for. The
 /// native backend also hands back its prepared-model cache so callers
 /// can print its stats line after the run.
@@ -626,6 +849,23 @@ fn cmd_loadtest(
             &tenants,
             concurrency,
             requests,
+            Some(&json_out),
+        )?;
+    } else if args.bool_or("slow-drill", false) {
+        // the drill arms its own slow fault; --fault is for the plain sweep
+        let json_out = std::path::PathBuf::from(args.str_or("json", "BENCH_slow.json"));
+        let slow_us: u64 = args.parse_or("slow-us", 10_000)?;
+        let concurrency = clients
+            .first()
+            .copied()
+            .unwrap_or((serve_cfg.workers * 4).max(8));
+        ocs::serve::slow_loadtest(
+            factory,
+            serve_cfg,
+            &tenants,
+            concurrency,
+            requests,
+            slow_us,
             Some(&json_out),
         )?;
     } else {

@@ -384,6 +384,12 @@ fn target_name(t: OcsTarget) -> &'static str {
     }
 }
 
+/// Quote + escape a string for the TOML-subset emitter (the inverse of
+/// `util::toml::parse_value`'s unescaping, same two escapes).
+fn toml_str(v: &str) -> String {
+    format!("\"{}\"", v.replace('\\', "\\\\").replace('"', "\\\""))
+}
+
 fn bits_opt(b: u32) -> Option<u32> {
     if b == 0 {
         None
@@ -740,6 +746,77 @@ impl QuantRecipe {
         Ok(recipe)
     }
 
+    /// Serialize back to the TOML text form [`QuantRecipe::from_toml`]
+    /// parses: flat defaults under `[section]` plus one
+    /// `[[section.layer]]` table per override, in declaration order
+    /// (order is semantic — later overrides win). Parsing the emitted
+    /// text yields an identical [`QuantRecipe::fingerprint`]; this is
+    /// the emit path `ocs autotune` uses to hand a winning recipe to
+    /// `serve`/`tables` unmodified.
+    ///
+    /// Custom [`ClipSpec`] strategies serialize by `name()`; only
+    /// built-in clip names parse back, so a recipe carrying a custom
+    /// strategy emits valid TOML that `from_toml` will reject.
+    pub fn to_toml(&self, section: &str) -> String {
+        let bits = |b: Option<u32>| b.unwrap_or(0);
+        let mut s = String::new();
+        if !section.is_empty() {
+            s.push_str(&format!("[{section}]\n"));
+        }
+        s.push_str(&format!("w_bits = {}\n", bits(self.w_bits)));
+        s.push_str(&format!("a_bits = {}\n", bits(self.a_bits)));
+        s.push_str(&format!("w_clip = {}\n", toml_str(&self.w_clip.name())));
+        s.push_str(&format!("a_clip = {}\n", toml_str(&self.a_clip.name())));
+        s.push_str(&format!("ocs_ratio = {}\n", self.ocs_ratio));
+        s.push_str(&format!("ocs_target = {}\n", toml_str(target_name(self.ocs_target))));
+        s.push_str(&format!("split_mode = {}\n", toml_str(self.split_mode.name())));
+        let table = if section.is_empty() {
+            "[[layer]]".to_string()
+        } else {
+            format!("[[{section}.layer]]")
+        };
+        for ov in &self.overrides {
+            s.push('\n');
+            s.push_str(&table);
+            s.push('\n');
+            if let Some(g) = &ov.matches.name_glob {
+                s.push_str(&format!("match = {}\n", toml_str(g)));
+            }
+            if let Some(k) = ov.matches.kind {
+                s.push_str(&format!("kind = {}\n", toml_str(kind_name(k))));
+            }
+            if let Some(p) = ov.matches.pos {
+                s.push_str(&format!("pos = {}\n", toml_str(p.name())));
+            }
+            let pol = &ov.policy;
+            if let Some(q) = pol.quantize {
+                s.push_str(&format!("quantize = {q}\n"));
+            }
+            if let Some(b) = pol.w_bits {
+                s.push_str(&format!("w_bits = {b}\n"));
+            }
+            if let Some(b) = pol.a_bits {
+                s.push_str(&format!("a_bits = {b}\n"));
+            }
+            if let Some(c) = &pol.w_clip {
+                s.push_str(&format!("w_clip = {}\n", toml_str(&c.name())));
+            }
+            if let Some(c) = &pol.a_clip {
+                s.push_str(&format!("a_clip = {}\n", toml_str(&c.name())));
+            }
+            if let Some(r) = pol.ocs_ratio {
+                s.push_str(&format!("ocs_ratio = {r}\n"));
+            }
+            if let Some(t) = pol.ocs_target {
+                s.push_str(&format!("ocs_target = {}\n", toml_str(target_name(t))));
+            }
+            if let Some(m) = pol.split_mode {
+                s.push_str(&format!("split_mode = {}\n", toml_str(m.name())));
+            }
+        }
+        s
+    }
+
     /// Parse the CLI `--layer` flag value: `;`-separated
     /// [`LayerOverride::parse`] specs appended to `self`.
     pub fn with_cli_overrides(mut self, flag: &str) -> Result<QuantRecipe> {
@@ -955,6 +1032,48 @@ skip = true
         let pr = QuantRecipe::from_toml(&plain, "q").unwrap();
         assert!(pr.is_uniform());
         assert_eq!(pr.w_bits, Some(6));
+    }
+
+    #[test]
+    fn to_toml_round_trips_fingerprint() {
+        let r = QuantRecipe::uniform(&QuantConfig::weights_with_a8(5, ClipMethod::Mse, 0.02))
+            .with_override(
+                LayerMatch::name("fc*"),
+                LayerPolicy::w_bits(4)
+                    .with_ocs_ratio(0.1)
+                    .with_w_clip(ClipMethod::Percentile(0.995)),
+            )
+            .with_override(LayerMatch::pos(LayerPos::Edge), LayerPolicy::w_bits(8))
+            .with_override(LayerMatch::kind(LayerKind::Embed), LayerPolicy::skip())
+            .with_override(
+                LayerMatch {
+                    name_glob: Some("conv?".into()),
+                    kind: Some(LayerKind::Conv),
+                    pos: Some(LayerPos::Last),
+                },
+                LayerPolicy::default()
+                    .with_a_bits(0)
+                    .with_a_clip(ClipMethod::Kl)
+                    .with_ocs_target(OcsTarget::Activations)
+                    .with_split_mode(SplitMode::Naive),
+            );
+        let text = r.to_toml("quant");
+        let back = QuantRecipe::from_toml(&Config::parse(&text).unwrap(), "quant").unwrap();
+        assert_eq!(back.fingerprint(), r.fingerprint(), "emitted:\n{text}");
+        assert_eq!(back.canonical(), r.canonical());
+        // the empty section emits top-level keys + [[layer]] tables
+        let flat = QuantRecipe::from_toml(&Config::parse(&r.to_toml("")).unwrap(), "").unwrap();
+        assert_eq!(flat.fingerprint(), r.fingerprint());
+        // a float recipe round-trips through all-default keys
+        let f = QuantRecipe::float();
+        let back = QuantRecipe::from_toml(&Config::parse(&f.to_toml("q")).unwrap(), "q").unwrap();
+        assert_eq!(back.fingerprint(), f.fingerprint());
+        // globs with TOML-special characters survive the escaping
+        let odd = QuantRecipe::float()
+            .with_override(LayerMatch::name(r#"we"ird\*"#), LayerPolicy::w_bits(4));
+        let back =
+            QuantRecipe::from_toml(&Config::parse(&odd.to_toml("q")).unwrap(), "q").unwrap();
+        assert_eq!(back.fingerprint(), odd.fingerprint());
     }
 
     #[test]

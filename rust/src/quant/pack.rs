@@ -80,6 +80,11 @@ pub struct PackedLayer {
     /// Activation grid (`aqmax <= 0` = float activations).
     pub adelta: f32,
     pub aqmax: f32,
+    /// Bit width of the integer weight grid (0 on the f32 fallback) —
+    /// the width a wire format would store the payload at, even though
+    /// the in-memory [`PackedB`] widens every element to i8 for the
+    /// kernel.
+    pub w_bits: u32,
     pub body: LayerBody,
 }
 
@@ -95,6 +100,36 @@ impl PackedLayer {
             LayerKind::Conv => self.ksize * self.ksize * self.cin_eff,
             _ => self.cin_eff,
         }
+    }
+
+    /// Serving footprint of the layer body in bytes: the weight payload
+    /// at its quantized width (`w_bits` bits per element on the integer
+    /// path, 32 on the f32 fallback) plus the epilogue vectors. Logical
+    /// bytes — what a wire format or weight cache would hold — not
+    /// allocator overhead, the packer's cache-blocking padding, or the
+    /// i8 widening the compute kernel works on. Bit-true on purpose:
+    /// this is the axis the autotune bit ladder descends, so a 4-bit
+    /// grid must cost half an 8-bit one.
+    pub fn body_bytes(&self) -> usize {
+        match &self.body {
+            LayerBody::Int { dequant, bias, .. } => {
+                (self.gemm_k() * self.cout * self.w_bits as usize + 7) / 8
+                    + (dequant.len() + bias.len()) * 4
+                    + 4
+            }
+            LayerBody::Float { w, bias } => (w.len() + bias.len()) * 4,
+        }
+    }
+
+    /// Channel-dup steering vectors (`idx`/`dscale`/`dbias`, 12 bytes
+    /// per effective input slot when hooked; 0 otherwise).
+    pub fn steering_bytes(&self) -> usize {
+        (self.idx.len() + self.dscale.len() + self.dbias.len()) * 4
+    }
+
+    /// Body + steering.
+    pub fn total_bytes(&self) -> usize {
+        self.body_bytes() + self.steering_bytes()
     }
 }
 
@@ -118,6 +153,16 @@ impl PackedModel {
     /// Compact tag for logs: `native[5i/2f]`.
     pub fn label(&self) -> String {
         format!("native[{}i/{}f]", self.int_layers, self.float_layers)
+    }
+
+    /// Whole-model serving footprint in bytes (sum of
+    /// [`PackedLayer::total_bytes`]) — the cost axis `ocs autotune`
+    /// budgets candidate recipes on. Lowering a layer from the f32
+    /// fallback to a `b`-bit body shrinks its payload `32/b`×; OCS
+    /// duplicate slots grow it (wider `cin_eff` payload + steering), so
+    /// the ratio/bits trade is visible in one number.
+    pub fn footprint_bytes(&self) -> usize {
+        self.layers.values().map(|l| l.total_bytes()).sum()
     }
 }
 
@@ -209,6 +254,7 @@ fn pack_layer(
         dbias: prep.dbias.data().to_vec(),
         adelta: prep.adelta,
         aqmax: prep.aqmax,
+        w_bits: if int_ok { w_bits.unwrap() } else { 0 },
         body,
     })
 }
@@ -260,6 +306,7 @@ pub fn pack_prepared(spec: &ModelSpec, prep: &PreparedModel) -> Result<PackedMod
                 dbias: Vec::new(),
                 adelta: 1.0,
                 aqmax: -1.0,
+                w_bits: 0,
                 body: LayerBody::Float {
                     w: w.data().to_vec(),
                     bias,
@@ -452,6 +499,45 @@ mod tests {
                 assert_eq!((*q as f32 * delta).to_bits(), v.to_bits());
             }
         }
+    }
+
+    #[test]
+    fn footprint_counts_payload_widths() {
+        let spec = mlp_spec();
+        let ws = mlp_ws(7);
+        let calib = calib_for(&spec);
+        // full integer path: i8 bodies
+        let int_pm = pack_prepared(
+            &spec,
+            &pipeline::prepare_recipe(&spec, &ws, Some(&calib), &int_recipe()).unwrap(),
+        )
+        .unwrap();
+        // float fallback on the same shapes
+        let f_pm = pack_prepared(
+            &spec,
+            &pipeline::prepare_recipe(&spec, &ws, None, &pipeline::QuantRecipe::float()).unwrap(),
+        )
+        .unwrap();
+        let f1 = int_pm.layer("f1").unwrap();
+        // 4-bit body: ceil(K*cout*4/8) weight bytes + 4B dequant/bias
+        // per cout + wdelta
+        assert_eq!(f1.w_bits, 4);
+        assert_eq!(f1.body_bytes(), (10 * 6 * 4 + 7) / 8 + (6 + 6) * 4 + 4);
+        assert_eq!(f1.steering_bytes(), 10 * 12);
+        assert_eq!(f1.total_bytes(), f1.body_bytes() + f1.steering_bytes());
+        let f1f = f_pm.layer("f1").unwrap();
+        // f32 body on the same padded shape: 4 bytes per element
+        assert_eq!(f1f.body_bytes(), (10 * 6 + 6) * 4);
+        assert!(
+            int_pm.footprint_bytes() < f_pm.footprint_bytes(),
+            "i8 lowering must shrink the model: {} vs {}",
+            int_pm.footprint_bytes(),
+            f_pm.footprint_bytes()
+        );
+        assert_eq!(
+            int_pm.footprint_bytes(),
+            int_pm.layers.values().map(|l| l.total_bytes()).sum::<usize>()
+        );
     }
 
     #[test]

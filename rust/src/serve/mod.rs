@@ -1798,6 +1798,144 @@ pub fn chaos_loadtest(
     Ok(out)
 }
 
+/// The slow-worker drill's three phases plus the knobs that shaped
+/// them, for the assertions and `BENCH_slow.json`.
+#[derive(Debug, Clone)]
+pub struct SlowReport {
+    /// Baseline phase on a healthy pool, deadline disarmed.
+    pub healthy: LoadPoint,
+    /// Every worker slowed by `slow_us` per batch, deadline disarmed —
+    /// queueing builds and throughput collapses.
+    pub slow: LoadPoint,
+    /// Same slow workers with the deadline armed — expired jobs are
+    /// answered from the queue without touching the slow engine.
+    pub shed: LoadPoint,
+    pub slow_us: u64,
+    pub deadline_ms: u64,
+}
+
+/// The slow-worker gate behind `ocs serve --loadtest --slow-drill`:
+/// the `slow:US` fault spec existed since the fault layer landed but
+/// nothing gated it. Measure a healthy baseline, collapse the pool by
+/// making **every** infer batch sleep `slow_us` (deadline off), then
+/// rerun with the configured deadline armed and assert the deadline
+/// path *sheds* — expired jobs get fast "deadline exceeded" answers
+/// instead of queueing behind the slow engine, so the pool drains the
+/// same offered load in less wall time while still completing some
+/// requests. Fails loudly when the fault never bit, nothing was shed,
+/// every request was shed, or shedding didn't beat the collapse.
+pub fn slow_loadtest(
+    factory: Arc<dyn EngineFactory>,
+    cfg: &ServeConfig,
+    tenants: &[TenantInit],
+    clients: usize,
+    requests: usize,
+    slow_us: u64,
+    json_out: Option<&Path>,
+) -> Result<SlowReport> {
+    let deadline = match cfg.deadline {
+        Some(d) => d,
+        None => bail!("slow drill: a deadline is the path under test — pass --deadline-ms"),
+    };
+    if slow_us == 0 {
+        bail!("slow drill: --slow-us must be >= 1");
+    }
+    if deadline.as_micros() <= slow_us as u128 {
+        bail!(
+            "slow drill: deadline {:?} is not above the per-batch slowdown {slow_us} µs — \
+             even a freshly dequeued job would expire and nothing could ever complete",
+            deadline
+        );
+    }
+    let label = factory.label();
+    let mut no_deadline = cfg.clone();
+    no_deadline.deadline = None;
+    // Phase 1: healthy baseline, deadline disarmed, no faults.
+    let healthy = run_load_point(factory.clone(), &no_deadline, tenants, clients, requests)?;
+    println!(
+        "slow[healthy]: {}/{} ok in {:.2}s = {:.0} req/s (p99 {:.2} ms)",
+        healthy.ok, healthy.requests, healthy.secs, healthy.rps, healthy.p99_ms
+    );
+    let plan = faults::FaultPlan::new(vec![faults::FaultDirective::SlowInfer { micros: slow_us }]);
+    let slow_factory = plan.wrap(factory);
+    // Phase 2: every batch slowed, deadline still disarmed — the
+    // collapse the deadline path exists to prevent.
+    let server = Server::start_tenants(
+        slow_factory.clone(),
+        no_deadline.clone(),
+        TenantTable::new(tenants)?,
+    )?;
+    let slow = drive_on(&server, clients, requests, Some(Duration::from_secs(60)))?;
+    println!("{}", server.metrics().report());
+    server.shutdown()?;
+    println!(
+        "slow[slow]: {}/{} ok in {:.2}s = {:.0} req/s (p99 {:.2} ms, +{slow_us} µs/batch)",
+        slow.ok, slow.requests, slow.secs, slow.rps, slow.p99_ms
+    );
+    if slow.rps >= healthy.rps * 0.8 {
+        bail!(
+            "slow drill: the fault never bit — {:.0} req/s slowed vs {:.0} req/s healthy; \
+             raise --slow-us",
+            slow.rps,
+            healthy.rps
+        );
+    }
+    // Phase 3: same slow workers, deadline armed.
+    let server = Server::start_tenants(slow_factory, cfg.clone(), TenantTable::new(tenants)?)?;
+    let shed = drive_on(&server, clients, requests, Some(Duration::from_secs(60)))?;
+    println!("{}", server.metrics().report());
+    server.shutdown()?;
+    println!(
+        "slow[shed]: {}/{} ok in {:.2}s = {:.0} req/s \
+         ({} deadline-exceeded, p99 {:.2} ms, deadline {:?})",
+        shed.ok, shed.requests, shed.secs, shed.rps, shed.deadline_exceeded, shed.p99_ms, deadline
+    );
+    if shed.deadline_exceeded == 0 {
+        bail!(
+            "slow drill: deadline path never fired — no job outlived {:?} in queue; \
+             lower --deadline-ms or raise --slow-us",
+            deadline
+        );
+    }
+    if shed.ok == 0 {
+        bail!("slow drill: every request was shed — the pool did no work at all");
+    }
+    let slow_drain = slow.requests as f64 / slow.secs.max(1e-9);
+    let shed_drain = shed.requests as f64 / shed.secs.max(1e-9);
+    if shed_drain <= slow_drain {
+        bail!(
+            "slow drill: shedding drained {:.0} req/s offered load, no better than the \
+             collapsed {:.0} req/s — the deadline path is queueing behind the slow engine",
+            shed_drain,
+            slow_drain
+        );
+    }
+    println!(
+        "slow: shed drained {:.0} req/s offered vs collapsed {:.0} req/s \
+         ({:.1}x — {} of {} shed, {} served)",
+        shed_drain,
+        slow_drain,
+        shed_drain / slow_drain,
+        shed.deadline_exceeded,
+        shed.requests,
+        shed.ok
+    );
+    let out = SlowReport {
+        healthy,
+        slow,
+        shed,
+        slow_us,
+        deadline_ms: deadline.as_millis() as u64,
+    };
+    if let Some(path) = json_out {
+        crate::bench_record::BenchRecord::from_slow(&label, &out)
+            .write(path)
+            .with_context(|| format!("write {}", path.display()))?;
+        println!("wrote {}", path.display());
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

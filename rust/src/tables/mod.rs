@@ -184,6 +184,45 @@ impl TableCtx {
         crate::info!("table {id} done in {:.1}s", t0.elapsed().as_secs_f64());
         Ok(())
     }
+
+    /// `ocs table --recipe FILE` — score one recipe file (e.g. the
+    /// `ocs autotune` winner) against the float baseline on `model`.
+    /// The file goes through the same `[quant]` loader as
+    /// `serve --recipe`, unmodified — this is the emit path's second
+    /// consumer.
+    pub fn recipe_report(
+        &self,
+        model: &str,
+        recipe: &pipeline::QuantRecipe,
+        source: &str,
+    ) -> Result<()> {
+        let env = self.env(model)?;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "Recipe report — {model}, fingerprint {} ({} override(s), from {source})",
+            recipe.fingerprint(),
+            recipe.overrides.len()
+        );
+        if env.spec.is_lm() {
+            let float_ppl = self.ppl(&env, &QuantConfig::float())?;
+            let ppl = self.ppl_recipe(&env, recipe)?;
+            let _ = writeln!(
+                out,
+                "{:>12} {:>8.1}\n{:>12} {:>8.1}   (perplexity; lower is better)",
+                "float", float_ppl, "recipe", ppl
+            );
+        } else {
+            let float_acc = self.acc(&env, &QuantConfig::float())?;
+            let acc = self.acc_recipe(&env, recipe)?;
+            let _ = writeln!(
+                out,
+                "{:>12} {:>7.1}%\n{:>12} {:>7.1}%   (top-1 accuracy)",
+                "float", float_acc, "recipe", acc
+            );
+        }
+        self.emit("recipe_report", &out)
+    }
 }
 
 // ---------------------------------------------------------------------------

@@ -1,0 +1,149 @@
+//! Integration tests for `ocs autotune`: the determinism contract
+//! (same seed ⇒ identical winning fingerprint and identical emitted
+//! TOML), the capacity-bounded prep cache (evictions change cost, never
+//! the winner), the uniform-baseline Pareto claim, the journal schema,
+//! and the emit path — the winning TOML must round-trip through the
+//! same `[quant]` loader `ocs serve --recipe` and `ocs tables` use.
+
+use ocs::autotune::{run, Scorer, ScorerCfg, SearchCfg, SearchSpace};
+use ocs::bench_record::BenchRecord;
+use ocs::clip::ClipMethod;
+use ocs::pipeline::QuantRecipe;
+use ocs::runtime::native::synthetic_mlp;
+use ocs::util::toml::Config;
+
+fn scorer(seed: u64, cache_cap: usize) -> Scorer {
+    let (spec, ws) = synthetic_mlp(2027);
+    let cfg = ScorerCfg {
+        calib_images: 64,
+        calib_batch: 32,
+        test_images: 96,
+        eval_batch: 32,
+        seed,
+        cache_cap,
+        gemm_threads: 1,
+    };
+    Scorer::new(spec, ws, cfg).unwrap()
+}
+
+fn space(scorer: &Scorer) -> SearchSpace {
+    SearchSpace {
+        ladder: vec![8, 4],
+        a_bits: vec![8],
+        clips: vec![ClipMethod::None, ClipMethod::Mse],
+        a_clip: ClipMethod::Mse,
+        ocs_ratios: vec![0.0, 0.05],
+        allow_skip: true,
+        groups: SearchSpace::per_layer(scorer.spec()),
+    }
+}
+
+fn search_cfg(scorer: &Scorer) -> SearchCfg {
+    SearchCfg {
+        acc_floor: scorer.float_accuracy - 0.10,
+        ..SearchCfg::default()
+    }
+}
+
+#[test]
+fn same_seed_same_winner_and_same_toml() {
+    let mut a = scorer(7, 0);
+    let sp = space(&a);
+    let cfg = search_cfg(&a);
+    let out_a = run(&sp, &mut a, &cfg).unwrap();
+    let mut b = scorer(7, 0);
+    let out_b = run(&sp, &mut b, &cfg).unwrap();
+    assert_eq!(
+        out_a.winner.score.fingerprint, out_b.winner.score.fingerprint,
+        "same seed must replay to the same winner"
+    );
+    assert_eq!(
+        out_a.winner.recipe.to_toml("quant"),
+        out_b.winner.recipe.to_toml("quant"),
+        "and to byte-identical emitted TOML"
+    );
+    assert_eq!(out_a.evaluated, out_b.evaluated);
+    assert_eq!(out_a.pareto, out_b.pareto);
+}
+
+#[test]
+fn bounded_cache_evicts_but_keeps_the_winner() {
+    let mut unbounded = scorer(7, 0);
+    let sp = space(&unbounded);
+    let cfg = search_cfg(&unbounded);
+    let free = run(&sp, &mut unbounded, &cfg).unwrap();
+    assert_eq!(free.cache_evictions, 0, "cap 0 = unbounded");
+    // a 2-entry cache must thrash on a multi-candidate search yet land
+    // on the identical winner: capacity is a cost knob, not a policy
+    let mut bounded = scorer(7, 2);
+    let tight = run(&sp, &mut bounded, &cfg).unwrap();
+    assert!(
+        tight.cache_evictions > 0,
+        "cap 2 must evict across {} evals",
+        tight.evaluated
+    );
+    assert_eq!(tight.winner.score.fingerprint, free.winner.score.fingerprint);
+    assert_eq!(tight.winner.score.footprint, free.winner.score.footprint);
+}
+
+#[test]
+fn winner_meets_floor_at_or_below_baseline_footprint() {
+    let mut s = scorer(7, 0);
+    let sp = space(&s);
+    let cfg = search_cfg(&s);
+    let out = run(&sp, &mut s, &cfg).unwrap();
+    assert!(out.winner.score.accuracy >= out.acc_floor);
+    assert!(
+        out.winner.score.footprint <= out.baseline.score.footprint,
+        "winner {} vs uniform baseline {}",
+        out.winner.score.footprint,
+        out.baseline.score.footprint
+    );
+    // the winner sits on the reported Pareto frontier
+    assert!(out
+        .pareto
+        .iter()
+        .any(|&(f, _)| f == out.winner.score.footprint));
+}
+
+#[test]
+fn journal_record_validates_and_carries_the_search_rows() {
+    let mut s = scorer(7, 0);
+    let sp = space(&s);
+    let out = run(&sp, &mut s, &search_cfg(&s)).unwrap();
+    let rec = BenchRecord::from_autotune("native:native-mlp", &out);
+    rec.validate().unwrap();
+    assert_eq!(rec.bench, "autotune");
+    for name in [
+        "autotune/baseline_accuracy",
+        "autotune/winner_accuracy",
+        "autotune/winner_footprint",
+        "autotune/search",
+        "autotune/pareto/0",
+    ] {
+        assert!(rec.row(name).is_some(), "missing row {name}");
+    }
+    let search = rec.row("autotune/search").unwrap();
+    assert_eq!(search.value, out.evaluated.max(1) as f64);
+    assert_eq!(search.extra["groups"], out.groups as f64);
+}
+
+#[test]
+fn emitted_toml_feeds_the_serve_recipe_loader_unmodified() {
+    let mut s = scorer(7, 0);
+    let sp = space(&s);
+    let out = run(&sp, &mut s, &search_cfg(&s)).unwrap();
+    // exactly what cmd_autotune writes: a comment header (the parser
+    // strips comments) plus the [quant] section serve/tables load
+    let text = format!(
+        "# emitted by `ocs autotune` — fingerprint {}\n{}",
+        out.winner.score.fingerprint,
+        out.winner.recipe.to_toml("quant")
+    );
+    let parsed = QuantRecipe::from_toml(&Config::parse(&text).unwrap(), "quant").unwrap();
+    assert_eq!(
+        parsed.fingerprint(),
+        out.winner.score.fingerprint,
+        "the emitted TOML must resolve to the winning recipe, bit for bit"
+    );
+}

@@ -207,3 +207,99 @@ fn prop_quant_error_decreases_with_bits() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_recipe_toml_round_trip_fingerprint() {
+    // serialize -> parse must be the identity on the recipe fingerprint
+    // (and the canonical form behind it) for any recipe built from the
+    // built-in dimensions — the emit path `ocs autotune` ships winners on
+    use ocs::clip::ClipMethod;
+    use ocs::model::LayerKind;
+    use ocs::ocs::{OcsTarget, SplitMode};
+    use ocs::pipeline::{LayerMatch, LayerOverride, LayerPolicy, LayerPos, QuantRecipe};
+    use ocs::util::toml::Config;
+
+    fn gen_clip(rng: &mut ocs::util::rng::Rng) -> ClipMethod {
+        match rng.below(6) {
+            0 => ClipMethod::None,
+            1 => ClipMethod::Mse,
+            2 => ClipMethod::Aciq,
+            3 => ClipMethod::Kl,
+            4 => ClipMethod::Percentile(0.999),
+            _ => ClipMethod::Percentile((rng.below(1000) as f64) / 1000.0),
+        }
+    }
+    fn gen_bits(rng: &mut ocs::util::rng::Rng) -> u32 {
+        // 0 = float, else the supported 2..=16 grid range
+        match rng.below(4) {
+            0 => 0,
+            _ => 2 + rng.below(15) as u32,
+        }
+    }
+
+    check_n("recipe-toml-round-trip", 23, 64, |rng| {
+        let mut r = QuantRecipe::float();
+        r.w_bits = (gen_bits(rng) > 0).then(|| gen_bits(rng).max(2));
+        r.a_bits = (gen_bits(rng) > 0).then(|| gen_bits(rng).max(2));
+        r.w_clip = gen_clip(rng).into();
+        r.a_clip = gen_clip(rng).into();
+        r.ocs_ratio = (rng.below(101) as f64) / 100.0;
+        r.ocs_target = if rng.below(2) == 0 { OcsTarget::Weights } else { OcsTarget::Activations };
+        r.split_mode = if rng.below(2) == 0 { SplitMode::Naive } else { SplitMode::QuantAware };
+        for _ in 0..rng.below(5) {
+            let mut m = LayerMatch::default();
+            if rng.below(2) == 0 {
+                m.name_glob = Some(
+                    ["fc*", "conv?", "*", "emb_?x*", "layer\"q\"", "a\\b*"][rng.below(6)]
+                        .to_string(),
+                );
+            }
+            if rng.below(3) == 0 {
+                m.kind = Some([LayerKind::Conv, LayerKind::Fc, LayerKind::Embed][rng.below(3)]);
+            }
+            if rng.below(3) == 0 {
+                m.pos = Some([LayerPos::First, LayerPos::Last, LayerPos::Edge][rng.below(3)]);
+            }
+            let mut p = LayerPolicy::default();
+            if rng.below(4) == 0 {
+                p.quantize = Some(rng.below(2) == 0);
+            }
+            if rng.below(2) == 0 {
+                p.w_bits = Some(gen_bits(rng));
+            }
+            if rng.below(2) == 0 {
+                p.a_bits = Some(gen_bits(rng));
+            }
+            if rng.below(3) == 0 {
+                p.w_clip = Some(gen_clip(rng).into());
+            }
+            if rng.below(3) == 0 {
+                p.a_clip = Some(gen_clip(rng).into());
+            }
+            if rng.below(3) == 0 {
+                p.ocs_ratio = Some((rng.below(101) as f64) / 100.0);
+            }
+            if rng.below(4) == 0 {
+                p.ocs_target =
+                    Some(if rng.below(2) == 0 { OcsTarget::Weights } else { OcsTarget::Activations });
+            }
+            if rng.below(4) == 0 {
+                p.split_mode =
+                    Some(if rng.below(2) == 0 { SplitMode::Naive } else { SplitMode::QuantAware });
+            }
+            if p.is_empty() {
+                // from_toml rejects policy-free tables; give it one field
+                p.w_bits = Some(gen_bits(rng));
+            }
+            r.push_override(LayerOverride { matches: m, policy: p });
+        }
+        let text = r.to_toml("quant");
+        let cfg = Config::parse(&text).map_err(|e| format!("emitted TOML unparseable: {e}\n{text}"))?;
+        let back = QuantRecipe::from_toml(&cfg, "quant")
+            .map_err(|e| format!("emitted TOML rejected: {e}\n{text}"))?;
+        ensure(
+            back.fingerprint() == r.fingerprint(),
+            format!("fingerprint drift:\n{}\nvs\n{}\nfrom\n{text}", back.canonical(), r.canonical()),
+        )
+    });
+}
