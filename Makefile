@@ -4,7 +4,7 @@
 CARGO_DIR := rust
 
 .PHONY: verify build test fmt lint artifacts serve-smoke loadtest chaos \
-	slow-drill autotune bench-record bench-snapshot clean
+	chaos-matrix slow-drill autotune bench-record bench-snapshot clean
 
 # Tier-1 gate: the exact command CI runs on every push.
 verify:
@@ -49,6 +49,16 @@ chaos:
 		--sim --workers 4 --clients 8 --requests 96 --backoff-ms 5 \
 		--json ../BENCH_chaos.json
 
+# Chaos drill matrix: single-kill, concurrent multi-kill, a panic
+# mid-hot-swap (rollback, not respawn), and a crash-looping tenant
+# (quarantined by the per-tenant breaker) — each gated on containment.
+# The canonical invocation CI's chaos-matrix-smoke job runs. Needs no
+# artifacts. Emits BENCH_chaos_matrix.json (CI gates on it).
+chaos-matrix:
+	cd $(CARGO_DIR) && cargo run --release -- serve --loadtest --chaos-matrix \
+		--sim --workers 4 --clients 8 --requests 96 --backoff-ms 5 \
+		--json ../BENCH_chaos_matrix.json
+
 # Slow-worker drill: healthy baseline, then every worker 10 ms slow with
 # no deadline (collapse), then the same fault with the deadline armed —
 # asserts the deadline path sheds load instead of queueing behind the
@@ -86,6 +96,9 @@ bench-record:
 	cd $(CARGO_DIR) && OCS_BENCH_QUICK=1 cargo run --release -- serve --loadtest \
 		--chaos --sim --workers 4 --clients 8 --requests 96 --backoff-ms 5 \
 		--json ../records/BENCH_chaos.json
+	cd $(CARGO_DIR) && OCS_BENCH_QUICK=1 cargo run --release -- serve --loadtest \
+		--chaos-matrix --sim --workers 4 --clients 8 --requests 96 --backoff-ms 5 \
+		--json ../records/BENCH_chaos_matrix.json
 	cd $(CARGO_DIR) && cargo run --release -- bench check ../records/BENCH_quant.json --bench quant
 	cd $(CARGO_DIR) && cargo run --release -- bench check ../records/BENCH_native.json --bench native
 	cd $(CARGO_DIR) && cargo run --release -- bench check ../records/BENCH_serving.json --bench serving
@@ -99,6 +112,7 @@ bench-record:
 		--allow-skip --out ../recipe_autotuned.toml \
 		--json ../records/BENCH_autotune.json
 	cd $(CARGO_DIR) && cargo run --release -- bench check ../records/BENCH_chaos.json --bench chaos
+	cd $(CARGO_DIR) && cargo run --release -- bench check ../records/BENCH_chaos_matrix.json --bench chaos_matrix
 	cd $(CARGO_DIR) && cargo run --release -- bench check ../records/BENCH_slow.json --bench slow
 	cd $(CARGO_DIR) && cargo run --release -- bench check ../records/BENCH_autotune.json --bench autotune
 	cd $(CARGO_DIR) && cargo run --release -- bench history ../records

@@ -39,7 +39,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::bench_support::CaseRecord;
 use crate::autotune::SearchOutcome;
-use crate::serve::{ChaosReport, LoadPoint, SlowReport, SweepPoint};
+use crate::serve::{ChaosMatrixReport, ChaosReport, LoadPoint, SlowReport, SweepPoint};
 use crate::util::json::{self, Value};
 
 /// Bump when the record shape changes incompatibly; `parse` rejects
@@ -415,6 +415,55 @@ impl BenchRecord {
         rec
     }
 
+    /// Journal the chaos drill matrix (`BENCH_chaos_matrix`): one row
+    /// per scenario phase (`chaos_matrix/<scenario>/<phase>`), with the
+    /// scenario's containment counters (restarts, swap aborts,
+    /// quarantine rejections, dead workers) and recovery ratio on the
+    /// `recovered` row.
+    pub fn from_chaos_matrix(backend: &str, report: &ChaosMatrixReport) -> BenchRecord {
+        let mut rec = BenchRecord::new("chaos_matrix", backend, crate::kernels::pool::available());
+        for s in &report.scenarios {
+            let phases: [(&str, &LoadPoint); 3] = [
+                ("healthy", &s.healthy),
+                ("degraded", &s.degraded),
+                ("recovered", &s.recovered),
+            ];
+            for (phase, p) in phases {
+                let mut extra = BTreeMap::new();
+                extra.insert("clients".to_string(), p.clients as f64);
+                extra.insert("requests".to_string(), p.requests as f64);
+                extra.insert("ok".to_string(), p.ok as f64);
+                extra.insert("errors".to_string(), p.errors as f64);
+                extra.insert("secs".to_string(), p.secs);
+                extra.insert("p50_ms".to_string(), p.p50_ms);
+                extra.insert("p99_ms".to_string(), p.p99_ms);
+                extra.insert("rejected".to_string(), p.rejected as f64);
+                if phase == "degraded" {
+                    extra.insert("panics".to_string(), p.panics as f64);
+                    extra.insert("jobs_failed".to_string(), p.jobs_failed as f64);
+                }
+                if phase == "recovered" {
+                    extra.insert("restarts".to_string(), s.restarts as f64);
+                    extra.insert("swap_aborts".to_string(), s.swap_aborts as f64);
+                    extra.insert("quarantined".to_string(), s.quarantined as f64);
+                    extra.insert("dead_workers".to_string(), s.dead_workers as f64);
+                    extra.insert(
+                        "recovery_ratio".to_string(),
+                        p.rps / s.healthy.rps.max(1e-9),
+                    );
+                }
+                rec.rows.push(Row {
+                    name: format!("chaos_matrix/{}/{phase}", s.name),
+                    value: p.rps,
+                    unit: "req/s".to_string(),
+                    higher_is_better: true,
+                    extra,
+                });
+            }
+        }
+        rec
+    }
+
     pub fn row(&self, name: &str) -> Option<&Row> {
         self.rows.iter().find(|r| r.name == name)
     }
@@ -761,6 +810,61 @@ mod tests {
         assert_eq!(recovered.extra["restarts"], 1.0);
         assert_eq!(recovered.extra["recovery_ratio"], 380.0 / 400.0);
         assert!(back.row("chaos/healthy").is_some());
+    }
+
+    #[test]
+    fn roundtrip_from_chaos_matrix() {
+        use crate::serve::ChaosScenario;
+        let phase = |rps: f64| LoadPoint {
+            clients: 8,
+            requests: 96,
+            ok: 90,
+            errors: 6,
+            secs: 1.0,
+            rps,
+            mean_ms: 2.0,
+            p50_ms: 1.5,
+            p95_ms: 4.0,
+            p99_ms: 8.0,
+            rejected: 6,
+            deadline_exceeded: 0,
+            panics: 0,
+            restarts: 0,
+            jobs_failed: 0,
+            dead_workers: 0,
+            tenants: vec![],
+        };
+        let scenario = |name: &str, aborts: u64, quarantined: u64| ChaosScenario {
+            name: name.to_string(),
+            healthy: phase(400.0),
+            degraded: phase(250.0),
+            recovered: phase(360.0),
+            panics: 1,
+            restarts: 1,
+            jobs_failed: 4,
+            swap_aborts: aborts,
+            quarantined,
+            dead_workers: 0,
+        };
+        let report = ChaosMatrixReport {
+            scenarios: vec![
+                scenario("single-kill", 0, 0),
+                scenario("swap-crash", 1, 0),
+                scenario("crash-loop-tenant", 0, 7),
+            ],
+        };
+        let rec = BenchRecord::from_chaos_matrix("sim+fault", &report);
+        rec.validate().unwrap();
+        let back = BenchRecord::parse(&rec.to_json()).unwrap();
+        assert_eq!(rec, back);
+        assert_eq!(back.bench, "chaos_matrix");
+        assert_eq!(back.rows.len(), 9, "three phases per scenario");
+        let rec_row = back.row("chaos_matrix/swap-crash/recovered").unwrap();
+        assert_eq!(rec_row.extra["swap_aborts"], 1.0);
+        assert_eq!(rec_row.extra["recovery_ratio"], 360.0 / 400.0);
+        let q = back.row("chaos_matrix/crash-loop-tenant/recovered").unwrap();
+        assert_eq!(q.extra["quarantined"], 7.0);
+        assert!(back.row("chaos_matrix/single-kill/degraded").is_some());
     }
 
     #[test]

@@ -108,15 +108,31 @@ SERVE FLAGS:
   --restart-max N   respawns the supervisor grants a crashing worker
                     before opening its breaker (default 3, 0 = never
                     respawn; TOML: serve.restart_max)
-  --backoff-ms MS   base respawn backoff, doubled per attempt and capped
-                    at 64x (default 25; TOML: serve.backoff_ms)
+  --backoff-ms MS   base respawn backoff, doubled per attempt, capped at
+                    64x, and spread by a deterministic ±25% per-worker
+                    jitter (default 25; TOML: serve.backoff_ms)
+  --tenant-restart-max N  contained failures (panicking batch, aborted
+                    recipe sync) a tenant may accumulate before its
+                    circuit breaker quarantines it at the router
+                    (default 3; TOML: serve.tenant_restart_max)
+  --quarantine-ms MS  how long a quarantined tenant is rejected before a
+                    single half-open probe may re-admit it (default 250;
+                    TOML: serve.quarantine_ms)
+  --tenant-fallback serve a quarantined tenant's requests on the default
+                    prep instead of rejecting them (TOML:
+                    serve.tenant_fallback)
   --fault SPECS     deterministic fault injection, comma-separated:
                     build-fail:W[@N] (worker W's Nth engine build fails,
                     default first), panic:W@N (worker W panics on its
                     Nth batch), slow:US (every batch sleeps US extra
                     microseconds), error-tenant:NAME (that tenant's
-                    batches error; siblings unaffected). Build/panic
-                    faults fire once. TOML: serve.fault = "..."
+                    batches error; siblings unaffected),
+                    panic-tenant:NAME (that tenant's batches panic —
+                    persistent, the crash-looping-tenant drill),
+                    panic-on-sync:NAME@N (the Nth recipe sync for that
+                    tenant panics mid-swap; the struck worker rolls back
+                    to its previous prep). Build/panic/sync faults fire
+                    once. TOML: serve.fault = "..."
 
 LOADTEST FLAGS (ocs serve --loadtest — closed-loop offered-load sweep
 over a tenant mix at a fixed --workers count; saturation = the peak-
@@ -135,6 +151,14 @@ throughput step):
                     burst, and post-respawn recovery; writes a
                     BENCH_chaos.json record (first --clients entry is
                     the concurrency, default 2x workers)
+  --chaos-matrix    chaos drill matrix instead of the sweep: single-kill,
+                    concurrent multi-worker kills, a panic mid-hot-swap
+                    (worker must roll back, not die), and a
+                    crash-looping tenant (quarantined by the tenant
+                    breaker, no worker breaker opens) — each gated on
+                    containment (sibling logits bit-stable, no client
+                    hangs, recovery >= 50% of healthy); writes a
+                    BENCH_chaos_matrix.json record
   --slow-drill      slow-worker gate instead of the sweep: healthy
                     baseline, then every batch slowed by --slow-us with
                     the deadline disarmed (collapse), then re-armed —
@@ -822,6 +846,7 @@ fn cmd_loadtest(
         }
     }
     let chaos = args.bool_or("chaos", false);
+    let chaos_matrix = args.bool_or("chaos-matrix", false);
     let backend = ServeBackend::from_args(args)?;
     // tenant recipes lower with the backend's activation default, like
     // the pool recipe itself
@@ -835,7 +860,23 @@ fn cmd_loadtest(
         })
         .collect();
     let (factory, cache) = serve_factory(args, artifacts, serve_cfg.max_batch)?;
-    if chaos {
+    if chaos_matrix {
+        // the matrix schedules its own faults per scenario; --fault is
+        // for the plain sweep
+        let json_out = std::path::PathBuf::from(args.str_or("json", "BENCH_chaos_matrix.json"));
+        let concurrency = clients
+            .first()
+            .copied()
+            .unwrap_or((serve_cfg.workers * 2).max(4));
+        ocs::serve::chaos_matrix(
+            factory,
+            serve_cfg,
+            &tenants,
+            concurrency,
+            requests,
+            Some(&json_out),
+        )?;
+    } else if chaos {
         // the chaos gate schedules its own worker kill; --fault is for
         // the plain sweep
         let json_out = std::path::PathBuf::from(args.str_or("json", "BENCH_chaos.json"));

@@ -297,6 +297,17 @@ pub struct ServeConfig {
     pub restart_max: u32,
     /// Base respawn backoff; doubles per attempt, capped at 64×.
     pub backoff: Duration,
+    /// Contained failures attributed to one tenant (panicking batch,
+    /// aborted recipe sync) before that *tenant* is quarantined at the
+    /// router, instead of letting it burn every worker's restart
+    /// budget. Strikes decay over the quarantine window.
+    pub tenant_restart_max: u32,
+    /// When a tenant is quarantined, serve its requests through the
+    /// default tenant's prep instead of rejecting them.
+    pub tenant_fallback: bool,
+    /// How long a quarantined tenant stays ejected before the breaker
+    /// goes half-open and re-admits a single probe request.
+    pub quarantine: Duration,
 }
 
 impl Default for ServeConfig {
@@ -310,6 +321,9 @@ impl Default for ServeConfig {
             tenant_quota: None,
             restart_max: 3,
             backoff: Duration::from_millis(25),
+            tenant_restart_max: 3,
+            tenant_fallback: false,
+            quarantine: Duration::from_millis(250),
         }
     }
 }
@@ -333,6 +347,12 @@ impl ServeConfig {
                 bail!("serve config: tenant_quota must be in (0, 1], got {q}");
             }
         }
+        if self.tenant_restart_max == 0 {
+            bail!("serve config: tenant_restart_max must be >= 1");
+        }
+        if self.quarantine.is_zero() {
+            bail!("serve config: quarantine_ms must be positive");
+        }
         Ok(())
     }
 
@@ -344,7 +364,8 @@ impl ServeConfig {
 
     /// Parse `--workers`, `--max-batch`, `--max-wait-us`, `--queue-cap`,
     /// `--deadline-ms`, `--tenant-quota`, `--restart-max`,
-    /// `--backoff-ms`; anything absent keeps its default.
+    /// `--backoff-ms`, `--tenant-restart-max`, `--tenant-fallback`,
+    /// `--quarantine-ms`; anything absent keeps its default.
     pub fn from_args(args: &Args) -> Result<ServeConfig> {
         let d = ServeConfig::default();
         let cfg = ServeConfig {
@@ -364,6 +385,12 @@ impl ServeConfig {
                 Some(ms) => Duration::from_millis(ms),
                 None => d.backoff,
             },
+            tenant_restart_max: args.parse_or("tenant-restart-max", d.tenant_restart_max)?,
+            tenant_fallback: args.bool_or("tenant-fallback", d.tenant_fallback),
+            quarantine: match args.parse_opt::<u64>("quarantine-ms")? {
+                Some(ms) => Duration::from_millis(ms),
+                None => d.quarantine,
+            },
         };
         cfg.validate()?;
         Ok(cfg)
@@ -371,7 +398,8 @@ impl ServeConfig {
 
     /// Parse from a TOML config section (`workers`, `max_batch`,
     /// `max_wait_us`, `queue_cap`, `deadline_ms`, `tenant_quota`,
-    /// `restart_max`, `backoff_ms`).
+    /// `restart_max`, `backoff_ms`, `tenant_restart_max`,
+    /// `tenant_fallback`, `quarantine_ms`).
     pub fn from_toml(c: &Config, section: &str) -> Result<ServeConfig> {
         let key = |k: &str| {
             if section.is_empty() {
@@ -415,6 +443,15 @@ impl ServeConfig {
             backoff: Duration::from_millis(nonneg(
                 "backoff_ms",
                 c.int_or(&key("backoff_ms"), d.backoff.as_millis() as i64),
+            )?),
+            tenant_restart_max: nonneg(
+                "tenant_restart_max",
+                c.int_or(&key("tenant_restart_max"), d.tenant_restart_max as i64),
+            )? as u32,
+            tenant_fallback: c.bool_or(&key("tenant_fallback"), d.tenant_fallback),
+            quarantine: Duration::from_millis(nonneg(
+                "quarantine_ms",
+                c.int_or(&key("quarantine_ms"), d.quarantine.as_millis() as i64),
             )?),
         };
         cfg.validate()?;
@@ -653,7 +690,8 @@ mod tests {
     fn serve_from_args_knobs() {
         let cfg = ServeConfig::from_args(&args(
             "serve --workers 4 --queue-cap 8 --deadline-ms 250 --max-batch 16 --max-wait-us 500 \
-             --tenant-quota 0.25 --restart-max 5 --backoff-ms 10",
+             --tenant-quota 0.25 --restart-max 5 --backoff-ms 10 \
+             --tenant-restart-max 7 --tenant-fallback --quarantine-ms 40",
         ))
         .unwrap();
         assert_eq!(cfg.workers, 4);
@@ -664,14 +702,23 @@ mod tests {
         assert_eq!(cfg.tenant_quota, Some(0.25));
         assert_eq!(cfg.restart_max, 5);
         assert_eq!(cfg.backoff, Duration::from_millis(10));
+        assert_eq!(cfg.tenant_restart_max, 7);
+        assert!(cfg.tenant_fallback);
+        assert_eq!(cfg.quarantine, Duration::from_millis(40));
         assert_eq!(cfg.with_workers(2).workers, 2);
         // fault knobs default off
         let d = ServeConfig::from_args(&args("serve")).unwrap();
         assert!(d.tenant_quota.is_none());
         assert_eq!(d.restart_max, 3);
+        assert_eq!(d.tenant_restart_max, 3);
+        assert!(!d.tenant_fallback);
+        assert_eq!(d.quarantine, Duration::from_millis(250));
         // quota outside (0, 1] is rejected
         assert!(ServeConfig::from_args(&args("serve --tenant-quota 0")).is_err());
         assert!(ServeConfig::from_args(&args("serve --tenant-quota 1.5")).is_err());
+        // a zero tenant breaker budget or quarantine window is rejected
+        assert!(ServeConfig::from_args(&args("serve --tenant-restart-max 0")).is_err());
+        assert!(ServeConfig::from_args(&args("serve --quarantine-ms 0")).is_err());
     }
 
     #[test]
@@ -686,6 +733,9 @@ deadline_ms = 100
 tenant_quota = 0.5
 restart_max = 1
 backoff_ms = 2
+tenant_restart_max = 2
+tenant_fallback = true
+quarantine_ms = 30
 "#,
         )
         .unwrap();
@@ -697,6 +747,9 @@ backoff_ms = 2
         assert_eq!(cfg.tenant_quota, Some(0.5));
         assert_eq!(cfg.restart_max, 1);
         assert_eq!(cfg.backoff, Duration::from_millis(2));
+        assert_eq!(cfg.tenant_restart_max, 2);
+        assert!(cfg.tenant_fallback);
+        assert_eq!(cfg.quarantine, Duration::from_millis(30));
         // absent section -> defaults
         let d = ServeConfig::from_toml(&Config::parse("").unwrap(), "serve").unwrap();
         assert!(d.deadline.is_none());

@@ -1,0 +1,263 @@
+//! Per-tenant circuit breaker: fault isolation on the tenant axis.
+//!
+//! PR 8's supervisor isolates faults on the *worker* axis — a panicking
+//! engine is respawned, and after `--restart-max` give-ups that shard's
+//! breaker opens. But the pool partitions every batch into
+//! single-tenant groups, so a tenant whose recipe reliably panics the
+//! engine (a bad autotune artifact, a pathological hot-swap) will burn
+//! each worker's restart budget in turn and take the whole fleet down,
+//! one shard at a time. The [`TenantBreaker`] classifies contained
+//! failures by the tenant group that was executing and quarantines the
+//! *tenant* at the router long before any worker breaker opens.
+//!
+//! Mechanics, per tenant:
+//!
+//! - **Strikes with windowed decay.** Every contained failure
+//!   attributed to the tenant (panicking batch group, aborted recipe
+//!   sync) records a timestamped strike; strikes older than the decay
+//!   window are dropped before counting, so a long-lived tenant with a
+//!   rare fault never accumulates its way into quarantine.
+//! - **Quarantine.** At `max_strikes` live strikes the breaker opens:
+//!   the router rejects the tenant's requests with a `tenant
+//!   quarantined` error (or reroutes them to the default prep under
+//!   `--tenant-fallback`) for the configured quarantine window.
+//! - **Half-open probe.** Once the window elapses, exactly one request
+//!   is re-admitted as a probe on the tenant's own prep. If it is
+//!   answered `Ok` the breaker closes and traffic resumes; any failure
+//!   (engine error, contained panic, deadline) re-arms the full
+//!   quarantine window.
+//!
+//! The admit fast path is a single relaxed atomic load for healthy
+//! tenants; the per-tenant mutex is only touched while a breaker is
+//! open or a strike is being recorded.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Router-side admission decision for one request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Breaker closed: dispatch normally.
+    Admit,
+    /// Breaker half-open: this request is the single re-admission
+    /// probe. Dispatch it on the tenant's own prep and report the
+    /// outcome via [`TenantBreaker::resolve_probe`].
+    Probe,
+    /// Breaker open: reject (or reroute to the default prep).
+    Quarantined,
+}
+
+#[derive(Debug, Default)]
+struct TenantState {
+    /// Timestamps of live strikes (decayed lazily on record).
+    strikes: Vec<Instant>,
+    /// While `Some`, the tenant is quarantined until the deadline; a
+    /// deadline in the past means half-open (awaiting a probe).
+    until: Option<Instant>,
+    probe_in_flight: bool,
+}
+
+#[derive(Debug)]
+struct Slot {
+    /// Fast-path flag mirroring `state.until.is_some()`.
+    open: AtomicBool,
+    state: Mutex<TenantState>,
+}
+
+/// Windowed-decay strike counter + quarantine latch per tenant. Shared
+/// between the router (admission) and every worker (strike recording).
+#[derive(Debug)]
+pub struct TenantBreaker {
+    max_strikes: u32,
+    window: Duration,
+    quarantine: Duration,
+    slots: Vec<Slot>,
+}
+
+impl TenantBreaker {
+    /// `max_strikes` live strikes inside `window` quarantine a tenant
+    /// for `quarantine`.
+    pub fn new(
+        tenants: usize,
+        max_strikes: u32,
+        window: Duration,
+        quarantine: Duration,
+    ) -> TenantBreaker {
+        assert!(max_strikes >= 1, "max_strikes must be >= 1");
+        TenantBreaker {
+            max_strikes,
+            window,
+            quarantine,
+            slots: (0..tenants)
+                .map(|_| Slot {
+                    open: AtomicBool::new(false),
+                    state: Mutex::new(TenantState::default()),
+                })
+                .collect(),
+        }
+    }
+
+    pub fn tenant_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Record one contained failure attributed to `tenant`. Returns
+    /// `true` when this strike newly opened the breaker (the caller
+    /// logs the quarantine once instead of per strike).
+    pub fn record_strike(&self, tenant: usize) -> bool {
+        let slot = &self.slots[tenant];
+        let mut st = slot.state.lock().unwrap_or_else(|e| e.into_inner());
+        let now = Instant::now();
+        if st.until.is_some() {
+            // Already quarantined (e.g. in-flight jobs from before the
+            // trip still failing): the open window is deliberately NOT
+            // extended, so a burst of queued failures can't push the
+            // half-open probe out indefinitely.
+            return false;
+        }
+        st.strikes.retain(|t| now.duration_since(*t) < self.window);
+        st.strikes.push(now);
+        if st.strikes.len() >= self.max_strikes as usize {
+            st.strikes.clear();
+            st.until = Some(now + self.quarantine);
+            st.probe_in_flight = false;
+            slot.open.store(true, Ordering::Release);
+            return true;
+        }
+        false
+    }
+
+    /// Admission decision for one request from `tenant`.
+    pub fn admit(&self, tenant: usize) -> Admission {
+        let slot = &self.slots[tenant];
+        if !slot.open.load(Ordering::Acquire) {
+            return Admission::Admit;
+        }
+        let mut st = slot.state.lock().unwrap_or_else(|e| e.into_inner());
+        let Some(until) = st.until else {
+            // Raced with a concurrent close: the breaker shut between
+            // the fast-path load and the lock.
+            return Admission::Admit;
+        };
+        if Instant::now() < until || st.probe_in_flight {
+            return Admission::Quarantined;
+        }
+        st.probe_in_flight = true;
+        Admission::Probe
+    }
+
+    /// Report the outcome of a half-open probe: `ok` closes the breaker
+    /// and resumes traffic; a failed probe re-arms the full quarantine
+    /// window.
+    pub fn resolve_probe(&self, tenant: usize, ok: bool) {
+        let slot = &self.slots[tenant];
+        let mut st = slot.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.probe_in_flight = false;
+        if ok {
+            st.until = None;
+            st.strikes.clear();
+            slot.open.store(false, Ordering::Release);
+        } else {
+            st.until = Some(Instant::now() + self.quarantine);
+        }
+    }
+
+    /// Whether `tenant`'s breaker is currently open (quarantined or
+    /// half-open awaiting a probe).
+    pub fn is_open(&self, tenant: usize) -> bool {
+        self.slots[tenant].open.load(Ordering::Acquire)
+    }
+
+    /// Live (undecayed) strike count — observability only.
+    pub fn strike_count(&self, tenant: usize) -> usize {
+        let slot = &self.slots[tenant];
+        let st = slot.state.lock().unwrap_or_else(|e| e.into_inner());
+        let now = Instant::now();
+        st.strikes
+            .iter()
+            .filter(|t| now.duration_since(**t) < self.window)
+            .count()
+    }
+
+    /// Tenants whose breaker is currently open.
+    pub fn open_count(&self) -> usize {
+        (0..self.slots.len()).filter(|&t| self.is_open(t)).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread::sleep;
+
+    fn breaker(max: u32, window_ms: u64, quarantine_ms: u64) -> TenantBreaker {
+        TenantBreaker::new(
+            2,
+            max,
+            Duration::from_millis(window_ms),
+            Duration::from_millis(quarantine_ms),
+        )
+    }
+
+    #[test]
+    fn strikes_below_threshold_keep_admitting() {
+        let b = breaker(3, 1_000, 50);
+        assert!(!b.record_strike(1));
+        assert!(!b.record_strike(1));
+        assert_eq!(b.strike_count(1), 2);
+        assert_eq!(b.admit(1), Admission::Admit);
+        assert_eq!(b.admit(0), Admission::Admit, "siblings unaffected");
+        assert_eq!(b.open_count(), 0);
+    }
+
+    #[test]
+    fn threshold_trips_once_and_quarantines() {
+        let b = breaker(2, 1_000, 10_000);
+        assert!(!b.record_strike(1));
+        assert!(b.record_strike(1), "the tripping strike reports the trip");
+        assert!(!b.record_strike(1), "strikes while open don't re-trip");
+        assert!(b.is_open(1));
+        assert_eq!(b.admit(1), Admission::Quarantined);
+        assert_eq!(b.admit(0), Admission::Admit, "siblings unaffected");
+        assert_eq!(b.open_count(), 1);
+    }
+
+    #[test]
+    fn strikes_decay_outside_the_window() {
+        let b = breaker(2, 30, 10_000);
+        assert!(!b.record_strike(1));
+        sleep(Duration::from_millis(40));
+        assert_eq!(b.strike_count(1), 0, "old strike decayed");
+        // the decayed strike no longer counts toward the threshold
+        assert!(!b.record_strike(1));
+        assert!(!b.is_open(1));
+    }
+
+    #[test]
+    fn half_open_admits_exactly_one_probe() {
+        let b = breaker(1, 1_000, 20);
+        assert!(b.record_strike(1));
+        assert_eq!(b.admit(1), Admission::Quarantined);
+        sleep(Duration::from_millis(30));
+        assert_eq!(b.admit(1), Admission::Probe, "window elapsed: half-open");
+        assert_eq!(b.admit(1), Admission::Quarantined, "only one probe at a time");
+        // a successful probe closes the breaker for good
+        b.resolve_probe(1, true);
+        assert!(!b.is_open(1));
+        assert_eq!(b.admit(1), Admission::Admit);
+    }
+
+    #[test]
+    fn failed_probe_rearms_the_quarantine() {
+        let b = breaker(1, 1_000, 25);
+        assert!(b.record_strike(1));
+        sleep(Duration::from_millis(35));
+        assert_eq!(b.admit(1), Admission::Probe);
+        b.resolve_probe(1, false);
+        assert!(b.is_open(1));
+        assert_eq!(b.admit(1), Admission::Quarantined, "window re-armed");
+        sleep(Duration::from_millis(35));
+        assert_eq!(b.admit(1), Admission::Probe, "and re-opens half-way again");
+    }
+}

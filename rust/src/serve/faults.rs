@@ -15,11 +15,17 @@
 //! `[serve] fault = "..."` key:
 //!
 //! ```text
-//! build-fail:W[@N]   worker W's Nth engine build fails (default N=1,
-//!                    i.e. startup; N=2 is the first respawn rebuild)
-//! panic:W@N          worker W panics on its Nth forward batch
-//! slow:US            every forward batch sleeps US microseconds first
-//! error-tenant:NAME  every batch for tenant NAME returns an error
+//! build-fail:W[@N]     worker W's Nth engine build fails (default N=1,
+//!                      i.e. startup; N=2 is the first respawn rebuild)
+//! panic:W@N            worker W panics on its Nth forward batch
+//! slow:US              every forward batch sleeps US microseconds first
+//! error-tenant:NAME    every batch for tenant NAME returns an error
+//! panic-tenant:NAME    every batch for tenant NAME panics (persistent:
+//!                      the crash-looping-tenant drill — stops hurting
+//!                      only once the tenant breaker quarantines NAME)
+//! panic-on-sync:NAME@N the Nth recipe sync for tenant NAME (counted
+//!                      pool-wide across workers) panics mid-swap —
+//!                      the transactional-swap drill
 //! ```
 //!
 //! An empty plan wraps to the inner factory unchanged, so the
@@ -56,6 +62,15 @@ pub enum FaultDirective {
     /// Every batch for this tenant returns an error (siblings
     /// untouched).
     ErrorOnTenant { tenant: String },
+    /// Every batch for this tenant *panics* (persistent, killing the
+    /// executing worker each time): the crash-looping tenant that only
+    /// the per-tenant breaker can stop.
+    PanicOnTenant { tenant: String },
+    /// The `nth` recipe sync for this tenant — counted pool-wide
+    /// across workers — panics mid-`swap_tenant` (fires once). Drills
+    /// the hot-swap transaction: the struck worker must roll back to
+    /// its previous executable, not die or serve a half-applied prep.
+    PanicOnSync { tenant: String, nth: u64 },
 }
 
 impl FaultDirective {
@@ -91,9 +106,36 @@ impl FaultDirective {
                     tenant: rest.to_string(),
                 })
             }
+            "panic-tenant" => {
+                if rest.is_empty() {
+                    bail!("fault '{entry}': expected panic-tenant:NAME");
+                }
+                Ok(FaultDirective::PanicOnTenant {
+                    tenant: rest.to_string(),
+                })
+            }
+            "panic-on-sync" => {
+                let (tenant, nth) = rest.split_once('@').with_context(|| {
+                    format!("fault '{entry}': expected panic-on-sync:TENANT@N")
+                })?;
+                let nth: u64 = nth
+                    .parse()
+                    .with_context(|| format!("fault '{entry}': N must be an integer"))?;
+                if tenant.is_empty() {
+                    bail!("fault '{entry}': expected panic-on-sync:TENANT@N, empty tenant");
+                }
+                if nth == 0 {
+                    bail!("fault '{entry}': panic-on-sync counts syncs from 1, N >= 1");
+                }
+                Ok(FaultDirective::PanicOnSync {
+                    tenant: tenant.to_string(),
+                    nth,
+                })
+            }
             other => bail!(
                 "unknown fault kind '{other}' \
-                 (build-fail:W[@N] | panic:W@N | slow:US | error-tenant:NAME)"
+                 (build-fail:W[@N] | panic:W@N | slow:US | error-tenant:NAME \
+                  | panic-tenant:NAME | panic-on-sync:TENANT@N)"
             ),
         }
     }
@@ -104,6 +146,10 @@ impl FaultDirective {
             FaultDirective::PanicOnBatch { worker, nth } => format!("panic:{worker}@{nth}"),
             FaultDirective::SlowInfer { micros } => format!("slow:{micros}"),
             FaultDirective::ErrorOnTenant { tenant } => format!("error-tenant:{tenant}"),
+            FaultDirective::PanicOnTenant { tenant } => format!("panic-tenant:{tenant}"),
+            FaultDirective::PanicOnSync { tenant, nth } => {
+                format!("panic-on-sync:{tenant}@{nth}")
+            }
         }
     }
 }
@@ -179,6 +225,7 @@ impl FaultPlan {
         let fired = Arc::new(FaultState {
             fired: (0..self.directives.len()).map(|_| AtomicBool::new(false)).collect(),
             builds: Mutex::new(HashMap::new()),
+            syncs: Mutex::new(HashMap::new()),
         });
         Arc::new(FaultFactory {
             inner,
@@ -194,6 +241,9 @@ impl FaultPlan {
 struct FaultState {
     fired: Vec<AtomicBool>,
     builds: Mutex<HashMap<usize, u64>>,
+    /// Pool-wide recipe-sync clock per tenant name (every worker's
+    /// `swap_tenant` for the tenant ticks the same counter).
+    syncs: Mutex<HashMap<String, u64>>,
 }
 
 impl FaultState {
@@ -276,6 +326,14 @@ impl FaultWorker {
                         bail!("fault injection: tenant '{name}' errors");
                     }
                 }
+                FaultDirective::PanicOnTenant { tenant: name } => {
+                    if tenant.is_some_and(|t| t.name == name.as_str()) {
+                        panic!(
+                            "fault injection: tenant '{name}' panics worker {}",
+                            self.worker_id
+                        );
+                    }
+                }
                 _ => {}
             }
         }
@@ -299,6 +357,22 @@ impl WorkerEngine for FaultWorker {
     }
 
     fn swap_tenant(&mut self, t: &TenantCtx, recipe: &QuantRecipe) -> Result<()> {
+        let sync_no = {
+            let mut syncs = self.state.syncs.lock().unwrap_or_else(|e| e.into_inner());
+            let n = syncs.entry(t.name.to_string()).or_insert(0);
+            *n += 1;
+            *n
+        };
+        for (i, d) in self.plan.directives.iter().enumerate() {
+            if let FaultDirective::PanicOnSync { tenant, nth } = d {
+                if tenant.as_str() == t.name && sync_no >= *nth && self.state.fire_once(i) {
+                    panic!(
+                        "fault injection: tenant '{}' sync #{sync_no} panics on worker {}",
+                        t.name, self.worker_id
+                    );
+                }
+            }
+        }
         self.inner.swap_tenant(t, recipe)
     }
 }
@@ -310,7 +384,11 @@ mod tests {
 
     #[test]
     fn parse_round_trips() {
-        let p = FaultPlan::parse("build-fail:0, panic:2@5, slow:300, error-tenant:gold").unwrap();
+        let p = FaultPlan::parse(
+            "build-fail:0, panic:2@5, slow:300, error-tenant:gold, panic-tenant:lead, \
+             panic-on-sync:gold@2",
+        )
+        .unwrap();
         assert_eq!(
             p,
             FaultPlan::new(vec![
@@ -318,9 +396,15 @@ mod tests {
                 FaultDirective::PanicOnBatch { worker: 2, nth: 5 },
                 FaultDirective::SlowInfer { micros: 300 },
                 FaultDirective::ErrorOnTenant { tenant: "gold".into() },
+                FaultDirective::PanicOnTenant { tenant: "lead".into() },
+                FaultDirective::PanicOnSync { tenant: "gold".into(), nth: 2 },
             ])
         );
-        assert_eq!(p.label(), "build-fail:0@1,panic:2@5,slow:300,error-tenant:gold");
+        assert_eq!(
+            p.label(),
+            "build-fail:0@1,panic:2@5,slow:300,error-tenant:gold,panic-tenant:lead,\
+             panic-on-sync:gold@2"
+        );
         // label parses back to the same plan
         assert_eq!(FaultPlan::parse(&p.label()).unwrap(), p);
         assert!(FaultPlan::parse("").unwrap().is_empty());
@@ -333,14 +417,33 @@ mod tests {
     #[test]
     fn parse_rejects_malformed_entries() {
         for bad in [
-            "panic:1",        // panic needs @N
-            "panic:x@1",      // bad worker
-            "slow:abc",       // bad micros
-            "error-tenant:",  // empty name
-            "explode:1",      // unknown kind
-            "panic",          // no args
+            "panic:1",             // panic needs @N
+            "panic:",              // empty args
+            "panic:x@1",           // bad worker
+            "panic:1@x",           // bad batch
+            "panic:1@",            // empty batch
+            "panic:0@0",           // batches count from 1
+            "slow:abc",            // bad micros
+            "slow:",               // empty micros
+            "slow:-5",             // negative micros
+            "error-tenant:",       // empty name
+            "panic-tenant:",       // empty name
+            "explode:1",           // unknown kind
+            "panic",               // no args
+            "build-fail:x",        // bad worker
+            "build-fail:1@x",      // bad build clock
+            "panic-on-sync:gold",  // sync needs @N
+            "panic-on-sync:@2",    // empty tenant
+            "panic-on-sync:gold@", // empty sync clock
+            "panic-on-sync:gold@0", // syncs count from 1
+            "panic-on-sync:gold@x", // bad sync clock
         ] {
-            assert!(FaultPlan::parse(bad).is_err(), "'{bad}' should not parse");
+            let err = FaultPlan::parse(bad);
+            assert!(err.is_err(), "'{bad}' should not parse");
+            // errors are actionable: they name the offending entry
+            let msg = format!("{:#}", err.unwrap_err());
+            let head = bad.split(':').next().unwrap();
+            assert!(msg.contains(head), "error for '{bad}' names the entry: {msg}");
         }
     }
 
@@ -379,6 +482,28 @@ mod tests {
     }
 
     #[test]
+    fn panic_tenant_is_persistent_and_spares_siblings() {
+        let plan = FaultPlan::parse("panic-tenant:gold").unwrap();
+        let f = plan.wrap(Arc::new(SimFactory::default()));
+        let mut e = f.build(0).unwrap();
+        let x = TensorF::zeros(&[1, 4]);
+        let gold = TenantCtx { id: 1, name: "gold", recipe: None };
+        let bulk = TenantCtx { id: 2, name: "bulk", recipe: None };
+        assert!(e.infer_tenant(&bulk, &x).is_ok(), "siblings untouched");
+        let p = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            e.infer_tenant(&gold, &x)
+        }));
+        assert!(p.is_err(), "gold batch panics");
+        // persistent across respawns: the replacement engine panics too
+        let mut e2 = f.build(0).unwrap();
+        let p = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            e2.infer_tenant(&gold, &x)
+        }));
+        assert!(p.is_err(), "not one-shot: only the tenant breaker stops it");
+        assert!(e2.infer_tenant(&bulk, &x).is_ok());
+    }
+
+    #[test]
     fn panic_on_batch_fires_once_pool_wide() {
         let plan = FaultPlan::parse("panic:0@2").unwrap();
         let f = plan.wrap(Arc::new(SimFactory::default()));
@@ -391,5 +516,25 @@ mod tests {
         let mut e2 = f.build(0).unwrap();
         assert!(e2.infer(&x).is_ok());
         assert!(e2.infer(&x).is_ok(), "replacement never re-fires");
+    }
+
+    #[test]
+    fn panic_on_sync_hits_the_named_tenant_sync_once() {
+        use crate::pipeline::QuantRecipe;
+        let plan = FaultPlan::parse("panic-on-sync:gold@2").unwrap();
+        let f = plan.wrap(Arc::new(SimFactory::default()));
+        let mut e = f.build(0).unwrap();
+        let r = QuantRecipe::default();
+        let gold = TenantCtx { id: 1, name: "gold", recipe: None };
+        let bulk = TenantCtx { id: 2, name: "bulk", recipe: None };
+        assert!(e.swap_tenant(&gold, &r).is_ok(), "sync #1 clean");
+        assert!(e.swap_tenant(&bulk, &r).is_ok(), "siblings have their own clock");
+        let p = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            e.swap_tenant(&gold, &r)
+        }));
+        assert!(p.is_err(), "gold sync #2 panics");
+        // one-shot pool-wide: another worker's engine syncs cleanly
+        let mut e2 = f.build(1).unwrap();
+        assert!(e2.swap_tenant(&gold, &r).is_ok(), "fires once pool-wide");
     }
 }

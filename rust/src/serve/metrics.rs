@@ -44,6 +44,11 @@ pub struct Metrics {
     pub recipe_swaps: AtomicU64,
     /// Hot-swaps this worker failed to apply (kept serving the old prep).
     pub swap_errors: AtomicU64,
+    /// Hot-swaps that *panicked* mid-sync and were rolled back — the
+    /// worker stayed alive on its previous lowered executable (a subset
+    /// of neither `swap_errors` nor `panics`: counted separately so the
+    /// transactional-swap drill can assert on it).
+    pub swap_aborts: AtomicU64,
     /// Engine panics contained on this worker (build or infer).
     pub panics: AtomicU64,
     /// Supervisor respawn attempts for this worker.
@@ -111,6 +116,10 @@ impl Metrics {
         self.swap_errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn record_swap_abort(&self) {
+        self.swap_aborts.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn record_panic(&self) {
         self.panics.fetch_add(1, Ordering::Relaxed);
     }
@@ -141,6 +150,7 @@ impl Metrics {
             exec_errors: self.exec_errors.load(Ordering::Relaxed),
             recipe_swaps: self.recipe_swaps.load(Ordering::Relaxed),
             swap_errors: self.swap_errors.load(Ordering::Relaxed),
+            swap_aborts: self.swap_aborts.load(Ordering::Relaxed),
             panics: self.panics.load(Ordering::Relaxed),
             restarts: self.restarts.load(Ordering::Relaxed),
             jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
@@ -171,6 +181,7 @@ pub struct Snapshot {
     pub exec_errors: u64,
     pub recipe_swaps: u64,
     pub swap_errors: u64,
+    pub swap_aborts: u64,
     pub panics: u64,
     pub restarts: u64,
     pub jobs_failed: u64,
@@ -191,6 +202,7 @@ impl Snapshot {
         self.exec_errors += other.exec_errors;
         self.recipe_swaps += other.recipe_swaps;
         self.swap_errors += other.swap_errors;
+        self.swap_aborts += other.swap_aborts;
         self.panics += other.panics;
         self.restarts += other.restarts;
         self.jobs_failed += other.jobs_failed;
@@ -286,10 +298,10 @@ impl Snapshot {
             self.deadline_exceeded,
             self.exec_errors,
         );
-        if self.recipe_swaps > 0 || self.swap_errors > 0 {
+        if self.recipe_swaps > 0 || self.swap_errors > 0 || self.swap_aborts > 0 {
             line.push_str(&format!(
-                " | recipe swaps {} ({} failed)",
-                self.recipe_swaps, self.swap_errors
+                " | recipe swaps {} ({} failed, {} aborted)",
+                self.recipe_swaps, self.swap_errors, self.swap_aborts
             ));
         }
         if self.panics > 0 || self.restarts > 0 || self.jobs_failed > 0 {
@@ -328,6 +340,9 @@ pub struct PoolMetrics {
     /// Rejections caused specifically by the per-tenant admission quota
     /// (a subset of `tenant_rejected`).
     tenant_quota_rejected: Vec<AtomicU64>,
+    /// Requests rejected (or rerouted, under `--tenant-fallback`)
+    /// because the tenant's circuit breaker was open.
+    tenant_quarantined: Vec<AtomicU64>,
     /// Requests that named a tenant the pool does not know (served on
     /// the default recipe, counted under tenant 0).
     pub unknown_tenant: AtomicU64,
@@ -358,6 +373,7 @@ impl PoolMetrics {
                 .map(|_| Arc::new(AtomicUsize::new(0)))
                 .collect(),
             tenant_quota_rejected: tenant_names.iter().map(|_| AtomicU64::new(0)).collect(),
+            tenant_quarantined: tenant_names.iter().map(|_| AtomicU64::new(0)).collect(),
             tenant_names,
             unknown_tenant: AtomicU64::new(0),
             dispatched: AtomicU64::new(0),
@@ -398,6 +414,20 @@ impl PoolMetrics {
 
     pub fn tenant_quota_rejected_count(&self, id: usize) -> u64 {
         self.tenant_quota_rejected[id].load(Ordering::Relaxed)
+    }
+
+    /// Count a request that hit the tenant's open circuit breaker. A
+    /// rejection also counts in the tenant's plain rejection counter; a
+    /// fallback-served request counts here only (it *was* answered).
+    pub fn record_tenant_quarantined(&self, id: usize, rejected: bool) {
+        self.tenant_quarantined[id].fetch_add(1, Ordering::Relaxed);
+        if rejected {
+            self.record_tenant_rejected(id);
+        }
+    }
+
+    pub fn tenant_quarantined_count(&self, id: usize) -> u64 {
+        self.tenant_quarantined[id].load(Ordering::Relaxed)
     }
 
     /// Shared per-tenant queued+in-flight gauge (quota admission).
@@ -516,6 +546,12 @@ impl PoolMetrics {
                         self.tenant_quota_rejected_count(id)
                     ));
                 }
+                if self.tenant_quarantined_count(id) > 0 {
+                    out.push_str(&format!(
+                        " | quarantined {}",
+                        self.tenant_quarantined_count(id)
+                    ));
+                }
             }
             if self.unknown_tenant_count() > 0 {
                 out.push_str(&format!(
@@ -619,9 +655,27 @@ mod tests {
         let agg = pool.aggregate();
         assert_eq!(agg.recipe_swaps, 2);
         assert_eq!(agg.swap_errors, 1);
-        assert!(agg.report_line().contains("recipe swaps 2 (1 failed)"));
+        assert!(agg.report_line().contains("recipe swaps 2 (1 failed, 0 aborted)"));
+        // aborted (panicked + rolled back) swaps are counted separately
+        pool.worker(1).record_swap_abort();
+        let agg = pool.aggregate();
+        assert_eq!(agg.swap_aborts, 1);
+        assert!(agg.report_line().contains("(1 failed, 1 aborted)"));
         // silent when no swap ever happened
         assert!(!Metrics::default().snapshot().report_line().contains("recipe swaps"));
+    }
+
+    #[test]
+    fn quarantine_counters_attribute_rejections_and_fallbacks() {
+        let pool = PoolMetrics::with_tenants(1, vec!["default".into(), "bad".into()]);
+        // a rejected request counts in both the quarantine and the plain
+        // rejection counters; a fallback-served one only in quarantine
+        pool.record_tenant_quarantined(1, true);
+        pool.record_tenant_quarantined(1, false);
+        assert_eq!(pool.tenant_quarantined_count(1), 2);
+        assert_eq!(pool.tenant_rejected_count(1), 1);
+        assert_eq!(pool.tenant_quarantined_count(0), 0);
+        assert!(pool.report().contains("quarantined 2"), "{}", pool.report());
     }
 
     #[test]

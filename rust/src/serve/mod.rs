@@ -105,6 +105,7 @@
 //! (`ocs serve --loadtest`).
 
 pub mod backend;
+pub mod breaker;
 pub mod faults;
 pub mod metrics;
 
@@ -123,6 +124,7 @@ use crate::pipeline::QuantRecipe;
 use crate::tensor::TensorF;
 
 use backend::{EngineFactory, PjrtFactory, SimFactory, WorkerEngine};
+use breaker::{Admission, TenantBreaker};
 
 pub use crate::pipeline::ServeConfig;
 pub use metrics::{Metrics, PoolMetrics, Snapshot};
@@ -252,6 +254,9 @@ struct Job {
     x: TensorF,
     /// Tenant id (index into the pool's [`TenantTable`]).
     tenant: usize,
+    /// This job is a half-open circuit-breaker probe: its outcome is
+    /// reported to the [`TenantBreaker`] when it is answered.
+    probe: bool,
     enqueued: Instant,
     deadline: Option<Instant>,
     resp: SyncSender<Result<Vec<f32>>>,
@@ -278,6 +283,12 @@ struct Router {
     stop: Arc<AtomicBool>,
     metrics: Arc<PoolMetrics>,
     tenants: Arc<TenantTable>,
+    /// Per-tenant circuit breaker (shared with every worker, which
+    /// records the strikes).
+    breaker: Arc<TenantBreaker>,
+    /// Serve a quarantined tenant's requests on the default prep
+    /// instead of rejecting them ([`ServeConfig::tenant_fallback`]).
+    fallback: bool,
 }
 
 impl Router {
@@ -289,6 +300,32 @@ impl Router {
         if self.stop.load(Ordering::SeqCst) {
             bail!("server is shutting down");
         }
+        // tenant breaker gate, before any gauge is touched: a
+        // quarantined tenant is rejected (or rerouted to the default
+        // prep under fallback) without occupying queue slots; a
+        // half-open breaker re-admits exactly this request as the probe
+        let mut tenant = tenant;
+        let mut probe = false;
+        match self.breaker.admit(tenant) {
+            Admission::Admit => {}
+            Admission::Probe => probe = true,
+            Admission::Quarantined => {
+                if self.fallback && tenant != 0 {
+                    // metered as a fallback (not a rejection) on the
+                    // quarantined tenant's shard, then executed — and
+                    // quota-metered — as default-tenant traffic
+                    self.metrics.record_tenant_quarantined(tenant, false);
+                    tenant = 0;
+                } else {
+                    self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.record_tenant_quarantined(tenant, true);
+                    bail!(
+                        "tenant '{}' quarantined: circuit breaker open after repeated failures",
+                        self.tenants.name(tenant)
+                    );
+                }
+            }
+        }
         // per-tenant quota gate: increment-then-check, so two racing
         // submits can never both slip under the cap. The gauge is
         // always maintained (workers decrement it when answering);
@@ -298,6 +335,12 @@ impl Router {
         if let Some(cap) = self.tenant_cap {
             if held >= cap {
                 tenant_gauge.fetch_sub(1, Ordering::Relaxed);
+                if probe {
+                    // the probe never reached a worker; count it as a
+                    // failed probe so the breaker can't leak a
+                    // permanently-in-flight probe
+                    self.breaker.resolve_probe(tenant, false);
+                }
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 self.metrics.record_tenant_quota_rejected(tenant);
                 bail!(
@@ -311,6 +354,7 @@ impl Router {
         let mut job = Job {
             x,
             tenant,
+            probe,
             enqueued: now,
             deadline: self.deadline.map(|d| now + d),
             resp: tx,
@@ -335,6 +379,9 @@ impl Router {
         }
         if live == 0 {
             tenant_gauge.fetch_sub(1, Ordering::Relaxed);
+            if job.probe {
+                self.breaker.resolve_probe(job.tenant, false);
+            }
             self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
             self.metrics.record_tenant_rejected(tenant);
             bail!(
@@ -366,6 +413,9 @@ impl Router {
             }
         }
         tenant_gauge.fetch_sub(1, Ordering::Relaxed);
+        if job.probe {
+            self.breaker.resolve_probe(job.tenant, false);
+        }
         self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
         self.metrics.record_tenant_rejected(tenant);
         bail!(
@@ -378,10 +428,16 @@ impl Router {
 
 /// Answer one job and keep every gauge exact: the worker/tenant
 /// outstanding gauges drop *before* the send, so a client unblocked by
-/// the response never observes a stale depth.
-fn answer_job(pool: &PoolMetrics, outstanding: &AtomicUsize, job: Job, result: Result<Vec<f32>>) {
-    outstanding.fetch_sub(1, Ordering::Relaxed);
-    pool.tenant_outstanding_gauge(job.tenant).fetch_sub(1, Ordering::Relaxed);
+/// the response never observes a stale depth. Every terminal path —
+/// success, engine error, contained panic, deadline expiry, dead-shard
+/// drain, shutdown sweep — funnels through here, which is also what
+/// guarantees a half-open probe is always resolved exactly once.
+fn answer_job(ctx: &WorkerCtx, job: Job, result: Result<Vec<f32>>) {
+    ctx.outstanding.fetch_sub(1, Ordering::Relaxed);
+    ctx.pool.tenant_outstanding_gauge(job.tenant).fetch_sub(1, Ordering::Relaxed);
+    if job.probe {
+        ctx.breaker.resolve_probe(job.tenant, result.is_ok());
+    }
     let _ = job.resp.send(result);
 }
 
@@ -453,6 +509,7 @@ struct WorkerCtx {
     outstanding: Arc<AtomicUsize>,
     stop: Arc<AtomicBool>,
     tenants: Arc<TenantTable>,
+    breaker: Arc<TenantBreaker>,
     sup_tx: SyncSender<DeathEvent>,
 }
 
@@ -509,6 +566,16 @@ impl Server {
         let tenants = Arc::new(tenants);
         let metrics = Arc::new(PoolMetrics::with_tenants(cfg.workers, tenants.names()));
         let stop = Arc::new(AtomicBool::new(false));
+        // Strikes decay over 8× the quarantine window: long enough that
+        // a genuine crash loop trips the breaker across respawn
+        // backoffs, short enough that a rare sporadic fault never
+        // accumulates into a quarantine.
+        let breaker = Arc::new(TenantBreaker::new(
+            tenants.len(),
+            cfg.tenant_restart_max,
+            cfg.quarantine.saturating_mul(8),
+            cfg.quarantine,
+        ));
         // Buffered to hold one death notice per worker so a dying
         // worker never blocks on its own obituary.
         let (sup_tx, sup_rx) = sync_channel::<DeathEvent>(cfg.workers.max(1));
@@ -529,6 +596,7 @@ impl Server {
                 outstanding: outstanding.clone(),
                 stop: stop.clone(),
                 tenants: tenants.clone(),
+                breaker: breaker.clone(),
                 sup_tx: sup_tx.clone(),
             };
             let handle = spawn_worker(ctx.clone(), rx, Some(ready_tx))?;
@@ -592,6 +660,8 @@ impl Server {
             stop: stop.clone(),
             metrics: metrics.clone(),
             tenants: tenants.clone(),
+            breaker,
+            fallback: cfg.tenant_fallback,
         });
         let handles = Arc::new(Mutex::new(handle_slots));
         let supervisor = {
@@ -709,6 +779,20 @@ impl Server {
     pub fn dead_workers(&self) -> usize {
         self.metrics.dead_workers()
     }
+
+    /// The pool's per-tenant circuit breaker (observability/drills).
+    pub fn tenant_breaker(&self) -> &TenantBreaker {
+        &self.router.breaker
+    }
+
+    /// Whether `tenant`'s circuit breaker is currently open (unknown
+    /// names are never quarantined — they route to the default tenant).
+    pub fn tenant_quarantined(&self, tenant: &str) -> bool {
+        match self.tenants.id_of(tenant) {
+            Some(id) => self.router.breaker.is_open(id),
+            None => false,
+        }
+    }
 }
 
 impl Drop for Server {
@@ -762,7 +846,7 @@ fn drain_queue(ctx: &WorkerCtx, rx: &Receiver<Job>, msg: &str, count_failed: boo
             ctx.metrics.record_job_failed();
         }
         let err = anyhow!(msg.to_string());
-        answer_job(&ctx.pool, &ctx.outstanding, job, Err(err));
+        answer_job(ctx, job, Err(err));
     }
 }
 
@@ -835,9 +919,7 @@ fn handle_death(
     }
     restarts[id] += 1;
     ctx.metrics.record_restart();
-    // Capped exponential backoff (base × 2^(n-1), capped at 64×), slept
-    // in small slices so shutdown is never held hostage by a long delay.
-    let delay = backoff.saturating_mul(1u32 << (restarts[id] - 1).min(6));
+    let delay = respawn_delay(backoff, id, restarts[id]);
     crate::warnln!(
         "worker {id} died ({}); respawn {}/{restart_max} in {delay:?}",
         ev.reason,
@@ -862,6 +944,28 @@ fn handle_death(
             crate::warnln!("worker {id}: respawn failed ({e:#}); breaker open");
         }
     }
+}
+
+/// splitmix64 finalizer: a full-avalanche integer mix, used to derive
+/// deterministic respawn jitter without any RNG state.
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Respawn delay for attempt `n` (1-based) of worker `id`: capped
+/// exponential backoff (base × 2^(n-1), capped at 64×) scaled by a
+/// deterministic ±25% jitter seeded from `(id, n)`. Without the jitter,
+/// workers killed by the same fault (a multi-worker kill, a poisoned
+/// pool-wide swap) respawn in lockstep and slam the factory — and any
+/// shared cache behind it — at the exact same instant, every attempt.
+fn respawn_delay(backoff: Duration, id: usize, attempt: u32) -> Duration {
+    let exp = backoff.saturating_mul(1u32 << (attempt.saturating_sub(1)).min(6));
+    let h = splitmix64(((id as u64) << 32) ^ u64::from(attempt));
+    let factor = 0.75 + (h % 1024) as f64 / 1024.0 * 0.5;
+    exp.mul_f64(factor)
 }
 
 /// Worker-local tenant state: last-seen epoch and a local clone of the
@@ -896,9 +1000,14 @@ impl TenantView {
     /// Apply every recipe published since the last sync, strictly
     /// between batches. Tenant 0 is the pool-wide swap of old; other
     /// tenants rebuild through [`WorkerEngine::swap_tenant`], which
-    /// touches only that tenant's prep. A failed swap keeps the old
-    /// prep and counts a swap error.
-    fn sync(&mut self, worker_id: usize, engine: &mut dyn WorkerEngine, metrics: &Metrics) {
+    /// touches only that tenant's prep. The swap is transactional per
+    /// worker: a failed swap keeps the old prep and counts a swap
+    /// error, and a *panicking* swap is contained right here — the view
+    /// rolls back to the previous recipe clone (the engine never
+    /// installed the new prep) and counts a swap abort, instead of
+    /// killing the worker or leaving it serving a half-applied prep.
+    fn sync(&mut self, ctx: &WorkerCtx, engine: &mut dyn WorkerEngine) {
+        let worker_id = ctx.id;
         for id in 0..self.epochs.len() {
             if self.table.epoch(id) == self.epochs[id] {
                 continue;
@@ -906,24 +1015,49 @@ impl TenantView {
             // re-read under the lock: the recipe a worker acts on is
             // always at least as new as the epoch it records
             let (epoch, recipe) = self.table.read(id);
+            let prev = std::mem::replace(&mut self.recipes[id], recipe.clone());
             self.epochs[id] = epoch;
-            self.recipes[id] = recipe.clone();
             if let Some(recipe) = recipe {
-                let ctx = self.ctx(id);
-                match engine.swap_tenant(&ctx, &recipe) {
-                    Ok(()) => {
-                        metrics.record_recipe_swap();
+                let tctx = self.ctx(id);
+                match catch_unwind(AssertUnwindSafe(|| engine.swap_tenant(&tctx, &recipe))) {
+                    Ok(Ok(())) => {
+                        ctx.metrics.record_recipe_swap();
                         crate::debugln!(
                             "worker {worker_id}: tenant {} swapped to {}",
                             self.table.name(id),
                             recipe.label()
                         );
                     }
-                    Err(e) => {
-                        metrics.record_swap_error();
+                    Ok(Err(e)) => {
+                        ctx.metrics.record_swap_error();
                         crate::warnln!(
                             "worker {worker_id}: tenant {} swap failed, keeping the old prep: {e:#}",
                             self.table.name(id)
+                        );
+                    }
+                    Err(p) => {
+                        // Roll this worker back to the previous recipe
+                        // (engines install the new prep only as their
+                        // last step, so the old executable is intact)
+                        // but KEEP the new epoch: retrying the same
+                        // panicking recipe every sync would be a crash
+                        // loop in slow motion. The abort also strikes
+                        // the tenant — a recipe that panics the swap on
+                        // every worker quarantines itself.
+                        self.recipes[id] = prev;
+                        ctx.metrics.record_panic();
+                        ctx.metrics.record_swap_abort();
+                        if ctx.breaker.record_strike(id) {
+                            eprintln!(
+                                "serve: tenant '{}' quarantined after repeated contained failures",
+                                self.table.name(id)
+                            );
+                        }
+                        crate::warnln!(
+                            "worker {worker_id}: tenant {} swap panicked (contained: {}); \
+                             rolled back to the previous prep",
+                            self.table.name(id),
+                            panic_msg(p.as_ref())
                         );
                     }
                 }
@@ -1018,10 +1152,10 @@ fn worker_loop(ctx: WorkerCtx, rx: Receiver<Job>, ready: Option<SyncSender<Resul
     loop {
         // apply any published recipe swaps strictly between batches, so
         // in-flight work always completes on the prep it started with.
-        // A panicking swap kills this worker like a panicking batch.
-        if let Err(p) = catch_unwind(AssertUnwindSafe(|| {
-            view.sync(id, engine.as_mut(), &ctx.metrics)
-        })) {
+        // Per-tenant swap panics are contained (and rolled back) inside
+        // sync itself; this outer guard is the last resort for a panic
+        // in the sync machinery proper, which still kills the worker.
+        if let Err(p) = catch_unwind(AssertUnwindSafe(|| view.sync(&ctx, engine.as_mut()))) {
             ctx.metrics.record_panic();
             let reason = format!("recipe swap panicked: {}", panic_msg(p.as_ref()));
             die(ctx, rx, reason);
@@ -1066,12 +1200,7 @@ fn worker_loop(ctx: WorkerCtx, rx: Receiver<Job>, ready: Option<SyncSender<Resul
     // a job between our last empty recv and the channel teardown below;
     // answer it rather than dropping it with the queue.
     while let Ok(job) = rx.try_recv() {
-        answer_job(
-            &ctx.pool,
-            &ctx.outstanding,
-            job,
-            Err(anyhow!("server is shutting down")),
-        );
+        answer_job(&ctx, job, Err(anyhow!("server is shutting down")));
     }
     crate::debugln!("worker {id}: drained, exiting");
 }
@@ -1102,7 +1231,7 @@ fn run_batch(
                 ctx.pool.tenant(job.tenant).record_deadline_exceeded();
                 let waited_ms = job.enqueued.elapsed().as_millis();
                 let err = anyhow!("deadline exceeded after {waited_ms} ms in queue");
-                answer_job(&ctx.pool, &ctx.outstanding, job, Err(err));
+                answer_job(ctx, job, Err(err));
             }
             _ => live.push(job),
         }
@@ -1131,7 +1260,7 @@ fn run_batch(
             for (_, group) in groups.drain(gi + 1..) {
                 for job in group {
                     ctx.metrics.record_job_failed();
-                    answer_job(&ctx.pool, &ctx.outstanding, job, Err(anyhow!(msg.clone())));
+                    answer_job(ctx, job, Err(anyhow!(msg.clone())));
                 }
             }
             return BatchOutcome::Panicked(reason);
@@ -1188,7 +1317,7 @@ fn run_tenant_batch(
                     ctx.metrics.record_request(latency);
                     ctx.pool.tenant(tenant).record_request(latency);
                 }
-                answer_job(&ctx.pool, &ctx.outstanding, job, resp);
+                answer_job(ctx, job, resp);
             }
             None
         }
@@ -1199,7 +1328,7 @@ fn run_tenant_batch(
             ctx.pool.tenant(tenant).record_exec_error();
             let msg = format!("{e:#}");
             for job in live {
-                answer_job(&ctx.pool, &ctx.outstanding, job, Err(anyhow!(msg.clone())));
+                answer_job(ctx, job, Err(anyhow!(msg.clone())));
             }
             None
         }
@@ -1207,10 +1336,19 @@ fn run_tenant_batch(
             let reason = panic_msg(p.as_ref());
             ctx.metrics.record_panic();
             ctx.pool.tenant(tenant).record_exec_error();
+            // the panic happened while executing THIS tenant's group:
+            // strike it, so a crash-looping tenant is quarantined at
+            // the router before it can burn every worker's restarts
+            if ctx.breaker.record_strike(tenant) {
+                eprintln!(
+                    "serve: tenant '{}' quarantined after repeated contained failures",
+                    ctx.tenants.name(tenant)
+                );
+            }
             let msg = format!("worker engine panicked (contained): {reason}");
             for job in live {
                 ctx.metrics.record_job_failed();
-                answer_job(&ctx.pool, &ctx.outstanding, job, Err(anyhow!(msg.clone())));
+                answer_job(ctx, job, Err(anyhow!(msg.clone())));
             }
             Some(reason)
         }
@@ -1936,6 +2074,362 @@ pub fn slow_loadtest(
     Ok(out)
 }
 
+/// One scenario of the chaos drill matrix: healthy/degraded/recovered
+/// phases plus the fault bookkeeping its containment gates are built
+/// from.
+#[derive(Debug, Clone)]
+pub struct ChaosScenario {
+    pub name: String,
+    pub healthy: LoadPoint,
+    pub degraded: LoadPoint,
+    pub recovered: LoadPoint,
+    pub panics: u64,
+    pub restarts: u64,
+    pub jobs_failed: u64,
+    pub swap_aborts: u64,
+    /// Requests rejected (or rerouted) because a tenant was quarantined.
+    pub quarantined: u64,
+    pub dead_workers: u64,
+}
+
+/// The full matrix (`ocs serve --loadtest --chaos-matrix`).
+#[derive(Debug, Clone)]
+pub struct ChaosMatrixReport {
+    pub scenarios: Vec<ChaosScenario>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum MatrixScenario {
+    /// PR 8's drill: the highest-id worker panics mid-sweep.
+    SingleKill,
+    /// Two of the pool's workers panic in the same sweep step.
+    MultiKill,
+    /// A recipe sync panics mid-hot-swap; the struck worker must roll
+    /// back and stay alive.
+    SwapCrash,
+    /// One tenant panics every batch until the tenant breaker
+    /// quarantines it.
+    CrashLoop,
+}
+
+impl MatrixScenario {
+    fn name(self) -> &'static str {
+        match self {
+            MatrixScenario::SingleKill => "single-kill",
+            MatrixScenario::MultiKill => "multi-kill",
+            MatrixScenario::SwapCrash => "swap-crash",
+            MatrixScenario::CrashLoop => "crash-loop-tenant",
+        }
+    }
+}
+
+/// Capture one fixed image's logits per probed tenant. The matrix
+/// compares these bit-for-bit across a scenario (before any fault
+/// fires vs after recovery) — the "sibling tenants undisturbed"
+/// containment gate.
+fn probe_logits(client: &Client, names: &[String]) -> Result<Vec<Vec<f32>>> {
+    let dataset = crate::train::data::synth_images(1, 411);
+    let mut shape = dataset.x.shape().to_vec();
+    shape[0] = 1;
+    let mut out = Vec::with_capacity(names.len());
+    for name in names {
+        let x = TensorF::from_vec(&shape, dataset.x.data().to_vec())?;
+        let logits = client
+            .infer_tenant(name, x)
+            .with_context(|| format!("containment probe for tenant '{name}'"))?;
+        out.push(logits);
+    }
+    Ok(out)
+}
+
+/// The chaos drill matrix behind `ocs serve --loadtest --chaos-matrix`:
+/// run the single-kill drill plus concurrent multi-worker kills, a
+/// fault during a hot-swap, and a crash-looping tenant — each scenario
+/// a healthy baseline on a clean pool, then degraded + recovered phases
+/// on one shared faulted pool — and gate every scenario on containment:
+/// sibling tenants' logits bit-stable across the fault, no client ever
+/// hangs (watchdogged), the error burst bounded, and post-fault
+/// throughput at least half the healthy baseline. Emits the
+/// multi-scenario `BENCH_chaos_matrix.json` when `json_out` is set.
+pub fn chaos_matrix(
+    factory: Arc<dyn EngineFactory>,
+    cfg: &ServeConfig,
+    tenants: &[TenantInit],
+    clients: usize,
+    requests: usize,
+    json_out: Option<&Path>,
+) -> Result<ChaosMatrixReport> {
+    if cfg.workers < 3 {
+        bail!("chaos matrix: need at least 3 workers (two die concurrently in multi-kill)");
+    }
+    if cfg.restart_max == 0 {
+        bail!("chaos matrix: restart_max must be >= 1 for the pool to recover");
+    }
+    // The matrix needs a designated chaos tenant (and at least one
+    // sibling beyond default); supply the standard drill mix when the
+    // caller configured none.
+    let mix: Vec<TenantInit> = if tenants.is_empty() {
+        vec![
+            TenantInit { name: "gold".into(), weight: 1.0, recipe: None },
+            TenantInit { name: "bulk".into(), weight: 2.0, recipe: None },
+        ]
+    } else {
+        tenants.to_vec()
+    };
+    let faulty = mix[0].name.clone();
+    let label = factory.label();
+    let kinds = [
+        MatrixScenario::SingleKill,
+        MatrixScenario::MultiKill,
+        MatrixScenario::SwapCrash,
+        MatrixScenario::CrashLoop,
+    ];
+    let mut scenarios = Vec::with_capacity(kinds.len());
+    for kind in kinds {
+        scenarios.push(run_matrix_scenario(
+            kind,
+            factory.clone(),
+            cfg,
+            &mix,
+            &faulty,
+            clients,
+            requests,
+        )?);
+    }
+    let report = ChaosMatrixReport { scenarios };
+    println!(
+        "chaos matrix: {}/{} scenario(s) contained (tenant '{faulty}' played the faulty party)",
+        report.scenarios.len(),
+        kinds.len()
+    );
+    if let Some(path) = json_out {
+        crate::bench_record::BenchRecord::from_chaos_matrix(&label, &report)
+            .write(path)
+            .with_context(|| format!("write {}", path.display()))?;
+        println!("wrote {}", path.display());
+    }
+    Ok(report)
+}
+
+fn run_matrix_scenario(
+    kind: MatrixScenario,
+    factory: Arc<dyn EngineFactory>,
+    cfg: &ServeConfig,
+    tenants: &[TenantInit],
+    faulty: &str,
+    clients: usize,
+    requests: usize,
+) -> Result<ChaosScenario> {
+    let name = kind.name();
+    let watchdog = Some(Duration::from_secs(60));
+    let mut scfg = cfg.clone();
+    let (directives, kills) = match kind {
+        MatrixScenario::SingleKill => (
+            vec![faults::FaultDirective::PanicOnBatch { worker: cfg.workers - 1, nth: 3 }],
+            1usize,
+        ),
+        MatrixScenario::MultiKill => (
+            vec![
+                faults::FaultDirective::PanicOnBatch { worker: cfg.workers - 1, nth: 3 },
+                faults::FaultDirective::PanicOnBatch { worker: cfg.workers - 2, nth: 3 },
+            ],
+            2,
+        ),
+        MatrixScenario::SwapCrash => (
+            vec![faults::FaultDirective::PanicOnSync { tenant: faulty.to_string(), nth: 1 }],
+            0,
+        ),
+        MatrixScenario::CrashLoop => {
+            // The containment under test is the *tenant* breaker, so
+            // keep the other two latches out of the picture: a long
+            // quarantine stops a half-open probe from re-admitting the
+            // still-panicking tenant mid-measurement, and a restart
+            // budget above the strike budget stops any single worker
+            // from give-up death even if every strike lands on it.
+            scfg.quarantine = scfg.quarantine.max(Duration::from_secs(120));
+            scfg.restart_max = scfg.restart_max.max(scfg.tenant_restart_max + 1);
+            (
+                vec![faults::FaultDirective::PanicOnTenant { tenant: faulty.to_string() }],
+                0,
+            )
+        }
+    };
+    // Phase 1: healthy baseline on its own clean pool.
+    let healthy = run_load_point(factory.clone(), &scfg, tenants, clients, requests)?;
+    println!(
+        "chaos-matrix[{name}/healthy]: {}/{} ok in {:.2}s = {:.0} req/s (p99 {:.2} ms)",
+        healthy.ok, healthy.requests, healthy.secs, healthy.rps, healthy.p99_ms
+    );
+    // Phases 2+3 share one faulted pool.
+    let plan = faults::FaultPlan::new(directives);
+    let server =
+        Server::start_tenants(plan.wrap(factory), scfg.clone(), TenantTable::new(tenants)?)?;
+    let client = server.client();
+    // Sibling containment probe, before any fault fires. The faulty
+    // tenant is excluded: its own answers are *allowed* to change (new
+    // recipe after the swap, quarantine rejections in the crash loop).
+    let siblings: Vec<String> = server
+        .tenants()
+        .names()
+        .into_iter()
+        .filter(|n| n.as_str() != faulty)
+        .collect();
+    let before = probe_logits(&client, &siblings)?;
+    if kind == MatrixScenario::SwapCrash {
+        // arm the hot swap the plan is waiting to strike; workers pick
+        // it up between batches, racing the degraded phase's load
+        server.swap_tenant_recipe(faulty, QuantRecipe::float())?;
+    }
+    let degraded = drive_on(&server, clients, requests, watchdog)?;
+    println!(
+        "chaos-matrix[{name}/degraded]: {}/{} ok = {:.0} req/s \
+         ({} panic(s), {} job(s) failed, {} rejected)",
+        degraded.ok, degraded.requests, degraded.rps, degraded.panics, degraded.jobs_failed,
+        degraded.rejected
+    );
+    if degraded.ok == 0 {
+        bail!("chaos matrix [{name}]: no request survived the fault");
+    }
+    // Scenario-specific settling + gates.
+    match kind {
+        MatrixScenario::SingleKill | MatrixScenario::MultiKill => {
+            if degraded.panics < kills as u64 {
+                bail!(
+                    "chaos matrix [{name}]: only {} of {kills} kill(s) fired — \
+                     raise --requests",
+                    degraded.panics
+                );
+            }
+            let blast_cap = kills * (scfg.queue_cap + scfg.max_batch) + degraded.rejected as usize;
+            if degraded.errors > blast_cap {
+                bail!(
+                    "chaos matrix [{name}]: {} errors exceed the blast-radius bound {} \
+                     ({kills} kill(s) x (queue_cap {} + max_batch {}) + {} rejected)",
+                    degraded.errors,
+                    blast_cap,
+                    scfg.queue_cap,
+                    scfg.max_batch,
+                    degraded.rejected
+                );
+            }
+            let t0 = Instant::now();
+            while server.metrics().aggregate().restarts < kills as u64 {
+                if t0.elapsed() > Duration::from_secs(10) {
+                    bail!(
+                        "chaos matrix [{name}]: supervisor respawned {} of {kills} \
+                         killed worker(s)",
+                        server.metrics().aggregate().restarts
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+        MatrixScenario::SwapCrash => {
+            // all workers sync within one poll tick; wait for the roll
+            // call: one aborted (rolled back), the rest applied
+            let t0 = Instant::now();
+            loop {
+                let agg = server.metrics().aggregate();
+                if agg.swap_aborts >= 1 && agg.recipe_swaps >= (scfg.workers - 1) as u64 {
+                    break;
+                }
+                if t0.elapsed() > Duration::from_secs(10) {
+                    bail!(
+                        "chaos matrix [{name}]: swap never settled — {} abort(s), {} \
+                         applied of {} worker(s)",
+                        agg.swap_aborts,
+                        agg.recipe_swaps,
+                        scfg.workers
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            let agg = server.metrics().aggregate();
+            if agg.restarts > 0 || server.dead_workers() > 0 {
+                bail!(
+                    "chaos matrix [{name}]: the sync panic killed a worker \
+                     ({} restart(s), {} dead) — swap containment failed",
+                    agg.restarts,
+                    server.dead_workers()
+                );
+            }
+        }
+        MatrixScenario::CrashLoop => {
+            if !server.tenant_quarantined(faulty) {
+                bail!(
+                    "chaos matrix [{name}]: tenant '{faulty}' was never quarantined \
+                     ({} strike(s) of {}) — raise --requests",
+                    server
+                        .tenants()
+                        .id_of(faulty)
+                        .map(|id| server.tenant_breaker().strike_count(id))
+                        .unwrap_or(0),
+                    scfg.tenant_restart_max
+                );
+            }
+            if server.dead_workers() > 0 {
+                bail!(
+                    "chaos matrix [{name}]: {} worker breaker(s) opened — the tenant \
+                     breaker was supposed to contain the crash loop",
+                    server.dead_workers()
+                );
+            }
+        }
+    }
+    // Phase 3: same pool after the fault settled.
+    let recovered = drive_on(&server, clients, requests, watchdog)?;
+    println!(
+        "chaos-matrix[{name}/recovered]: {}/{} ok = {:.0} req/s",
+        recovered.ok, recovered.requests, recovered.rps
+    );
+    let ratio = recovered.rps / healthy.rps.max(1e-9);
+    if ratio < 0.5 {
+        bail!(
+            "chaos matrix [{name}]: post-fault throughput {:.0} req/s is below half the \
+             healthy baseline {:.0} req/s",
+            recovered.rps,
+            healthy.rps
+        );
+    }
+    // Sibling containment: bit-identical logits across the whole drill.
+    let after = probe_logits(&client, &siblings)?;
+    for (i, tenant) in siblings.iter().enumerate() {
+        if before[i] != after[i] {
+            bail!(
+                "chaos matrix [{name}]: tenant '{tenant}' logits changed across the fault \
+                 — containment leaked into a sibling"
+            );
+        }
+    }
+    let agg = server.metrics().aggregate();
+    let quarantined: u64 = (0..server.tenants().len())
+        .map(|id| server.metrics().tenant_quarantined_count(id))
+        .sum();
+    let out = ChaosScenario {
+        name: name.to_string(),
+        panics: agg.panics,
+        restarts: agg.restarts,
+        jobs_failed: agg.jobs_failed,
+        swap_aborts: agg.swap_aborts,
+        quarantined,
+        dead_workers: server.dead_workers() as u64,
+        healthy,
+        degraded,
+        recovered,
+    };
+    println!("{}", server.metrics().report());
+    server.shutdown()?;
+    println!(
+        "chaos-matrix[{name}]: contained — recovered {:.0}% of healthy \
+         ({} restart(s), {} swap abort(s), {} quarantine rejection(s))",
+        ratio * 100.0,
+        out.restarts,
+        out.swap_aborts,
+        out.quarantined
+    );
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -2003,5 +2497,38 @@ mod tests {
         assert_eq!(percentile_ms(&v, 0.5), 2.0);
         assert_eq!(percentile_ms(&v, 0.95), 4.0);
         assert_eq!(percentile_ms(&v, 1.0), 4.0);
+    }
+
+    #[test]
+    fn respawn_delay_is_jittered_exponential() {
+        let base = Duration::from_millis(100);
+        // every delay stays inside the ±25% band around the exponential
+        for id in 0..8 {
+            for attempt in 1..=10u32 {
+                let exp = base.saturating_mul(1u32 << (attempt - 1).min(6));
+                let d = respawn_delay(base, id, attempt);
+                assert!(
+                    d >= exp.mul_f64(0.75) && d < exp.mul_f64(1.25),
+                    "worker {id} attempt {attempt}: {d:?} outside the jitter band of {exp:?}"
+                );
+            }
+        }
+        // deterministic: the same (worker, attempt) always sleeps the same
+        assert_eq!(respawn_delay(base, 3, 2), respawn_delay(base, 3, 2));
+        // spread: workers killed by the same fault (same attempt count)
+        // must not respawn in lockstep
+        let at_attempt_1: Vec<Duration> =
+            (0..8).map(|id| respawn_delay(base, id, 1)).collect();
+        let distinct = at_attempt_1
+            .iter()
+            .collect::<std::collections::HashSet<_>>()
+            .len();
+        assert!(
+            distinct >= 6,
+            "only {distinct} distinct delays across 8 workers: {at_attempt_1:?}"
+        );
+        // the cap still applies under jitter
+        let capped = respawn_delay(base, 0, 40);
+        assert!(capped < base.saturating_mul(64).mul_f64(1.25), "{capped:?}");
     }
 }

@@ -209,6 +209,55 @@ fn prop_quant_error_decreases_with_bits() {
 }
 
 #[test]
+fn prop_fault_plan_label_round_trip() {
+    // the serving layer's fault DSL: for any directive list built from
+    // the supported shapes, label -> parse must be the identity (the CI
+    // drills and TOML configs rely on specs surviving a render cycle)
+    use ocs::serve::faults::{FaultDirective, FaultPlan};
+
+    fn gen_tenant(rng: &mut ocs::util::rng::Rng) -> String {
+        ["gold", "bulk", "lead", "t-0", "a_b", "Ocs9"][rng.below(6)].to_string()
+    }
+
+    check_n("fault-plan-round-trip", 29, 64, |rng| {
+        let mut directives = Vec::new();
+        for _ in 0..rng.below(6) {
+            directives.push(match rng.below(6) {
+                0 => FaultDirective::BuildFail {
+                    worker: rng.below(8),
+                    nth: 1 + rng.below(5) as u64,
+                },
+                1 => FaultDirective::PanicOnBatch {
+                    worker: rng.below(8),
+                    nth: 1 + rng.below(9) as u64,
+                },
+                2 => FaultDirective::SlowInfer {
+                    micros: rng.below(50_000) as u64,
+                },
+                3 => FaultDirective::ErrorOnTenant { tenant: gen_tenant(rng) },
+                4 => FaultDirective::PanicOnTenant { tenant: gen_tenant(rng) },
+                _ => FaultDirective::PanicOnSync {
+                    tenant: gen_tenant(rng),
+                    nth: 1 + rng.below(5) as u64,
+                },
+            });
+        }
+        let plan = FaultPlan::new(directives);
+        let label = plan.label();
+        let back = FaultPlan::parse(&label)
+            .map_err(|e| format!("own label rejected: {e}\nlabel: {label:?}"))?;
+        ensure(
+            back == plan,
+            format!("round-trip drift via {label:?}: {back:?} vs {plan:?}"),
+        )?;
+        ensure(
+            back.label() == label,
+            format!("label not idempotent: {:?} vs {label:?}", back.label()),
+        )
+    });
+}
+
+#[test]
 fn prop_recipe_toml_round_trip_fingerprint() {
     // serialize -> parse must be the identity on the recipe fingerprint
     // (and the canonical form behind it) for any recipe built from the

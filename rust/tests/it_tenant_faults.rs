@@ -1,0 +1,322 @@
+//! Integration tests for tenant-level fault isolation: the per-tenant
+//! circuit breaker (crash-looping tenant quarantined while siblings
+//! stay bit-stable and no *worker* breaker opens), `--tenant-fallback`
+//! rerouting to the default prep, transactional recipe-sync rollback
+//! (`panic-on-sync` leaves the worker alive on its previous prep), the
+//! half-open probe re-admission path, the per-tenant quota gauge
+//! lifecycle across panic-failed jobs, and the chaos drill matrix gate
+//! — all driven through deterministic [`FaultPlan`] schedules on the
+//! sim and native backends, no artifacts needed.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use ocs::bench_record::BenchRecord;
+use ocs::clip::ClipMethod;
+use ocs::pipeline::{QuantConfig, QuantRecipe, ServeConfig};
+use ocs::serve::backend::{NativeFactory, SimFactory};
+use ocs::serve::faults::FaultPlan;
+use ocs::serve::{chaos_matrix, Server, TenantInit, TenantTable};
+use ocs::tensor::TensorF;
+
+/// Same discipline as `it_faults`: these tests run pools and burn CPU;
+/// serialize them so they don't corrupt each other's timing.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Pool config with a fast supervisor (1 ms backoff base) and a long
+/// quarantine so breaker assertions aren't raced by a half-open probe.
+fn cfg(workers: usize) -> ServeConfig {
+    ServeConfig {
+        workers,
+        max_batch: 4,
+        max_wait: Duration::from_micros(200),
+        queue_cap: 64,
+        deadline: None,
+        backoff: Duration::from_millis(1),
+        quarantine: Duration::from_secs(60),
+        ..ServeConfig::default()
+    }
+}
+
+fn sim() -> Arc<SimFactory> {
+    Arc::new(SimFactory::default())
+}
+
+fn recipe(w_bits: u32) -> QuantRecipe {
+    let mut c = QuantConfig::weights_only(w_bits, ClipMethod::Mse, 0.02);
+    c.a_bits = Some(8);
+    c.to_recipe()
+}
+
+fn tenant(name: &str, weight: f64, r: Option<QuantRecipe>) -> TenantInit {
+    TenantInit {
+        name: name.into(),
+        weight,
+        recipe: r,
+    }
+}
+
+fn table(tenants: &[TenantInit]) -> TenantTable {
+    TenantTable::new(tenants).unwrap()
+}
+
+/// One fixed `(1, 16, 16, 3)` image for the synthetic MLP.
+fn image() -> TensorF {
+    let ds = ocs::train::data::synth_images(4, 77);
+    ocs::calib::slice_rows(&ds.x, 0, 1).unwrap()
+}
+
+/// Retry a tenant infer until the pool serves it (respawn windows
+/// reject or fail requests); panics after `secs` seconds of failures.
+fn infer_tenant_until_ok(
+    client: &ocs::serve::Client,
+    name: &str,
+    x: &TensorF,
+    secs: u64,
+) -> Vec<f32> {
+    let t0 = Instant::now();
+    loop {
+        match client.infer_tenant(name, x.clone()) {
+            Ok(logits) => return logits,
+            Err(e) => {
+                if t0.elapsed() > Duration::from_secs(secs) {
+                    panic!("tenant '{name}' never served: last error: {e:#}");
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+    }
+}
+
+#[test]
+fn crash_looping_tenant_is_quarantined_and_siblings_stay_bit_stable() {
+    let _guard = serial();
+    let tenants = [
+        tenant("gold", 1.0, Some(QuantConfig::float().to_recipe())),
+        tenant("bulk", 1.0, Some(recipe(3))),
+    ];
+    let x = image();
+    // fault-free run: the reference logits for the sibling check
+    let clean = Arc::new(NativeFactory::synthetic(recipe(5)).unwrap());
+    let server = Server::start_tenants(clean, cfg(2), table(&tenants)).unwrap();
+    let client = server.client();
+    let default_ref = infer_tenant_until_ok(&client, "default", &x, 5);
+    let bulk_ref = infer_tenant_until_ok(&client, "bulk", &x, 5);
+    server.shutdown().unwrap();
+    // same pool, but gold's every batch panics (the crash loop). The
+    // tenant breaker must quarantine gold after `tenant_restart_max`
+    // strikes — long before any worker burns its restart budget.
+    let mut c = cfg(2);
+    c.restart_max = 10; // ample worker budget: the tenant breaker must fire first
+    c.tenant_restart_max = 3;
+    let plan = FaultPlan::parse("panic-tenant:gold").unwrap();
+    let faulty = plan.wrap(Arc::new(NativeFactory::synthetic(recipe(5)).unwrap()));
+    let server = Server::start_tenants(faulty, c, table(&tenants)).unwrap();
+    let client = server.client();
+    let t0 = Instant::now();
+    let quarantine_err = loop {
+        match client.infer_tenant("gold", x.clone()) {
+            Ok(_) => panic!("gold must not serve while crash-looping"),
+            Err(e) => {
+                let msg = format!("{e:#}");
+                if msg.contains("quarantined") {
+                    break msg;
+                }
+            }
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "tenant breaker never tripped"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    };
+    assert!(quarantine_err.contains("gold"), "{quarantine_err}");
+    assert!(server.tenant_quarantined("gold"));
+    let gold_id = client.tenant_id("gold").unwrap();
+    assert!(server.metrics().tenant_quarantined_count(gold_id) >= 1);
+    // siblings ride through bit-identical to the fault-free pool
+    assert_eq!(infer_tenant_until_ok(&client, "default", &x, 5), default_ref);
+    assert_eq!(infer_tenant_until_ok(&client, "bulk", &x, 5), bulk_ref);
+    let agg = server.metrics().aggregate();
+    assert!(agg.panics >= 3, "one panic per strike: {agg:?}");
+    assert_eq!(
+        server.dead_workers(),
+        0,
+        "tenant quarantine must spare the worker breakers"
+    );
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn tenant_fallback_serves_default_prep_answers() {
+    let _guard = serial();
+    // gold is lowered aggressively so its own prep's logits are
+    // distinguishable from the default prep's
+    let tenants = [tenant("gold", 1.0, Some(recipe(3)))];
+    let x = image();
+    let mut c = cfg(1);
+    c.tenant_restart_max = 1;
+    c.tenant_fallback = true;
+    let factory = Arc::new(NativeFactory::synthetic(recipe(5)).unwrap());
+    let server = Server::start_tenants(factory, c, table(&tenants)).unwrap();
+    let client = server.client();
+    let default_ref = client.infer(x.clone()).unwrap();
+    let gold_own = client.infer_tenant("gold", x.clone()).unwrap();
+    assert_ne!(gold_own, default_ref, "preps must differ for this drill");
+    // trip the breaker directly (tenant_restart_max = 1: one strike)
+    let gold_id = client.tenant_id("gold").unwrap();
+    assert!(server.tenant_breaker().record_strike(gold_id));
+    assert!(server.tenant_quarantined("gold"));
+    // quarantined + fallback: gold's requests are served, on the
+    // default prep, instead of being rejected
+    let rerouted = client.infer_tenant("gold", x.clone()).unwrap();
+    assert_eq!(rerouted, default_ref, "fallback must use the default prep");
+    assert!(server.metrics().tenant_quarantined_count(gold_id) >= 1);
+    assert_eq!(
+        server.metrics().tenant_rejected_count(gold_id),
+        0,
+        "fallback reroutes instead of rejecting"
+    );
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn panic_on_sync_rolls_back_and_the_worker_survives() {
+    let _guard = serial();
+    let tenants = [tenant("gold", 1.0, Some(recipe(3)))];
+    let x = image();
+    let plan = FaultPlan::parse("panic-on-sync:gold@1").unwrap();
+    let factory = plan.wrap(Arc::new(NativeFactory::synthetic(recipe(5)).unwrap()));
+    let server = Server::start_tenants(factory, cfg(1), table(&tenants)).unwrap();
+    let client = server.client();
+    let pre = client.infer_tenant("gold", x.clone()).unwrap();
+    // publish a hot swap; the sync panics mid-apply on worker 0, which
+    // must roll back to the previous lowered executable and stay alive
+    server
+        .swap_tenant_recipe("gold", QuantRecipe::float())
+        .unwrap();
+    let t0 = Instant::now();
+    while server.metrics().aggregate().swap_aborts == 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "sync abort never recorded"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    // the worker is alive and serving on the *previous* prep
+    let post = infer_tenant_until_ok(&client, "gold", &x, 5);
+    assert_eq!(post, pre, "rollback must restore the pre-swap prep");
+    let agg = server.metrics().aggregate();
+    assert!(agg.swap_aborts >= 1, "{agg:?}");
+    assert!(agg.panics >= 1, "the contained sync panic counts: {agg:?}");
+    assert_eq!(agg.restarts, 0, "no worker death, no respawn: {agg:?}");
+    assert_eq!(server.dead_workers(), 0);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn half_open_probe_readmits_a_recovered_tenant() {
+    let _guard = serial();
+    let tenants = [tenant("gold", 1.0, None)];
+    let mut c = cfg(1);
+    c.tenant_restart_max = 1;
+    c.quarantine = Duration::from_millis(50);
+    let server = Server::start_tenants(sim(), c, table(&tenants)).unwrap();
+    let client = server.client();
+    let x = image();
+    let gold_id = client.tenant_id("gold").unwrap();
+    assert!(server.tenant_breaker().record_strike(gold_id));
+    let err = client
+        .infer_tenant("gold", x.clone())
+        .expect_err("quarantined tenant must be rejected")
+        .to_string();
+    assert!(err.contains("quarantined"), "{err}");
+    // after the quarantine window a single request is re-admitted as
+    // the half-open probe; the healthy engine answers it, which closes
+    // the breaker and resumes traffic
+    std::thread::sleep(Duration::from_millis(80));
+    let logits = client
+        .infer_tenant("gold", x.clone())
+        .expect("the half-open probe must be dispatched");
+    assert!(!logits.is_empty());
+    assert!(!server.tenant_quarantined("gold"), "probe success closes");
+    assert!(client.infer_tenant("gold", x.clone()).is_ok());
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn quota_gauge_recovers_after_a_panic_failed_job() {
+    let _guard = serial();
+    // regression: the per-tenant outstanding gauge must be decremented
+    // on *every* terminal path, including jobs failed by a contained
+    // worker panic — a leak here would ratchet the tenant toward a
+    // permanent quota rejection
+    let tenants = [tenant("bulk", 1.0, None)];
+    let mut c = cfg(1);
+    c.tenant_quota = Some(1.0);
+    let plan = FaultPlan::parse("panic:0@1").unwrap();
+    let server = Server::start_tenants(plan.wrap(sim()), c, table(&tenants)).unwrap();
+    let client = server.client();
+    let x = image();
+    let bulk_id = client.tenant_id("bulk").unwrap();
+    let err = client
+        .infer_tenant("bulk", x.clone())
+        .expect_err("batch 1 panics")
+        .to_string();
+    assert!(err.contains("panicked"), "{err}");
+    assert_eq!(
+        server.metrics().tenant_outstanding_count(bulk_id),
+        0,
+        "panic-failed job must release its gauge slot"
+    );
+    // pool recovers; a served job round-trips the gauge back to zero
+    let logits = infer_tenant_until_ok(&client, "bulk", &x, 5);
+    assert!(!logits.is_empty());
+    assert_eq!(server.metrics().tenant_outstanding_count(bulk_id), 0);
+    assert_eq!(server.metrics().tenant_quota_rejected_count(bulk_id), 0);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn chaos_matrix_passes_all_gates_and_emits_a_valid_record() {
+    let _guard = serial();
+    // the acceptance gate, in-process: all four drill scenarios must
+    // pass their containment gates (chaos_matrix bails on any violated
+    // invariant) and the emitted record must round-trip the schema
+    let mut c = cfg(4);
+    c.queue_cap = 32;
+    let out = std::env::temp_dir().join(format!("ocs_it_chaos_matrix_{}.json", std::process::id()));
+    let report = chaos_matrix(sim(), &c, &[], 8, 96, Some(&out)).unwrap();
+    assert_eq!(report.scenarios.len(), 4, "{report:?}");
+    let names: Vec<&str> = report.scenarios.iter().map(|s| s.name.as_str()).collect();
+    assert_eq!(
+        names,
+        ["single-kill", "multi-kill", "swap-crash", "crash-loop-tenant"]
+    );
+    for s in &report.scenarios {
+        assert!(
+            s.recovered.rps >= 0.5 * s.healthy.rps,
+            "{}: recovery gate: {s:?}",
+            s.name
+        );
+    }
+    let single = &report.scenarios[0];
+    assert!(single.panics >= 1 && single.restarts >= 1, "{single:?}");
+    let multi = &report.scenarios[1];
+    assert!(multi.panics >= 2, "two workers die: {multi:?}");
+    let swap = &report.scenarios[2];
+    assert!(swap.swap_aborts >= 1, "{swap:?}");
+    assert_eq!(swap.restarts, 0, "rollback, not respawn: {swap:?}");
+    let crash = &report.scenarios[3];
+    assert!(crash.quarantined >= 1, "{crash:?}");
+    assert_eq!(crash.dead_workers, 0, "{crash:?}");
+    let rec = BenchRecord::load(&out).unwrap();
+    rec.validate().unwrap();
+    assert_eq!(rec.bench, "chaos_matrix");
+    assert_eq!(rec.rows.len(), 12, "4 scenarios x 3 phases");
+    let _ = std::fs::remove_file(&out);
+}
